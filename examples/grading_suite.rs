@@ -1,0 +1,86 @@
+//! The BLAS grading suite of §6 run against every GEMM implementation in
+//! the repo: algorithm discovery (Tests 1–3) plus the Grade A/C criteria.
+//!
+//! Reproduces the paper's headline numerical claims:
+//!   A1 — Test 2 cannot distinguish guardrailed ADP from floating point;
+//!   A2 — ADP meets the Grade A componentwise criterion.
+//!
+//! ```sh
+//! cargo run --release --offline --example grading_suite [n]
+//! ```
+
+use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
+use adp_dgemm::coordinator::{AdpConfig, AdpEngine};
+use adp_dgemm::grading::{self, grade, generators};
+use adp_dgemm::linalg::{gemm, strassen, Matrix};
+use adp_dgemm::ozaki::{emulated_gemm, OzakiConfig};
+use adp_dgemm::util::Rng;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let seed = 11u64;
+
+    let engine = AdpEngine::new(
+        AdpConfig::fp64().with_heuristic(Box::new(AlwaysEmulate)).with_runtime(None),
+    );
+
+    println!("=== algorithm discovery (Tests 1-3), n={n} ===");
+    let impls: Vec<(&str, Box<dyn FnMut(&Matrix, &Matrix) -> Matrix>)> = vec![
+        ("native fp64", Box::new(|a: &Matrix, b: &Matrix| gemm(a, b))),
+        ("strassen", Box::new(|a: &Matrix, b: &Matrix| strassen(a, b))),
+        ("ozaki fixed-7 (no guardrails)", Box::new(|a: &Matrix, b: &Matrix| {
+            emulated_gemm(a, b, &OzakiConfig::new(7))
+        })),
+        ("adp (guardrails + fallback)", Box::new(|a: &Matrix, b: &Matrix| engine.gemm(a, b).0)),
+    ];
+    for (name, mut f) in impls {
+        // Strassen needs n > its 64-cutoff to recurse; use 4n for it.
+        let nn = if name == "strassen" { n.max(256) } else { n };
+        let class = grading::discover(nn, seed, &mut *f);
+        println!("  {name:<32} -> {class:?}");
+    }
+
+    println!("\n=== Test 2 error sweep (the Fig 2 axis), n=64 ===");
+    println!("  {:<6} {:>14} {:>14} {:>14}", "b", "native", "fixed-7", "adp");
+    let mut rng = Rng::new(seed);
+    for b in [0, 8, 16, 24, 32, 48, 64, 96] {
+        let w = generators::test2_workload(64, b, &mut rng);
+        let e_nat = grading::test2::relative_error(&w, &gemm(&w.a, &w.b));
+        let e_fix =
+            grading::test2::relative_error(&w, &emulated_gemm(&w.a, &w.b, &OzakiConfig::new(7)));
+        let e_adp = grading::test2::relative_error(&w, &engine.gemm(&w.a, &w.b).0);
+        println!("  {b:<6} {e_nat:>14.3e} {e_fix:>14.3e} {e_adp:>14.3e}");
+    }
+
+    println!("\n=== Grade A criterion (Aspect A2), uniform(0,1) ===");
+    println!("  {:<6} {:>12} {:>12} {:>12}  (max componentwise err, eps units)", "n", "native", "adp", "strassen");
+    for nn in [64usize, 128, 256] {
+        let mut rng = Rng::new(seed + nn as u64);
+        let (a, b) = generators::uniform_pair(nn, 0.0, 1.0, &mut rng);
+        let rn = grade::measure(&a, &b, &gemm(&a, &b));
+        let ra = grade::measure(&a, &b, &engine.gemm(&a, &b).0);
+        let rs = grade::measure(&a, &b, &strassen(&a, &b));
+        println!(
+            "  {nn:<6} {:>12.2} {:>12.2} {:>12.2}   grade A: native {} adp {} strassen {}",
+            rn.max_comp_eps,
+            ra.max_comp_eps,
+            rs.max_comp_eps,
+            pass(grade::passes_grade_a(&rn, nn, 2.0)),
+            pass(grade::passes_grade_a(&ra, nn, 2.0)),
+            pass(grade::passes_grade_a(&rs, nn, 2.0)),
+        );
+    }
+    let snap = engine.metrics.snapshot();
+    println!(
+        "\nadp dispatch over the whole suite: {} emulated, {} esc-fallbacks (both paths exercised)",
+        snap.emulated, snap.fallback_esc
+    );
+}
+
+fn pass(b: bool) -> &'static str {
+    if b {
+        "PASS"
+    } else {
+        "fail"
+    }
+}

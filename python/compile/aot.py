@@ -1,0 +1,97 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--sizes 64,128,256]
+       [--slices 3,4,5,6,7,8] [--big-sizes 512] [--big-slices 7,8]
+
+Writes one artifact per (kind, size[, slices]) plus `manifest.txt` with
+lines `kind n slices path` (slices = 0 for non-gemm kinds).  The Rust
+registry (`rust/src/runtime/registry.rs`) parses the manifest.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(n):
+    return jax.ShapeDtypeStruct((n, n), jnp.float64)
+
+
+def emit(fn, specs, path):
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="64,128,256")
+    ap.add_argument("--slices", default="3,4,5,6,7,8,9,10")
+    ap.add_argument("--big-sizes", default="512")
+    ap.add_argument("--big-slices", default="7,8")
+    args = ap.parse_args()
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    def parse(s):
+        return [int(x) for x in s.split(",") if x]
+
+    grid = [(n, parse(args.slices)) for n in parse(args.sizes)]
+    grid += [(n, parse(args.big_slices)) for n in parse(args.big_sizes)]
+
+    manifest = []
+    for n, slice_list in grid:
+        print(f"n={n}:")
+        fname = f"dgemm_n{n}.hlo.txt"
+        emit(model.dgemm, [_spec(n), _spec(n)], os.path.join(out, fname))
+        manifest.append(f"dgemm {n} 0 {fname}")
+
+        fname = f"scan_esc_n{n}.hlo.txt"
+        emit(
+            lambda a, b: model.scan_esc(a, b),
+            [_spec(n), _spec(n)],
+            os.path.join(out, fname),
+        )
+        manifest.append(f"scan {n} 0 {fname}")
+
+        for s in slice_list:
+            fname = f"ozaki_gemm_n{n}_s{s}.hlo.txt"
+            emit(
+                lambda a, b, s=s: model.emulated_gemm(a, b, s),
+                [_spec(n), _spec(n)],
+                os.path.join(out, fname),
+            )
+            manifest.append(f"gemm {n} {s} {fname}")
+
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

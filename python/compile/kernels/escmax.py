@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: max-plus "exponent GEMM" for the coarsened ESC (§4).
+
+Computes E int32[m,n] = max_i max( Amax[:,i]+Bmin[i,:], Amin[:,i]+Bmax[i,:] )
+over the coarsened k-blocks i — the tropical-semiring analogue of a GEMM.
+
+This is the paper's CUTLASS+DPX kernel (§5.2) re-thought for the session's
+substrate: DPX max/min instructions map onto VPU elementwise max with an
+explicit k-reduction in the kernel body; coarsening by block size b along k
+makes the pass cost (1/b) of the real GEMM.  Lowered with interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .slice_gemm import _pick
+
+TILE_M = 128
+TILE_N = 128
+
+# Exponent sentinel for zero entries (mirrors ozaki.ZERO_EXP): a zero loses
+# every max and wins every min, which only lowers the z_r estimate — the
+# safe (conservative) direction.
+NEG_INF = -(1 << 24)
+
+# Marker for *dead* block pairs (one side entirely zero: no products exist).
+# Strictly below any sentinel-contaminated candidate (>= 2*NEG_INF), so the
+# runtime can distinguish "exactly-zero dot product" (ESC := 0) from
+# "zero-contaminated estimate" (huge ESC -> conservative fallback).
+NEG_DEAD = -(1 << 30)
+
+
+def _kernel(amax_ref, amin_ref, bmax_ref, bmin_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, NEG_DEAD)
+
+    amax = amax_ref[...]  # (tm, tk) int32 block maxima of row exponents
+    amin = amin_ref[...]
+    bmax = bmax_ref[...]  # (tk, tn)
+    bmin = bmin_ref[...]
+    # max-plus "product": for each coarse block l, candidate exponents
+    # Amax+Bmin and Amin+Bmax (the two safe underestimates of z_r; §4).
+    c1 = amax[:, :, None] + bmin[None, :, :]
+    c2 = amin[:, :, None] + bmax[None, :, :]
+    cand = jnp.maximum(c1, c2)
+    # Block pairs with an all-zero side contribute nothing.
+    dead = (amax[:, :, None] == NEG_INF) | (bmax[None, :, :] == NEG_INF)
+    cand = jnp.where(dead, NEG_DEAD, cand)
+    o_ref[...] = jnp.maximum(o_ref[...], jnp.max(cand, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def escmax(amax, amin, bmax, bmin, *, interpret=True):
+    """Tropical GEMM over coarse blocks.
+
+    amax/amin: int32[m, kb] per-row, per-k-block exponent max/min of A.
+    bmax/bmin: int32[kb, n] per-col, per-k-block exponent max/min of B.
+    Returns E int32[m, n], the coarsened estimate of exp(z_r) per dot
+    product (never an overestimate of the exact value; §4 proof).
+    """
+    m, kb = amax.shape
+    kb2, n = bmax.shape
+    assert kb == kb2
+    tm, tn, tk = _pick(TILE_M, m), _pick(TILE_N, n), _pick(TILE_M, kb)
+    grid = (m // tm, n // tn, kb // tk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(amax, amin, bmax, bmin)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references the pytest suite checks the kernels
+against (exact equality — both sides are integer arithmetic).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .escmax import NEG_DEAD, NEG_INF  # re-exported for tests  # noqa: F401
+
+
+def slice_gemm_ref(a8, b8):
+    """int32 exact GEMM oracle for kernels.slice_gemm."""
+    return jax.lax.dot_general(
+        a8.astype(jnp.int32),
+        b8.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def escmax_ref(amax, amin, bmax, bmin):
+    """Tropical GEMM oracle for kernels.escmax (dense einsum formulation)."""
+    c1 = amax[:, :, None] + bmin[None, :, :]
+    c2 = amin[:, :, None] + bmax[None, :, :]
+    cand = jnp.maximum(c1, c2)
+    dead = (amax[:, :, None] == NEG_INF) | (bmax[None, :, :] == NEG_INF)
+    return jnp.max(jnp.where(dead, NEG_DEAD, cand), axis=1)

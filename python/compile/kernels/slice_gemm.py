@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: INT8 slice-product GEMM (the Tensor-Core analogue).
+
+Computes P = A8 @ B8 with A8 int8[m,k], B8 int8[k,n], P int32[m,n].
+
+Hardware adaptation (paper targets NVIDIA INT8 Tensor Cores; see DESIGN.md
+§Hardware-Adaptation): the threadblock tiling of the paper's CUTLASS kernels
+becomes a 3-D Pallas grid with BlockSpec index maps expressing the HBM<->VMEM
+schedule; the warp-level s8 MMA becomes a `dot_general` on int8 tiles with
+int32 accumulation, which the MXU executes natively on TPU.  Tile sizes
+default to the MXU's 128-lane geometry, shrinking for small problems.
+
+MUST be lowered with interpret=True in this environment: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles: 128x128 output tile, 128-deep K panels.
+# VMEM footprint per step: (TM*TK + TK*TN) int8 + TM*TN int32
+#   = 2*128*128 + 128*128*4 = 96 KiB  « 16 MiB VMEM, leaving room for
+# double-buffering the A/B tiles while the MXU consumes the previous pair.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _pick(tile: int, dim: int) -> int:
+    """Largest power-of-two tile <= `tile` that divides `dim`."""
+    t = min(tile, dim)
+    while dim % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    # int8 x int8 -> int32: exact as long as k <= 2^17 (|d| <= 128 products).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slice_gemm(a8, b8, *, interpret=True):
+    """P int32[m,n] = a8 int8[m,k] @ b8 int8[k,n], exact integer GEMM."""
+    m, k = a8.shape
+    k2, n = b8.shape
+    assert k == k2, (a8.shape, b8.shape)
+    tm, tn, tk = _pick(TILE_M, m), _pick(TILE_N, n), _pick(TILE_K, k)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a8, b8)

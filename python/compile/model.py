@@ -1,0 +1,114 @@
+"""L2 JAX graphs: emulated DGEMM, fused safety-scan + coarsened ESC, and the
+native-FP64 fallback graph.
+
+These are the computations `aot.py` lowers to HLO text for the Rust runtime.
+Everything is static-shape and trace-safe; Python never runs at request time.
+"""
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from . import ozaki
+from .kernels.escmax import NEG_DEAD, NEG_INF, escmax
+from .kernels.slice_gemm import slice_gemm
+
+# Coarsening block length b along k for the ESC estimate (§4).  Cost of the
+# max-plus pass is 1/b of a real GEMM; 64 matches the paper's "few percent"
+# overhead target while keeping the estimate tight on Test-2-style inputs.
+ESC_BLOCK = 64
+
+
+def dgemm(a, b):
+    """Native FP64 GEMM — the fallback target and baseline."""
+    return jnp.matmul(a, b)
+
+
+def emulated_gemm(a, b, slices: int, *, interpret=True):
+    """Ozaki-I emulated DGEMM with the unsigned slice encoding (§3).
+
+    a: f64[m,k], b: f64[k,n] -> f64[m,n].  `slices` is static: one AOT
+    artifact per slice count; ADP (Rust) picks the artifact at run time.
+    """
+    a_sl, sigma_a = ozaki.slice_rows(a, slices)
+    b_sl, sigma_b = ozaki.slice_cols(b, slices)
+    partials = {}
+    for t in range(slices):
+        for u in range(slices - t):  # Ozaki-I triangular truncation
+            partials[(t, u)] = slice_gemm(
+                a_sl[t], b_sl[u], interpret=interpret
+            )
+    return ozaki.recompose(partials, sigma_a, sigma_b, slices)
+
+
+# Identity padding for ragged k: -inf for the max reduction, +big for the
+# min (a padded entry must never win either reduction; fully-padded blocks
+# end up amax == NEG_INF and are dead-masked by the kernel).
+_MIN_PAD = 1 << 24
+
+
+def _block_minmax_rows(e, block):
+    """Per-row, per-k-block exponent max/min. e: int32[m,k] -> int32[m,ceil(k/b)]."""
+    m, k = e.shape
+    nb = -(-k // block)
+    pad = nb * block - k
+    emax_in = jnp.pad(e, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    emin_in = jnp.pad(e, ((0, 0), (0, pad)), constant_values=_MIN_PAD)
+    return (
+        jnp.max(emax_in.reshape(m, nb, block), axis=2),
+        jnp.min(emin_in.reshape(m, nb, block), axis=2),
+    )
+
+
+def scan_esc(a, b, *, block=ESC_BLOCK, interpret=True):
+    """Fused pre-processing pass of §5.1/§5.2: NaN/Inf scan + coarsened ESC.
+
+    Returns int32[4]: (has_nan, has_inf, esc, required_bits_for_53).
+    The whole decision input is a 4-word result, so the Rust coordinator
+    never re-reads the matrices — the "GPU-resident, no host-device sync"
+    property of §5.4 translated to this substrate.
+    """
+    bad_a = jnp.isnan(a).any() | jnp.isnan(b).any()
+    inf_a = jnp.isinf(a).any() | jnp.isinf(b).any()
+
+    ea = ozaki.frexp_exponent(a)           # int32[m,k]
+    eb = ozaki.frexp_exponent(b.T)         # int32[n,k] (column-major view)
+    amax, amin = _block_minmax_rows(ea, block)
+    bmax_t, bmin_t = _block_minmax_rows(eb, block)
+    e_est = escmax(amax, amin, bmax_t.T, bmin_t.T, interpret=interpret)
+
+    row_max = jnp.max(ea, axis=1)          # exp(x_p) per row
+    col_max = jnp.max(eb, axis=1)          # exp(y_q) per col
+    esc_ij = row_max[:, None] + col_max[None, :] - e_est + 1  # +1: §4 margin
+    # Dot products with no overlapping nonzeros are exactly zero under
+    # emulation: their ESC is 0 by definition.  Same for all-zero rows/cols.
+    # (Zero-*contaminated* estimates stay above NEG_DEAD//2 and produce a
+    # huge, conservative ESC instead — see kernels/escmax.py.)
+    dead = (e_est < NEG_DEAD // 2) | (row_max[:, None] < NEG_INF // 2) \
+        | (col_max[None, :] < NEG_INF // 2)
+    esc_ij = jnp.where(dead, 0, esc_ij)
+    esc = jnp.maximum(jnp.max(esc_ij), 0)
+
+    bits53 = 53 + esc + 1
+    return jnp.stack([
+        bad_a.astype(jnp.int32),
+        inf_a.astype(jnp.int32),
+        esc.astype(jnp.int32),
+        bits53.astype(jnp.int32),
+    ])
+
+
+def exact_esc(a, b):
+    """Uncoarsened ESC oracle (O(mnk)); reference for tests only."""
+    ea = ozaki.frexp_exponent(a).astype(jnp.int64)
+    eb = ozaki.frexp_exponent(b).astype(jnp.int64)
+    z = ea[:, :, None] + eb[None, :, :]                       # (m,k,n)
+    z_r = jnp.max(z, axis=1)                                  # (m,n)
+    row_max = jnp.max(ea, axis=1)
+    col_max = jnp.max(eb, axis=0)
+    esc_ij = row_max[:, None] + col_max[None, :] - z_r + 1
+    dead = (z_r < NEG_INF // 2) | (row_max[:, None] < NEG_INF // 2) \
+        | (col_max[None, :] < NEG_INF // 2)
+    esc_ij = jnp.where(dead, 0, esc_ij)
+    return jnp.maximum(jnp.max(esc_ij), 0).astype(jnp.int32)

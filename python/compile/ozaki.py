@@ -1,0 +1,197 @@
+"""Ozaki-I decomposition with the paper's unsigned slice encoding (L2, JAX).
+
+FP64 matrices are split into `s` INT8 slice matrices per operand.  Only the
+leading slice carries a sign; sub-leading slices use the full 8-bit range,
+re-expressed in two's-complement s8 via the value redistribution of §3 of
+the paper (`d in [128,255] -> d-256`, carry `+1` to the next-higher slice).
+
+Conventions (mirrors `rust/src/ozaki/slicing.rs`, cross-validated by tests):
+
+* Per-row (A) / per-column (B) scaling.  With `e = frexp`-exponent of the
+  row/col max (so `|a| < 2^e` for the whole row), the fixed-point window is
+  `v = a * 2^sigma`, `sigma = 8*(s-1) + 6 - e`.  The leading digit then
+  satisfies `|L0| <= 64` *including* the remap carry (one headroom bit).
+* Digits are extracted MSB-first with round-to-negative-infinity, giving a
+  non-negative remainder — exactly the paper's construction.
+* Effective mantissa bits: `8*s - 2` (sign + headroom).  FP64 (53-bit)
+  fidelity needs s = 7 slices, vs 8 for naive signed slicing — the paper's
+  22%-compute-reduction claim (§3).
+
+Everything here is trace-safe jnp; it lowers into the AOT HLO artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Exponent of zero entries: below any real FP64 exponent (min subnormal
+# exponent is -1073 in frexp convention) so zero rows/blocks never win a max.
+ZERO_EXP = -(1 << 24)
+
+# Headroom accounting: 1 sign bit + 1 carry-headroom bit per slice vector.
+HEADROOM_BITS = 2
+
+
+def effective_bits(slices: int) -> int:
+    """Effective mantissa bits captured by `slices` INT8 slices."""
+    return 8 * slices - HEADROOM_BITS
+
+
+def slices_for_bits(mantissa_bits: int) -> int:
+    """Minimum slice count whose effective bits cover `mantissa_bits`."""
+    return -(-(mantissa_bits + HEADROOM_BITS) // 8)
+
+
+def frexp_exponent(x):
+    """Exponent e with |x| < 2^e (frexp convention); ZERO_EXP for x == 0.
+
+    Implemented with bit manipulation rather than jnp.frexp so that the
+    lowered HLO is pure integer ops (cheap on the scan path) and — crucially
+    — immune to XLA CPU's DAZ/FTZ: float comparisons treat subnormals as
+    zero on this backend, so zero detection MUST happen in the integer
+    domain (`mag == 0`) for the ESC of subnormal-containing inputs to be
+    correct.  (The int->f64 conversion of the raw mantissa used for the
+    subnormal branch produces a *normal* float, so it is FTZ-safe too.)
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint64)
+    mag = bits & jnp.uint64(0x7FFF_FFFF_FFFF_FFFF)  # drop sign
+    raw = ((mag >> 52) & jnp.uint64(0x7FF)).astype(jnp.int32)
+    mant = mag & jnp.uint64((1 << 52) - 1)
+    # Normal numbers: value in [2^(raw-1023), 2^(raw-1022)) => e = raw - 1022.
+    normal_e = raw - 1022
+    # Subnormals: value = mant * 2^-1074, highest set bit h => e = h + 1 - 1074.
+    # floor(log2(mant)) via conversion to f64 (exact for < 2^53).
+    mant_f = mant.astype(jnp.float64)
+    mbits = jax.lax.bitcast_convert_type(mant_f, jnp.uint64)
+    mexp = ((mbits >> 52) & jnp.uint64(0x7FF)).astype(jnp.int32) - 1023
+    sub_e = mexp + 1 - 1074
+    e = jnp.where(raw == 0, sub_e, normal_e)
+    return jnp.where(mag == jnp.uint64(0), jnp.int32(ZERO_EXP), e)
+
+
+def _digits_unsigned(v, slices):
+    """Base-256 digits of the scaled value `v`, unsigned encoding.
+
+    v is a real with |v| < 2^(8*(slices-1) + 6).  Returns a list of `slices`
+    int32 arrays (digit values in s8 range after the two's-complement remap,
+    MSB first).
+
+    Digits are extracted on the **magnitude** and the sign is applied by
+    negating the digit vector: extracting on the signed value would borrow
+    (`floor(-eps) = -1`, `r = 2^w - |v|`), which f64 cannot represent for
+    elements far below the row max and silently destroys their low bits.
+    Each magnitude step strips a *leading* bit field of |v| — exact in f64.
+    Mirrors rust/src/ozaki/slicing.rs::extract_digits.
+    """
+    av = jnp.abs(v)
+    neg = v < 0.0
+    w = float(2 ** (8 * (slices - 1)))
+    lead = jnp.floor(av / w)
+    digits = [lead]
+    r = av - lead * w
+    for t in range(1, slices):
+        wt = float(2 ** (8 * (slices - 1 - t)))
+        d = jnp.floor(r / wt)
+        r = r - d * wt
+        digits.append(d)
+    digits = [jnp.where(neg, -d, d) for d in digits]
+    # Two's-complement remap, LSB -> MSB: d > 127 => d -= 256 with a +1
+    # carry up (symmetrically d < -128 => d += 256, carry -1).
+    for t in range(slices - 1, 0, -1):
+        hi = digits[t] > 127.0
+        lo = digits[t] < -128.0
+        digits[t] = digits[t] - jnp.where(hi, 256.0, 0.0) + jnp.where(lo, 256.0, 0.0)
+        digits[t - 1] = digits[t - 1] + jnp.where(hi, 1.0, 0.0) - jnp.where(lo, 1.0, 0.0)
+    return [d.astype(jnp.int32) for d in digits]
+
+
+def slice_rows(a, slices):
+    """Decompose A (m,k) along rows.
+
+    Returns (slice_tensor int8[slices, m, k], row_scale_exp int32[m]) where
+    a[i, j] ~= sum_t slice[t, i, j] * 2^(8*(slices-1-t) - sigma_i) and
+    sigma_i = 8*(slices-1) + 6 - row_max_exp[i].
+    """
+    e = frexp_exponent(a)
+    emax = jnp.max(e, axis=1)  # (m,)
+    # All-zero rows: any sigma works (digits are all zero); pick exp 0.
+    emax_safe = jnp.where(emax == ZERO_EXP, 0, emax)
+    sigma = (8 * (slices - 1) + 6) - emax_safe  # (m,) int32
+    # sigma can exceed 1023 for rows of tiny/subnormal values; 2^sigma would
+    # overflow f64 as a single factor, so scale in two exact halves.
+    half = sigma // 2
+    v = a * exp2i(half)[:, None] * exp2i(sigma - half)[:, None]
+    digits = _digits_unsigned(v, slices)
+    st = jnp.stack([d.astype(jnp.int8) for d in digits])  # (s, m, k)
+    return st, sigma
+
+
+def slice_cols(b, slices):
+    """Decompose B (k,n) along columns; see slice_rows."""
+    st, sigma = slice_rows(b.T, slices)
+    return jnp.transpose(st, (0, 2, 1)), sigma
+
+
+def exp2i(e):
+    """Exact 2^e for integer-array e in [-1022, 1023], by assembling the
+    f64 bit pattern directly.  jnp.exp2 goes through a polynomial on XLA
+    CPU and is NOT exact (exp2(26) != 2^26 bit-for-bit), which silently
+    corrupts the fixed-point window; never use it for scale factors.
+    """
+    bits = ((e.astype(jnp.int64) + 1023) << 52).astype(jnp.uint64)
+    return jax.lax.bitcast_convert_type(bits, jnp.float64)
+
+
+def _two_sum(a, b):
+    """Error-free sum (Knuth, branch-free): a + b = s + e exactly."""
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
+def recompose(partials, sigma_a, sigma_b, slices):
+    """Recombine slice-pair products into FP64.
+
+    `partials` maps (t, u) -> int32[m, n] product of A-slice t and B-slice u
+    for t + u <= slices - 1 (Ozaki-I triangular truncation).  Result:
+    C[i,j] = sum_{t,u} P[t,u][i,j] * 2^(16*(slices-1) - 8*(t+u))
+             * 2^(-sigma_a[i] - sigma_b[j]).
+
+    Partial products are grouped by q = t+u and accumulated smallest weight
+    first with a **compensated** (two_sum) accumulator: level sums reach
+    ~(|A||B|)_ij individually while the true result can be much smaller
+    after cross-level cancellation; plain f64 accumulation would leave a
+    poly(s,k)*eps*(|A||B|) error above the Grade A slope.  Mirrors
+    rust/src/ozaki/recompose.rs operation-for-operation.
+    """
+    m = sigma_a.shape[0]
+    n = sigma_b.shape[0]
+    by_q = {}
+    for (t, u), p in partials.items():
+        by_q.setdefault(t + u, []).append(p)
+    hi = jnp.zeros((m, n), dtype=jnp.float64)
+    lo = jnp.zeros((m, n), dtype=jnp.float64)
+    for q in sorted(by_q.keys(), reverse=True):  # smallest weight first
+        s_q = by_q[q][0].astype(jnp.float64)
+        for p in by_q[q][1:]:
+            s_q = s_q + p.astype(jnp.float64)  # exact: |sum| < 2^53
+        x = s_q * float(2 ** (16 * (slices - 1) - 8 * q))  # exact pow2 scale
+        hi, e = _two_sum(hi, x)
+        lo = lo + e
+    # Undo the row/col scaling.  |sigma| can exceed 1074, where 2^-sigma
+    # underflows to zero as a single f64 factor, so apply each operand's
+    # scale in two exact power-of-two halves.  Interleaving row/col halves
+    # keeps every intermediate free of spurious overflow/underflow for any
+    # mix of large-row/small-col scalings (see rust/src/ozaki/recompose.rs
+    # for the matching argument).
+    ha = sigma_a // 2
+    hb = sigma_b // 2
+    for f in (
+        exp2i(-ha)[:, None],
+        exp2i(-hb)[None, :],
+        exp2i(-(sigma_a - ha))[:, None],
+        exp2i(-(sigma_b - hb))[None, :],
+    ):
+        hi = hi * f
+        lo = lo * f
+    return hi + lo

@@ -1,0 +1,101 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Both sides are integer arithmetic, so the comparison is exact equality.
+Hypothesis sweeps shapes, seeds and value ranges.
+"""
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.escmax import NEG_INF, escmax
+from compile.kernels.slice_gemm import slice_gemm
+
+
+def rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-128, 128, shape, dtype=np.int64).astype(np.int8))
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 64, 32)])
+def test_slice_gemm_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a8, b8 = rand_i8(rng, (m, k)), rand_i8(rng, (k, n))
+    got = np.array(slice_gemm(a8, b8))
+    want = np.array(ref.slice_gemm_ref(a8, b8))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_slice_gemm_extreme_values():
+    # all -128 x all -128: maximum-magnitude accumulation
+    k = 256
+    a8 = jnp.full((4, k), -128, dtype=jnp.int8)
+    b8 = jnp.full((k, 4), -128, dtype=jnp.int8)
+    got = np.array(slice_gemm(a8, b8))
+    assert (got == 128 * 128 * k).all()
+
+
+def test_slice_gemm_identity_pattern():
+    n = 32
+    eye = jnp.eye(n, dtype=jnp.int8)
+    rng = np.random.default_rng(0)
+    b8 = rand_i8(rng, (n, n))
+    got = np.array(slice_gemm(eye, b8))
+    np.testing.assert_array_equal(got, np.array(b8, dtype=np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 4, 8, 16, 64]),
+    k=st.sampled_from([1, 4, 16, 64, 128]),
+    n=st.sampled_from([1, 2, 8, 32, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_slice_gemm_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a8, b8 = rand_i8(rng, (m, k)), rand_i8(rng, (k, n))
+    np.testing.assert_array_equal(
+        np.array(slice_gemm(a8, b8)), np.array(ref.slice_gemm_ref(a8, b8))
+    )
+
+
+def rand_exps(rng, shape, span=40, zero_frac=0.1):
+    e = rng.integers(-span, span, shape).astype(np.int32)
+    zeros = rng.random(shape) < zero_frac
+    e[zeros] = NEG_INF
+    return e
+
+
+@pytest.mark.parametrize("m,kb,n", [(8, 2, 8), (16, 4, 16), (64, 8, 32)])
+def test_escmax_matches_ref(m, kb, n):
+    rng = np.random.default_rng(kb + m)
+    amax = rand_exps(rng, (m, kb))
+    amin = np.minimum(amax, rand_exps(rng, (m, kb)))
+    bmax = rand_exps(rng, (kb, n))
+    bmin = np.minimum(bmax, rand_exps(rng, (kb, n)))
+    args = [jnp.asarray(x) for x in (amax, amin, bmax, bmin)]
+    got = np.array(escmax(*args))
+    want = np.array(ref.escmax_ref(*args))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 4, 8, 32]),
+    kb=st.sampled_from([1, 2, 8, 16]),
+    n=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31),
+    zero_frac=st.floats(0.0, 0.9),
+)
+def test_escmax_hypothesis(m, kb, n, seed, zero_frac):
+    rng = np.random.default_rng(seed)
+    amax = rand_exps(rng, (m, kb), zero_frac=zero_frac)
+    amin = np.minimum(amax, rand_exps(rng, (m, kb), zero_frac=zero_frac))
+    bmax = rand_exps(rng, (kb, n), zero_frac=zero_frac)
+    bmin = np.minimum(bmax, rand_exps(rng, (kb, n), zero_frac=zero_frac))
+    args = [jnp.asarray(x) for x in (amax, amin, bmax, bmin)]
+    np.testing.assert_array_equal(np.array(escmax(*args)), np.array(ref.escmax_ref(*args)))

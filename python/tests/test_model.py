@@ -1,0 +1,113 @@
+"""L2 model correctness: emulated DGEMM vs FP64 reference, scan+ESC graph."""
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, ozaki
+
+
+def grade_a_err(C, A, B):
+    """Max componentwise error scaled by (|A||B|)_ij."""
+    denom = np.abs(A) @ np.abs(B)
+    return np.max(np.abs(C - A @ B) / np.where(denom == 0, 1, denom))
+
+
+@pytest.mark.parametrize("n,s", [(16, 7), (64, 7), (64, 8), (32, 9)])
+def test_emulated_gemm_fp64_grade(n, s):
+    rng = np.random.default_rng(n + s)
+    A = rng.uniform(-1, 1, (n, n))
+    B = rng.uniform(-1, 1, (n, n))
+    C = np.array(model.emulated_gemm(jnp.asarray(A), jnp.asarray(B), s))
+    assert grade_a_err(C, A, B) < (n + 4) * 2.3e-16
+
+
+def test_error_decreases_with_slices():
+    rng = np.random.default_rng(5)
+    A = rng.uniform(-1, 1, (24, 24))
+    B = rng.uniform(-1, 1, (24, 24))
+    errs = [
+        grade_a_err(np.array(model.emulated_gemm(jnp.asarray(A), jnp.asarray(B), s)), A, B)
+        for s in (2, 4, 6)
+    ]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_wide_span_with_esc_sized_slices():
+    rng = np.random.default_rng(6)
+    D = 2.0 ** rng.integers(-30, 30, 32)
+    A = rng.uniform(1, 2, (32, 32)) * D
+    B = (rng.uniform(1, 2, (32, 32)).T / D).T
+    out = np.array(model.scan_esc(jnp.asarray(A), jnp.asarray(B), block=8))
+    esc = int(out[2])
+    exact = int(model.exact_esc(jnp.asarray(A), jnp.asarray(B)))
+    assert esc >= exact  # safety: coarse never below exact
+    s = ozaki.slices_for_bits(53 + esc + 1)
+    C = np.array(model.emulated_gemm(jnp.asarray(A), jnp.asarray(B), s))
+    assert grade_a_err(C, A, B) < 40 * 2.3e-16
+
+
+def test_scan_flags():
+    rng = np.random.default_rng(7)
+    A = rng.uniform(-1, 1, (16, 16))
+    B = rng.uniform(-1, 1, (16, 16))
+    out = np.array(model.scan_esc(jnp.asarray(A), jnp.asarray(B)))
+    assert out[0] == 0 and out[1] == 0
+    A2 = A.copy(); A2[3, 3] = np.nan
+    assert model.scan_esc(jnp.asarray(A2), jnp.asarray(B))[0] == 1
+    B2 = B.copy(); B2[0, 0] = -np.inf
+    assert model.scan_esc(jnp.asarray(A), jnp.asarray(B2))[1] == 1
+
+
+def test_scan_esc_required_bits_field():
+    rng = np.random.default_rng(8)
+    A = rng.uniform(1, 2, (16, 16))
+    B = rng.uniform(1, 2, (16, 16))
+    out = np.array(model.scan_esc(jnp.asarray(A), jnp.asarray(B), block=4))
+    assert out[3] == 53 + out[2] + 1
+
+
+def test_zero_matrices():
+    Z = jnp.zeros((16, 16))
+    out = np.array(model.scan_esc(Z, Z))
+    assert out[2] == 0  # dead dot products: ESC 0
+    C = np.array(model.emulated_gemm(Z, Z, 7))
+    assert (C == 0).all()
+
+
+def test_negative_zero_treated_as_zero():
+    A = jnp.asarray([[-0.0, 1.0], [2.0, -0.0]])
+    B = jnp.asarray([[3.0, -0.0], [-0.0, 4.0]])
+    C = np.array(model.emulated_gemm(A, B, 7))
+    np.testing.assert_array_equal(np.abs(C), np.abs(np.array(A) @ np.array(B)))
+
+
+def test_permutation_invariance_bitwise():
+    # fixed-point emulation is summation-order invariant (§4)
+    rng = np.random.default_rng(9)
+    A = rng.uniform(-2, 2, (8, 12))
+    B = rng.uniform(-2, 2, (12, 8))
+    perm = rng.permutation(12)
+    C1 = np.array(model.emulated_gemm(jnp.asarray(A), jnp.asarray(B), 6))
+    C2 = np.array(model.emulated_gemm(jnp.asarray(A[:, perm]), jnp.asarray(B[perm, :]), 6))
+    np.testing.assert_array_equal(C1, C2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    span=st.integers(0, 25),
+    s_extra=st.integers(0, 2),
+)
+def test_esc_sized_accuracy_hypothesis(seed, span, s_extra):
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(-2, 2, (12, 16)) * 2.0 ** rng.integers(-span, span + 1, (12, 16))
+    B = rng.uniform(-2, 2, (16, 12)) * 2.0 ** rng.integers(-span, span + 1, (16, 12))
+    out = np.array(model.scan_esc(jnp.asarray(A), jnp.asarray(B), block=8))
+    s = ozaki.slices_for_bits(53 + int(out[2]) + 1) + s_extra
+    C = np.array(model.emulated_gemm(jnp.asarray(A), jnp.asarray(B), s))
+    assert grade_a_err(C, A, B) < 40 * 2.3e-16

@@ -1,0 +1,115 @@
+"""L2 slicing correctness: unsigned encoding round-trip and invariants."""
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ozaki
+
+
+import math
+
+
+def reconstruct(st_, sigma, slices):
+    """Rebuild the matrix from its slices (test helper).
+
+    Uses math.fsum (exactly-rounded) per element: a plain f64 sum of digit
+    contributions spanning an 8*slices-bit window would itself round and
+    mask slicing exactness.
+    """
+    st_ = np.array(st_, dtype=np.int64)
+    sigma = np.array(sigma)
+    _, m, k = st_.shape
+    out = np.zeros((m, k))
+    for i in range(m):
+        for j in range(k):
+            terms = [
+                math.ldexp(float(st_[t, i, j]), 8 * (slices - 1 - t) - int(sigma[i]))
+                for t in range(slices)
+            ]
+            out[i, j] = math.fsum(terms)
+    return out
+
+
+@pytest.mark.parametrize("slices", [2, 3, 5, 7])
+def test_roundtrip_uniform(slices):
+    rng = np.random.default_rng(slices)
+    a = rng.uniform(-4.0, 4.0, (8, 16))
+    st_, sigma = ozaki.slice_rows(jnp.asarray(a), slices)
+    rec = reconstruct(np.array(st_), sigma, slices)
+    tol = 2.0 ** (-ozaki.effective_bits(slices) + 1) * np.abs(a).max(axis=1, keepdims=True)
+    assert (np.abs(rec - a) <= tol).all()
+
+
+def test_exact_at_7_slices():
+    # 54 effective bits cover the full 53-bit significand of row maxima and
+    # anything sharing their exponent window.
+    rng = np.random.default_rng(1)
+    a = rng.uniform(0.5, 1.0, (4, 8))  # single binade -> all exact
+    st_, sigma = ozaki.slice_rows(jnp.asarray(a), 7)
+    rec = reconstruct(np.array(st_), sigma, 7)
+    np.testing.assert_array_equal(rec, a)
+
+
+def test_slices_fit_int8():
+    rng = np.random.default_rng(2)
+    # adversarial: values just below powers of two maximize digit carries
+    a = np.concatenate([
+        np.nextafter(2.0 ** rng.integers(-10, 10, (4, 8)), 0.0),
+        rng.uniform(-1, 1, (4, 8)),
+    ], axis=1)
+    for slices in (2, 4, 7):
+        st_, _ = ozaki.slice_rows(jnp.asarray(a), slices)
+        arr = np.array(st_, dtype=np.int32)
+        assert arr.min() >= -128 and arr.max() <= 127
+
+
+def test_zero_and_negzero_rows():
+    a = np.array([[0.0, -0.0, 0.0], [1.0, 0.0, -2.0]])
+    st_, sigma = ozaki.slice_rows(jnp.asarray(a), 4)
+    arr = np.array(st_)
+    assert (arr[:, 0, :] == 0).all()
+    rec = reconstruct(arr, sigma, 4)
+    assert rec[0].tolist() == [0.0, 0.0, 0.0]
+
+
+def test_per_row_scaling_independent():
+    a = np.array([[1.0, 0.5], [1e160, 2e160]])
+    st_, sigma = ozaki.slice_rows(jnp.asarray(a), 7)
+    rec = reconstruct(np.array(st_), np.array(sigma), 7)
+    np.testing.assert_allclose(rec, a, rtol=2e-16)
+    assert int(sigma[0]) != int(sigma[1])
+
+
+def test_frexp_exponent_matches_numpy():
+    vals = np.array([1.0, 0.5, 0.75, 3.0, 1e300, 1e-300, -2.5, 5e-324, 0.0])
+    got = np.array(ozaki.frexp_exponent(jnp.asarray(vals)))
+    _, want = np.frexp(vals)
+    # numpy frexp of 0 gives e=0; ours uses the sentinel
+    want[vals == 0] = ozaki.ZERO_EXP
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    slices=st.integers(2, 9),
+    seed=st.integers(0, 2**31),
+    scale_exp=st.integers(-200, 200),
+)
+def test_roundtrip_hypothesis(slices, seed, scale_exp):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1.0, 1.0, (3, 12)) * (2.0 ** scale_exp)
+    st_, sigma = ozaki.slice_rows(jnp.asarray(a), slices)
+    rec = reconstruct(np.array(st_), np.array(sigma), slices)
+    tol = 2.0 ** (-ozaki.effective_bits(slices) + 1) * np.abs(a).max(axis=1, keepdims=True)
+    assert (np.abs(rec - a) <= tol + 0.0).all()
+
+
+def test_slices_for_bits_consistency():
+    assert ozaki.slices_for_bits(53) == 7
+    for s in range(1, 20):
+        assert ozaki.slices_for_bits(ozaki.effective_bits(s)) == s

@@ -1,0 +1,62 @@
+//! Fig 6 regenerator: end-to-end emulated-DGEMM speedup over native FP64
+//! DGEMM on GB200 (top) and RTX Pro 6000 Blackwell (bottom), at the 55-bit
+//! setting, without ADP (left: performance ceiling, no safety) and with
+//! ADP forced to 55 bits (right: guardrails on).
+//!
+//! The curves come from the calibrated `perfmodel` (no GPU in this
+//! environment; DESIGN.md §Substitutions). A measured-CPU column is
+//! included for transparency: on a CPU there is no 8-bit tensor-core
+//! advantage, so emulation is *slower* than native here — the model is
+//! what carries the paper's platform claims, the CPU numbers validate the
+//! op-mix accounting feeding it.
+//!
+//! Expected shape: speedups grow with n and saturate near 2.3x (GB200) /
+//! 13.2x (RTX Pro 6000); ADP costs only a few percent of the ceiling.
+
+use adp_dgemm::linalg::{gemm, Matrix};
+use adp_dgemm::ozaki::{emulated_gemm, OzakiConfig};
+use adp_dgemm::perfmodel::{GB200, RTX_PRO_6000};
+use adp_dgemm::util::{benchkit, Rng};
+
+const S55: usize = 7;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+
+    println!("# Fig 6: modeled speedup vs native DGEMM at 55-bit setting");
+    println!(
+        "{:>24} {:>6} {:>12} {:>12} {:>10}",
+        "platform", "n", "no_adp_x", "with_adp_x", "adp_cost_%"
+    );
+    for p in [GB200, RTX_PRO_6000] {
+        for n in [256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+            let ceiling = p.speedup(n, S55, false);
+            let with = p.speedup(n, S55, true);
+            println!(
+                "{:>24} {n:>6} {ceiling:>12.2} {with:>12.2} {:>10.2}",
+                p.name,
+                100.0 * (1.0 - with / ceiling)
+            );
+        }
+        let peak = p.speedup(16384, S55, true);
+        println!("#   {} peak (ADP on): {peak:.2}x", p.name);
+    }
+
+    println!("\n# measured CPU substrate (sanity: op-mix accounting, not a GPU claim)");
+    println!("{:>6} {:>12} {:>12} {:>10}", "n", "fp64_ms", "emul_ms", "ratio");
+    let sizes: Vec<usize> = if full { vec![128, 256, 512] } else { vec![128, 256] };
+    for n in sizes {
+        let mut rng = Rng::new(66);
+        let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+        let t_nat = benchkit::bench(1, 3, || gemm(&a, &b));
+        let cfg = OzakiConfig::new(S55);
+        let t_emu = benchkit::bench(1, 3, || emulated_gemm(&a, &b, &cfg));
+        println!(
+            "{n:>6} {:>12.2} {:>12.2} {:>10.2}",
+            t_nat.median_s * 1e3,
+            t_emu.median_s * 1e3,
+            t_nat.median_s / t_emu.median_s
+        );
+    }
+}

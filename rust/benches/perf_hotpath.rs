@@ -1,0 +1,103 @@
+//! Hot-path micro-benchmarks feeding EXPERIMENTS.md §Perf: per-layer
+//! throughput of every stage of the emulated-DGEMM pipeline plus the
+//! native baseline and the AOT artifact path.
+//!
+//!   slice_pair_gemm  — i8 x i8 -> i32 MACs/s (the Tensor-Core stand-in)
+//!   slice_a          — FP64 -> INT8 decomposition bandwidth
+//!   fp64 gemm        — the baseline FLOP/s (denominator of every speedup)
+//!   recompose        — level accumulation + descaling bandwidth
+//!   coarse ESC       — guardrail pass throughput
+//!   artifact gemm    — PJRT end-to-end (when artifacts/ exists)
+
+use std::path::Path;
+
+use adp_dgemm::esc::coarse_esc_gemm;
+use adp_dgemm::linalg::{gemm, Matrix};
+use adp_dgemm::ozaki::{emulated_gemm_with_breakdown, slice_a, slice_b, slice_pair_gemm, OzakiConfig, SliceEncoding};
+use adp_dgemm::runtime::RuntimeHandle;
+use adp_dgemm::util::{benchkit, Rng};
+
+fn main() {
+    let n = std::env::var("N").ok().and_then(|s| s.parse().ok()).unwrap_or(512usize);
+    let s = 7usize;
+    let mut rng = Rng::new(99);
+    let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+    let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+
+    println!("# perf_hotpath n={n} s={s} (single thread)");
+
+    // --- L3 native fp64 GEMM baseline -------------------------------
+    let st = benchkit::bench_budget(1.0, || gemm(&a, &b));
+    benchkit::report(
+        "fp64_gemm",
+        st,
+        &[("GFLOP/s", format!("{:.2}", st.per_sec(2.0 * (n * n * n) as f64) / 1e9))],
+    );
+
+    // --- slicing ------------------------------------------------------
+    let st = benchkit::bench_budget(1.0, || slice_a(&a, s, SliceEncoding::Unsigned));
+    benchkit::report(
+        "slice_a(s=7)",
+        st,
+        &[
+            ("Melem/s", format!("{:.1}", st.per_sec((n * n) as f64) / 1e6)),
+            ("GB/s out", format!("{:.2}", st.per_sec((n * n * s) as f64) / 1e9)),
+        ],
+    );
+
+    // --- i8 pair GEMM --------------------------------------------------
+    let asl = slice_a(&a, s, SliceEncoding::Unsigned);
+    let bsl = slice_b(&b, s, SliceEncoding::Unsigned);
+    let mut out = vec![0i64; n * n];
+    let st = benchkit::bench_budget(1.5, || {
+        out.fill(0);
+        slice_pair_gemm(&asl, 0, &bsl, 0, &mut out);
+    });
+    benchkit::report(
+        "slice_pair_gemm",
+        st,
+        &[("GMAC/s", format!("{:.2}", st.per_sec((n * n * n) as f64) / 1e9))],
+    );
+
+    // --- full emulated pipeline with breakdown -------------------------
+    let cfg = OzakiConfig::new(s);
+    let (_, bd) = emulated_gemm_with_breakdown(&a, &b, &cfg);
+    println!(
+        "emulated_gemm(s=7): slice {:.1} ms, pair-gemms {:.1} ms ({} pairs, {:.2} GMAC/s), recompose {:.1} ms",
+        bd.slice_s * 1e3,
+        bd.gemm_s * 1e3,
+        bd.pairs,
+        (bd.pairs * n * n * n) as f64 / bd.gemm_s / 1e9,
+        bd.recompose_s * 1e3
+    );
+
+    // --- guardrails -----------------------------------------------------
+    let st = benchkit::bench_budget(0.5, || coarse_esc_gemm(&a, &b, 64));
+    benchkit::report(
+        "coarse_esc(b=64)",
+        st,
+        &[("Mdot/s", format!("{:.1}", st.per_sec((n * n) as f64) / 1e6))],
+    );
+
+    // --- artifact path ---------------------------------------------------
+    if let Some(rt) = RuntimeHandle::try_load(Path::new("artifacts")) {
+        if let Some(na) = rt.catalog().fitting_size(64, 64, 64) {
+            let slices = rt.catalog().slice_count_at_least(na, 7).unwrap_or(7);
+            let mut rng = Rng::new(7);
+            let aa = Matrix::uniform(na, na, -1.0, 1.0, &mut rng);
+            let bb = Matrix::uniform(na, na, -1.0, 1.0, &mut rng);
+            let _ = rt.emulated_gemm(na, slices, &aa, &bb); // compile warmup
+            let st = benchkit::bench(1, 5, || rt.emulated_gemm(na, slices, &aa, &bb).unwrap());
+            benchkit::report(
+                "artifact_gemm",
+                st,
+                &[("n", na.to_string()), ("slices", slices.to_string())],
+            );
+            let _ = rt.dgemm(na, &aa, &bb);
+            let st = benchkit::bench(1, 5, || rt.dgemm(na, &aa, &bb).unwrap());
+            benchkit::report("artifact_dgemm", st, &[("n", na.to_string())]);
+        }
+    } else {
+        println!("artifact path: skipped (run `make artifacts`)");
+    }
+}

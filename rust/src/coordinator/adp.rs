@@ -1,0 +1,354 @@
+//! The ADP decision engine (§5, Fig 8).
+//!
+//! `AdpEngine::gemm` is the drop-in DGEMM entry point: it guarantees an
+//! FP64-grade result for every input by construction — either through
+//! ESC-sized emulation or through fallback to native FP64 — and records
+//! which path was taken and why.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::heuristic::{HeuristicInput, SelectionHeuristic};
+use super::metrics::Metrics;
+use super::scan::scan_pair;
+use crate::esc::coarse::{coarse_esc_gemm, DEFAULT_BLOCK};
+use crate::linalg::{gemm as native_gemm, Matrix};
+use crate::ozaki::{emulated_gemm, OzakiConfig, SliceEncoding};
+use crate::runtime::{ArtifactKind, RuntimeHandle};
+
+/// Why ADP dispatched the way it did (Fig 8 / Fig 7-right inputs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GemmDecision {
+    /// Emulated via an AOT artifact (registered square size).
+    EmulatedArtifact { n: usize, slices: usize },
+    /// Emulated via the native Rust pipeline (unregistered shape).
+    EmulatedNative { slices: usize },
+    /// NaN detected in the inputs (§5.1).
+    FallbackNan,
+    /// Inf detected in the inputs (§5.1).
+    FallbackInf,
+    /// ESC demanded more bits than `max_slices` can provide (§5.3).
+    FallbackEsc { esc: i32 },
+    /// The heuristic judged emulation unprofitable (§5.3).
+    FallbackHeuristic,
+}
+
+impl GemmDecision {
+    pub fn is_emulated(&self) -> bool {
+        matches!(
+            self,
+            GemmDecision::EmulatedArtifact { .. } | GemmDecision::EmulatedNative { .. }
+        )
+    }
+
+    pub fn slices(&self) -> Option<usize> {
+        match *self {
+            GemmDecision::EmulatedArtifact { slices, .. }
+            | GemmDecision::EmulatedNative { slices } => Some(slices),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GemmDecision::EmulatedArtifact { .. } => "emulated-artifact",
+            GemmDecision::EmulatedNative { .. } => "emulated-native",
+            GemmDecision::FallbackNan => "fallback-nan",
+            GemmDecision::FallbackInf => "fallback-inf",
+            GemmDecision::FallbackEsc { .. } => "fallback-esc",
+            GemmDecision::FallbackHeuristic => "fallback-heuristic",
+        }
+    }
+}
+
+/// Per-request outcome record.
+#[derive(Clone, Copy, Debug)]
+pub struct AdpOutcome {
+    pub decision: GemmDecision,
+    /// Coarsened ESC of the inputs (0 when the scan already fell back).
+    pub esc: i32,
+    /// ESC-derived slice requirement (before catalog rounding).
+    pub slices_required: usize,
+    /// Guardrail time (scan + ESC + decision), seconds — Fig 5's ADP share.
+    pub guardrail_s: f64,
+    /// Execution time of the chosen path, seconds.
+    pub exec_s: f64,
+}
+
+/// Engine configuration.
+pub struct AdpConfig {
+    /// Target mantissa bits (53 = FP64).
+    pub target_mantissa: i32,
+    /// Hard cap on slices; ESC requirements beyond this fall back (§5.3).
+    pub max_slices: usize,
+    pub encoding: SliceEncoding,
+    /// ESC coarsening block along k.
+    pub esc_block: usize,
+    /// Emulate-vs-native policy.
+    pub heuristic: Box<dyn SelectionHeuristic>,
+    /// AOT artifact runtime; `None` => always use the native pipeline.
+    pub runtime: Option<RuntimeHandle>,
+    /// Prefer artifacts when the shape is registered.
+    pub use_artifacts: bool,
+}
+
+impl AdpConfig {
+    /// Defaults matching the paper: FP64 target, 200-bit ceiling (~26
+    /// slices, the Fig 3 configuration), unsigned encoding.
+    pub fn fp64() -> AdpConfig {
+        AdpConfig {
+            target_mantissa: 53,
+            max_slices: 26,
+            encoding: SliceEncoding::Unsigned,
+            esc_block: DEFAULT_BLOCK,
+            heuristic: Box::new(super::heuristic::AlwaysEmulate),
+            runtime: None,
+            use_artifacts: true,
+        }
+    }
+
+    pub fn with_heuristic(mut self, h: Box<dyn SelectionHeuristic>) -> AdpConfig {
+        self.heuristic = h;
+        self
+    }
+
+    pub fn with_runtime(mut self, rt: Option<RuntimeHandle>) -> AdpConfig {
+        self.runtime = rt;
+        self
+    }
+
+    pub fn with_max_slices(mut self, s: usize) -> AdpConfig {
+        self.max_slices = s;
+        self
+    }
+}
+
+/// The ADP engine. Cheap to construct; share one per worker thread.
+pub struct AdpEngine {
+    pub cfg: AdpConfig,
+    pub metrics: Arc<Metrics>,
+}
+
+impl AdpEngine {
+    pub fn new(cfg: AdpConfig) -> AdpEngine {
+        AdpEngine { cfg, metrics: Arc::new(Metrics::default()) }
+    }
+
+    pub fn with_metrics(cfg: AdpConfig, metrics: Arc<Metrics>) -> AdpEngine {
+        AdpEngine { cfg, metrics }
+    }
+
+    /// The guaranteed-accuracy GEMM entry point.
+    pub fn gemm(&self, a: &Matrix, b: &Matrix) -> (Matrix, AdpOutcome) {
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let t0 = Instant::now();
+
+        // ---- Guardrail 1: safety scan (§5.1) -------------------------
+        let flags = scan_pair(a, b);
+        if !flags.clean() {
+            let decision =
+                if flags.has_nan { GemmDecision::FallbackNan } else { GemmDecision::FallbackInf };
+            let guardrail_s = t0.elapsed().as_secs_f64();
+            let (c, exec_s) = self.native(a, b);
+            return self.finish(c, decision, 0, 0, guardrail_s, exec_s);
+        }
+
+        // ---- Guardrail 2: coarsened ESC (§5.2) -----------------------
+        let esc = coarse_esc_gemm(a, b, self.cfg.esc_block);
+        let bits = self.cfg.target_mantissa + esc + 1;
+        let slices = self.cfg.encoding.slices_for_bits(bits);
+        if slices > self.cfg.max_slices {
+            let guardrail_s = t0.elapsed().as_secs_f64();
+            let (c, exec_s) = self.native(a, b);
+            return self.finish(c, GemmDecision::FallbackEsc { esc }, esc, slices, guardrail_s, exec_s);
+        }
+
+        // ---- Guardrail 3: profitability heuristic (§5.3) -------------
+        let hin = HeuristicInput { m: a.rows, k: a.cols, n: b.cols, slices };
+        if !self.cfg.heuristic.emulate(&hin) {
+            let guardrail_s = t0.elapsed().as_secs_f64();
+            let (c, exec_s) = self.native(a, b);
+            return self.finish(c, GemmDecision::FallbackHeuristic, esc, slices, guardrail_s, exec_s);
+        }
+        let guardrail_s = t0.elapsed().as_secs_f64();
+
+        // ---- Dispatch emulation (§5.4) -------------------------------
+        // Subnormal inputs are exact on the native pipeline but flushed by
+        // the XLA-CPU artifact substrate (DAZ/FTZ): steer them native.
+        let te = Instant::now();
+        if self.cfg.use_artifacts && !flags.has_subnormal {
+            if let Some(rt) = &self.cfg.runtime {
+                if let Some(nreg) = rt.catalog().fitting_size(a.rows, a.cols, b.cols) {
+                    if let Some(sreg) = rt.catalog().slice_count_at_least(nreg, slices) {
+                        if let Ok(c) = rt.emulated_gemm(nreg, sreg, a, b) {
+                            let exec_s = te.elapsed().as_secs_f64();
+                            let d = GemmDecision::EmulatedArtifact { n: nreg, slices: sreg };
+                            return self.finish(c, d, esc, slices, guardrail_s, exec_s);
+                        }
+                        // artifact failure => continue to native pipeline
+                    }
+                }
+            }
+        }
+        let cfg = OzakiConfig::with_encoding(slices, self.cfg.encoding);
+        let c = emulated_gemm(a, b, &cfg);
+        let exec_s = te.elapsed().as_secs_f64();
+        self.finish(c, GemmDecision::EmulatedNative { slices }, esc, slices, guardrail_s, exec_s)
+    }
+
+    /// Native FP64 fallback: prefer the DGEMM artifact if registered
+    /// (keeps the whole request on the "device"), else the Rust GEMM.
+    fn native(&self, a: &Matrix, b: &Matrix) -> (Matrix, f64) {
+        let t = Instant::now();
+        if self.cfg.use_artifacts {
+            if let Some(rt) = &self.cfg.runtime {
+                if let Some(n) = rt.catalog().fitting_size(a.rows, a.cols, b.cols) {
+                    if rt.catalog().find(ArtifactKind::Dgemm, n, 0).is_some() {
+                        if let Ok(c) = rt.dgemm(n, a, b) {
+                            return (c, t.elapsed().as_secs_f64());
+                        }
+                    }
+                }
+            }
+        }
+        let c = native_gemm(a, b);
+        (c, t.elapsed().as_secs_f64())
+    }
+
+    fn finish(
+        &self,
+        c: Matrix,
+        decision: GemmDecision,
+        esc: i32,
+        slices_required: usize,
+        guardrail_s: f64,
+        exec_s: f64,
+    ) -> (Matrix, AdpOutcome) {
+        let outcome = AdpOutcome { decision, esc, slices_required, guardrail_s, exec_s };
+        self.metrics.record(&outcome);
+        (c, outcome)
+    }
+}
+
+/// ADP as a QR trailing-update backend (Fig 7's integration).
+impl crate::linalg::qr::GemmBackend for AdpEngine {
+    fn gemm(&mut self, a: &Matrix, b: &Matrix) -> Matrix {
+        AdpEngine::gemm(self, a, b).0
+    }
+    fn name(&self) -> &'static str {
+        "adp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::heuristic::{AlwaysEmulate, NeverEmulate};
+    use crate::util::Rng;
+
+    fn engine() -> AdpEngine {
+        AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(AlwaysEmulate)))
+    }
+
+    #[test]
+    fn benign_inputs_emulate() {
+        let mut rng = Rng::new(80);
+        let a = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let (c, out) = engine().gemm(&a, &b);
+        assert!(out.decision.is_emulated(), "{:?}", out.decision);
+        let c_ref = a.matmul_dd(&b);
+        let denom = a.abs().matmul_dd(&b.abs());
+        for i in 0..24 {
+            for j in 0..24 {
+                let e = (c.at(i, j) - c_ref.at(i, j)).abs() / denom.at(i, j);
+                assert!(e < 64.0 * f64::EPSILON, "({i},{j}) err {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_falls_back_and_propagates() {
+        let mut rng = Rng::new(81);
+        let mut a = Matrix::uniform(8, 8, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(8, 8, -1.0, 1.0, &mut rng);
+        *a.at_mut(3, 4) = f64::NAN;
+        let (c, out) = engine().gemm(&a, &b);
+        assert_eq!(out.decision, GemmDecision::FallbackNan);
+        // native semantics: NaN propagates through row 3
+        assert!(c.at(3, 0).is_nan());
+        assert!(!c.at(0, 0).is_nan());
+    }
+
+    #[test]
+    fn inf_falls_back() {
+        let mut rng = Rng::new(82);
+        let mut a = Matrix::uniform(8, 8, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(8, 8, -1.0, 1.0, &mut rng);
+        *a.at_mut(0, 0) = f64::INFINITY;
+        let (c, out) = engine().gemm(&a, &b);
+        assert_eq!(out.decision, GemmDecision::FallbackInf);
+        assert!(c.at(0, 0).is_infinite() || c.at(0, 0).is_nan());
+    }
+
+    #[test]
+    fn extreme_span_falls_back_to_fp64() {
+        // Exceeds the 26-slice (200-bit) budget: ESC fallback. The huge
+        // A-entry must pair with a tiny B-entry so x_p + y_q >> z_r.
+        let mut rng = Rng::new(83);
+        let mut a = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+        let mut b = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+        *a.at_mut(0, 0) = 1e300;
+        *b.at_mut(0, 0) = 1e-300;
+        let (c, out) = engine().gemm(&a, &b);
+        assert!(matches!(out.decision, GemmDecision::FallbackEsc { .. }), "{:?}", out.decision);
+        // result still correct (native)
+        let r = native_gemm(&a, &b);
+        assert_eq!(c.sub(&r).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn heuristic_veto_respected() {
+        let mut rng = Rng::new(84);
+        let a = Matrix::uniform(16, 16, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(16, 16, -1.0, 1.0, &mut rng);
+        let eng = AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(NeverEmulate)));
+        let (_, out) = eng.gemm(&a, &b);
+        assert_eq!(out.decision, GemmDecision::FallbackHeuristic);
+    }
+
+    #[test]
+    fn esc_sizes_slices_on_spanned_input() {
+        let mut rng = Rng::new(85);
+        let mut a = Matrix::uniform(16, 16, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(16, 16, 1.0, 2.0, &mut rng);
+        for j in 0..16 {
+            for i in 0..16 {
+                *a.at_mut(i, j) *= 2f64.powi((j as i32 - 8) * 4);
+            }
+        }
+        let (c, out) = engine().gemm(&a, &b);
+        assert!(out.decision.is_emulated());
+        assert!(out.slices_required > 7, "slices {}", out.slices_required);
+        let c_ref = a.matmul_dd(&b);
+        let denom = a.abs().matmul_dd(&b.abs());
+        for idx in 0..c.data.len() {
+            let e = (c.data[idx] - c_ref.data[idx]).abs() / denom.data[idx];
+            assert!(e < 64.0 * f64::EPSILON, "err {e}");
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let eng = engine();
+        let mut rng = Rng::new(86);
+        for _ in 0..5 {
+            let a = Matrix::uniform(8, 8, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(8, 8, -1.0, 1.0, &mut rng);
+            eng.gemm(&a, &b);
+        }
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.requests, 5);
+        assert_eq!(snap.emulated, 5);
+    }
+}

@@ -1,0 +1,126 @@
+//! Dispatch metrics: outcome histogram, slice-count histogram (Fig 7
+//! right), guardrail-vs-exec time split (Fig 5 / §7.1's <10% claim).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::adp::{AdpOutcome, GemmDecision};
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default, Clone)]
+struct Inner {
+    requests: u64,
+    emulated: u64,
+    fallback_nan: u64,
+    fallback_inf: u64,
+    fallback_esc: u64,
+    fallback_heuristic: u64,
+    slice_histogram: BTreeMap<usize, u64>,
+    guardrail_s: f64,
+    exec_s: f64,
+}
+
+/// Immutable snapshot of the counters.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub emulated: u64,
+    pub fallback_nan: u64,
+    pub fallback_inf: u64,
+    pub fallback_esc: u64,
+    pub fallback_heuristic: u64,
+    pub slice_histogram: Vec<(usize, u64)>,
+    pub guardrail_s: f64,
+    pub exec_s: f64,
+}
+
+impl MetricsSnapshot {
+    /// Guardrail share of total time — the §7.1 "<10% overhead" metric.
+    pub fn guardrail_fraction(&self) -> f64 {
+        let total = self.guardrail_s + self.exec_s;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.guardrail_s / total
+        }
+    }
+
+    pub fn fallbacks(&self) -> u64 {
+        self.fallback_nan + self.fallback_inf + self.fallback_esc + self.fallback_heuristic
+    }
+}
+
+impl Metrics {
+    pub fn record(&self, out: &AdpOutcome) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        match out.decision {
+            GemmDecision::EmulatedArtifact { slices, .. }
+            | GemmDecision::EmulatedNative { slices } => {
+                g.emulated += 1;
+                *g.slice_histogram.entry(slices).or_insert(0) += 1;
+            }
+            GemmDecision::FallbackNan => g.fallback_nan += 1,
+            GemmDecision::FallbackInf => g.fallback_inf += 1,
+            GemmDecision::FallbackEsc { .. } => g.fallback_esc += 1,
+            GemmDecision::FallbackHeuristic => g.fallback_heuristic += 1,
+        }
+        g.guardrail_s += out.guardrail_s;
+        g.exec_s += out.exec_s;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap().clone();
+        MetricsSnapshot {
+            requests: g.requests,
+            emulated: g.emulated,
+            fallback_nan: g.fallback_nan,
+            fallback_inf: g.fallback_inf,
+            fallback_esc: g.fallback_esc,
+            fallback_heuristic: g.fallback_heuristic,
+            slice_histogram: g.slice_histogram.into_iter().collect(),
+            guardrail_s: g.guardrail_s,
+            exec_s: g.exec_s,
+        }
+    }
+
+    pub fn reset(&self) {
+        *self.inner.lock().unwrap() = Inner::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(decision: GemmDecision) -> AdpOutcome {
+        AdpOutcome { decision, esc: 1, slices_required: 7, guardrail_s: 0.1, exec_s: 0.9 }
+    }
+
+    #[test]
+    fn histogram_and_fractions() {
+        let m = Metrics::default();
+        m.record(&outcome(GemmDecision::EmulatedNative { slices: 7 }));
+        m.record(&outcome(GemmDecision::EmulatedNative { slices: 7 }));
+        m.record(&outcome(GemmDecision::EmulatedArtifact { n: 64, slices: 9 }));
+        m.record(&outcome(GemmDecision::FallbackNan));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.emulated, 3);
+        assert_eq!(s.fallbacks(), 1);
+        assert_eq!(s.slice_histogram, vec![(7, 2), (9, 1)]);
+        assert!((s.guardrail_fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Metrics::default();
+        m.record(&outcome(GemmDecision::FallbackEsc { esc: 99 }));
+        m.reset();
+        assert_eq!(m.snapshot().requests, 0);
+    }
+}

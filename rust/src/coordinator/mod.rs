@@ -1,0 +1,33 @@
+//! ADP — Automatic Dynamic Precision (§5 of the paper).
+//!
+//! The coordinator is the paper's *system* contribution: a runtime that
+//! makes emulated DGEMM safe and deployable with no user intervention.
+//! Per request it runs the Fig 8 decision pipeline:
+//!
+//! ```text
+//! scan A,B ──NaN/Inf──► native FP64 fallback
+//!    │
+//! coarsened ESC ──too many bits──► native FP64 fallback
+//!    │
+//! heuristic (cost model) ──not profitable──► native FP64 fallback
+//!    │
+//! emulated GEMM @ ESC-sized slice count
+//!    (AOT artifact when the shape is registered, native pipeline otherwise)
+//! ```
+//!
+//! * [`scan`] — NaN/Inf safety scan (§5.1).
+//! * [`heuristic`] — emulate-vs-native selection (§5.3).
+//! * [`adp`] — the decision engine (§5.4) and its outcome record.
+//! * [`service`] — multi-worker batched GEMM service (the "cuBLAS behind a
+//!   queue" deployment shape; std threads — tokio unavailable offline).
+//! * [`metrics`] — dispatch/outcome/latency accounting (Fig 7/8 inputs).
+
+pub mod adp;
+pub mod heuristic;
+pub mod metrics;
+pub mod scan;
+pub mod service;
+
+pub use adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
+pub use metrics::Metrics;
+pub use service::{GemmService, ServiceConfig};

@@ -1,0 +1,93 @@
+//! Input safety scan (§5.1): detect NaN/Inf before any O(n^3) work.
+//!
+//! The native-path equivalent of the scan half of the fused scan+ESC
+//! artifact. Negative zeros need no rewrite pass: slicing already treats
+//! -0.0 as 0.0 (its digits are all zero), matching the paper's "negative
+//! zeros in the input are simply treated as a zero".
+
+use crate::linalg::Matrix;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScanFlags {
+    pub has_nan: bool,
+    pub has_inf: bool,
+    /// Subnormals are handled exactly by the native pipeline but flushed to
+    /// zero by the XLA-CPU artifact path (DAZ/FTZ); ADP uses this flag to
+    /// steer such inputs away from artifacts (see DESIGN.md).
+    pub has_subnormal: bool,
+}
+
+impl ScanFlags {
+    pub fn clean(&self) -> bool {
+        !self.has_nan && !self.has_inf
+    }
+}
+
+/// Scan one operand.
+pub fn scan_matrix(m: &Matrix) -> ScanFlags {
+    let mut f = ScanFlags::default();
+    for &x in &m.data {
+        // classify via bit pattern (exp field all-ones / all-zeros)
+        let bits = x.to_bits();
+        let exp = (bits >> 52) & 0x7FF;
+        let mant = bits & ((1u64 << 52) - 1);
+        if exp == 0x7FF {
+            if mant == 0 {
+                f.has_inf = true;
+            } else {
+                f.has_nan = true;
+            }
+        } else if exp == 0 && mant != 0 {
+            f.has_subnormal = true;
+        }
+    }
+    f
+}
+
+/// Scan both operands of a GEMM.
+pub fn scan_pair(a: &Matrix, b: &Matrix) -> ScanFlags {
+    let fa = scan_matrix(a);
+    let fb = scan_matrix(b);
+    ScanFlags {
+        has_nan: fa.has_nan || fb.has_nan,
+        has_inf: fa.has_inf || fb.has_inf,
+        has_subnormal: fa.has_subnormal || fb.has_subnormal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_matrix() {
+        let m = Matrix::from_rows(2, 2, vec![1.0, -0.0, f64::MAX, f64::MIN_POSITIVE]);
+        assert!(scan_matrix(&m).clean());
+    }
+
+    #[test]
+    fn detects_nan_inf_separately() {
+        let m = Matrix::from_rows(1, 2, vec![f64::NAN, 1.0]);
+        assert_eq!(scan_matrix(&m), ScanFlags { has_nan: true, ..Default::default() });
+        let m = Matrix::from_rows(1, 2, vec![f64::NEG_INFINITY, 1.0]);
+        assert_eq!(scan_matrix(&m), ScanFlags { has_inf: true, ..Default::default() });
+    }
+
+    #[test]
+    fn pair_merges_flags() {
+        let a = Matrix::from_rows(1, 1, vec![f64::NAN]);
+        let b = Matrix::from_rows(1, 1, vec![f64::INFINITY]);
+        let f = scan_pair(&a, &b);
+        assert!(f.has_nan && f.has_inf && !f.clean());
+    }
+
+    #[test]
+    fn subnormals_are_clean_but_flagged() {
+        let m = Matrix::from_rows(1, 1, vec![f64::from_bits(1)]);
+        let f = scan_matrix(&m);
+        assert!(f.clean());
+        assert!(f.has_subnormal);
+        let n = Matrix::from_rows(1, 1, vec![f64::MIN_POSITIVE]);
+        assert!(!scan_matrix(&n).has_subnormal);
+    }
+}

@@ -1,0 +1,263 @@
+//! Batched GEMM service: the deployment shape of ADP.
+//!
+//! A bounded request queue feeds N worker threads, each running an
+//! [`AdpEngine`] against shared [`Metrics`] and (optionally) the shared
+//! PJRT runtime handle. This is the "cuBLAS behind a production queue"
+//! integration the paper targets (§5.4/§8.2), adapted to std threads
+//! (tokio is unavailable offline; the request path is CPU-bound anyway).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use super::adp::{AdpConfig, AdpEngine, AdpOutcome};
+use super::heuristic::SelectionHeuristic;
+use super::metrics::Metrics;
+use crate::linalg::Matrix;
+use crate::ozaki::SliceEncoding;
+use crate::runtime::RuntimeHandle;
+
+/// One GEMM request.
+pub struct GemmRequest {
+    pub a: Matrix,
+    pub b: Matrix,
+    reply: Sender<GemmResponse>,
+    submitted: Instant,
+}
+
+/// Completed response with queueing/processing latency.
+pub struct GemmResponse {
+    pub c: Matrix,
+    pub outcome: AdpOutcome,
+    pub queue_s: f64,
+    pub total_s: f64,
+}
+
+/// Service configuration. The heuristic/encoding mirror [`AdpConfig`];
+/// each worker constructs its own engine from a factory closure because
+/// `SelectionHeuristic` boxes are not `Clone`.
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub target_mantissa: i32,
+    pub max_slices: usize,
+    pub encoding: SliceEncoding,
+    pub esc_block: usize,
+    pub use_artifacts: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+            queue_depth: 256,
+            target_mantissa: 53,
+            max_slices: 26,
+            encoding: SliceEncoding::Unsigned,
+            esc_block: crate::esc::coarse::DEFAULT_BLOCK,
+            use_artifacts: true,
+        }
+    }
+}
+
+/// Handle to the running service; cloneable, submission is thread-safe.
+pub struct GemmService {
+    tx: SyncSender<GemmRequest>,
+    pub metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl GemmService {
+    /// Start the service. `heuristic_factory` is invoked once per worker.
+    pub fn start(
+        cfg: ServiceConfig,
+        runtime: Option<RuntimeHandle>,
+        heuristic_factory: impl Fn() -> Box<dyn SelectionHeuristic>,
+    ) -> GemmService {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = mpsc::sync_channel::<GemmRequest>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let inflight = inflight.clone();
+            let engine_cfg = AdpConfig {
+                target_mantissa: cfg.target_mantissa,
+                max_slices: cfg.max_slices,
+                encoding: cfg.encoding,
+                esc_block: cfg.esc_block,
+                heuristic: heuristic_factory(),
+                runtime: runtime.clone(),
+                use_artifacts: cfg.use_artifacts,
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("adp-worker-{wid}"))
+                    .spawn(move || worker_main(rx, engine_cfg, metrics, inflight))
+                    .expect("spawn worker"),
+            );
+        }
+        GemmService { tx, metrics, inflight, workers }
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    /// Blocks when the queue is full (backpressure).
+    pub fn submit(&self, a: Matrix, b: Matrix) -> Receiver<GemmResponse> {
+        let (rtx, rrx) = channel();
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(GemmRequest { a, b, reply: rtx, submitted: Instant::now() })
+            .expect("service stopped");
+        rrx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn gemm_blocking(&self, a: Matrix, b: Matrix) -> GemmResponse {
+        self.submit(a, b).recv().expect("worker died")
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    rx: Arc<Mutex<Receiver<GemmRequest>>>,
+    cfg: AdpConfig,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
+) {
+    let engine = AdpEngine::with_metrics(cfg, metrics);
+    loop {
+        // Hold the lock only while dequeuing so workers pull concurrently.
+        let req = match rx.lock().unwrap().recv() {
+            Ok(r) => r,
+            Err(_) => break, // service dropped
+        };
+        let queue_s = req.submitted.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let (c, outcome) = engine.gemm(&req.a, &req.b);
+        let total_s = queue_s + t0.elapsed().as_secs_f64();
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        let _ = req.reply.send(GemmResponse { c, outcome, queue_s, total_s });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::heuristic::AlwaysEmulate;
+    use crate::linalg::gemm;
+    use crate::util::{prop, Rng};
+
+    fn small_service(workers: usize) -> GemmService {
+        let cfg = ServiceConfig { workers, use_artifacts: false, ..Default::default() };
+        GemmService::start(cfg, None, || Box::new(AlwaysEmulate))
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let svc = small_service(2);
+        let mut rng = Rng::new(90);
+        let a = Matrix::uniform(16, 16, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(16, 16, -1.0, 1.0, &mut rng);
+        let resp = svc.gemm_blocking(a.clone(), b.clone());
+        let err = resp.c.sub(&gemm(&a, &b)).max_abs();
+        assert!(err < 1e-12, "err={err}");
+        assert!(resp.outcome.decision.is_emulated());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parallel_requests_all_complete() {
+        let svc = small_service(4);
+        let mut rng = Rng::new(91);
+        let mut pending = Vec::new();
+        let mut expects = Vec::new();
+        for _ in 0..24 {
+            let n = 4 + rng.index(12);
+            let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            expects.push(gemm(&a, &b));
+            pending.push(svc.submit(a, b));
+        }
+        for (rx, expect) in pending.into_iter().zip(expects) {
+            let resp = rx.recv().unwrap();
+            assert!(resp.c.sub(&expect).max_abs() < 1e-12);
+        }
+        assert_eq!(svc.metrics.snapshot().requests, 24);
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn prop_request_response_bijection() {
+        // Every response matches *its own* request (no cross-wiring),
+        // verified by tagging requests with distinguishable scalings.
+        let svc = small_service(3);
+        prop::check("service bijection", 8, |rng| {
+            let mut pending = Vec::new();
+            for tag in 1..=6u32 {
+                let scale = tag as f64;
+                let a = Matrix::from_fn(4, 4, |i, j| {
+                    scale * ((i * 4 + j) as f64 + 1.0) + rng.f64() * 0.0
+                });
+                let b = Matrix::identity(4);
+                pending.push((scale, svc.submit(a, b)));
+            }
+            for (scale, rx) in pending {
+                let resp = rx.recv().unwrap();
+                if (resp.c.at(0, 0) - scale).abs() > 1e-12 {
+                    return Err(format!("response mismatch: {} vs {scale}", resp.c.at(0, 0)));
+                }
+            }
+            Ok(())
+        });
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_workload_outcome_accounting() {
+        let svc = small_service(2);
+        let mut rng = Rng::new(92);
+        let mut pending = Vec::new();
+        for i in 0..12 {
+            let mut a = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+            let mut b = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+            if i % 4 == 1 {
+                *a.at_mut(0, 0) = f64::NAN;
+            }
+            if i % 4 == 2 {
+                *a.at_mut(0, 0) = f64::INFINITY;
+            }
+            if i % 4 == 3 {
+                // huge-x-pairs-with-tiny-y: ESC beyond the slice budget
+                *a.at_mut(0, 0) = 1e300;
+                *b.at_mut(0, 0) = 1e-300;
+            }
+            pending.push(svc.submit(a, b));
+        }
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.requests, 12);
+        assert_eq!(s.fallback_nan, 3);
+        assert_eq!(s.fallback_inf, 3);
+        assert_eq!(s.fallback_esc, 3);
+        assert_eq!(s.emulated, 3);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,170 @@
+//! Double-double (~106-bit significand) arithmetic.
+//!
+//! The paper computes reference diagonal entries with FP80 `long double`
+//! (§6, Fig 2); x86-80-bit floats are not expressible in Rust, so we use
+//! error-free transformations (Dekker/Knuth two_sum, FMA two_prod) to build
+//! a strictly more accurate ~106-bit reference. Used for:
+//!
+//! * `C_ref` in the grading tests (componentwise error denominators),
+//! * the `x^T x` diagonal reference of Test 2,
+//! * validating the native FP64 substrates themselves.
+
+/// Unevaluated sum `hi + lo` with `|lo| <= ulp(hi)/2`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dd {
+    pub hi: f64,
+    pub lo: f64,
+}
+
+/// Error-free sum: a + b = s + e exactly (Knuth two_sum, no branch).
+#[inline]
+pub fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let bb = s - a;
+    let e = (a - (s - bb)) + (b - bb);
+    (s, e)
+}
+
+/// Error-free sum assuming |a| >= |b| (Dekker fast_two_sum).
+#[inline]
+pub fn fast_two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let e = b - (s - a);
+    (s, e)
+}
+
+/// Error-free product: a * b = p + e exactly (via FMA).
+#[inline]
+pub fn two_prod(a: f64, b: f64) -> (f64, f64) {
+    let p = a * b;
+    let e = a.mul_add(b, -p);
+    (p, e)
+}
+
+impl Dd {
+    pub const ZERO: Dd = Dd { hi: 0.0, lo: 0.0 };
+
+    #[inline]
+    pub fn from(x: f64) -> Dd {
+        Dd { hi: x, lo: 0.0 }
+    }
+
+    #[inline]
+    pub fn add(self, other: Dd) -> Dd {
+        let (s, e) = two_sum(self.hi, other.hi);
+        let e = e + self.lo + other.lo;
+        let (hi, lo) = fast_two_sum(s, e);
+        Dd { hi, lo }
+    }
+
+    #[inline]
+    pub fn add_f64(self, x: f64) -> Dd {
+        let (s, e) = two_sum(self.hi, x);
+        let e = e + self.lo;
+        let (hi, lo) = fast_two_sum(s, e);
+        Dd { hi, lo }
+    }
+
+    /// self + a*b with the product expanded error-free first.
+    #[inline]
+    pub fn add_prod(self, a: f64, b: f64) -> Dd {
+        let (p, pe) = two_prod(a, b);
+        let (s, se) = two_sum(self.hi, p);
+        let e = se + self.lo + pe;
+        let (hi, lo) = fast_two_sum(s, e);
+        Dd { hi, lo }
+    }
+
+    #[inline]
+    pub fn sub(self, other: Dd) -> Dd {
+        self.add(Dd { hi: -other.hi, lo: -other.lo })
+    }
+
+    #[inline]
+    pub fn mul(self, other: Dd) -> Dd {
+        let (p, pe) = two_prod(self.hi, other.hi);
+        let e = pe + self.hi * other.lo + self.lo * other.hi;
+        let (hi, lo) = fast_two_sum(p, e);
+        Dd { hi, lo }
+    }
+
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.hi + self.lo
+    }
+
+    #[inline]
+    pub fn abs(self) -> Dd {
+        if self.hi < 0.0 || (self.hi == 0.0 && self.lo < 0.0) {
+            Dd { hi: -self.hi, lo: -self.lo }
+        } else {
+            self
+        }
+    }
+}
+
+/// Dot product of two f64 slices in double-double precision.
+pub fn dot(x: &[f64], y: &[f64]) -> Dd {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = Dd::ZERO;
+    for (&a, &b) in x.iter().zip(y) {
+        acc = acc.add_prod(a, b);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_sum_exact() {
+        let (s, e) = two_sum(1e16, 1.0);
+        assert_eq!(s + e, 1e16 + 1.0);
+        assert_eq!(s, 1e16); // 1.0 lost in f64...
+        assert_eq!(e, 1.0); // ...recovered in the error term
+    }
+
+    #[test]
+    fn two_prod_exact() {
+        let a = 1.0 + 2f64.powi(-30);
+        let b = 1.0 - 2f64.powi(-30);
+        let (p, e) = two_prod(a, b);
+        // a*b = 1 - 2^-60 exactly; p rounds to 1.0, e = -2^-60
+        assert_eq!(p, 1.0);
+        assert_eq!(e, -(2f64.powi(-60)));
+    }
+
+    #[test]
+    fn dd_add_carries_low_bits() {
+        let mut acc = Dd::ZERO;
+        for _ in 0..1_000_000 {
+            acc = acc.add_f64(0.1);
+        }
+        // plain f64 accumulation drifts by ~1e-9 here; dd stays exact to ulp
+        assert!((acc.to_f64() - 100_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_cancellation() {
+        // x.y = 0 exactly despite huge intermediate terms
+        let x = [1e200, 1.0, -1e200];
+        let y = [1.0, 1.0, 1.0];
+        let d = dot(&x, &y);
+        assert_eq!(d.to_f64(), 1.0);
+    }
+
+    #[test]
+    fn mul_matches_exact() {
+        let a = Dd::from(3.0).mul(Dd::from(1.0 / 3.0));
+        assert!((a.to_f64() - 1.0).abs() < 1e-31 * 10.0);
+    }
+
+    #[test]
+    fn abs_negates_pair() {
+        let d = Dd { hi: -2.0, lo: -1e-20 };
+        let a = d.abs();
+        assert_eq!(a.hi, 2.0);
+        assert_eq!(a.lo, 1e-20);
+    }
+}

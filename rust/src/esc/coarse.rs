@@ -1,0 +1,235 @@
+//! Coarsened ESC (§4): block min/max exponents + max-plus reduction.
+//!
+//! The k dimension is split into blocks of length `b`; each block is
+//! represented by its max and min exponent. `exp(z_r)` is then estimated as
+//! `max_i max( Max(xb_i)+Min(yb_i), Min(xb_i)+Max(yb_i) )`, which the
+//! paper proves can only *under*-estimate the exact `exp(z_r)` — hence the
+//! coarsened ESC can only be larger (safe). Zero entries carry the
+//! [`ZERO_EXP`] sentinel: they lose every max and win every min, which
+//! pushes the estimate further down — still safe, merely conservative.
+//!
+//! This mirrors `python/compile/model.py::scan_esc` + the `escmax` Pallas
+//! kernel (the DPX/CUTLASS analogue); cross-validated in integration tests.
+
+use crate::linalg::Matrix;
+use crate::util::bits::{frexp_exponent, ZERO_EXP};
+
+/// Default coarsening block (matches python/compile/model.py::ESC_BLOCK).
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// Per-row block min/max exponents of one operand (A rows or B columns).
+#[derive(Clone, Debug)]
+pub struct CoarseExponents {
+    pub rows: usize,
+    pub nblocks: usize,
+    pub bmax: Vec<i32>, // rows x nblocks
+    pub bmin: Vec<i32>,
+    pub row_max: Vec<i32>, // exp(x_p) per row
+}
+
+impl CoarseExponents {
+    /// Coarsen the rows of `a` (call with B^T for columns of B).
+    pub fn of_rows(a: &Matrix, block: usize) -> CoarseExponents {
+        let (m, k) = (a.rows, a.cols);
+        let nb = k.div_ceil(block);
+        let mut bmax = vec![ZERO_EXP; m * nb];
+        let mut bmin = vec![i32::MAX; m * nb];
+        let mut row_max = vec![ZERO_EXP; m];
+        for i in 0..m {
+            let row = a.row(i);
+            for bi in 0..nb {
+                let lo = bi * block;
+                let hi = (lo + block).min(k);
+                let (mut mx, mut mn) = (ZERO_EXP, i32::MAX);
+                for &x in &row[lo..hi] {
+                    let e = frexp_exponent(x);
+                    mx = mx.max(e);
+                    mn = mn.min(e);
+                }
+                bmax[i * nb + bi] = mx;
+                bmin[i * nb + bi] = mn;
+                row_max[i] = row_max[i].max(mx);
+            }
+        }
+        CoarseExponents { rows: m, nblocks: nb, bmax, bmin, row_max }
+    }
+}
+
+/// Coarsened ESC of C = A * B with coarsening block `block`.
+pub fn coarse_esc_gemm(a: &Matrix, b: &Matrix, block: usize) -> i32 {
+    assert_eq!(a.cols, b.rows);
+    let ca = CoarseExponents::of_rows(a, block);
+    let cb = CoarseExponents::of_rows(&b.transpose(), block);
+    coarse_esc_from(&ca, &cb)
+}
+
+/// ESC from precomputed coarse exponents (the runtime path: A's coarse form
+/// can be reused across many B's, e.g. the QR trailing updates).
+pub fn coarse_esc_from(ca: &CoarseExponents, cb: &CoarseExponents) -> i32 {
+    assert_eq!(ca.nblocks, cb.nblocks, "operands coarsened with different blocks");
+    let nb = ca.nblocks;
+    let mut esc = 0i32;
+    for i in 0..ca.rows {
+        let am = &ca.bmax[i * nb..(i + 1) * nb];
+        let an = &ca.bmin[i * nb..(i + 1) * nb];
+        for j in 0..cb.rows {
+            let bm = &cb.bmax[j * nb..(j + 1) * nb];
+            let bn = &cb.bmin[j * nb..(j + 1) * nb];
+            // max-plus row: estimate exp(z_r) from below
+            let mut zest = i64::MIN;
+            for l in 0..nb {
+                if am[l] == ZERO_EXP || bm[l] == ZERO_EXP {
+                    continue; // block all-zero on one side: no products
+                }
+                let c1 = am[l] as i64 + bn[l] as i64;
+                let c2 = an[l] as i64 + bm[l] as i64;
+                zest = zest.max(c1.max(c2));
+            }
+            let (rm, cm) = (ca.row_max[i], cb.row_max[j]);
+            if zest == i64::MIN || rm == ZERO_EXP || cm == ZERO_EXP {
+                continue; // dead dot product: exactly zero under emulation
+            }
+            let e = (rm as i64 + cm as i64 - zest + 1) as i32;
+            esc = esc.max(e);
+        }
+    }
+    esc.max(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::esc::exact::exact_esc_gemm;
+    use crate::util::{prop, Rng};
+
+    fn rand_spanned(rng: &mut Rng, m: usize, k: usize, span: i32) -> Matrix {
+        Matrix::from_fn(m, k, |_, _| {
+            let e = rng.int(-span as i64, span as i64) as i32;
+            rng.uniform(1.0, 2.0) * 2f64.powi(e) * if rng.f64() < 0.5 { -1.0 } else { 1.0 }
+        })
+    }
+
+    #[test]
+    fn coarse_never_below_exact() {
+        let mut rng = Rng::new(50);
+        for trial in 0..30 {
+            let (m, k, n) = (6, 48, 5);
+            let a = rand_spanned(&mut rng, m, k, 30);
+            let b = rand_spanned(&mut rng, k, n, 30);
+            let exact = exact_esc_gemm(&a, &b);
+            for block in [1, 4, 16, 48] {
+                let coarse = coarse_esc_gemm(&a, &b, block);
+                assert!(coarse >= exact, "trial {trial} block {block}: {coarse} < {exact}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_one_equals_exact() {
+        // With b = 1, Max(xb)=Min(xb) per block: the estimate is exact.
+        let mut rng = Rng::new(51);
+        let a = rand_spanned(&mut rng, 5, 20, 25);
+        let b = rand_spanned(&mut rng, 20, 4, 25);
+        assert_eq!(coarse_esc_gemm(&a, &b, 1), exact_esc_gemm(&a, &b));
+    }
+
+    #[test]
+    fn refinement_monotone_on_average() {
+        // Smaller blocks can only tighten (or keep) the per-dot estimate.
+        let mut rng = Rng::new(52);
+        let a = rand_spanned(&mut rng, 8, 64, 20);
+        let b = rand_spanned(&mut rng, 64, 8, 20);
+        let e64 = coarse_esc_gemm(&a, &b, 64);
+        let e16 = coarse_esc_gemm(&a, &b, 16);
+        let e1 = coarse_esc_gemm(&a, &b, 1);
+        assert!(e1 <= e16 && e16 <= e64, "{e1} <= {e16} <= {e64}");
+    }
+
+    #[test]
+    fn zeros_are_conservative_not_unsafe() {
+        let mut rng = Rng::new(53);
+        let mut a = rand_spanned(&mut rng, 4, 32, 10);
+        let b = rand_spanned(&mut rng, 32, 4, 10);
+        for j in 0..32 {
+            if j % 3 == 0 {
+                *a.at_mut(2, j) = 0.0;
+            }
+        }
+        let exact = exact_esc_gemm(&a, &b);
+        let coarse = coarse_esc_gemm(&a, &b, 8);
+        assert!(coarse >= exact);
+    }
+
+    #[test]
+    fn all_zero_operand() {
+        let a = Matrix::zeros(3, 16);
+        let mut rng = Rng::new(54);
+        let b = rand_spanned(&mut rng, 16, 3, 10);
+        assert_eq!(coarse_esc_gemm(&a, &b, 4), 0);
+        assert_eq!(exact_esc_gemm(&a, &b), 0);
+    }
+
+    #[test]
+    fn prop_coarse_safety() {
+        // The paper's §4 safety proof, property-tested across shapes,
+        // spans, zero densities and block sizes.
+        prop::check("coarse ESC >= exact ESC", 60, |rng| {
+            let m = rng.int(1, 10) as usize;
+            let k = rng.int(1, 70) as usize;
+            let n = rng.int(1, 10) as usize;
+            let span = rng.int(0, 60) as i32;
+            let zero_frac = rng.f64() * 0.4;
+            let mut a = rand_spanned(rng, m, k, span);
+            let mut b = rand_spanned(rng, k, n, span);
+            for v in a.data.iter_mut() {
+                if rng.f64() < zero_frac {
+                    *v = 0.0;
+                }
+            }
+            for v in b.data.iter_mut() {
+                if rng.f64() < zero_frac {
+                    *v = 0.0;
+                }
+            }
+            let exact = exact_esc_gemm(&a, &b);
+            let block = rng.int(1, 32) as usize;
+            let coarse = coarse_esc_gemm(&a, &b, block);
+            prop::assert_that(
+                coarse >= exact,
+                format!("block {block}: coarse {coarse} < exact {exact}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_slices_from_esc_recover_accuracy() {
+        // End-to-end safety: sizing slices from the coarse ESC always
+        // recovers FP64-class accuracy, even on adversarial spans.
+        use crate::ozaki::{emulated_gemm, OzakiConfig, SliceEncoding};
+        prop::check("ESC-sized slices give FP64 accuracy", 10, |rng| {
+            let (m, k, n) = (6, 24, 6);
+            let span = rng.int(0, 40) as i32;
+            let a = rand_spanned(rng, m, k, span);
+            let b = rand_spanned(rng, k, n, span);
+            let esc = coarse_esc_gemm(&a, &b, 8);
+            let bits = 53 + esc + 1;
+            let cfg = OzakiConfig::for_bits(bits, SliceEncoding::Unsigned);
+            let c = emulated_gemm(&a, &b, &cfg);
+            let c_ref = a.matmul_dd(&b);
+            let denom = a.abs().matmul_dd(&b.abs());
+            for i in 0..m {
+                for j in 0..n {
+                    let d = denom.at(i, j);
+                    if d == 0.0 {
+                        continue;
+                    }
+                    let e = (c.at(i, j) - c_ref.at(i, j)).abs() / d;
+                    if e > (k as f64 + 4.0) * f64::EPSILON {
+                        return Err(format!("({i},{j}): err {e}, esc {esc}, s {}", cfg.slices));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,115 @@
+//! Exact (uncoarsened) ESC — the O(mnk) oracle of §4.
+
+use crate::linalg::Matrix;
+use crate::util::bits::{frexp_exponent, ZERO_EXP};
+
+/// Exact ESC of a single dot product. Returns 0 when the product has no
+/// overlapping nonzero terms (the emulated result is exactly zero).
+pub fn exact_esc_dot(x: &[f64], y: &[f64]) -> i32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xp = ZERO_EXP; // exp(x_p)
+    let mut yq = ZERO_EXP; // exp(y_q)
+    let mut zr = i64::MIN; // exp(z_r) = max_i exp(x_i) + exp(y_i)
+    for (&a, &b) in x.iter().zip(y) {
+        let ea = frexp_exponent(a);
+        let eb = frexp_exponent(b);
+        xp = xp.max(ea);
+        yq = yq.max(eb);
+        if ea != ZERO_EXP && eb != ZERO_EXP {
+            zr = zr.max(ea as i64 + eb as i64);
+        }
+    }
+    if zr == i64::MIN || xp == ZERO_EXP || yq == ZERO_EXP {
+        return 0; // all products vanish
+    }
+    // +1: mantissa products are < 4, may raise the exponent by one (§4).
+    ((xp as i64 + yq as i64 - zr) + 1) as i32
+}
+
+/// Exact ESC of a GEMM: max over the m*n dot products.
+pub fn exact_esc_gemm(a: &Matrix, b: &Matrix) -> i32 {
+    assert_eq!(a.cols, b.rows);
+    let bt = b.transpose();
+    let mut esc = 0;
+    for i in 0..a.rows {
+        for j in 0..bt.rows {
+            esc = esc.max(exact_esc_dot(a.row(i), bt.row(j)));
+        }
+    }
+    esc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_same_exponent_is_one() {
+        // All entries in [1,2): every Hadamard exponent equals xp+yq, so
+        // ESC = 0 + 1 (mantissa margin).
+        let x = vec![1.5, 1.25, 1.75];
+        let y = vec![1.0, 1.5, 1.9];
+        assert_eq!(exact_esc_dot(&x, &y), 1);
+    }
+
+    #[test]
+    fn balanced_spans_cancel() {
+        // x scaled up by 2^t exactly where y is scaled down: z uniform.
+        let x = vec![2f64.powi(20), 1.0];
+        let y = vec![2f64.powi(-20), 1.0];
+        // xp = 21, yq = 1, zr = max(21-19, 1) = 2 -> 21+1-2+1... careful:
+        // exp(2^20)=21 (frexp), exp(2^-20)=-19, exp(1.0)=1.
+        // zr = max(21 + -19, 1 + 1) = 2; ESC = 21 + 1 - 2 + 1 = 21.
+        assert_eq!(exact_esc_dot(&x, &y), 21);
+    }
+
+    #[test]
+    fn zeros_are_excluded() {
+        let x = vec![0.0, 1.0];
+        let y = vec![1e300, 1.0];
+        // the 1e300 pairs with a zero: only the 1*1 product survives.
+        // xp = 1, yq = exp(1e300) = 997, zr = 1+1 = 2; ESC = 1+997-2+1.
+        assert_eq!(exact_esc_dot(&x, &y), 997);
+    }
+
+    #[test]
+    fn all_zero_returns_zero() {
+        assert_eq!(exact_esc_dot(&[0.0, 0.0], &[1.0, 2.0]), 0);
+        assert_eq!(exact_esc_dot(&[], &[]), 0);
+    }
+
+    #[test]
+    fn gemm_takes_worst_dot() {
+        let mut rng = Rng::new(40);
+        let mut a = Matrix::uniform(4, 8, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(8, 4, 1.0, 2.0, &mut rng);
+        assert_eq!(exact_esc_gemm(&a, &b), 1);
+        // A big A-entry alone does NOT raise ESC: its own products raise
+        // z_r along with x_p (the window tracks the row max).
+        *a.at_mut(2, 3) = 2f64.powi(40);
+        assert_eq!(exact_esc_gemm(&a, &b), 1);
+        // ESC grows when the big x pairs with a small y: shrink B's row 3
+        // so the 2^40 contribution cancels in z-space while x_p stays big.
+        let mut b2 = b.clone();
+        for j in 0..4 {
+            *b2.at_mut(3, j) *= 2f64.powi(-40);
+        }
+        let esc = exact_esc_gemm(&a, &b2);
+        assert!((40..=42).contains(&esc), "esc={esc}");
+    }
+
+    #[test]
+    fn esc_is_shift_invariant() {
+        // Scaling a whole row of A by 2^t leaves its ESC unchanged.
+        let mut rng = Rng::new(41);
+        let a = Matrix::uniform(3, 10, -4.0, 4.0, &mut rng);
+        let b = Matrix::uniform(10, 3, -4.0, 4.0, &mut rng);
+        let base = exact_esc_gemm(&a, &b);
+        let mut a2 = a.clone();
+        for j in 0..10 {
+            *a2.at_mut(1, j) *= 2f64.powi(25);
+        }
+        assert_eq!(exact_esc_gemm(&a2, &b), base);
+    }
+}

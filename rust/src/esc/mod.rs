@@ -1,0 +1,41 @@
+//! ESC — Exponent Span Capacity estimation (§4 of the paper).
+//!
+//! The ESC of a dot product `x . y` is `exp(x_p) + exp(y_q) - exp(z_r) + 1`
+//! where `x_p`, `y_q` are the max-exponent entries of x and y, and
+//! `z_r` the max-exponent Hadamard product (`exp(z_r) = max_i exp(x_i) +
+//! exp(y_i)`); the `+1` covers the mantissa-product margin (mantissa
+//! products are < 4). For a GEMM it is the max over all m*n dot products.
+//!
+//! ESC is the number of *extra* mantissa bits the fixed-point window must
+//! reserve beyond the target precision so that the maximal contribution is
+//! captured with full fidelity: `required_bits = target_mantissa + ESC + 1`.
+//!
+//! [`exact_esc_gemm`] is the O(mnk) oracle; [`coarse_esc_gemm`] is the
+//! blocked estimator the runtime uses (O(mnk/b)), proven here (and tested)
+//! never to *under*-estimate the exact ESC.
+
+pub mod coarse;
+pub mod exact;
+
+pub use coarse::{coarse_esc_gemm, CoarseExponents};
+pub use exact::{exact_esc_dot, exact_esc_gemm};
+
+/// Outcome of an ESC estimation pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EscReport {
+    /// The (estimated) exponent span capacity in bits.
+    pub esc: i32,
+    /// Bits required for 53-bit (FP64) target mantissa: 53 + esc + 1.
+    pub required_bits_fp64: i32,
+}
+
+impl EscReport {
+    pub fn new(esc: i32) -> Self {
+        EscReport { esc, required_bits_fp64: 53 + esc + 1 }
+    }
+
+    /// Bits required for an arbitrary target mantissa width.
+    pub fn required_bits(&self, target_mantissa: i32) -> i32 {
+        target_mantissa + self.esc + 1
+    }
+}

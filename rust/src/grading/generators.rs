@@ -1,0 +1,146 @@
+//! Workload generators for the grading tests and benches.
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// Uniform(lo, hi) pair of square matrices (the Fig 3/4 workload).
+pub fn uniform_pair(n: usize, lo: f64, hi: f64, rng: &mut Rng) -> (Matrix, Matrix) {
+    (Matrix::uniform(n, n, lo, hi, rng), Matrix::uniform(n, n, lo, hi, rng))
+}
+
+/// The Test 2 construction of Demmel et al. (§6, implemented verbatim).
+///
+/// Starting from `x ~ U(1,2)^n` and `D = diag(2^{j_1}, ..., 2^{j_n})` with
+/// `j_{i+1} = -b + round(i * delta)`, `delta = 2b/(n-1)`, build
+/// `A_{k,:} = x^T D P_k` and `B_{:,k} = P_k^{-1} D^{-1} x` where `P_k` is
+/// the cyclic shift by k. The permutations prevent gaming the test by
+/// rescaling; the diagonal of `A B` is exactly `x^T x`.
+pub struct Test2Workload {
+    pub a: Matrix,
+    pub b: Matrix,
+    pub x: Vec<f64>,
+    pub span_b: i32,
+}
+
+pub fn test2_workload(n: usize, span_b: i32, rng: &mut Rng) -> Test2Workload {
+    assert!(n >= 2);
+    let x: Vec<f64> = (0..n).map(|_| rng.uniform(1.0, 2.0)).collect();
+    let delta = 2.0 * span_b as f64 / (n as f64 - 1.0);
+    let j: Vec<i32> = (0..n)
+        .map(|i| -span_b + (i as f64 * delta).round() as i32)
+        .collect();
+    // xd = x^T D, dinvx = D^{-1} x
+    let xd: Vec<f64> = (0..n)
+        .map(|i| crate::util::bits::ldexp(x[i], j[i]))
+        .collect();
+    let dinvx: Vec<f64> = (0..n)
+        .map(|i| crate::util::bits::ldexp(x[i], -j[i]))
+        .collect();
+    // A[k, c] = xd[(c + k) mod n]; B[r, k] = dinvx[(r + k) mod n].
+    let a = Matrix::from_fn(n, n, |k, c| xd[(c + k) % n]);
+    let b = Matrix::from_fn(n, n, |r, k| dinvx[(r + k) % n]);
+    Test2Workload { a, b, x, span_b }
+}
+
+/// Default Test 2 exponent parameter: `b ~ floor(log2 sqrt(Omega)) -
+/// ceil(log2 n) - 1` with Omega the FP64 overflow threshold (§6).
+pub fn test2_default_b(n: usize) -> i32 {
+    512 - (n as f64).log2().ceil() as i32 - 1
+}
+
+/// Magnitude-staircase workload for Test 1: uniform matrices with one tiny
+/// row of A and one tiny column of B. The (0,0) entry of |A||B| is ~delta^2
+/// while Strassen's recombination injects absolute errors of order
+/// eps * max|A| * max|B| * n — blowing up the componentwise ratio there.
+pub fn tiny_corner_pair(n: usize, delta: f64, rng: &mut Rng) -> (Matrix, Matrix) {
+    let mut a = Matrix::uniform(n, n, 0.5, 1.0, rng);
+    let mut b = Matrix::uniform(n, n, 0.5, 1.0, rng);
+    for j in 0..n {
+        *a.at_mut(0, j) *= delta;
+        *b.at_mut(j, 0) *= delta;
+    }
+    (a, b)
+}
+
+/// Matrices laced with special values for the safety-scan tests (§5.1).
+pub fn with_special_values(n: usize, kind: SpecialKind, rng: &mut Rng) -> (Matrix, Matrix) {
+    let mut a = Matrix::uniform(n, n, -1.0, 1.0, rng);
+    let b = Matrix::uniform(n, n, -1.0, 1.0, rng);
+    let (i, j) = (rng.index(n), rng.index(n));
+    *a.at_mut(i, j) = match kind {
+        SpecialKind::Nan => f64::NAN,
+        SpecialKind::PosInf => f64::INFINITY,
+        SpecialKind::NegInf => f64::NEG_INFINITY,
+        SpecialKind::NegZero => -0.0,
+    };
+    (a, b)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecialKind {
+    Nan,
+    PosInf,
+    NegInf,
+    NegZero,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dd;
+
+    #[test]
+    fn test2_diagonal_is_xtx() {
+        let mut rng = Rng::new(60);
+        let w = test2_workload(32, 20, &mut rng);
+        let xtx = dd::dot(&w.x, &w.x).to_f64();
+        // diagonal entries of AB equal x^T x *exactly* (in exact arithmetic):
+        // compute one in double-double and compare.
+        let bt = w.b.transpose();
+        for k in [0usize, 7, 31] {
+            let diag = dd::dot(w.a.row(k), bt.row(k)).to_f64();
+            let rel = (diag - xtx).abs() / xtx;
+            assert!(rel < 1e-25, "k={k} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn test2_exponent_span_matches_b() {
+        let mut rng = Rng::new(61);
+        let w = test2_workload(64, 30, &mut rng);
+        let mut emax = i32::MIN;
+        let mut emin = i32::MAX;
+        for &v in &w.a.data {
+            let e = crate::util::bits::frexp_exponent(v);
+            emax = emax.max(e);
+            emin = emin.min(e);
+        }
+        // exponents of A span ~[-b, b] (+1 for the U(1,2) mantissa)
+        assert!((emax - emin) >= 2 * 30 - 2, "span {} too small", emax - emin);
+        assert!((emax - emin) <= 2 * 30 + 4);
+    }
+
+    #[test]
+    fn test2_b_zero_degenerates_to_uniform() {
+        let mut rng = Rng::new(62);
+        let w = test2_workload(16, 0, &mut rng);
+        for &v in &w.a.data {
+            assert!((1.0..2.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn default_b_reasonable() {
+        assert_eq!(test2_default_b(1024), 512 - 10 - 1);
+        assert!(test2_default_b(64) > 490);
+    }
+
+    #[test]
+    fn tiny_corner_shapes() {
+        let mut rng = Rng::new(63);
+        let (a, b) = tiny_corner_pair(16, 2f64.powi(-40), &mut rng);
+        assert!(a.at(0, 3).abs() < 2f64.powi(-39));
+        assert!(b.at(5, 0).abs() < 2f64.powi(-39));
+        assert!(a.at(1, 3).abs() > 0.4);
+    }
+}

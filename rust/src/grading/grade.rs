@@ -1,0 +1,130 @@
+//! Accuracy grading criteria (Demmel et al., §6 Aspect A2).
+//!
+//! Grade A: componentwise `|fl(AB) - AB|_ij <= f(n) eps (|A||B|)_ij` with
+//! `f(n)` at most linear. Grade B: mixed componentwise/norm-wise. Grade C:
+//! norm-wise only (satisfiable by Strassen-like algorithms).
+
+use crate::linalg::Matrix;
+
+/// Componentwise error measurements of one product.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorReport {
+    /// max_ij |C - C_ref| / (|A| |B|)_ij, in units of eps.
+    pub max_comp_eps: f64,
+    /// mean_ij of the same ratio, in units of eps.
+    pub avg_comp_eps: f64,
+    /// ||C - C_ref||_F / (|| |A||B| ||_F), in units of eps.
+    pub normwise_eps: f64,
+}
+
+/// Measure componentwise and norm-wise error of `c` against the
+/// double-double reference. Entries where (|A||B|)_ij == 0 must be exact.
+pub fn measure(a: &Matrix, b: &Matrix, c: &Matrix) -> ErrorReport {
+    let c_ref = a.matmul_dd(b);
+    let denom = a.abs().matmul_dd(&b.abs());
+    let mut max_r = 0.0f64;
+    let mut sum_r = 0.0f64;
+    let mut err_sq = 0.0f64;
+    let mut den_sq = 0.0f64;
+    let cnt = (c.rows * c.cols) as f64;
+    for idx in 0..c.data.len() {
+        let e = (c.data[idx] - c_ref.data[idx]).abs();
+        let d = denom.data[idx];
+        err_sq += e * e;
+        den_sq += d * d;
+        if d == 0.0 {
+            assert_eq!(e, 0.0, "zero-denominator entry must be exact");
+            continue;
+        }
+        let r = e / d;
+        max_r = max_r.max(r);
+        sum_r += r;
+    }
+    ErrorReport {
+        max_comp_eps: max_r / f64::EPSILON,
+        avg_comp_eps: (sum_r / cnt) / f64::EPSILON,
+        normwise_eps: (err_sq.sqrt() / den_sq.sqrt().max(f64::MIN_POSITIVE)) / f64::EPSILON,
+    }
+}
+
+/// Grade A compliance: max componentwise error <= slope * n * eps.
+/// `slope` absorbs the modest constant in f(n); the criterion is about
+/// *growth*, so callers checking a size sweep should use [`fits_grade_a`].
+pub fn passes_grade_a(report: &ErrorReport, n: usize, slope: f64) -> bool {
+    report.max_comp_eps <= slope * n as f64
+}
+
+/// Grade C (norm-wise) compliance with the same linear-growth budget.
+pub fn passes_grade_c(report: &ErrorReport, n: usize, slope: f64) -> bool {
+    report.normwise_eps <= slope * n as f64
+}
+
+/// Fit error growth over a size sweep: returns the least-squares exponent
+/// `p` of `err ~ n^p`. Grade A requires p <= ~1 (linear); Strassen-like
+/// error growth shows p noticeably above the O(n^3) implementations'.
+pub fn growth_exponent(sizes: &[usize], errs_eps: &[f64]) -> f64 {
+    assert_eq!(sizes.len(), errs_eps.len());
+    let pts: Vec<(f64, f64)> = sizes
+        .iter()
+        .zip(errs_eps)
+        .filter(|&(_, &e)| e > 0.0)
+        .map(|(&n, &e)| ((n as f64).ln(), e.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, strassen};
+    use crate::util::Rng;
+
+    #[test]
+    fn native_gemm_is_grade_a() {
+        let mut rng = Rng::new(70);
+        for n in [32, 64, 128] {
+            let a = Matrix::uniform(n, n, 0.0, 1.0, &mut rng);
+            let b = Matrix::uniform(n, n, 0.0, 1.0, &mut rng);
+            let rep = measure(&a, &b, &gemm(&a, &b));
+            assert!(passes_grade_a(&rep, n, 2.0), "n={n} rep={rep:?}");
+        }
+    }
+
+    #[test]
+    fn exact_product_reports_zero() {
+        let a = Matrix::identity(8);
+        let b = Matrix::identity(8);
+        let rep = measure(&a, &b, &gemm(&a, &b));
+        assert_eq!(rep.max_comp_eps, 0.0);
+        assert_eq!(rep.avg_comp_eps, 0.0);
+    }
+
+    #[test]
+    fn strassen_fails_componentwise_on_tiny_corner() {
+        let mut rng = Rng::new(71);
+        let n = 256;
+        let (a, b) = crate::grading::generators::tiny_corner_pair(n, 2f64.powi(-30), &mut rng);
+        let rep_s = measure(&a, &b, &strassen(&a, &b));
+        let rep_g = measure(&a, &b, &gemm(&a, &b));
+        assert!(passes_grade_a(&rep_g, n, 2.0), "gemm {rep_g:?}");
+        assert!(!passes_grade_a(&rep_s, n, 16.0), "strassen should fail: {rep_s:?}");
+        // ...but Strassen still passes the norm-wise Grade C criterion.
+        assert!(passes_grade_c(&rep_s, n, 16.0), "strassen normwise {rep_s:?}");
+    }
+
+    #[test]
+    fn growth_exponent_recovers_slope() {
+        let sizes = [64usize, 128, 256, 512];
+        let errs: Vec<f64> = sizes.iter().map(|&n| 0.3 * (n as f64).powf(0.5)).collect();
+        let p = growth_exponent(&sizes, &errs);
+        assert!((p - 0.5).abs() < 1e-9, "p={p}");
+    }
+}

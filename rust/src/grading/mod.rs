@@ -1,0 +1,52 @@
+//! BLAS grading tests of Demmel et al. (§6 of the paper).
+//!
+//! Two instruments:
+//!
+//! * **Algorithm discovery** — Tests 1–3 classify an unknown GEMM
+//!   implementation along two axes: O(n^3) vs Strassen-like, and
+//!   floating-point vs fixed-point. Test 2 (the one Fig 2 evaluates) is
+//!   fully specified in the paper and implemented verbatim in [`test2`];
+//!   Tests 1 and 3 are from an unpublished manuscript (paper ref [7],
+//!   private communication) and are implemented here from the paper's
+//!   stated discrimination criteria — see DESIGN.md §Substitutions.
+//! * **Grading** — the Grade A componentwise criterion
+//!   `|fl(AB) - AB| <= f(n) * eps * (|A||B|)` with `f(n)` at most linear
+//!   ([`grade`]), plus the weaker Grade B/C norm-wise criteria.
+//!
+//! All reference products are computed in double-double (`crate::dd`).
+
+pub mod generators;
+pub mod grade;
+pub mod test1;
+pub mod test2;
+pub mod test3;
+
+use crate::linalg::Matrix;
+
+/// A matrix-multiplication implementation under test.
+pub type Multiplier<'a> = &'a mut dyn FnMut(&Matrix, &Matrix) -> Matrix;
+
+/// Outcome of the discovery tree (§6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgorithmClass {
+    FloatingPointO3,
+    FixedPointO3,
+    FloatingPointStrassen,
+    FixedPointStrassen,
+}
+
+/// Run the full discovery tree: Test 1, then Test 2 or Test 3.
+pub fn discover(n: usize, seed: u64, mult: Multiplier) -> AlgorithmClass {
+    let strassen_like = test1::is_strassen_like(n, seed, mult);
+    if strassen_like {
+        if test3::is_fixed_point_strassen(n, seed, mult) {
+            AlgorithmClass::FixedPointStrassen
+        } else {
+            AlgorithmClass::FloatingPointStrassen
+        }
+    } else if test2::is_fixed_point(n, seed, mult) {
+        AlgorithmClass::FixedPointO3
+    } else {
+        AlgorithmClass::FloatingPointO3
+    }
+}

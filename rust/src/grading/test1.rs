@@ -1,0 +1,59 @@
+//! Test 1: distinguish a conventional O(n^3) implementation from a
+//! Strassen-like one (§6).
+//!
+//! Paper ref [7] is unpublished; we implement the stated discrimination
+//! criterion: O(n^3) algorithms satisfy the componentwise bound
+//! `|fl(AB) - AB| <= f(n) eps (|A||B|)` (Grade A), while Strassen-like
+//! recombination injects errors of absolute size ~ eps * ||A|| * ||B||
+//! into *small* entries of |A||B|. A magnitude staircase (tiny first row
+//! of A / first column of B) makes that ratio blow up by ~delta^-2 for
+//! Strassen while leaving O(n^3) implementations at O(n) eps.
+
+use super::generators::tiny_corner_pair;
+use super::grade::measure;
+use super::Multiplier;
+use crate::util::Rng;
+
+/// Scale of the tiny row/column. delta^2 ~ 2^-60 leaves plenty of headroom
+/// between the O(n^3) bound (~n eps) and the Strassen contamination
+/// (~eps/delta^2 = 2^60 eps) without approaching underflow.
+const DELTA: f64 = 1.0 / (1u64 << 30) as f64;
+
+/// Componentwise-error threshold in units of n*eps separating the classes.
+const THRESHOLD_SLOPE: f64 = 64.0;
+
+pub fn is_strassen_like(n: usize, seed: u64, mult: Multiplier) -> bool {
+    let mut rng = Rng::new(seed);
+    let (a, b) = tiny_corner_pair(n, DELTA, &mut rng);
+    let c = mult(&a, &b);
+    let rep = measure(&a, &b, &c);
+    rep.max_comp_eps > THRESHOLD_SLOPE * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, strassen};
+    use crate::ozaki::{emulated_gemm, OzakiConfig};
+
+    #[test]
+    fn classifies_native_gemm_as_o3() {
+        let mut m = |a: &_, b: &_| gemm(a, b);
+        assert!(!is_strassen_like(128, 1, &mut m));
+        assert!(!is_strassen_like(256, 2, &mut m));
+    }
+
+    #[test]
+    fn classifies_strassen_as_strassen() {
+        let mut m = |a: &_, b: &_| strassen(a, b);
+        assert!(is_strassen_like(256, 1, &mut m));
+        assert!(is_strassen_like(512, 2, &mut m));
+    }
+
+    #[test]
+    fn classifies_ozaki_as_o3() {
+        // The emulated DGEMM is O(n^3): Test 1 must send it to Test 2.
+        let mut m = |a: &_, b: &_| emulated_gemm(a, b, &OzakiConfig::new(9));
+        assert!(!is_strassen_like(64, 3, &mut m));
+    }
+}

@@ -1,0 +1,101 @@
+//! Test 2: distinguish an O(n^3) floating-point implementation from an
+//! O(n^3) fixed-point implementation (§6, implemented verbatim).
+//!
+//! The workload has a wide, permutation-protected exponent span; a
+//! fixed-point implementation with a fixed bit budget loses the low-order
+//! contributions once the span exceeds its window, while a floating-point
+//! implementation (or one with guardrails and FP64 fallback, like ADP)
+//! keeps the componentwise error at O(n) eps. The relative-error metric is
+//! the paper's: diagonal entries against x^T x in extended precision,
+//! off-diagonal against a reference O(n^3) product.
+
+use super::generators::{test2_workload, Test2Workload};
+use super::Multiplier;
+use crate::dd;
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// Error threshold (relative) above which the implementation is declared
+/// fixed-point. Floating-point O(n^3) stays below ~n eps ~ 1e-13 here;
+/// fixed-point failures jump above 1e-8 almost immediately.
+const FIXED_POINT_THRESHOLD: f64 = 1e-9;
+
+/// The paper's Fig 2 relative error for one (implementation, b) pair.
+pub fn relative_error(w: &Test2Workload, c: &Matrix) -> f64 {
+    let n = w.a.rows;
+    let xtx = dd::dot(&w.x, &w.x);
+    let c_ref = w.a.matmul_dd(&w.b);
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let e = if i == j {
+                (xtx.to_f64() - c.at(i, i)).abs() / xtx.to_f64()
+            } else {
+                let r = c_ref.at(i, j);
+                if r == 0.0 {
+                    continue;
+                }
+                (r - c.at(i, j)).abs() / r.abs()
+            };
+            worst = worst.max(e);
+        }
+    }
+    worst
+}
+
+/// Run Test 2 at exponent-range parameter `b` and return the error.
+pub fn run_at(n: usize, span_b: i32, seed: u64, mult: Multiplier) -> f64 {
+    let mut rng = Rng::new(seed);
+    let w = test2_workload(n, span_b, &mut rng);
+    let c = mult(&w.a, &w.b);
+    relative_error(&w, &c)
+}
+
+/// Test 2 verdict, sweeping b upward until the span stresses the window.
+pub fn is_fixed_point(n: usize, seed: u64, mult: Multiplier) -> bool {
+    for span_b in [8, 24, 48, 96] {
+        if run_at(n, span_b, seed, mult) > FIXED_POINT_THRESHOLD {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::ozaki::{emulated_gemm, OzakiConfig};
+
+    #[test]
+    fn native_gemm_is_floating_point() {
+        let mut m = |a: &_, b: &_| gemm(a, b);
+        assert!(!is_fixed_point(64, 5, &mut m));
+    }
+
+    #[test]
+    fn fixed_slices_detected_as_fixed_point() {
+        // Emulation pinned at 7 slices (no guardrails): the paper's solid
+        // lines in Fig 2 — fails once b exceeds the window.
+        let mut m = |a: &_, b: &_| emulated_gemm(a, b, &OzakiConfig::new(7));
+        assert!(is_fixed_point(64, 5, &mut m));
+    }
+
+    #[test]
+    fn error_grows_with_span_for_fixed_slices() {
+        let mut m = |a: &_, b: &_| emulated_gemm(a, b, &OzakiConfig::new(7));
+        let e_small = run_at(48, 2, 6, &mut m);
+        let e_large = run_at(48, 60, 6, &mut m);
+        assert!(e_small < 1e-12, "small span should be accurate: {e_small}");
+        assert!(e_large > 1e-6, "large span should break the window: {e_large}");
+    }
+
+    #[test]
+    fn enough_slices_recover_accuracy() {
+        // ESC-sized slices (the dashed lines of Fig 2, before fallback is
+        // even needed): b=40 span requires ~(53+81)/8 ~ 17 slices.
+        let mut m = |a: &_, b: &_| emulated_gemm(a, b, &OzakiConfig::new(18));
+        let e = run_at(48, 40, 7, &mut m);
+        assert!(e < 1e-12, "e={e}");
+    }
+}

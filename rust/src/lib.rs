@@ -1,0 +1,47 @@
+//! # adp-dgemm
+//!
+//! Reproduction of *"Guaranteed DGEMM Accuracy While Using Reduced Precision
+//! Tensor Cores Through Extensions of the Ozaki Scheme"* (SCA/HPCAsia 2026).
+//!
+//! The library provides:
+//!
+//! * [`ozaki`] — the Ozaki-I decomposition with the paper's **unsigned slice
+//!   encoding** (two's-complement remapping, §3 of the paper), a pure-Rust
+//!   INT8-slice GEMM emulation pipeline.
+//! * [`esc`] — the **Exponent Span Capacity** estimator (§4), both the exact
+//!   per-dot-product formulation and the coarsened block algorithm, with the
+//!   proven no-overestimate guarantee.
+//! * [`coordinator`] — the **Automatic Dynamic Precision** (ADP) runtime
+//!   (§5): safety scans (NaN/Inf), ESC estimation, heuristic selection
+//!   between emulation and native FP64, and a batched GEMM service.
+//! * [`runtime`] — the PJRT execution layer that loads AOT-compiled XLA
+//!   artifacts (`artifacts/*.hlo.txt`, produced by `python/compile/aot.py`
+//!   from JAX + Pallas sources) and runs them from the Rust hot path.
+//! * [`linalg`] — FP64 substrates: blocked GEMM, Strassen (accuracy
+//!   comparator for the grading tests), and blocked Householder QR
+//!   (the cuSOLVER `geqrf` analogue of §7.3).
+//! * [`grading`] — the BLAS grading tests of Demmel et al. (§6): algorithm
+//!   discovery Tests 1–3 and the Grade A componentwise criterion.
+//! * [`dd`] — double-double (~106-bit) arithmetic used as the extended
+//!   precision reference (the paper uses FP80 long double).
+//! * [`perfmodel`] — the Tensor-Core cost model used to translate measured
+//!   CPU-substrate numbers into the paper's GPU-platform projections
+//!   (GB200, RTX Pro 6000 Blackwell); see DESIGN.md §Substitutions.
+//!
+//! Python (JAX + Pallas) exists only on the compile path; the Rust binary is
+//! self-contained once `make artifacts` has produced the HLO artifacts.
+
+pub mod coordinator;
+pub mod dd;
+pub mod esc;
+pub mod grading;
+pub mod linalg;
+pub mod ozaki;
+pub mod perfmodel;
+pub mod runtime;
+pub mod util;
+
+pub use coordinator::adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
+pub use esc::{coarse_esc_gemm, exact_esc_dot, exact_esc_gemm, EscReport};
+pub use linalg::matrix::Matrix;
+pub use ozaki::{OzakiConfig, SliceEncoding};

@@ -1,0 +1,185 @@
+//! Blocked native FP64 GEMM — the "cuBLAS DGEMM" of this substrate.
+//!
+//! This is the denominator of every speedup the benches report and the
+//! fallback target of ADP, so it must not be a strawman: it uses k-panel
+//! packing of B, 4-wide j-unrolling with FMA, and cache-sized blocks.
+//! Multi-threading happens one level up (the coordinator shards requests);
+//! this routine is deliberately single-threaded and deterministic.
+
+use super::matrix::Matrix;
+
+// Cache blocking: MC x KC panel of A (L2), KC x NC panel of B (L3/L2),
+// micro-kernel accumulates 1 x NR in registers.
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 256;
+const NR: usize = 8;
+
+/// C = A * B.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm_into(a, b, &mut c, 0.0);
+    c
+}
+
+/// C = A*B + beta*C (beta = 0 overwrites, matching BLAS semantics for the
+/// uses in this crate: QR trailing updates call it with beta = 1).
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if beta == 0.0 {
+        c.data.fill(0.0);
+    } else if beta != 1.0 {
+        c.scale(beta);
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+
+    // Packed KC x NC panel of B, NR-interleaved for the micro-kernel.
+    let mut bpack = vec![0.0f64; KC * NC];
+
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(b, pc, jc, kc, nc, &mut bpack);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                macro_kernel(a, &bpack, c, ic, pc, jc, mc, kc, nc);
+            }
+        }
+    }
+}
+
+/// Pack B[pc..pc+kc, jc..jc+nc] into NR-wide column strips:
+/// bpack[strip][l * NR + r] = B[pc+l, jc + strip*NR + r].
+#[inline]
+fn pack_b(b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, bpack: &mut [f64]) {
+    let strips = nc.div_ceil(NR);
+    for s in 0..strips {
+        let j0 = s * NR;
+        let w = NR.min(nc - j0);
+        let dst = &mut bpack[s * kc * NR..(s + 1) * kc * NR];
+        for l in 0..kc {
+            let src = b.row(pc + l);
+            let d = &mut dst[l * NR..l * NR + NR];
+            for r in 0..w {
+                d[r] = src[jc + j0 + r];
+            }
+            for r in w..NR {
+                d[r] = 0.0;
+            }
+        }
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    a: &Matrix,
+    bpack: &[f64],
+    c: &mut Matrix,
+    ic: usize,
+    pc: usize,
+    jc: usize,
+    mc: usize,
+    kc: usize,
+    nc: usize,
+) {
+    let strips = nc.div_ceil(NR);
+    for i in 0..mc {
+        let arow = &a.row(ic + i)[pc..pc + kc];
+        for s in 0..strips {
+            let j0 = s * NR;
+            let w = NR.min(nc - j0);
+            let bp = &bpack[s * kc * NR..(s + 1) * kc * NR];
+            // 1 x NR register accumulator micro-kernel.
+            let mut acc = [0.0f64; NR];
+            for (l, &al) in arow.iter().enumerate() {
+                let brow = &bp[l * NR..l * NR + NR];
+                for r in 0..NR {
+                    acc[r] = al.mul_add(brow[r], acc[r]);
+                }
+            }
+            let crow = &mut c.row_mut(ic + i)[jc + j0..jc + j0 + w];
+            for r in 0..w {
+                crow[r] += acc[r];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for l in 0..a.cols {
+                let al = a.at(i, l);
+                for j in 0..b.cols {
+                    *c.at_mut(i, j) += al * b.at(l, j);
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_square() {
+        let mut rng = Rng::new(3);
+        for n in [1, 2, 7, 16, 33, 65, 130] {
+            let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let c = gemm(&a, &b);
+            let r = naive(&a, &b);
+            let err = c.sub(&r).max_abs();
+            assert!(err < 1e-12 * n as f64, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_rectangular() {
+        let mut rng = Rng::new(4);
+        for (m, k, n) in [(3, 300, 5), (100, 7, 260), (65, 257, 9), (1, 1, 1)] {
+            let a = Matrix::uniform(m, k, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(k, n, -1.0, 1.0, &mut rng);
+            let err = gemm(&a, &b).sub(&naive(&a, &b)).max_abs();
+            assert!(err < 1e-11, "({m},{k},{n}) err={err}");
+        }
+    }
+
+    #[test]
+    fn beta_accumulates() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::uniform(20, 30, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(30, 10, -1.0, 1.0, &mut rng);
+        let mut c = Matrix::uniform(20, 10, -1.0, 1.0, &mut rng);
+        let c0 = c.clone();
+        gemm_into(&a, &b, &mut c, 1.0);
+        let mut expect = naive(&a, &b);
+        expect.add_assign(&c0);
+        assert!(c.sub(&expect).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);
+        let c = gemm(&a, &Matrix::identity(40));
+        assert!(c.sub(&a).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        let c = gemm(&a, &b);
+        assert_eq!((c.rows, c.cols), (0, 3));
+    }
+}

@@ -1,0 +1,203 @@
+//! Dense row-major FP64 matrix.
+
+use crate::dd;
+use crate::util::Rng;
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Uniform(lo, hi) entries.
+    pub fn uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| rng.uniform(lo, hi))
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Copy of the sub-block [r0, r0+nr) x [c0, c0+nc).
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        Matrix::from_fn(nr, nc, |i, j| self.at(r0 + i, c0 + j))
+    }
+
+    /// Write `b` into the sub-block starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Matrix) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                *self.at_mut(r0 + i, c0 + j) = b.at(i, j);
+            }
+        }
+    }
+
+    /// Zero-pad to (nr, nc); exact for GEMM operands.
+    pub fn pad_to(&self, nr: usize, nc: usize) -> Matrix {
+        assert!(nr >= self.rows && nc >= self.cols);
+        let mut out = Matrix::zeros(nr, nc);
+        out.set_block(0, 0, self);
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// |self| elementwise.
+    pub fn abs(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x.abs()).collect(),
+        }
+    }
+
+    /// Reference product in double-double precision, rounded to f64.
+    /// O(n^3) with ~106-bit accumulation — the C_ref of the grading tests.
+    pub fn matmul_dd(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let bt = other.transpose();
+        Matrix::from_fn(self.rows, other.cols, |i, j| {
+            dd::dot(self.row(i), bt.row(j)).to_f64()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_roundtrip() {
+        let m = Matrix::from_fn(6, 5, |i, j| (i * 10 + j) as f64);
+        let b = m.block(2, 1, 3, 2);
+        assert_eq!(b.at(0, 0), 21.0);
+        assert_eq!(b.at(2, 1), 42.0);
+        let mut m2 = Matrix::zeros(6, 5);
+        m2.set_block(2, 1, &b);
+        assert_eq!(m2.at(3, 2), 32.0);
+        assert_eq!(m2.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn pad_preserves_product() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::uniform(3, 4, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(4, 2, -1.0, 1.0, &mut rng);
+        let c = a.matmul_dd(&b);
+        let cp = a.pad_to(8, 8).matmul_dd(&b.pad_to(8, 8));
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(c.at(i, j), cp.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::uniform(5, 7, 0.0, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn fro_norm_identity() {
+        assert!((Matrix::identity(9).fro_norm() - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn non_finite_detection() {
+        let mut m = Matrix::zeros(2, 2);
+        assert!(!m.has_non_finite());
+        *m.at_mut(1, 0) = f64::NAN;
+        assert!(m.has_non_finite());
+        *m.at_mut(1, 0) = f64::INFINITY;
+        assert!(m.has_non_finite());
+    }
+}

@@ -1,0 +1,16 @@
+//! FP64 linear-algebra substrates: the dense matrix type, blocked native
+//! GEMM (the cuBLAS-DGEMM analogue and ADP fallback target), Strassen
+//! (the accuracy comparator of Fig 3), and blocked Householder QR (the
+//! cuSOLVER `geqrf` analogue of §7.3).
+
+pub mod gemm;
+pub mod matrix;
+pub mod qr;
+pub mod strassen;
+pub mod zgemm;
+
+pub use gemm::{gemm, gemm_into};
+pub use matrix::Matrix;
+pub use qr::{blocked_qr, GemmBackend, NativeGemm, Qr, QrStats};
+pub use strassen::strassen;
+pub use zgemm::{zgemm, ZMatrix};

@@ -1,0 +1,428 @@
+//! FP64 → INT8 slice decomposition (§3 of the paper).
+//!
+//! Mirrors `python/compile/ozaki.py` exactly (same formulas, same rounding,
+//! same remap order) so the native path and the AOT artifacts produce
+//! bitwise-identical results.
+
+use super::SliceEncoding;
+use crate::linalg::Matrix;
+use crate::util::bits::{frexp_exponent, ldexp, ZERO_EXP};
+
+/// One operand decomposed into INT8 slices.
+///
+/// Layout: `data[t * rows * cols + i * cols + j]` = digit `t` (0 = leading)
+/// of element (i, j). For A this is row-major A itself; for B the tensor
+/// holds **B transposed** (rows = n, cols = k) so the slice-pair GEMM walks
+/// both operands contiguously.
+#[derive(Clone, Debug)]
+pub struct SlicedMatrix {
+    pub s: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-row scaling exponents sigma (for B: per column of the original).
+    pub sigma: Vec<i32>,
+    pub data: Vec<i8>,
+    pub encoding: SliceEncoding,
+}
+
+impl SlicedMatrix {
+    #[inline]
+    pub fn slice(&self, t: usize) -> &[i8] {
+        &self.data[t * self.rows * self.cols..(t + 1) * self.rows * self.cols]
+    }
+
+    #[inline]
+    pub fn slice_row(&self, t: usize, i: usize) -> &[i8] {
+        let base = t * self.rows * self.cols + i * self.cols;
+        &self.data[base..base + self.cols]
+    }
+
+    /// Reconstruct element (i, j) — test/debug helper, O(s). Accumulates
+    /// in double-double: exact for windows up to ~106 bits (s <= 13).
+    pub fn reconstruct(&self, i: usize, j: usize) -> f64 {
+        let rb = self.encoding.radix_bits();
+        let mut acc = crate::dd::Dd::ZERO;
+        for t in (0..self.s).rev() {
+            let d = self.data[t * self.rows * self.cols + i * self.cols + j] as f64;
+            acc = acc.add_f64(d * crate::util::bits::ldexp(1.0, rb * (self.s as i32 - 1 - t as i32)));
+        }
+        ldexp(acc.hi, -self.sigma[i]) + ldexp(acc.lo, -self.sigma[i])
+    }
+}
+
+/// Decompose rows of A. `a` is (m, k); result tensor is (s, m, k) with
+/// per-row scaling.
+pub fn slice_a(a: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatrix {
+    slice_rows_impl(a, s, encoding)
+}
+
+/// Decompose columns of B. `b` is (k, n); result tensor is (s, n, k) —
+/// i.e. slices of B^T with per-column (of B) scaling.
+pub fn slice_b(b: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatrix {
+    slice_rows_impl(&b.transpose(), s, encoding)
+}
+
+fn slice_rows_impl(a: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatrix {
+    let (m, k) = (a.rows, a.cols);
+    let rb = encoding.radix_bits();
+    let mut sigma = vec![0i32; m];
+    let mut data = vec![0i8; s * m * k];
+    let mut digits = vec![0i32; s];
+
+    // Hoisted digit weights: 2^(rb*(s-1-t)) and inverses are constant per
+    // call; computing them per element (2s ldexp calls each) dominated the
+    // slicing profile before hoisting (EXPERIMENTS.md §Perf #2).
+    let w: Vec<f64> = (0..s).map(|t| ldexp(1.0, rb * (s as i32 - 1 - t as i32))).collect();
+    let winv: Vec<f64> = (0..s).map(|t| ldexp(1.0, -(rb * (s as i32 - 1 - t as i32)))).collect();
+    let mk = m * k;
+
+    for i in 0..m {
+        // Row max exponent (frexp convention, zeros excluded).
+        let mut emax = ZERO_EXP;
+        for &x in a.row(i) {
+            let e = frexp_exponent(x);
+            if e > emax {
+                emax = e;
+            }
+        }
+        let emax_safe = if emax == ZERO_EXP { 0 } else { emax };
+        // Window: |v| < 2^(rb*(s-1) + 6) => leading digit in [-64, 63],
+        // <= 64 after the unsigned remap carry. (Same 6-bit top for the
+        // signed encoding: its sub-leading digits are in [0,127] already.)
+        let sig = rb * (s as i32 - 1) + 6 - emax_safe;
+        sigma[i] = sig;
+        // Row scale 2^sig in two exact halves (sig may exceed 1023).
+        let h = sig.div_euclid(2);
+        let (f1, f2) = (ldexp(1.0, h), ldexp(1.0, sig - h));
+
+        let row = a.row(i);
+        // Fast path: pure-integer bit-field extraction in u128 (no serial
+        // FP dependency chain). Valid while the window's top bit position
+        // rb*(s-1)+6 fits u128; beyond that (s > 16) use the float path.
+        let int_path = rb * (s as i32 - 1) + 7 < 128;
+        for j in 0..k {
+            let x = row[j];
+            if x == 0.0 {
+                continue; // digits stay zero
+            }
+            if int_path {
+                // digits are rb-bit masked fields (leading < 64): in-range
+                // by construction, incl. the +-1 remap carries.
+                extract_digits_int(x, sig, rb, s, &mut digits);
+                if encoding == SliceEncoding::Unsigned {
+                    remap_unsigned(&mut digits);
+                }
+                for (t, &d) in digits.iter().enumerate() {
+                    debug_assert!((-128..=127).contains(&d));
+                    data[t * mk + i * k + j] = d as i8;
+                }
+            } else {
+                let v = x * f1 * f2;
+                extract_digits_w(v, &w, &winv, &mut digits);
+                if encoding == SliceEncoding::Unsigned {
+                    remap_unsigned(&mut digits);
+                }
+                for (t, &d) in digits.iter().enumerate() {
+                    // Checked in release on this rare path — a wrapped
+                    // digit would corrupt results silently.
+                    assert!((-128..=127).contains(&d), "digit {d} out of s8 range");
+                    data[t * mk + i * k + j] = d as i8;
+                }
+            }
+        }
+    }
+    SlicedMatrix { s, rows: m, cols: k, sigma, data, encoding }
+}
+
+/// MSB-first digit extraction on the **magnitude**, sign applied by
+/// negating the digit vector (value-preserving). Exact in f64: each step
+/// strips a *leading* bit field of |v|'s 53-bit significand — extracting
+/// on the signed value instead would borrow (`floor(-eps) = -1`,
+/// `r = 2^w - |v|`), which f64 cannot represent for elements far below the
+/// row max and silently destroys their low bits.
+/// Integer fast path: the window's integer content is the 53-bit
+/// significand shifted to its window position; digits are plain bit
+/// fields. Exactly equivalent to the float path (both truncate |v| at the
+/// window ulp, toward zero) — asserted equivalent by unit test below.
+#[inline]
+fn extract_digits_int(x: f64, sig: i32, radix_bits: i32, s: usize, digits: &mut [i32]) {
+    let bits = x.to_bits();
+    let raw = ((bits >> 52) & 0x7FF) as i32;
+    let mant_raw = bits & ((1u64 << 52) - 1);
+    // Normalize the significand M to [2^52, 2^53) with |x| = M * 2^(e-53),
+    // e the frexp exponent (handles subnormals exactly).
+    let (mant, e) = if raw != 0 {
+        (mant_raw | (1u64 << 52), raw - 1022)
+    } else {
+        let hb = 63 - mant_raw.leading_zeros() as i32;
+        (mant_raw << (52 - hb), hb + 1 - 1074)
+    };
+    // |v| = mant * 2^shift in window coordinates.
+    let shift = e - 53 + sig;
+    let wv: u128 = if shift >= 0 {
+        (mant as u128) << shift // top bit < rb*(s-1)+7 < 128 by caller check
+    } else if shift > -64 {
+        (mant >> (-shift).min(63)) as u128
+    } else {
+        0
+    };
+    let mask = (1u128 << radix_bits) - 1;
+    for (t, d) in digits.iter_mut().enumerate() {
+        let lo = radix_bits * (s as i32 - 1 - t as i32);
+        *d = ((wv >> lo) & mask) as i32;
+    }
+    // Leading digit: everything above level 1 (< 2^6 by the window bound,
+    // so the rb-bit mask above was already wide enough; kept explicit).
+    digits[0] = (wv >> (radix_bits * (s as i32 - 1))) as i32;
+    if x < 0.0 {
+        for d in digits.iter_mut() {
+            *d = -*d;
+        }
+    }
+}
+
+#[inline]
+fn extract_digits_w(v: f64, w: &[f64], winv: &[f64], digits: &mut [i32]) {
+    let s = w.len();
+    let av = v.abs();
+    let lead = (av * winv[0]).floor();
+    digits[0] = lead as i32;
+    let mut r = av - lead * w[0];
+    for t in 1..s {
+        let d = (r * winv[t]).floor();
+        r -= d * w[t];
+        digits[t] = d as i32;
+    }
+    if v < 0.0 {
+        for d in digits.iter_mut() {
+            *d = -*d;
+        }
+    }
+}
+
+/// §3 two's-complement redistribution, LSB → MSB: a u8-magnitude digit in
+/// [128, 255] becomes `d - 256` with a `+1` carry into the next-higher
+/// slice (and symmetrically `d < -128` becomes `d + 256` with a `-1`
+/// carry); bit patterns are preserved (e.g. 200_u8 ≡ -56_i8 = 0b11001000).
+/// Carries cascade; the leading digit absorbs at most ±1 (headroom bit).
+#[inline]
+pub fn remap_unsigned(digits: &mut [i32]) {
+    for t in (1..digits.len()).rev() {
+        if digits[t] > 127 {
+            digits[t] -= 256;
+            digits[t - 1] += 1;
+        } else if digits[t] < -128 {
+            digits[t] += 256;
+            digits[t - 1] -= 1;
+        }
+    }
+}
+
+/// The paper's Fig 1 worked example as a checked function: value
+/// `hi*256 + lo_u8` re-expressed as `(hi+carry)*256 + lo_s8`.
+pub fn fig1_remap(hi: i32, lo_u8: u8) -> (i32, i8) {
+    let mut d = [hi, lo_u8 as i32];
+    remap_unsigned(&mut d);
+    (d[0], d[1] as i8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    #[test]
+    fn fig1_worked_example() {
+        // 123*256 + 200 (u8)  ==  124*256 - 56 (s8); bit pattern preserved.
+        let (hi, lo) = fig1_remap(123, 200);
+        assert_eq!((hi, lo), (124, -56));
+        assert_eq!(lo as u8, 200); // 0b11001000 either way
+        // Case 1 of Fig 1: values in [0,127] pass through.
+        assert_eq!(fig1_remap(9, 42), (9, 42));
+    }
+
+    #[test]
+    fn remap_exhaustive_preserves_value_and_bits() {
+        // Every u8 digit value, with every feasible carry state.
+        for d in 0..=255i32 {
+            let mut v = [0i32, d];
+            remap_unsigned(&mut v);
+            assert_eq!(v[0] * 256 + v[1], d, "value preserved");
+            assert!((-128..=127).contains(&v[1]));
+            assert_eq!(v[1] as i8 as u8, d as u8, "bit pattern preserved");
+        }
+    }
+
+    #[test]
+    fn remap_carry_cascade() {
+        // 255 at every level: carries must ripple to the top.
+        let mut v = [0i32, 255, 255, 255];
+        let orig = 255 * (1 << 16) + 255 * (1 << 8) + 255;
+        remap_unsigned(&mut v);
+        let got = v[0] * (1 << 24) + v[1] * (1 << 16) + v[2] * (1 << 8) + v[3];
+        assert_eq!(got, orig);
+        for &d in &v[1..] {
+            assert!((-128..=127).contains(&d));
+        }
+    }
+
+    fn reconstruct_err(x: f64, s: usize, enc: SliceEncoding) -> f64 {
+        let a = Matrix::from_rows(1, 1, vec![x]);
+        let sl = slice_a(&a, s, enc);
+        (sl.reconstruct(0, 0) - x).abs() / x.abs().max(f64::MIN_POSITIVE)
+    }
+
+    #[test]
+    fn single_value_roundtrip_unsigned() {
+        for s in 2..=8 {
+            let tol = 2f64.powi(-(8 * s as i32 - 2) + 1);
+            for &x in &[1.0, -1.0, 0.1, 123.456, -3.25e10, 7.7e-12, 0.999999] {
+                let e = reconstruct_err(x, s, SliceEncoding::Unsigned);
+                assert!(e <= tol, "x={x} s={s} err={e} tol={tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_fidelity_at_7_slices() {
+        // 54 effective bits >= 53-bit significand: row-max elements round-trip
+        // *exactly* at s=7 (unsigned).
+        let mut rng = Rng::new(21);
+        for _ in 0..200 {
+            let x = rng.uniform(-10.0, 10.0);
+            assert_eq!(reconstruct_err(x, 7, SliceEncoding::Unsigned), 0.0, "x={x}");
+        }
+    }
+
+    #[test]
+    fn signed_needs_eight() {
+        let mut rng = Rng::new(22);
+        for _ in 0..100 {
+            let x = rng.uniform(-1.0, 1.0);
+            assert_eq!(reconstruct_err(x, 8, SliceEncoding::Signed), 0.0, "x={x}");
+        }
+    }
+
+    #[test]
+    fn row_scaling_is_per_row() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 0.5, 1e100, 2e100]);
+        let sl = slice_a(&a, 7, SliceEncoding::Unsigned);
+        assert_ne!(sl.sigma[0], sl.sigma[1]);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(sl.reconstruct(i, j), a.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_give_zero_digits() {
+        let a = Matrix::from_rows(1, 3, vec![0.0, -0.0, 5.0]);
+        let sl = slice_a(&a, 4, SliceEncoding::Unsigned);
+        for t in 0..4 {
+            assert_eq!(sl.slice_row(t, 0)[0], 0);
+            assert_eq!(sl.slice_row(t, 0)[1], 0, "negative zero treated as zero");
+        }
+    }
+
+    #[test]
+    fn subnormal_rows() {
+        let tiny = f64::from_bits(123); // deep subnormal
+        let a = Matrix::from_rows(1, 2, vec![tiny, 2.0 * tiny]);
+        let sl = slice_a(&a, 7, SliceEncoding::Unsigned);
+        assert_eq!(sl.reconstruct(0, 0), tiny);
+        assert_eq!(sl.reconstruct(0, 1), 2.0 * tiny);
+    }
+
+    #[test]
+    fn prop_int_and_float_extraction_agree() {
+        // The integer fast path and the float path must produce identical
+        // digit vectors for every input (both truncate |v| toward zero at
+        // the window ulp).
+        prop::check("int vs float digit extraction", 300, |rng| {
+            let s = rng.int(2, 12) as usize;
+            let rb = if rng.f64() < 0.5 { 8 } else { 7 };
+            let e = rng.int(-1070, 1020) as i32;
+            let x = rng.uniform(-2.0, 2.0) * crate::util::bits::ldexp(1.0, e);
+            if x == 0.0 {
+                return Ok(());
+            }
+            let emax = frexp_exponent(x);
+            let sig = rb * (s as i32 - 1) + 6 - emax;
+            let w: Vec<f64> = (0..s).map(|t| ldexp(1.0, rb * (s as i32 - 1 - t as i32))).collect();
+            let winv: Vec<f64> =
+                (0..s).map(|t| ldexp(1.0, -(rb * (s as i32 - 1 - t as i32)))).collect();
+            let mut d_int = vec![0i32; s];
+            let mut d_flt = vec![0i32; s];
+            extract_digits_int(x, sig, rb, s, &mut d_int);
+            let h = sig.div_euclid(2);
+            let v = x * ldexp(1.0, h) * ldexp(1.0, sig - h);
+            extract_digits_w(v, &w, &winv, &mut d_flt);
+            prop::assert_that(
+                d_int == d_flt,
+                format!("x={x:e} s={s} rb={rb}: {d_int:?} vs {d_flt:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_slicing_within_tolerance() {
+        prop::check("slicing relative error bound", 200, |rng| {
+            let s = rng.int(2, 9) as usize;
+            let enc = if rng.f64() < 0.5 { SliceEncoding::Unsigned } else { SliceEncoding::Signed };
+            // exponents spread over a wide range
+            let x = rng.uniform(-1.0, 1.0) * 2f64.powi(rng.int(-300, 300) as i32);
+            if x == 0.0 {
+                return Ok(());
+            }
+            let tol = 2f64.powi(-enc.effective_bits(s) + 1);
+            let e = reconstruct_err(x, s, enc);
+            prop::assert_that(e <= tol, format!("x={x} s={s} enc={enc:?} err={e} > tol={tol}"))
+        });
+    }
+
+    #[test]
+    fn prop_row_max_exact_roundtrip() {
+        // The "full fidelity guarantee" of §4: the row-max element's entire
+        // significand is captured whenever effective bits >= 53.
+        prop::check("row-max exact at >=53 bits", 100, |rng| {
+            let k = 8;
+            let mut vals: Vec<f64> = (0..k).map(|_| rng.uniform(-4.0, 4.0)).collect();
+            vals[3] = 8.5; // known max
+            let a = Matrix::from_rows(1, k, vals.clone());
+            let sl = slice_a(&a, 7, SliceEncoding::Unsigned);
+            prop::assert_that(
+                sl.reconstruct(0, 3) == 8.5,
+                "row max must round-trip exactly",
+            )
+        });
+    }
+
+    #[test]
+    fn leading_digit_headroom_never_overflows() {
+        // Adversarial: values just below a power of two maximize the leading
+        // digit; carry from below must stay within i8.
+        let mut vals = vec![];
+        for e in [-5, 0, 10] {
+            let below = f64::from_bits((2f64.powi(e)).to_bits() - 1);
+            vals.push(below);
+            vals.push(-below);
+            vals.push(2f64.powi(e));
+        }
+        let k = vals.len();
+        let a = Matrix::from_rows(1, k, vals.clone());
+        let row_max = vals.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        for s in 2..=9 {
+            let sl = slice_a(&a, s, SliceEncoding::Unsigned);
+            // the assert in slice_rows_impl would have caught digit
+            // overflow; verify reconstruction error stays bounded too
+            // (window-relative: the bound is anchored at the row max).
+            let tol = 2f64.powi(-(8 * s as i32 - 2) + 1) * row_max * 2.0;
+            for j in 0..k {
+                let err = (sl.reconstruct(0, j) - vals[j]).abs();
+                assert!(err <= tol, "s={s} j={j} err={err} tol={tol}");
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! GPU Tensor-Core cost model — the performance substrate substitution.
+//!
+//! The paper's performance results (Figs 5–7) are measured on NVIDIA GB200
+//! and RTX Pro 6000 Blackwell Server Edition GPUs, which this environment
+//! does not have. Following DESIGN.md §Substitutions, the benches combine
+//! (a) *measured* CPU-substrate numbers for the algorithmic op mix with
+//! (b) this analytical throughput model parameterized by the two platforms'
+//! published peak rates, to reproduce the *shape* of the paper's results:
+//! who wins, by what factor, where the crossovers fall, and the <10% ADP
+//! overhead bound. The model is deliberately simple and fully documented so
+//! every projected number in EXPERIMENTS.md can be traced to a formula.
+
+/// A GPU platform profile (peak rates with achievable-efficiency factors).
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Peak FP64 (tensor-core) throughput, TFLOP/s.
+    pub fp64_tflops: f64,
+    /// Peak INT8 tensor-core throughput, TOP/s (dense).
+    pub int8_tops: f64,
+    /// HBM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Fraction of FP64 peak a tuned DGEMM achieves at large n.
+    pub fp64_eff: f64,
+    /// Fraction of INT8 peak the slice GEMMs achieve at large n.
+    pub int8_eff: f64,
+    /// Fixed per-launch overhead of the ADP pre-pass kernels, microseconds
+    /// (scan + ESC + heuristic; §5: "negligible decision overhead").
+    pub adp_fixed_us: f64,
+}
+
+/// NVIDIA GB200 (Blackwell, datacenter): strong native FP64 tensor cores
+/// (1:112 INT8:FP64 op ratio) — emulation wins modestly (paper: up to 2.3x).
+pub const GB200: Platform = Platform {
+    name: "GB200",
+    fp64_tflops: 40.0,
+    int8_tops: 4500.0,
+    mem_bw_gbs: 8000.0,
+    fp64_eff: 0.85,
+    // Calibrated so the 55-bit large-n speedup lands at the paper's 2.3x
+    // (see EXPERIMENTS.md §Fig6 for the calibration trace).
+    int8_eff: 0.52,
+    adp_fixed_us: 8.0,
+};
+
+/// RTX Pro 6000 Blackwell Server Edition (workstation-class): FP64 is
+/// 1:64 of FP32 (~2 TFLOP/s) while INT8 tensor cores are huge — emulation
+/// wins big (paper: up to 13.2x).
+pub const RTX_PRO_6000: Platform = Platform {
+    name: "RTX Pro 6000 Blackwell",
+    fp64_tflops: 1.95,
+    int8_tops: 1800.0,
+    mem_bw_gbs: 1790.0,
+    fp64_eff: 0.80,
+    // Calibrated to the paper's 13.2x 55-bit ceiling (EXPERIMENTS.md §Fig6).
+    int8_eff: 0.34,
+    adp_fixed_us: 8.0,
+};
+
+/// Per-phase time breakdown of one emulated GEMM (seconds) — Fig 5's bars.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModelBreakdown {
+    pub scan_esc_s: f64,
+    pub slice_s: f64,
+    pub int_gemm_s: f64,
+    pub recompose_s: f64,
+}
+
+impl ModelBreakdown {
+    pub fn total(&self) -> f64 {
+        self.scan_esc_s + self.slice_s + self.int_gemm_s + self.recompose_s
+    }
+
+    pub fn adp_overhead_fraction(&self) -> f64 {
+        self.scan_esc_s / self.total()
+    }
+}
+
+impl Platform {
+    /// Time for a tuned native FP64 GEMM (the cuBLAS DGEMM baseline).
+    pub fn dgemm_time(&self, m: usize, k: usize, n: usize) -> f64 {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let compute = flops / (self.fp64_tflops * 1e12 * self.fp64_eff);
+        let bytes = 8.0 * (m * k + k * n + m * n) as f64;
+        compute.max(bytes / (self.mem_bw_gbs * 1e9)) + 3e-6
+    }
+
+    /// Emulated DGEMM time with `slices` slices, including or excluding the
+    /// ADP guardrail pre-pass.
+    pub fn emulated_breakdown(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        slices: usize,
+        with_adp: bool,
+    ) -> ModelBreakdown {
+        let (mf, kf, nf) = (m as f64, k as f64, n as f64);
+        let bw = self.mem_bw_gbs * 1e9;
+
+        // ADP pre-pass (§5): one extra read of A and B for the fused
+        // NaN/Inf scan + block min/max, a max-plus "GEMM" coarsened by
+        // b=64 on DPX-class integer units (modeled at INT8 rate / 8), and
+        // a fixed launch cost. Runs once regardless of slice count.
+        let scan_esc_s = if with_adp {
+            let scan_bytes = 8.0 * (mf * kf + kf * nf);
+            let maxplus_ops = mf * nf * (kf / 64.0) * 2.0;
+            scan_bytes / bw
+                + maxplus_ops / (self.int8_tops * 1e12 / 8.0)
+                + self.adp_fixed_us * 1e-6
+        } else {
+            0.0
+        };
+
+        // Per-phase kernel-launch overhead (same 3 us the DGEMM baseline
+        // carries): slicing, the batched pair GEMMs, and recomposition.
+        const LAUNCH: f64 = 3e-6;
+
+        // Slicing: read each operand once, write s INT8 slice tensors
+        // (bandwidth-bound; the conversion ALU work hides under the loads).
+        let slice_bytes = (8.0 + slices as f64) * (mf * kf + kf * nf);
+        let slice_s = slice_bytes / bw + LAUNCH;
+
+        // s(s+1)/2 INT8 pair-GEMMs (Ozaki-I triangular truncation).
+        let pairs = (slices * (slices + 1) / 2) as f64;
+        let int_ops = 2.0 * mf * kf * nf * pairs;
+        let int_gemm_s = int_ops / (self.int8_tops * 1e12 * self.int8_eff) + LAUNCH;
+
+        // Recomposition: s weight levels of i32->f64 scaled accumulation
+        // over the m*n output (bandwidth-bound).
+        let recompose_bytes = (4.0 * pairs.min(slices as f64 * 2.0) + 8.0) * mf * nf;
+        let recompose_s = recompose_bytes / bw + LAUNCH;
+
+        ModelBreakdown { scan_esc_s, slice_s, int_gemm_s, recompose_s }
+    }
+
+    pub fn emulated_time(&self, m: usize, k: usize, n: usize, slices: usize, with_adp: bool) -> f64 {
+        self.emulated_breakdown(m, k, n, slices, with_adp).total()
+    }
+
+    /// Speedup of emulation over native FP64 (Fig 6's y-axis).
+    pub fn speedup(&self, n: usize, slices: usize, with_adp: bool) -> f64 {
+        self.dgemm_time(n, n, n) / self.emulated_time(n, n, n, slices, with_adp)
+    }
+
+    /// The ADP heuristic's decision input (§5.3): emulate iff the modeled
+    /// emulated time (including guardrails) beats native FP64.
+    pub fn emulation_profitable(&self, m: usize, k: usize, n: usize, slices: usize) -> bool {
+        self.emulated_time(m, k, n, slices, true) < self.dgemm_time(m, k, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 55-bit setting of the paper = 7 slices in its encoding; our unsigned
+    /// encoding reaches 54 bits at s=7 (see DESIGN.md).
+    const S55: usize = 7;
+
+    #[test]
+    fn paper_headline_speedups() {
+        // Fig 6: up to ~2.3x on GB200, ~13.2x on RTX Pro 6000 at 55 bits.
+        let g = GB200.speedup(8192, S55, false);
+        assert!((1.8..3.0).contains(&g), "GB200 speedup {g}");
+        let r = RTX_PRO_6000.speedup(8192, S55, false);
+        assert!((10.0..16.0).contains(&r), "RTX speedup {r}");
+    }
+
+    #[test]
+    fn adp_overhead_below_ten_percent() {
+        // §7.1: even forced to 55 bits, ADP adds < 10% for large GEMMs.
+        for p in [GB200, RTX_PRO_6000] {
+            for n in [2048usize, 4096, 8192] {
+                let with = p.emulated_time(n, n, n, S55, true);
+                let without = p.emulated_time(n, n, n, S55, false);
+                let overhead = (with - without) / with;
+                assert!(overhead < 0.10, "{} n={n}: overhead {overhead}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn small_sizes_fall_back() {
+        // Fig 7: "for very small problem sizes ADP recognizes that the
+        // overhead of emulation outweighs its benefits".
+        assert!(!GB200.emulation_profitable(128, 128, 128, S55));
+        assert!(GB200.emulation_profitable(8192, 8192, 8192, S55));
+        assert!(RTX_PRO_6000.emulation_profitable(2048, 2048, 2048, S55));
+    }
+
+    #[test]
+    fn more_slices_cost_more() {
+        let t7 = GB200.emulated_time(4096, 4096, 4096, 7, true);
+        let t9 = GB200.emulated_time(4096, 4096, 4096, 9, true);
+        let t14 = GB200.emulated_time(4096, 4096, 4096, 14, true);
+        assert!(t7 < t9 && t9 < t14);
+    }
+
+    #[test]
+    fn unsigned_vs_signed_compute_saving() {
+        // §3: 7 slices instead of 8 => 28 vs 36 pair GEMMs (~22% less).
+        let t7 = GB200.emulated_time(8192, 8192, 8192, 7, false);
+        let t8 = GB200.emulated_time(8192, 8192, 8192, 8, false);
+        let saving = 1.0 - t7 / t8;
+        assert!((0.15..0.26).contains(&saving), "saving {saving}");
+    }
+
+    #[test]
+    fn crossover_exists() {
+        // Fig 6 shape: speedup grows with n, crossing 1.0 somewhere
+        // between tiny and large sizes on GB200.
+        let small = GB200.speedup(256, S55, true);
+        let large = GB200.speedup(8192, S55, true);
+        assert!(small < 1.0, "small {small}");
+        assert!(large > 1.5, "large {large}");
+    }
+}

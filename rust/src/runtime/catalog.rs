@@ -1,0 +1,162 @@
+//! Artifact catalog: parses `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) and answers shape/slice availability queries.
+//!
+//! Manifest format, one artifact per line: `kind n slices filename`, with
+//! `slices = 0` for the non-GEMM kinds. Hand-rolled (serde is unavailable
+//! offline) and deliberately trivial.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// Emulated Ozaki-I GEMM at a fixed slice count.
+    Gemm,
+    /// Fused NaN/Inf scan + coarsened ESC (returns i32[4]).
+    Scan,
+    /// Native FP64 GEMM (fallback target).
+    Dgemm,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gemm" => ArtifactKind::Gemm,
+            "scan" => ArtifactKind::Scan,
+            "dgemm" => ArtifactKind::Dgemm,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CatalogEntry {
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub slices: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Catalog {
+    pub entries: Vec<CatalogEntry>,
+}
+
+impl Catalog {
+    pub fn load(dir: &Path) -> Result<Catalog> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Catalog> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (Some(kind), Some(n), Some(slices), Some(file)) =
+                (it.next(), it.next(), it.next(), it.next())
+            else {
+                bail!("manifest line {} malformed: '{line}'", lineno + 1);
+            };
+            entries.push(CatalogEntry {
+                kind: ArtifactKind::parse(kind)?,
+                n: n.parse().context("n field")?,
+                slices: slices.parse().context("slices field")?,
+                path: dir.join(file),
+            });
+        }
+        Ok(Catalog { entries })
+    }
+
+    pub fn find(&self, kind: ArtifactKind, n: usize, slices: usize) -> Option<&CatalogEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.n == n && e.slices == slices)
+    }
+
+    /// Registered square sizes for `kind`, ascending.
+    pub fn sizes(&self, kind: ArtifactKind) -> Vec<usize> {
+        let set: BTreeSet<usize> =
+            self.entries.iter().filter(|e| e.kind == kind).map(|e| e.n).collect();
+        set.into_iter().collect()
+    }
+
+    /// Smallest registered GEMM size that fits an (m, k, n) problem, if any.
+    pub fn fitting_size(&self, m: usize, k: usize, n: usize) -> Option<usize> {
+        let need = m.max(k).max(n);
+        self.sizes(ArtifactKind::Gemm).into_iter().find(|&s| s >= need)
+    }
+
+    /// Slice counts registered for GEMM size `n`, ascending.
+    pub fn slice_counts(&self, n: usize) -> Vec<usize> {
+        let set: BTreeSet<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Gemm && e.n == n)
+            .map(|e| e.slices)
+            .collect();
+        set.into_iter().collect()
+    }
+
+    /// Smallest registered slice count >= `want` at size `n`.
+    pub fn slice_count_at_least(&self, n: usize, want: usize) -> Option<usize> {
+        self.slice_counts(n).into_iter().find(|&s| s >= want)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+dgemm 64 0 dgemm_n64.hlo.txt
+scan 64 0 scan_esc_n64.hlo.txt
+gemm 64 3 ozaki_gemm_n64_s3.hlo.txt
+gemm 64 7 ozaki_gemm_n64_s7.hlo.txt
+gemm 128 7 ozaki_gemm_n128_s7.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let c = Catalog::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(c.entries.len(), 5);
+        assert_eq!(c.sizes(ArtifactKind::Gemm), vec![64, 128]);
+        assert_eq!(c.slice_counts(64), vec![3, 7]);
+        assert!(c.find(ArtifactKind::Scan, 64, 0).is_some());
+        assert_eq!(
+            c.find(ArtifactKind::Gemm, 64, 7).unwrap().path,
+            Path::new("/art/ozaki_gemm_n64_s7.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn fitting_size_rounds_up() {
+        let c = Catalog::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(c.fitting_size(60, 64, 10), Some(64));
+        assert_eq!(c.fitting_size(65, 2, 2), Some(128));
+        assert_eq!(c.fitting_size(200, 2, 2), None);
+    }
+
+    #[test]
+    fn slice_count_at_least_picks_next() {
+        let c = Catalog::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(c.slice_count_at_least(64, 5), Some(7));
+        assert_eq!(c.slice_count_at_least(64, 8), None);
+        assert_eq!(c.slice_count_at_least(128, 7), Some(7));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Catalog::parse("gemm 64", Path::new("/a")).is_err());
+        assert!(Catalog::parse("wat 64 0 f", Path::new("/a")).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! The runtime thread and its cloneable handle.
+//!
+//! One thread owns `PjRtClient::cpu()` and a cache of compiled executables
+//! (HLO text -> `HloModuleProto::from_text_file` -> compile, cached on
+//! first use). Requests arrive over an mpsc channel; every request carries
+//! its own reply channel. Artifact execution is synchronous on the runtime
+//! thread — matching one GPU stream — while callers overlap freely.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::catalog::{ArtifactKind, Catalog};
+use crate::linalg::Matrix;
+
+/// Result of the fused scan+ESC artifact (i32[4] on the wire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScanResult {
+    pub has_nan: bool,
+    pub has_inf: bool,
+    pub esc: i32,
+    pub required_bits_fp64: i32,
+}
+
+enum Request {
+    /// Execute a 2-input f64[n,n] -> f64[n,n] artifact.
+    Gemm { kind: ArtifactKind, n: usize, slices: usize, a: Vec<f64>, b: Vec<f64>, reply: Sender<Result<Vec<f64>>> },
+    /// Execute the scan artifact: f64[n,n] x2 -> i32[4].
+    Scan { n: usize, a: Vec<f64>, b: Vec<f64>, reply: Sender<Result<ScanResult>> },
+    /// Compile (warm) an artifact without executing it.
+    Warm { kind: ArtifactKind, n: usize, slices: usize, reply: Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+    catalog: Arc<Catalog>,
+}
+
+impl RuntimeHandle {
+    /// Load the catalog at `dir` and spawn the runtime thread.
+    pub fn load(dir: &Path) -> Result<RuntimeHandle> {
+        let catalog = Arc::new(Catalog::load(dir)?);
+        let (tx, rx) = channel::<Request>();
+        let cat = catalog.clone();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || runtime_main(cat, rx))
+            .context("spawning runtime thread")?;
+        Ok(RuntimeHandle { tx, catalog })
+    }
+
+    /// Try to load; `None` when no artifacts have been built (callers then
+    /// use the native Rust paths).
+    pub fn try_load(dir: &Path) -> Option<RuntimeHandle> {
+        RuntimeHandle::load(dir).ok()
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    /// Execute the emulated-GEMM artifact `(n, slices)`. Operands may be
+    /// any shape <= n; they are zero-padded (exact for GEMM) and the result
+    /// is cropped back.
+    pub fn emulated_gemm(&self, n: usize, slices: usize, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        self.run_square(ArtifactKind::Gemm, n, slices, a, b)
+    }
+
+    /// Execute the native-FP64 DGEMM artifact of size `n`.
+    pub fn dgemm(&self, n: usize, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        self.run_square(ArtifactKind::Dgemm, n, 0, a, b)
+    }
+
+    /// Execute the fused scan+ESC artifact of size `n`.
+    pub fn scan_esc(&self, n: usize, a: &Matrix, b: &Matrix) -> Result<ScanResult> {
+        assert_eq!(a.cols, b.rows);
+        let (ap, bp) = (a.pad_to(n, n), b.pad_to(n, n));
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Scan { n, a: ap.data, b: bp.data, reply: rtx })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rrx.recv().context("runtime reply")?
+    }
+
+    /// Pre-compile an artifact so first-request latency is predictable.
+    pub fn warm(&self, kind: ArtifactKind, n: usize, slices: usize) -> Result<()> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Warm { kind, n, slices, reply: rtx })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rrx.recv().context("runtime reply")?
+    }
+
+    fn run_square(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+        slices: usize,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> Result<Matrix> {
+        assert_eq!(a.cols, b.rows);
+        let (m0, n0) = (a.rows, b.cols);
+        let (ap, bp) = (a.pad_to(n, n), b.pad_to(n, n));
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Gemm { kind, n, slices, a: ap.data, b: bp.data, reply: rtx })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        let data = rrx.recv().context("runtime reply")??;
+        let full = Matrix::from_rows(n, n, data);
+        Ok(if (m0, n0) == (n, n) { full } else { full.block(0, 0, m0, n0) })
+    }
+
+    /// Ask the runtime thread to exit (used by tests; dropping all handles
+    /// also shuts it down).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+fn runtime_main(catalog: Arc<Catalog>, rx: Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Answer every request with the construction error.
+            let msg = format!("PJRT CPU client failed: {e:?}");
+            for req in rx {
+                match req {
+                    Request::Gemm { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!(msg.clone())));
+                    }
+                    Request::Scan { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!(msg.clone())));
+                    }
+                    Request::Warm { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!(msg.clone())));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<PathBuf, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    let compile = |cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+                   client: &xla::PjRtClient,
+                   kind: ArtifactKind,
+                   n: usize,
+                   slices: usize|
+     -> Result<()> {
+        let entry = catalog
+            .find(kind, n, slices)
+            .ok_or_else(|| anyhow!("no artifact for {kind:?} n={n} s={slices}"))?;
+        if cache.contains_key(&entry.path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.path.display()))?;
+        cache.insert(entry.path.clone(), exe);
+        Ok(())
+    };
+
+    for req in rx {
+        match req {
+            Request::Shutdown => break,
+            Request::Warm { kind, n, slices, reply } => {
+                let _ = reply.send(compile(&mut cache, &client, kind, n, slices));
+            }
+            Request::Gemm { kind, n, slices, a, b, reply } => {
+                let r = (|| -> Result<Vec<f64>> {
+                    compile(&mut cache, &client, kind, n, slices)?;
+                    let entry = catalog.find(kind, n, slices).unwrap();
+                    let exe = cache.get(&entry.path).unwrap();
+                    let la = literal_f64(&a, n)?;
+                    let lb = literal_f64(&b, n)?;
+                    let out = exe
+                        .execute::<xla::Literal>(&[la, lb])
+                        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                    // aot.py lowers with return_tuple=True: unwrap 1-tuple.
+                    let out = out.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+                    out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Scan { n, a, b, reply } => {
+                let r = (|| -> Result<ScanResult> {
+                    compile(&mut cache, &client, ArtifactKind::Scan, n, 0)?;
+                    let entry = catalog.find(ArtifactKind::Scan, n, 0).unwrap();
+                    let exe = cache.get(&entry.path).unwrap();
+                    let la = literal_f64(&a, n)?;
+                    let lb = literal_f64(&b, n)?;
+                    let out = exe
+                        .execute::<xla::Literal>(&[la, lb])
+                        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                    let out = out.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+                    let v = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                    if v.len() != 4 {
+                        bail!("scan artifact returned {} words, expected 4", v.len());
+                    }
+                    Ok(ScanResult {
+                        has_nan: v[0] != 0,
+                        has_inf: v[1] != 0,
+                        esc: v[2],
+                        required_bits_fp64: v[3],
+                    })
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn literal_f64(data: &[f64], n: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), n * n);
+    xla::Literal::vec1(data)
+        .reshape(&[n as i64, n as i64])
+        .map_err(|e| anyhow!("literal reshape: {e:?}"))
+}

@@ -1,0 +1,14 @@
+//! PJRT execution layer: loads the AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! The `xla` crate's client types are `Rc`-based (not `Send`), so a single
+//! dedicated **runtime thread** owns the PJRT CPU client and all compiled
+//! executables; the rest of the system talks to it through a cloneable
+//! [`RuntimeHandle`] over channels. This mirrors the paper's GPU-resident
+//! design: one device context, no per-request host/device renegotiation.
+
+pub mod catalog;
+pub mod handle;
+
+pub use catalog::{ArtifactKind, Catalog, CatalogEntry};
+pub use handle::{RuntimeHandle, ScanResult};

@@ -1,0 +1,86 @@
+//! Tiny wall-clock bench harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` figure regenerators and the perf pass.
+//! Reports min/median/mean over timed iterations after a warmup, in a
+//! stable single-line format the EXPERIMENTS.md tables are built from.
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl Stats {
+    /// Throughput in "units" (e.g. flops) per second based on median time.
+    pub fn per_sec(&self, units: f64) -> f64 {
+        units / self.median_s
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `iters` timed runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Stats {
+        iters: times.len(),
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: mean,
+    }
+}
+
+/// Time `f` adaptively: enough iterations to spend ~`budget_s` seconds.
+pub fn bench_budget<T>(budget_s: f64, mut f: impl FnMut() -> T) -> Stats {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(3, 1000);
+    bench(1, iters, f)
+}
+
+/// Print one result row: `name, median_ms, min_ms, label=value ...`.
+pub fn report(name: &str, stats: Stats, extra: &[(&str, String)]) {
+    let mut line = format!(
+        "{name}: median {:.3} ms, min {:.3} ms, mean {:.3} ms ({} iters)",
+        stats.median_s * 1e3,
+        stats.min_s * 1e3,
+        stats.mean_s * 1e3,
+        stats.iters
+    );
+    for (k, v) in extra {
+        line.push_str(&format!(", {k}={v}"));
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench(1, 5, || (0..1000).sum::<u64>());
+        assert_eq!(s.iters, 5);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.mean_s * 5.0);
+        assert!(s.min_s >= 0.0);
+    }
+
+    #[test]
+    fn budget_clamps_iters() {
+        let s = bench_budget(0.001, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,119 @@
+//! FP64 bit-level helpers shared by slicing (§3) and ESC (§4).
+//!
+//! Mirrors `python/compile/ozaki.py::frexp_exponent`; the two are
+//! cross-validated by the artifact-vs-native integration tests.
+
+/// Exponent assigned to zero entries: far below any real FP64 exponent so a
+/// zero can never win a max and always loses a min (the conservative
+/// direction for the coarsened ESC — see DESIGN.md).
+pub const ZERO_EXP: i32 = -(1 << 24);
+
+/// Exponent `e` with `|x| < 2^e` (frexp convention: `x = m * 2^e`,
+/// `0.5 <= |m| < 1`). Handles subnormals exactly; returns [`ZERO_EXP`] for
+/// zero. NaN/Inf never reach this function on the ADP path (the safety scan
+/// falls back first); for completeness they report the maximum exponent.
+#[inline]
+pub fn frexp_exponent(x: f64) -> i32 {
+    if x == 0.0 {
+        return ZERO_EXP;
+    }
+    let bits = x.to_bits();
+    let raw = ((bits >> 52) & 0x7FF) as i32;
+    if raw != 0 {
+        raw - 1022 // normal: |x| in [2^(raw-1023), 2^(raw-1022))
+    } else {
+        // subnormal: |x| = mant * 2^-1074, highest set bit h => e = h+1-1074
+        let mant = bits & ((1u64 << 52) - 1);
+        (63 - mant.leading_zeros() as i32) + 1 - 1074
+    }
+}
+
+/// `2^e` as f64, exact for any `e` in the finite-result range, including
+/// subnormal results (`e >= -1074`). Panics outside `[-1074, 1023]`.
+#[inline]
+pub fn exp2i(e: i32) -> f64 {
+    assert!((-1074..=1023).contains(&e), "exp2i out of range: {e}");
+    if e >= -1022 {
+        f64::from_bits(((e + 1023) as u64) << 52)
+    } else {
+        // subnormal power of two
+        f64::from_bits(1u64 << (e + 1074))
+    }
+}
+
+/// Scale `x * 2^e`, correct for any `e` (overflow -> ±Inf, underflow -> 0,
+/// single final rounding when the result is subnormal). `2^e` may be far
+/// outside the f64 range; scaling proceeds in exact power-of-two steps that
+/// keep intermediates normal until the final multiply.
+#[inline]
+pub fn ldexp(mut x: f64, mut e: i32) -> f64 {
+    while e > 1023 {
+        x *= exp2i(1023);
+        e -= 1023;
+        if !x.is_finite() || x == 0.0 {
+            return x;
+        }
+    }
+    while e < -1022 {
+        x *= exp2i(-1022);
+        e += 1022;
+        if x == 0.0 || !x.is_finite() {
+            return x;
+        }
+    }
+    x * exp2i(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frexp_matches_std() {
+        for &x in &[1.0, 0.5, 0.75, 1.5, 2.0, 3.0, 1e300, 1e-300, -7.25] {
+            let e = frexp_exponent(x);
+            let m = x / exp2i(e.clamp(-1074, 1023));
+            assert!((0.5..1.0).contains(&m.abs()), "x={x} e={e} m={m}");
+        }
+    }
+
+    #[test]
+    fn frexp_zero_sentinel() {
+        assert_eq!(frexp_exponent(0.0), ZERO_EXP);
+        assert_eq!(frexp_exponent(-0.0), ZERO_EXP);
+    }
+
+    #[test]
+    fn frexp_subnormals() {
+        let min_sub = f64::from_bits(1); // 2^-1074
+        assert_eq!(frexp_exponent(min_sub), -1073);
+        assert_eq!(frexp_exponent(f64::MIN_POSITIVE), -1021);
+        assert_eq!(frexp_exponent(f64::MIN_POSITIVE / 2.0), -1022);
+    }
+
+    #[test]
+    fn frexp_extremes() {
+        assert_eq!(frexp_exponent(f64::MAX), 1024);
+        assert_eq!(frexp_exponent(1.0), 1);
+        assert_eq!(frexp_exponent(0.99), 0);
+    }
+
+    #[test]
+    fn exp2i_exact() {
+        assert_eq!(exp2i(0), 1.0);
+        assert_eq!(exp2i(-1074), f64::from_bits(1));
+        assert_eq!(exp2i(1023), 2f64.powi(1023));
+        assert_eq!(exp2i(-1022), f64::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn ldexp_wide_range() {
+        assert_eq!(ldexp(1.5, 10), 1536.0);
+        assert_eq!(ldexp(1.0, -1074), f64::from_bits(1));
+        assert_eq!(ldexp(f64::from_bits(1), 1074), 1.0);
+        assert!(ldexp(1.0, 2000).is_infinite()); // overflow -> inf
+        assert_eq!(ldexp(1.0, -2000), 0.0); // underflow -> 0
+        assert_eq!(ldexp(f64::from_bits(1), 2147), 2f64.powi(1073));
+        assert_eq!(ldexp(2f64.powi(1023), -2097), f64::from_bits(1));
+    }
+}

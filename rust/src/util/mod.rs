@@ -1,0 +1,10 @@
+//! Small in-tree utilities replacing crates unavailable in the offline
+//! environment (see DESIGN.md §Substitutions).
+
+pub mod benchkit;
+pub mod bits;
+pub mod prop;
+pub mod rng;
+
+pub use bits::{frexp_exponent, ZERO_EXP};
+pub use rng::Rng;

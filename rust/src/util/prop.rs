@@ -1,0 +1,81 @@
+//! Minimal property-testing driver (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` seeded inputs; on failure it reports
+//! the failing case index and seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use adp_dgemm::util::{prop, Rng};
+//! prop::check("sum is commutative", 64, |rng| {
+//!     let (a, b) = (rng.f64(), rng.f64());
+//!     prop::assert_close(a + b, b + a, 0.0, "a+b == b+a")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` derived RNG streams; panic with replay info on
+/// the first failure. The base seed can be overridden with `ADP_PROP_SEED`
+/// to replay a reported failure.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    let base = std::env::var("ADP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xADB0_0C0DEu64);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: ADP_PROP_SEED={base}, case seed {seed}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert `|a - b| <= tol * max(1, |a|, |b|)`, reporting values on failure.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    let scale = 1f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale || (a.is_nan() && b.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+/// Assert a boolean condition with a message.
+pub fn assert_that(cond: bool, what: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", 16, |rng| {
+            let x = rng.f64();
+            assert_that((0.0..1.0).contains(&x), format!("x={x} in [0,1)"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failure() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_handles_scales() {
+        assert!(assert_close(1e300, 1e300 * (1.0 + 1e-12), 1e-11, "big").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-3, "off").is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration: AOT artifacts (python/JAX/Pallas -> HLO text -> PJRT)
+//! against the native Rust pipeline.
+//!
+//! These tests are the seam of the three-layer architecture: they prove
+//! the L2 graph and the L3-native implementation compute the *same*
+//! function. They skip (pass trivially with a note) when `artifacts/`
+//! has not been built — run `make artifacts` first for full coverage.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
+use adp_dgemm::coordinator::{AdpConfig, AdpEngine};
+use adp_dgemm::esc::coarse_esc_gemm;
+use adp_dgemm::linalg::{gemm, Matrix};
+use adp_dgemm::ozaki::{emulated_gemm, OzakiConfig};
+use adp_dgemm::runtime::{ArtifactKind, RuntimeHandle};
+use adp_dgemm::util::Rng;
+
+fn runtime() -> Option<&'static RuntimeHandle> {
+    static RT: OnceLock<Option<RuntimeHandle>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let rt = RuntimeHandle::try_load(Path::new("artifacts"));
+        if rt.is_none() {
+            eprintln!("NOTE: artifacts/ missing — integration tests skipped (run `make artifacts`)");
+        }
+        rt
+    })
+    .as_ref()
+}
+
+#[test]
+fn dgemm_artifact_matches_native_gemm() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(100);
+    for n in rt.catalog().sizes(ArtifactKind::Dgemm) {
+        let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+        let c_art = rt.dgemm(n, &a, &b).expect("dgemm artifact");
+        let c_nat = gemm(&a, &b);
+        // both are O(n^3) FP64; different summation orders => eps-level
+        let denom = a.abs().matmul_dd(&b.abs());
+        for i in 0..n {
+            for j in 0..n {
+                let e = (c_art.at(i, j) - c_nat.at(i, j)).abs() / denom.at(i, j);
+                assert!(e < (n as f64) * f64::EPSILON, "n={n} ({i},{j}): {e}");
+            }
+        }
+        break; // one size is enough for the slow path
+    }
+}
+
+#[test]
+fn ozaki_artifact_bitwise_matches_native_pipeline() {
+    // The strongest cross-layer check in the repo: the L2 jax graph and
+    // the native Rust pipeline implement the same deterministic function,
+    // so results must be IDENTICAL bit for bit.
+    let Some(rt) = runtime() else { return };
+    let sizes = rt.catalog().sizes(ArtifactKind::Gemm);
+    let n = *sizes.first().expect("at least one gemm artifact");
+    let mut rng = Rng::new(101);
+    for (trial, span) in [(0u64, 0i32), (1, 10), (2, 25)] {
+        let a = Matrix::from_fn(n, n, |_, _| {
+            rng.uniform(-2.0, 2.0) * 2f64.powi(rng.int(-span as i64, span as i64) as i32)
+        });
+        let b = Matrix::from_fn(n, n, |_, _| {
+            rng.uniform(-2.0, 2.0) * 2f64.powi(rng.int(-span as i64, span as i64) as i32)
+        });
+        for s in rt.catalog().slice_counts(n) {
+            let c_art = rt.emulated_gemm(n, s, &a, &b).expect("gemm artifact");
+            let c_nat = emulated_gemm(&a, &b, &OzakiConfig::new(s));
+            let mut diffs = 0;
+            for (x, y) in c_art.data.iter().zip(&c_nat.data) {
+                if x.to_bits() != y.to_bits() {
+                    diffs += 1;
+                }
+            }
+            assert_eq!(diffs, 0, "trial {trial} n={n} s={s}: {diffs} bitwise diffs");
+        }
+    }
+}
+
+#[test]
+fn scan_artifact_matches_native_scan_and_esc() {
+    let Some(rt) = runtime() else { return };
+    let sizes = rt.catalog().sizes(ArtifactKind::Scan);
+    let n = *sizes.first().expect("scan artifact");
+    let mut rng = Rng::new(102);
+
+    // clean input: flags clear, esc == native coarse esc (same block = 64)
+    let a = Matrix::from_fn(n, n, |_, _| {
+        rng.uniform(1.0, 2.0) * 2f64.powi(rng.int(-20, 20) as i32)
+    });
+    let b = Matrix::from_fn(n, n, |_, _| {
+        rng.uniform(1.0, 2.0) * 2f64.powi(rng.int(-20, 20) as i32)
+    });
+    let res = rt.scan_esc(n, &a, &b).expect("scan artifact");
+    assert!(!res.has_nan && !res.has_inf);
+    let native = coarse_esc_gemm(&a, &b, 64);
+    assert_eq!(res.esc, native, "artifact vs native coarsened ESC");
+    assert_eq!(res.required_bits_fp64, 53 + native + 1);
+
+    // NaN / Inf detection
+    let mut a2 = a.clone();
+    *a2.at_mut(1, 2) = f64::NAN;
+    assert!(rt.scan_esc(n, &a2, &b).unwrap().has_nan);
+    let mut b2 = b.clone();
+    *b2.at_mut(0, 0) = f64::NEG_INFINITY;
+    assert!(rt.scan_esc(n, &a, &b2).unwrap().has_inf);
+}
+
+#[test]
+fn artifact_padding_crops_correctly() {
+    let Some(rt) = runtime() else { return };
+    let sizes = rt.catalog().sizes(ArtifactKind::Gemm);
+    let n = *sizes.first().unwrap();
+    let s = *rt.catalog().slice_counts(n).last().unwrap();
+    let mut rng = Rng::new(103);
+    // ragged shapes, padded into the square artifact
+    let (m0, k0, n0) = (n - 3, n - 7, n / 2 + 1);
+    let a = Matrix::uniform(m0, k0, -1.0, 1.0, &mut rng);
+    let b = Matrix::uniform(k0, n0, -1.0, 1.0, &mut rng);
+    let c = rt.emulated_gemm(n, s, &a, &b).expect("padded artifact gemm");
+    assert_eq!((c.rows, c.cols), (m0, n0));
+    let c_nat = emulated_gemm(&a.pad_to(n, n), &b.pad_to(n, n), &OzakiConfig::new(s));
+    for i in 0..m0 {
+        for j in 0..n0 {
+            assert_eq!(c.at(i, j).to_bits(), c_nat.at(i, j).to_bits(), "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn adp_engine_uses_artifacts_when_available() {
+    let Some(rt) = runtime() else { return };
+    let engine = AdpEngine::new(
+        AdpConfig::fp64()
+            .with_heuristic(Box::new(AlwaysEmulate))
+            .with_runtime(Some(rt.clone())),
+    );
+    let sizes = rt.catalog().sizes(ArtifactKind::Gemm);
+    let n = sizes[0];
+    let mut rng = Rng::new(104);
+    let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+    let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+    let (c, out) = engine.gemm(&a, &b);
+    assert!(
+        matches!(out.decision, adp_dgemm::coordinator::GemmDecision::EmulatedArtifact { .. }),
+        "{:?}",
+        out.decision
+    );
+    let denom = a.abs().matmul_dd(&b.abs());
+    let c_ref = a.matmul_dd(&b);
+    for idx in 0..c.data.len() {
+        let e = (c.data[idx] - c_ref.data[idx]).abs() / denom.data[idx];
+        assert!(e < 64.0 * f64::EPSILON);
+    }
+}
+
+#[test]
+fn subnormal_inputs_steered_to_native_pipeline() {
+    let Some(rt) = runtime() else { return };
+    let engine = AdpEngine::new(
+        AdpConfig::fp64()
+            .with_heuristic(Box::new(AlwaysEmulate))
+            .with_runtime(Some(rt.clone())),
+    );
+    let n = rt.catalog().sizes(ArtifactKind::Gemm)[0];
+    let mut rng = Rng::new(105);
+    let mut a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+    let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+    *a.at_mut(0, 0) = f64::from_bits(12345); // deep subnormal
+    let (_, out) = engine.gemm(&a, &b);
+    // artifact substrate flushes subnormals (DAZ/FTZ): must dispatch native
+    assert!(
+        matches!(out.decision, adp_dgemm::coordinator::GemmDecision::EmulatedNative { .. }),
+        "{:?}",
+        out.decision
+    );
+}

@@ -1,0 +1,140 @@
+//! System integration across modules (no artifacts required): ADP engine +
+//! QR + grading + service, exercising the paper's end-to-end claims.
+
+use adp_dgemm::coordinator::heuristic::{AlwaysEmulate, HeuristicInput, SelectionHeuristic};
+use adp_dgemm::coordinator::{AdpConfig, AdpEngine, GemmService, ServiceConfig};
+use adp_dgemm::grading::{self, generators, AlgorithmClass};
+use adp_dgemm::linalg::{blocked_qr, strassen, Matrix, NativeGemm};
+use adp_dgemm::ozaki::{emulated_gemm, OzakiConfig};
+use adp_dgemm::util::Rng;
+
+fn emulating_engine() -> AdpEngine {
+    AdpEngine::new(
+        AdpConfig::fp64()
+            .with_heuristic(Box::new(AlwaysEmulate))
+            .with_runtime(None),
+    )
+}
+
+#[test]
+fn discovery_tree_classifies_all_four_quadrants() {
+    // §6: the grading tests separate {O(n^3), Strassen} x {float, fixed}.
+    let engine = emulating_engine();
+    let mut adp = |a: &Matrix, b: &Matrix| engine.gemm(a, b).0;
+    assert_eq!(grading::discover(96, 1, &mut adp), AlgorithmClass::FloatingPointO3);
+
+    let mut fixed = |a: &Matrix, b: &Matrix| emulated_gemm(a, b, &OzakiConfig::new(7));
+    assert_eq!(grading::discover(96, 1, &mut fixed), AlgorithmClass::FixedPointO3);
+
+    let mut float_str = |a: &Matrix, b: &Matrix| strassen(a, b);
+    assert_eq!(grading::discover(256, 1, &mut float_str), AlgorithmClass::FloatingPointStrassen);
+}
+
+#[test]
+fn aspect_a1_guardrails_pass_test2() {
+    // §6 A1: with guardrails + fallback, Test 2 cannot distinguish ADP
+    // from a floating-point O(n^3) implementation.
+    let engine = emulating_engine();
+    for span in [8, 40, 96] {
+        let mut m = |a: &Matrix, b: &Matrix| engine.gemm(a, b).0;
+        let err = grading::test2::run_at(64, span, 5, &mut m);
+        assert!(err < 1e-12, "span {span}: err {err}");
+    }
+    // sanity: some of those spans exceeded the 26-slice budget => fallback
+    let snap = engine.metrics.snapshot();
+    assert!(snap.fallback_esc > 0, "expected ESC fallbacks: {snap:?}");
+    assert!(snap.emulated > 0, "expected emulated dispatches too");
+}
+
+#[test]
+fn qr_with_adp_backend_matches_native_accuracy() {
+    // §7.3 / Fig 7: trailing updates through ADP keep the factorization at
+    // FP64-level residual, and the slice histogram is populated.
+    let mut rng = Rng::new(200);
+    let a = Matrix::uniform(96, 96, -1.0, 1.0, &mut rng);
+
+    let (qr_nat, _) = blocked_qr(&a, 24, &mut NativeGemm);
+    let mut engine = emulating_engine();
+    let (qr_adp, stats) = blocked_qr(&a, 24, &mut engine);
+
+    let r_nat = qr_nat.residual(&a);
+    let r_adp = qr_adp.residual(&a);
+    assert!(r_adp < 4.0 * r_nat.max(1e-15), "adp {r_adp} vs native {r_nat}");
+    assert!(stats.gemm_calls >= 6);
+    let snap = engine.metrics.snapshot();
+    assert_eq!(snap.requests as usize, stats.gemm_calls);
+    assert!(!snap.slice_histogram.is_empty());
+}
+
+#[test]
+fn service_survives_adversarial_stream() {
+    // End-to-end: mixed benign/adversarial stream through the service;
+    // every response correct, metrics consistent, no deadlock.
+    let cfg = ServiceConfig { workers: 3, use_artifacts: false, ..Default::default() };
+    let svc = GemmService::start(cfg, None, || Box::new(AlwaysEmulate));
+    let mut rng = Rng::new(201);
+    let mut pending = Vec::new();
+    for i in 0..30 {
+        let n = 8 + rng.index(24);
+        let (mut a, b) = generators::uniform_pair(n, -2.0, 2.0, &mut rng);
+        if i % 7 == 3 {
+            *a.at_mut(0, 0) = f64::NAN;
+        }
+        let expect_finite = i % 7 != 3;
+        pending.push((a.clone(), b.clone(), expect_finite, svc.submit(a, b)));
+    }
+    for (a, b, expect_finite, rx) in pending {
+        let resp = rx.recv().unwrap();
+        assert_eq!((resp.c.rows, resp.c.cols), (a.rows, b.cols));
+        if expect_finite {
+            assert!(!resp.c.has_non_finite());
+            let denom = a.abs().matmul_dd(&b.abs());
+            let c_ref = a.matmul_dd(&b);
+            for idx in 0..resp.c.data.len() {
+                let d = denom.data[idx];
+                if d > 0.0 {
+                    let e = (resp.c.data[idx] - c_ref.data[idx]).abs() / d;
+                    assert!(e < 100.0 * f64::EPSILON, "err {e}");
+                }
+            }
+        } else {
+            assert!(resp.c.has_non_finite());
+        }
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.requests, 30);
+    assert!(snap.guardrail_fraction() < 0.9);
+    svc.shutdown();
+}
+
+#[test]
+fn adp_never_worse_than_fp64_accuracy_on_test2_sweep() {
+    // The paper's headline guarantee, end to end: for every span, ADP's
+    // componentwise error stays within a small factor of native FP64's.
+    let engine = emulating_engine();
+    let mut rng = Rng::new(202);
+    for span in [0, 16, 48, 80] {
+        let w = generators::test2_workload(48, span, &mut rng);
+        let (c, _) = engine.gemm(&w.a, &w.b);
+        let e_adp = grading::test2::relative_error(&w, &c);
+        let c_nat = adp_dgemm::linalg::gemm(&w.a, &w.b);
+        let e_nat = grading::test2::relative_error(&w, &c_nat);
+        assert!(
+            e_adp <= 8.0 * e_nat.max(1e-15),
+            "span {span}: adp {e_adp} vs native {e_nat}"
+        );
+    }
+}
+
+#[test]
+fn heuristic_decisions_consistent_with_cost_model() {
+    // The platform heuristic must agree with the model's profitability.
+    use adp_dgemm::perfmodel::{GB200, RTX_PRO_6000};
+    for p in [GB200, RTX_PRO_6000] {
+        let h = adp_dgemm::coordinator::heuristic::PlatformHeuristic { platform: p };
+        for n in [64usize, 512, 2048, 8192] {
+            let inp = HeuristicInput { m: n, k: n, n, slices: 7 };
+            assert_eq!(h.emulate(&inp), p.emulation_profitable(n, n, n, 7), "{} n={n}", p.name);
+        }
+    }
+}
