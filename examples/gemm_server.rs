@@ -69,7 +69,7 @@ fn main() {
             _ => Kind::Benign,
         };
         let (a, b) = make_request(kind, &mut rng);
-        pending.push((kind, a.clone(), b.clone(), svc.submit(a, b)));
+        pending.push((kind, a.clone(), b.clone(), svc.submit(a, b).expect("service running")));
     }
 
     let mut lat = Vec::new();

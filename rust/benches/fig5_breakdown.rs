@@ -11,10 +11,11 @@
 //!
 //! Claim under test: ADP share < 10% of total run time in both views.
 
+use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend};
 use adp_dgemm::coordinator::scan::scan_pair;
 use adp_dgemm::esc::coarse_esc_gemm;
 use adp_dgemm::linalg::Matrix;
-use adp_dgemm::ozaki::{emulated_gemm_with_breakdown, OzakiConfig};
+use adp_dgemm::ozaki::{emulated_gemm_with_breakdown_on, OzakiConfig};
 use adp_dgemm::perfmodel::{GB200, RTX_PRO_6000};
 use adp_dgemm::util::benchkit;
 use adp_dgemm::util::Rng;
@@ -24,44 +25,54 @@ const S55: usize = 7; // the paper's 55-bit setting (see DESIGN.md)
 fn main() {
     let full = std::env::var("FULL").is_ok();
     let sizes: Vec<usize> = if full { vec![128, 256, 512, 1024] } else { vec![128, 256, 512] };
+    let parallel = ParallelBackend::new(0);
 
-    println!("# Fig 5(a): measured CPU-substrate breakdown at s={S55} (forced)");
-    println!(
-        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}",
-        "n", "adp_ms", "slice_ms", "gemm_ms", "recomp_ms", "total_ms", "adp_%"
-    );
-    for &n in &sizes {
-        let mut rng = Rng::new(55);
-        let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
-        let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
-
-        // guardrail pass (scan + coarse ESC), timed separately
-        let g = benchkit::bench(1, 3, || {
-            let f = scan_pair(&a, &b);
-            let esc = coarse_esc_gemm(&a, &b, 64);
-            (f, esc)
-        });
-
-        let cfg = OzakiConfig::new(S55);
-        let mut bd_acc = (0.0, 0.0, 0.0);
-        let iters = 3;
-        for _ in 0..iters {
-            let (_, bd) = emulated_gemm_with_breakdown(&a, &b, &cfg);
-            bd_acc.0 += bd.slice_s / iters as f64;
-            bd_acc.1 += bd.gemm_s / iters as f64;
-            bd_acc.2 += bd.recompose_s / iters as f64;
-        }
-        let adp = g.median_s;
-        let total = adp + bd_acc.0 + bd_acc.1 + bd_acc.2;
+    // Backend ablation arms: the ADP guardrail share shrinks further once
+    // the pair GEMMs go wide, so the serial view is the conservative one.
+    for (arm, backend) in
+        [("serial", &SerialBackend as &dyn ComputeBackend), ("parallel", &parallel)]
+    {
         println!(
-            "{n:>6} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>8.2}",
-            adp * 1e3,
-            bd_acc.0 * 1e3,
-            bd_acc.1 * 1e3,
-            bd_acc.2 * 1e3,
-            total * 1e3,
-            100.0 * adp / total
+            "# Fig 5(a): measured CPU-substrate breakdown at s={S55} (forced), {arm} backend ({} threads)",
+            backend.threads()
         );
+        println!(
+            "{:>6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}",
+            "n", "adp_ms", "slice_ms", "gemm_ms", "recomp_ms", "total_ms", "adp_%"
+        );
+        for &n in &sizes {
+            let mut rng = Rng::new(55);
+            let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+
+            // guardrail pass (scan + coarse ESC), timed separately
+            let g = benchkit::bench(1, 3, || {
+                let f = scan_pair(&a, &b);
+                let esc = coarse_esc_gemm(&a, &b, 64);
+                (f, esc)
+            });
+
+            let cfg = OzakiConfig::new(S55);
+            let mut bd_acc = (0.0, 0.0, 0.0);
+            let iters = 3;
+            for _ in 0..iters {
+                let (_, bd) = emulated_gemm_with_breakdown_on(&a, &b, &cfg, backend);
+                bd_acc.0 += bd.slice_s / iters as f64;
+                bd_acc.1 += bd.gemm_s / iters as f64;
+                bd_acc.2 += bd.recompose_s / iters as f64;
+            }
+            let adp = g.median_s;
+            let total = adp + bd_acc.0 + bd_acc.1 + bd_acc.2;
+            println!(
+                "{n:>6} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>8.2}",
+                adp * 1e3,
+                bd_acc.0 * 1e3,
+                bd_acc.1 * 1e3,
+                bd_acc.2 * 1e3,
+                total * 1e3,
+                100.0 * adp / total
+            );
+        }
     }
 
     println!("\n# Fig 5(b): modeled GPU breakdown at s={S55} (forced), percentages of total");

@@ -7,13 +7,18 @@
 //!   fp64 gemm        — the baseline FLOP/s (denominator of every speedup)
 //!   recompose        — level accumulation + descaling bandwidth
 //!   coarse ESC       — guardrail pass throughput
+//!   serial/parallel  — backend ablation of the emulated + FP64 hot paths
 //!   artifact gemm    — PJRT end-to-end (when artifacts/ exists)
 
 use std::path::Path;
 
+use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend};
 use adp_dgemm::esc::coarse_esc_gemm;
 use adp_dgemm::linalg::{gemm, Matrix};
-use adp_dgemm::ozaki::{emulated_gemm_with_breakdown, slice_a, slice_b, slice_pair_gemm, OzakiConfig, SliceEncoding};
+use adp_dgemm::ozaki::{
+    emulated_gemm_on, emulated_gemm_with_breakdown, slice_a, slice_b, slice_pair_gemm,
+    OzakiConfig, SliceEncoding,
+};
 use adp_dgemm::runtime::RuntimeHandle;
 use adp_dgemm::util::{benchkit, Rng};
 
@@ -24,14 +29,14 @@ fn main() {
     let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
     let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
 
-    println!("# perf_hotpath n={n} s={s} (single thread)");
+    println!("# perf_hotpath n={n} s={s} (stage benches single-thread; backend ablation below)");
 
     // --- L3 native fp64 GEMM baseline -------------------------------
-    let st = benchkit::bench_budget(1.0, || gemm(&a, &b));
+    let st_fp64 = benchkit::bench_budget(1.0, || gemm(&a, &b));
     benchkit::report(
         "fp64_gemm",
-        st,
-        &[("GFLOP/s", format!("{:.2}", st.per_sec(2.0 * (n * n * n) as f64) / 1e9))],
+        st_fp64,
+        &[("GFLOP/s", format!("{:.2}", st_fp64.per_sec(2.0 * (n * n * n) as f64) / 1e9))],
     );
 
     // --- slicing ------------------------------------------------------
@@ -69,6 +74,29 @@ fn main() {
         bd.pairs,
         (bd.pairs * n * n * n) as f64 / bd.gemm_s / 1e9,
         bd.recompose_s * 1e3
+    );
+
+    // --- backend ablation: serial vs parallel ---------------------------
+    let parallel = ParallelBackend::new(0);
+    let threads = parallel.threads();
+    let st_ser = benchkit::bench_budget(2.0, || emulated_gemm_on(&a, &b, &cfg, &SerialBackend));
+    benchkit::report("emulated_gemm(serial)", st_ser, &[]);
+    let st_par = benchkit::bench_budget(2.0, || emulated_gemm_on(&a, &b, &cfg, &parallel));
+    benchkit::report("emulated_gemm(parallel)", st_par, &[("threads", threads.to_string())]);
+    println!(
+        "emulated_gemm backend speedup: {:.2}x over serial (n={n}, s={s}, {threads} threads)",
+        st_ser.median_s / st_par.median_s
+    );
+    let st_fpar = benchkit::bench_budget(1.0, || parallel.fp64_gemm(&a, &b));
+    benchkit::report(
+        "fp64_gemm(parallel)",
+        st_fpar,
+        &[
+            ("threads", threads.to_string()),
+            // against the fp64_gemm baseline measured at the top
+            ("speedup", format!("{:.2}x", st_fp64.median_s / st_fpar.median_s)),
+            ("GFLOP/s", format!("{:.2}", st_fpar.per_sec(2.0 * (n * n * n) as f64) / 1e9)),
+        ],
     );
 
     // --- guardrails -----------------------------------------------------

@@ -1,0 +1,275 @@
+//! Pluggable compute-backend layer — the seam between *what* the pipeline
+//! computes and *how much hardware* it uses.
+//!
+//! Every compute-heavy loop in the repo (INT8 slice-pair GEMMs of the
+//! Ozaki pipeline, FP64 tile GEMMs of the native path / Strassen / QR)
+//! dispatches through [`ComputeBackend`] instead of open-coding scalar
+//! loops. Two implementations ship today:
+//!
+//! * [`SerialBackend`] — the original single-threaded kernels, the
+//!   deterministic reference;
+//! * [`ParallelBackend`] — work-stealing over (t, u) slice pairs (split by
+//!   output rows) and over MC×NC FP64 tiles on a shared token-budgeted
+//!   [`pool::ThreadPool`], **bitwise identical** to serial by
+//!   construction: integer accumulation is exact and the FP64 tile
+//!   schedule preserves the per-element operation order.
+//!
+//! The trait is the plug point for every future backend (SIMD, GPU,
+//! distributed sharding): implement `slice_pair_gemm_batch` and
+//! `fp64_gemm_into` (plus `fp64_gemm_tile` if the tile kernel itself
+//! changes) and the whole stack — `ozaki::gemm`,
+//! `linalg::{gemm, strassen, qr}`, the ADP engine and the `GemmService`
+//! — picks it up through
+//! [`AdpConfig`](crate::coordinator::AdpConfig) /
+//! [`ServiceConfig`](crate::coordinator::ServiceConfig).
+
+pub mod parallel;
+pub mod pool;
+pub mod serial;
+
+use std::sync::Arc;
+
+use crate::linalg::Matrix;
+use crate::ozaki::SlicedMatrix;
+
+pub use parallel::ParallelBackend;
+pub use pool::ThreadPool;
+pub use serial::SerialBackend;
+
+/// Minimum length of the `bpack` scratch passed to
+/// [`ComputeBackend::fp64_gemm_tile`].
+pub const PACK_SCRATCH_LEN: usize = crate::linalg::gemm::PACK_LEN;
+
+/// A compute substrate for the two kernel families of the pipeline.
+///
+/// Contract: for identical inputs, every implementation must produce
+/// **bitwise identical** outputs to [`SerialBackend`]. Integer batches are
+/// exact so any schedule qualifies; FP64 implementations must preserve the
+/// serial per-element operation order (see `linalg::gemm::gemm_tile`).
+pub trait ComputeBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Thread budget of this backend (1 for serial).
+    fn threads(&self) -> usize {
+        1
+    }
+
+    /// The shared thread pool, when this backend has one. Layers with
+    /// task parallelism of their own (e.g. Strassen's seven independent
+    /// products) fan out through it; `None` means run inline.
+    fn pool(&self) -> Option<&ThreadPool> {
+        None
+    }
+
+    /// Exact INT8 slice-pair GEMM batch of one weight level:
+    /// `out[i*n + j] += sum_l a_t[i, l] * b_u[j, l]` for every `(t, u)` in
+    /// `pairs`, with `out` a row-major `a.rows x b.rows` i64 accumulator.
+    fn slice_pair_gemm_batch(
+        &self,
+        a: &SlicedMatrix,
+        b: &SlicedMatrix,
+        pairs: &[(usize, usize)],
+        out: &mut [i64],
+    );
+
+    /// One MC×NC tile of the blocked FP64 GEMM: `tile += A[ic.., :] *
+    /// B[:, jc..]` over the full k extent, `tile` a row-major `mc x nc`
+    /// buffer and `bpack` a caller-owned packing scratch of at least
+    /// [`PACK_SCRATCH_LEN`] (allocated once per pool thread, fully
+    /// overwritten before use — never re-zeroed). [`ParallelBackend`]'s
+    /// tile schedule dispatches through this method, making it the
+    /// override point for a custom tile *kernel* (SIMD intrinsics,
+    /// offload). [`SerialBackend`] does not use tiles at all — it runs
+    /// the packed-panel serial nest of `linalg::gemm`, which shares the
+    /// per-element operation order.
+    #[allow(clippy::too_many_arguments)]
+    fn fp64_gemm_tile(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        ic: usize,
+        jc: usize,
+        mc: usize,
+        nc: usize,
+        bpack: &mut [f64],
+        tile: &mut [f64],
+    ) {
+        crate::linalg::gemm::gemm_tile(a, b, ic, jc, mc, nc, bpack, tile);
+    }
+
+    /// `C = A*B + beta*C` through this backend's tile schedule (BLAS-style
+    /// beta: 0 overwrites, 1 accumulates).
+    fn fp64_gemm_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64);
+
+    /// Convenience: `C = A * B`.
+    fn fp64_gemm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        self.fp64_gemm_into(a, b, &mut c, 0.0);
+        c
+    }
+}
+
+/// Declarative backend selection for configs (plain data, `Copy`, easy to
+/// store in `ServiceConfig` / parse from a CLI flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    Serial,
+    /// Work-stealing parallel backend; `threads = 0` means size to the
+    /// machine.
+    Parallel { threads: usize },
+}
+
+impl BackendSpec {
+    /// Machine-sized parallel backend.
+    pub fn auto() -> BackendSpec {
+        BackendSpec::Parallel { threads: 0 }
+    }
+
+    /// Parse `"serial"`, `"parallel"`, or `"parallel:<threads>"`.
+    pub fn parse(s: &str) -> Option<BackendSpec> {
+        match s {
+            "serial" => Some(BackendSpec::Serial),
+            "parallel" => Some(BackendSpec::auto()),
+            _ => {
+                let threads = s.strip_prefix("parallel:")?.parse().ok()?;
+                Some(BackendSpec::Parallel { threads })
+            }
+        }
+    }
+
+    /// Materialize the backend (shareable across service workers).
+    pub fn build(self) -> Arc<dyn ComputeBackend> {
+        match self {
+            BackendSpec::Serial => Arc::new(SerialBackend),
+            BackendSpec::Parallel { threads } => Arc::new(ParallelBackend::new(threads)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendSpec::Serial => "serial",
+            BackendSpec::Parallel { .. } => "parallel",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gemm, gemm_into};
+    use crate::ozaki::gemm::emulated_gemm_on;
+    use crate::ozaki::{slice_a, slice_b, OzakiConfig, SliceEncoding};
+    use crate::util::{prop, Rng};
+
+    fn assert_bitwise(c1: &Matrix, c2: &Matrix, what: &str) -> prop::PropResult {
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{what}: not bitwise identical ({x} vs {y})"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn spec_parses_and_builds() {
+        assert_eq!(BackendSpec::parse("serial"), Some(BackendSpec::Serial));
+        assert_eq!(BackendSpec::parse("parallel"), Some(BackendSpec::Parallel { threads: 0 }));
+        assert_eq!(BackendSpec::parse("parallel:3"), Some(BackendSpec::Parallel { threads: 3 }));
+        assert_eq!(BackendSpec::parse("gpu"), None);
+        assert_eq!(BackendSpec::Serial.build().threads(), 1);
+        assert_eq!(BackendSpec::Parallel { threads: 3 }.build().threads(), 3);
+    }
+
+    #[test]
+    fn batch_matches_serial_pair_loop() {
+        let mut rng = Rng::new(400);
+        let (m, k, n, s) = (13, 29, 11, 5);
+        let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+        let asl = slice_a(&a, s, SliceEncoding::Unsigned);
+        let bsl = slice_b(&b, s, SliceEncoding::Unsigned);
+        let pairs: Vec<(usize, usize)> =
+            (0..s).flat_map(|t| (0..s - t).map(move |u| (t, u))).collect();
+        let mut out_ser = vec![0i64; m * n];
+        let mut out_par = vec![0i64; m * n];
+        SerialBackend.slice_pair_gemm_batch(&asl, &bsl, &pairs, &mut out_ser);
+        // cutoff 0: force the row-split schedule even at this tiny size
+        let par = ParallelBackend::new(4).with_cutoff_ops(0);
+        par.slice_pair_gemm_batch(&asl, &bsl, &pairs, &mut out_par);
+        assert_eq!(out_ser, out_par);
+    }
+
+    #[test]
+    fn prop_parallel_emulation_bitwise_identical_to_serial() {
+        // The acceptance property of the backend layer: the parallel
+        // schedule must never change a single bit of the emulated result.
+        let par = ParallelBackend::new(4).with_cutoff_ops(0);
+        prop::check("parallel == serial (emulated gemm)", 12, |rng| {
+            let m = rng.int(1, 40) as usize;
+            let k = rng.int(1, 64) as usize;
+            let n = rng.int(1, 40) as usize;
+            let s = rng.int(2, 9) as usize;
+            let a = Matrix::uniform(m, k, -3.0, 3.0, rng);
+            let b = Matrix::uniform(k, n, -3.0, 3.0, rng);
+            let cfg = OzakiConfig::new(s);
+            let c_ser = emulated_gemm_on(&a, &b, &cfg, &SerialBackend);
+            let c_par = emulated_gemm_on(&a, &b, &cfg, &par);
+            assert_bitwise(&c_ser, &c_par, "emulated gemm")
+        });
+    }
+
+    #[test]
+    fn prop_parallel_fp64_bitwise_identical_to_serial() {
+        let par = ParallelBackend::new(4).with_cutoff_ops(0);
+        prop::check("parallel == serial (fp64 gemm)", 12, |rng| {
+            let m = rng.int(1, 90) as usize;
+            let k = rng.int(1, 300) as usize;
+            let n = rng.int(1, 90) as usize;
+            let a = Matrix::uniform(m, k, -1.0, 1.0, rng);
+            let b = Matrix::uniform(k, n, -1.0, 1.0, rng);
+            let c_ser = gemm(&a, &b);
+            let c_par = par.fp64_gemm(&a, &b);
+            assert_bitwise(&c_ser, &c_par, "fp64 gemm")?;
+            // beta = 1 accumulation path
+            let mut acc_ser = Matrix::uniform(m, n, -1.0, 1.0, rng);
+            let mut acc_par = acc_ser.clone();
+            gemm_into(&a, &b, &mut acc_ser, 1.0);
+            par.fp64_gemm_into(&a, &b, &mut acc_par, 1.0);
+            assert_bitwise(&acc_ser, &acc_par, "fp64 gemm beta=1")
+        });
+    }
+
+    #[test]
+    fn prop_permutation_invariance_survives_parallel_dispatch() {
+        // §4's fixed-point guarantee, now asserted *through the parallel
+        // backend*: simultaneous k-permutations of A columns / B rows give
+        // the bitwise identical result.
+        let par = ParallelBackend::new(4).with_cutoff_ops(0);
+        prop::check("parallel k-permutation invariance", 10, |rng| {
+            let (m, k, n) = (6, 12, 5);
+            let a = Matrix::uniform(m, k, -2.0, 2.0, rng);
+            let b = Matrix::uniform(k, n, -2.0, 2.0, rng);
+            let mut perm: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut perm);
+            let ap = Matrix::from_fn(m, k, |i, j| a.at(i, perm[j]));
+            let bp = Matrix::from_fn(k, n, |i, j| b.at(perm[i], j));
+            let cfg = OzakiConfig::new(6);
+            let c1 = emulated_gemm_on(&a, &b, &cfg, &par);
+            let c2 = emulated_gemm_on(&ap, &bp, &cfg, &par);
+            assert_bitwise(&c1, &c2, "permutation invariance")
+        });
+    }
+
+    #[test]
+    fn empty_shapes_are_safe() {
+        let par = ParallelBackend::new(2);
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        let c = par.fp64_gemm(&a, &b);
+        assert_eq!((c.rows, c.cols), (0, 3));
+        let asl = slice_a(&Matrix::zeros(2, 4), 3, SliceEncoding::Unsigned);
+        let bsl = slice_b(&Matrix::zeros(4, 0), 3, SliceEncoding::Unsigned);
+        let mut out: Vec<i64> = vec![];
+        par.slice_pair_gemm_batch(&asl, &bsl, &[(0, 0)], &mut out);
+    }
+}

@@ -1,0 +1,171 @@
+//! Work-stealing multi-threaded backend, bitwise identical to serial.
+//!
+//! Two sources of intra-GEMM parallelism, both chosen so that the
+//! *per-element* arithmetic sequence is exactly the serial one:
+//!
+//! * **INT8 slice-pair batches** — the output rows of a weight level are
+//!   split into chunks; each chunk runs every (t, u) pair of the level
+//!   serially into its disjoint row range. i64 accumulation is exact, so
+//!   any row partition is bitwise identical to the serial schedule, and no
+//!   cross-thread merge buffers are needed at all. Parallelism is
+//!   independent of how many pairs the level has (even the single-pair
+//!   level q = 0 scales across rows).
+//! * **FP64 tiles** — the MC×NC tile grid of the blocked GEMM is drained
+//!   by the pool; each tile accumulates over the full k extent in the same
+//!   ascending panel order as the serial loop nest (see
+//!   `linalg::gemm::gemm_tile`), and tiles are written back to C in a
+//!   fixed order. Per C element the FP op sequence is unchanged, so
+//!   results are bitwise identical to [`super::SerialBackend`] — the
+//!   `prop_permutation_invariance` guarantee survives parallel dispatch.
+
+use std::sync::Mutex;
+
+use super::pool::{drain, ThreadPool};
+use super::{ComputeBackend, PACK_SCRATCH_LEN};
+use crate::linalg::gemm::{apply_beta, load_tile, store_tile, tile_grid};
+use crate::linalg::Matrix;
+use crate::ozaki::gemm::slice_pair_gemm_rows;
+use crate::ozaki::SlicedMatrix;
+
+/// Row-chunks per pool thread when splitting a slice-pair batch: >1 so the
+/// dynamic queue can balance uneven chunk costs.
+const CHUNKS_PER_THREAD: usize = 4;
+
+/// Below this many MACs (integer) or element-products (FP64) a batch runs
+/// inline on the caller: thread hand-off costs more than sub-millisecond
+/// kernels, and the serial path is bitwise identical anyway.
+const PARALLEL_CUTOFF_OPS: usize = 1 << 21;
+
+pub struct ParallelBackend {
+    pool: ThreadPool,
+    cutoff_ops: usize,
+}
+
+impl ParallelBackend {
+    /// `threads = 0` sizes the pool to the machine
+    /// (`available_parallelism`).
+    pub fn new(threads: usize) -> ParallelBackend {
+        let t = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            threads
+        };
+        ParallelBackend { pool: ThreadPool::new(t), cutoff_ops: PARALLEL_CUTOFF_OPS }
+    }
+
+    /// Override the inline-fallback threshold. `0` forces the parallel
+    /// schedule for any size — used by the bitwise-equivalence tests so
+    /// small inputs still exercise the split paths.
+    pub fn with_cutoff_ops(mut self, ops: usize) -> ParallelBackend {
+        self.cutoff_ops = ops;
+        self
+    }
+}
+
+/// One FP64 tile job: grid coordinates plus the owned accumulation buffer
+/// (seeded from C, merged back on the coordinating thread).
+struct TileJob {
+    ic: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    buf: Vec<f64>,
+}
+
+impl ComputeBackend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    fn pool(&self) -> Option<&ThreadPool> {
+        Some(&self.pool)
+    }
+
+    fn slice_pair_gemm_batch(
+        &self,
+        a: &SlicedMatrix,
+        b: &SlicedMatrix,
+        pairs: &[(usize, usize)],
+        out: &mut [i64],
+    ) {
+        let (m, n) = (a.rows, b.rows);
+        assert_eq!(out.len(), m * n);
+        if m == 0 || n == 0 || pairs.is_empty() {
+            return;
+        }
+        if pairs.len() * m * n * a.cols < self.cutoff_ops {
+            for &(t, u) in pairs {
+                slice_pair_gemm_rows(a, t, b, u, 0, m, out);
+            }
+            return;
+        }
+        let chunk_rows = m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).max(2);
+        let mut work: Vec<(usize, &mut [i64])> = Vec::new();
+        let mut row0 = 0;
+        for chunk in out.chunks_mut(chunk_rows * n) {
+            work.push((row0, chunk));
+            row0 += chunk.len() / n;
+        }
+        drain(&self.pool, work, |(r0, chunk)| {
+            let rows = chunk.len() / n;
+            for &(t, u) in pairs {
+                slice_pair_gemm_rows(a, t, b, u, r0, rows, chunk);
+            }
+        });
+    }
+
+    fn fp64_gemm_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
+        if a.rows * b.cols * a.cols < self.cutoff_ops {
+            return crate::linalg::gemm::gemm_into(a, b, c, beta);
+        }
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        assert_eq!(c.rows, a.rows);
+        assert_eq!(c.cols, b.cols);
+        apply_beta(c, beta);
+        if a.rows == 0 || b.cols == 0 || a.cols == 0 {
+            return;
+        }
+        let mut jobs: Vec<TileJob> = tile_grid(a.rows, b.cols)
+            .into_iter()
+            .map(|(ic, jc, mc, nc)| {
+                let mut buf = Vec::with_capacity(mc * nc);
+                load_tile(c, ic, jc, mc, nc, &mut buf);
+                TileJob { ic, jc, mc, nc, buf }
+            })
+            .collect();
+        {
+            // Hand-rolled queue (not `drain`) so every pool thread owns
+            // one PACK_SCRATCH_LEN packing buffer for its whole run, while
+            // still dispatching through the overridable trait kernel.
+            let work: Vec<&mut TileJob> = jobs.iter_mut().collect();
+            let max_helpers = work.len().saturating_sub(1);
+            let queue = Mutex::new(work);
+            self.pool.run_n(max_helpers, || {
+                let mut bpack = vec![0.0f64; PACK_SCRATCH_LEN];
+                loop {
+                    let next = queue.lock().unwrap().pop();
+                    let Some(job) = next else { break };
+                    self.fp64_gemm_tile(
+                        a,
+                        b,
+                        job.ic,
+                        job.jc,
+                        job.mc,
+                        job.nc,
+                        &mut bpack,
+                        &mut job.buf,
+                    );
+                }
+            });
+        }
+        // Merge in grid order. Tiles are disjoint, so this is pure
+        // bookkeeping determinism, not a numerical requirement.
+        for job in &jobs {
+            store_tile(c, job.ic, job.jc, job.mc, job.nc, &job.buf);
+        }
+    }
+}

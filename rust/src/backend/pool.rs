@@ -1,0 +1,208 @@
+//! Scoped-thread worker pool shared by every [`super::ComputeBackend`].
+//!
+//! Design constraints (see DESIGN.md §Substitutions): no rayon/crossbeam
+//! offline, and no `unsafe`. Helper threads are therefore `std::thread::scope`
+//! threads — they may borrow the caller's stack (slices, packed operands)
+//! with zero lifetime gymnastics — while the *pool* part is a global token
+//! budget: one `ThreadPool` is shared by all service workers, and a call
+//! only gets helper threads while tokens are available. Under full load
+//! every worker degrades to running its work inline on its own thread, so
+//! the machine is never oversubscribed by N workers × T helpers.
+//!
+//! Token acquisition never blocks, so nested/recursive use (e.g. Strassen
+//! recursion over a parallel FP64 backend) cannot deadlock.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A token-budgeted scoped-thread pool. `threads` is the total thread
+/// budget *including* the calling thread; `threads - 1` helper tokens are
+/// shared by all concurrent callers.
+pub struct ThreadPool {
+    /// Helper-thread tokens currently available.
+    extra: AtomicUsize,
+    /// Total budget (callers always count as one thread of their own).
+    threads: usize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let t = threads.max(1);
+        ThreadPool { extra: AtomicUsize::new(t - 1), threads: t }
+    }
+
+    /// Total thread budget (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Helper tokens currently available (test/observability hook).
+    pub fn available(&self) -> usize {
+        self.extra.load(Ordering::Acquire)
+    }
+
+    /// Take up to `want` helper tokens without blocking.
+    fn acquire(&self, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let mut cur = self.extra.load(Ordering::Relaxed);
+        loop {
+            let take = want.min(cur);
+            if take == 0 {
+                return 0;
+            }
+            match self.extra.compare_exchange_weak(
+                cur,
+                cur - take,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return take,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn release(&self, n: usize) {
+        if n > 0 {
+            self.extra.fetch_add(n, Ordering::AcqRel);
+        }
+    }
+
+    /// Run `work` concurrently on the calling thread plus up to
+    /// `threads - 1` scoped helper threads (fewer when other callers hold
+    /// tokens; zero helpers means a plain inline call). `work` must pull
+    /// its tasks from a shared queue — every thread runs the same closure.
+    pub fn run<F: Fn() + Sync>(&self, work: F) {
+        self.run_n(self.threads - 1, work);
+    }
+
+    /// As [`ThreadPool::run`], but never takes more than `max_helpers`
+    /// helper tokens — callers with few tasks should not hoard the pool
+    /// (or pay spawns) for threads that would find the queue empty.
+    /// Tokens are restored even if `work` panics (drop guard), so one
+    /// panicked request cannot silently serialize the shared pool.
+    pub fn run_n<F: Fn() + Sync>(&self, max_helpers: usize, work: F) {
+        let extra = self.acquire(max_helpers.min(self.threads - 1));
+        if extra == 0 {
+            work();
+            return;
+        }
+        let _guard = ReleaseGuard { pool: self, n: extra };
+        std::thread::scope(|scope| {
+            for _ in 0..extra {
+                scope.spawn(&work);
+            }
+            work();
+        });
+    }
+}
+
+/// Restores helper tokens on scope exit, panicking or not.
+struct ReleaseGuard<'a> {
+    pool: &'a ThreadPool,
+    n: usize,
+}
+
+impl Drop for ReleaseGuard<'_> {
+    fn drop(&mut self) {
+        self.pool.release(self.n);
+    }
+}
+
+/// Work-stealing drain: distribute `items` over the pool's threads, calling
+/// `f` on each exactly once. Items are handed out dynamically (whichever
+/// thread is free pulls the next one), so uneven task costs balance out.
+pub fn drain<T: Send, F: Fn(T) + Sync>(pool: &ThreadPool, items: Vec<T>, f: F) {
+    if items.len() <= 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let max_helpers = items.len() - 1;
+    let queue = Mutex::new(items);
+    pool.run_n(max_helpers, || loop {
+        let next = queue.lock().unwrap().pop();
+        match next {
+            Some(it) => f(it),
+            None => break,
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn drain_visits_every_item_once() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        let sum = AtomicU64::new(0);
+        drain(&pool, (1..=100u64).collect(), |x| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            sum.fetch_add(x, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+        assert_eq!(sum.load(Ordering::SeqCst), 5050);
+    }
+
+    #[test]
+    fn tokens_are_restored_after_run() {
+        let pool = ThreadPool::new(3);
+        assert_eq!(pool.available(), 2);
+        pool.run(|| {});
+        assert_eq!(pool.available(), 2);
+        drain(&pool, vec![1, 2, 3], |_| {});
+        assert_eq!(pool.available(), 2);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        use std::sync::atomic::AtomicBool;
+        let pool = ThreadPool::new(1);
+        let tid = std::thread::current().id();
+        let on_caller = AtomicBool::new(false);
+        pool.run(|| {
+            on_caller.store(std::thread::current().id() == tid, Ordering::SeqCst);
+        });
+        assert!(on_caller.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn tokens_survive_worker_panic() {
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|| panic!("boom"));
+        }));
+        assert!(result.is_err());
+        assert_eq!(pool.available(), 2, "panic must not leak helper tokens");
+    }
+
+    #[test]
+    fn run_n_caps_token_grab() {
+        let pool = ThreadPool::new(8);
+        pool.run_n(1, || {
+            // Inside a 1-helper run, at most one token may be taken.
+            assert!(pool.available() >= 6);
+        });
+        assert_eq!(pool.available(), 7);
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        let pool = ThreadPool::new(2);
+        let outer_done = AtomicU64::new(0);
+        pool.run(|| {
+            // Inner call while outer holds the helper token: must degrade
+            // to inline execution, never block.
+            pool.run(|| {});
+            outer_done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(outer_done.load(Ordering::SeqCst) >= 1);
+        assert_eq!(pool.available(), 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! The deterministic single-threaded reference backend.
+
+use super::ComputeBackend;
+use crate::linalg::gemm::gemm_into;
+use crate::linalg::Matrix;
+use crate::ozaki::gemm::slice_pair_gemm;
+use crate::ozaki::SlicedMatrix;
+
+/// Runs every kernel inline on the calling thread with the original scalar
+/// loop nests. This is the reference every other backend must match
+/// bitwise, and the right choice for tiny problems where thread hand-off
+/// costs more than the compute.
+pub struct SerialBackend;
+
+impl ComputeBackend for SerialBackend {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn slice_pair_gemm_batch(
+        &self,
+        a: &SlicedMatrix,
+        b: &SlicedMatrix,
+        pairs: &[(usize, usize)],
+        out: &mut [i64],
+    ) {
+        for &(t, u) in pairs {
+            slice_pair_gemm(a, t, b, u, out);
+        }
+    }
+
+    fn fp64_gemm_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
+        gemm_into(a, b, c, beta);
+    }
+}

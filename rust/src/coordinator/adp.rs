@@ -11,9 +11,10 @@ use std::time::Instant;
 use super::heuristic::{HeuristicInput, SelectionHeuristic};
 use super::metrics::Metrics;
 use super::scan::scan_pair;
+use crate::backend::{BackendSpec, ComputeBackend};
 use crate::esc::coarse::{coarse_esc_gemm, DEFAULT_BLOCK};
-use crate::linalg::{gemm as native_gemm, Matrix};
-use crate::ozaki::{emulated_gemm, OzakiConfig, SliceEncoding};
+use crate::linalg::Matrix;
+use crate::ozaki::{emulated_gemm_on, OzakiConfig, SliceEncoding};
 use crate::runtime::{ArtifactKind, RuntimeHandle};
 
 /// Why ADP dispatched the way it did (Fig 8 / Fig 7-right inputs).
@@ -90,6 +91,11 @@ pub struct AdpConfig {
     pub runtime: Option<RuntimeHandle>,
     /// Prefer artifacts when the shape is registered.
     pub use_artifacts: bool,
+    /// Compute substrate for both the emulated slice-pair schedule and the
+    /// native FP64 fallback. All backends are bitwise identical, so this
+    /// only changes how much hardware a request uses. Share one `Arc`
+    /// across engines to share its thread pool.
+    pub backend: Arc<dyn ComputeBackend>,
 }
 
 impl AdpConfig {
@@ -104,11 +110,17 @@ impl AdpConfig {
             heuristic: Box::new(super::heuristic::AlwaysEmulate),
             runtime: None,
             use_artifacts: true,
+            backend: BackendSpec::Serial.build(),
         }
     }
 
     pub fn with_heuristic(mut self, h: Box<dyn SelectionHeuristic>) -> AdpConfig {
         self.heuristic = h;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Arc<dyn ComputeBackend>) -> AdpConfig {
+        self.backend = backend;
         self
     }
 
@@ -191,7 +203,7 @@ impl AdpEngine {
             }
         }
         let cfg = OzakiConfig::with_encoding(slices, self.cfg.encoding);
-        let c = emulated_gemm(a, b, &cfg);
+        let c = emulated_gemm_on(a, b, &cfg, self.cfg.backend.as_ref());
         let exec_s = te.elapsed().as_secs_f64();
         self.finish(c, GemmDecision::EmulatedNative { slices }, esc, slices, guardrail_s, exec_s)
     }
@@ -211,7 +223,7 @@ impl AdpEngine {
                 }
             }
         }
-        let c = native_gemm(a, b);
+        let c = self.cfg.backend.fp64_gemm(a, b);
         (c, t.elapsed().as_secs_f64())
     }
 
@@ -244,10 +256,43 @@ impl crate::linalg::qr::GemmBackend for AdpEngine {
 mod tests {
     use super::*;
     use crate::coordinator::heuristic::{AlwaysEmulate, NeverEmulate};
+    use crate::linalg::gemm as native_gemm;
     use crate::util::Rng;
 
     fn engine() -> AdpEngine {
         AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(AlwaysEmulate)))
+    }
+
+    #[test]
+    fn parallel_backend_engine_is_bitwise_identical() {
+        // Both ADP paths (emulated + native fallback) must be backend
+        // agnostic down to the last bit.
+        let mut rng = Rng::new(87);
+        let a = Matrix::uniform(48, 48, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(48, 48, -1.0, 1.0, &mut rng);
+        let par = AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(AlwaysEmulate))
+                .with_backend(BackendSpec::Parallel { threads: 4 }.build()),
+        );
+        let (c_ser, o_ser) = engine().gemm(&a, &b);
+        let (c_par, o_par) = par.gemm(&a, &b);
+        assert_eq!(o_ser.decision, o_par.decision);
+        for (x, y) in c_ser.data.iter().zip(&c_par.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // native fallback path
+        let nat_ser = AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(NeverEmulate)));
+        let nat_par = AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(NeverEmulate))
+                .with_backend(BackendSpec::Parallel { threads: 4 }.build()),
+        );
+        let (c_ser, _) = nat_ser.gemm(&a, &b);
+        let (c_par, _) = nat_par.gemm(&a, &b);
+        for (x, y) in c_ser.data.iter().zip(&c_par.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

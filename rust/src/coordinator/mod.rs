@@ -30,4 +30,4 @@ pub mod service;
 
 pub use adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
 pub use metrics::Metrics;
-pub use service::{GemmService, ServiceConfig};
+pub use service::{GemmService, ServiceConfig, SubmitError};

@@ -5,7 +5,14 @@
 //! PJRT runtime handle. This is the "cuBLAS behind a production queue"
 //! integration the paper targets (§5.4/§8.2), adapted to std threads
 //! (tokio is unavailable offline; the request path is CPU-bound anyway).
+//!
+//! All workers share **one** compute backend (and therefore one thread
+//! pool, see `backend::pool`): a lone request can fan its slice pairs and
+//! tiles across the whole machine, while a saturated queue degrades each
+//! worker to inline execution instead of oversubscribing cores with
+//! N workers × T oblivious threads.
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
@@ -14,6 +21,7 @@ use std::time::Instant;
 use super::adp::{AdpConfig, AdpEngine, AdpOutcome};
 use super::heuristic::SelectionHeuristic;
 use super::metrics::Metrics;
+use crate::backend::BackendSpec;
 use crate::linalg::Matrix;
 use crate::ozaki::SliceEncoding;
 use crate::runtime::RuntimeHandle;
@@ -34,6 +42,24 @@ pub struct GemmResponse {
     pub total_s: f64,
 }
 
+/// Why a submission was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The service was shut down (or every worker died); the request
+    /// queue is closed and the matrices were dropped.
+    ServiceStopped,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::ServiceStopped => write!(f, "gemm service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Service configuration. The heuristic/encoding mirror [`AdpConfig`];
 /// each worker constructs its own engine from a factory closure because
 /// `SelectionHeuristic` boxes are not `Clone`.
@@ -45,6 +71,10 @@ pub struct ServiceConfig {
     pub encoding: SliceEncoding,
     pub esc_block: usize,
     pub use_artifacts: bool,
+    /// Compute backend shared by all workers (one pool for the whole
+    /// service). Bitwise identical across variants; default is the
+    /// machine-sized parallel backend.
+    pub backend: BackendSpec,
 }
 
 impl Default for ServiceConfig {
@@ -57,6 +87,7 @@ impl Default for ServiceConfig {
             encoding: SliceEncoding::Unsigned,
             esc_block: crate::esc::coarse::DEFAULT_BLOCK,
             use_artifacts: true,
+            backend: BackendSpec::auto(),
         }
     }
 }
@@ -80,6 +111,8 @@ impl GemmService {
         let (tx, rx) = mpsc::sync_channel::<GemmRequest>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let inflight = Arc::new(AtomicU64::new(0));
+        // One backend (=> one thread pool) shared by every worker.
+        let backend = cfg.backend.build();
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let rx = rx.clone();
@@ -93,6 +126,7 @@ impl GemmService {
                 heuristic: heuristic_factory(),
                 runtime: runtime.clone(),
                 use_artifacts: cfg.use_artifacts,
+                backend: backend.clone(),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -104,20 +138,24 @@ impl GemmService {
         GemmService { tx, metrics, inflight, workers }
     }
 
-    /// Submit a request; returns the receiver for its response.
+    /// Submit a request; returns the receiver for its response, or
+    /// [`SubmitError::ServiceStopped`] when the queue is closed.
     /// Blocks when the queue is full (backpressure).
-    pub fn submit(&self, a: Matrix, b: Matrix) -> Receiver<GemmResponse> {
+    pub fn submit(&self, a: Matrix, b: Matrix) -> Result<Receiver<GemmResponse>, SubmitError> {
         let (rtx, rrx) = channel();
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .send(GemmRequest { a, b, reply: rtx, submitted: Instant::now() })
-            .expect("service stopped");
-        rrx
+        match self.tx.send(GemmRequest { a, b, reply: rtx, submitted: Instant::now() }) {
+            Ok(()) => Ok(rrx),
+            Err(_) => {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                Err(SubmitError::ServiceStopped)
+            }
+        }
     }
 
     /// Convenience: submit and wait.
     pub fn gemm_blocking(&self, a: Matrix, b: Matrix) -> GemmResponse {
-        self.submit(a, b).recv().expect("worker died")
+        self.submit(a, b).expect("service stopped").recv().expect("worker died")
     }
 
     pub fn inflight(&self) -> u64 {
@@ -130,6 +168,17 @@ impl GemmService {
         for w in self.workers {
             let _ = w.join();
         }
+    }
+}
+
+/// Decrements the inflight counter on drop, so a request that panics its
+/// worker still leaves the counter accurate (it is no longer in flight —
+/// it is dead).
+struct InflightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -148,9 +197,14 @@ fn worker_main(
         };
         let queue_s = req.submitted.elapsed().as_secs_f64();
         let t0 = Instant::now();
-        let (c, outcome) = engine.gemm(&req.a, &req.b);
+        let (c, outcome) = {
+            // Scope the guard so the decrement lands before the reply is
+            // sent (a caller seeing its response must see inflight drop),
+            // while a panic in the engine still decrements during unwind.
+            let _guard = InflightGuard(&inflight);
+            engine.gemm(&req.a, &req.b)
+        };
         let total_s = queue_s + t0.elapsed().as_secs_f64();
-        inflight.fetch_sub(1, Ordering::SeqCst);
         let _ = req.reply.send(GemmResponse { c, outcome, queue_s, total_s });
     }
 }
@@ -191,7 +245,7 @@ mod tests {
             let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
             let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
             expects.push(gemm(&a, &b));
-            pending.push(svc.submit(a, b));
+            pending.push(svc.submit(a, b).expect("service running"));
         }
         for (rx, expect) in pending.into_iter().zip(expects) {
             let resp = rx.recv().unwrap();
@@ -200,6 +254,53 @@ mod tests {
         assert_eq!(svc.metrics.snapshot().requests, 24);
         assert_eq!(svc.inflight(), 0);
         svc.shutdown();
+    }
+
+    #[test]
+    fn serial_and_parallel_service_agree_bitwise() {
+        // The backend choice is invisible in the results — the whole
+        // service stack must be bitwise deterministic either way.
+        let mk = |backend| {
+            let cfg =
+                ServiceConfig { workers: 2, use_artifacts: false, backend, ..Default::default() };
+            GemmService::start(cfg, None, || Box::new(AlwaysEmulate))
+        };
+        let svc_ser = mk(BackendSpec::Serial);
+        let svc_par = mk(BackendSpec::Parallel { threads: 4 });
+        let mut rng = Rng::new(93);
+        let a = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let c_ser = svc_ser.gemm_blocking(a.clone(), b.clone()).c;
+        let c_par = svc_par.gemm_blocking(a, b).c;
+        for (x, y) in c_ser.data.iter().zip(&c_par.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        svc_ser.shutdown();
+        svc_par.shutdown();
+    }
+
+    #[test]
+    fn submit_reports_stopped_service() {
+        // Poison pill: a shape-mismatched request panics the only worker;
+        // once it is gone the queue closes and submit must return Err
+        // instead of panicking the caller.
+        let svc = small_service(1);
+        let bad = svc.submit(Matrix::zeros(2, 3), Matrix::zeros(4, 2)).expect("queue open");
+        assert!(bad.recv().is_err(), "poisoned request must get no reply");
+        // The panicked request is no longer in flight (guard decrements
+        // during unwind); only later race-window submissions may linger.
+        assert_eq!(svc.inflight(), 0, "dead request must not leak the inflight counter");
+        let mut stopped = false;
+        for _ in 0..400 {
+            match svc.submit(Matrix::identity(2), Matrix::identity(2)) {
+                Err(SubmitError::ServiceStopped) => {
+                    stopped = true;
+                    break;
+                }
+                Ok(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+            }
+        }
+        assert!(stopped, "submit must fail once the last worker is gone");
     }
 
     #[test]
@@ -215,7 +316,8 @@ mod tests {
                     scale * ((i * 4 + j) as f64 + 1.0) + rng.f64() * 0.0
                 });
                 let b = Matrix::identity(4);
-                pending.push((scale, svc.submit(a, b)));
+                let rx = svc.submit(a, b).expect("service running");
+                pending.push((scale, rx));
             }
             for (scale, rx) in pending {
                 let resp = rx.recv().unwrap();
@@ -247,7 +349,7 @@ mod tests {
                 *a.at_mut(0, 0) = 1e300;
                 *b.at_mut(0, 0) = 1e-300;
             }
-            pending.push(svc.submit(a, b));
+            pending.push(svc.submit(a, b).expect("service running"));
         }
         for rx in pending {
             rx.recv().unwrap();

@@ -5,6 +5,12 @@
 //!
 //! The library provides:
 //!
+//! * [`backend`] — the pluggable compute-backend layer: a
+//!   [`ComputeBackend`] trait over the INT8 slice-pair and FP64 tile
+//!   kernels, with a serial reference implementation and a work-stealing
+//!   parallel one (bitwise identical by construction) on a shared
+//!   token-budgeted scoped-thread pool. The seam future SIMD/GPU/sharded
+//!   backends plug into.
 //! * [`ozaki`] — the Ozaki-I decomposition with the paper's **unsigned slice
 //!   encoding** (two's-complement remapping, §3 of the paper), a pure-Rust
 //!   INT8-slice GEMM emulation pipeline.
@@ -31,6 +37,7 @@
 //! Python (JAX + Pallas) exists only on the compile path; the Rust binary is
 //! self-contained once `make artifacts` has produced the HLO artifacts.
 
+pub mod backend;
 pub mod coordinator;
 pub mod dd;
 pub mod esc;
@@ -41,6 +48,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod util;
 
+pub use backend::{BackendSpec, ComputeBackend, ParallelBackend, SerialBackend};
 pub use coordinator::adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
 pub use esc::{coarse_esc_gemm, exact_esc_dot, exact_esc_gemm, EscReport};
 pub use linalg::matrix::Matrix;

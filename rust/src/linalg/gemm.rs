@@ -3,8 +3,16 @@
 //! This is the denominator of every speedup the benches report and the
 //! fallback target of ADP, so it must not be a strawman: it uses k-panel
 //! packing of B, 4-wide j-unrolling with FMA, and cache-sized blocks.
-//! Multi-threading happens one level up (the coordinator shards requests);
-//! this routine is deliberately single-threaded and deterministic.
+//!
+//! The loop nest is organized as a grid of MC×NC output tiles
+//! ([`tile_grid`]), each accumulated over the full k extent by the one
+//! reference micro-kernel ([`gemm_tile`]). Per C element the floating-point
+//! operation sequence depends only on its own tile's k-panel walk — never
+//! on which thread runs the tile or in which order tiles complete — which
+//! is what lets `backend::ParallelBackend` fan the grid out across threads
+//! while staying **bitwise identical** to this serial schedule. `gemm` /
+//! `gemm_into` here stay single-threaded and deterministic; parallelism is
+//! opted into one level up via the `backend` layer.
 
 use super::matrix::Matrix;
 
@@ -24,23 +32,22 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// C = A*B + beta*C (beta = 0 overwrites, matching BLAS semantics for the
 /// uses in this crate: QR trailing updates call it with beta = 1).
+///
+/// Serial schedule: jc → pc → ic, packing each B panel once and reusing
+/// it across all MC row blocks (cheaper than the per-tile packing of
+/// [`gemm_tile`], which pays that to make tiles independent). Per C
+/// element both schedules execute the identical FP op sequence, which the
+/// backend layer's bitwise property test asserts.
 pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
     assert_eq!(a.cols, b.rows, "gemm shape mismatch");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
+    apply_beta(c, beta);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    if beta == 0.0 {
-        c.data.fill(0.0);
-    } else if beta != 1.0 {
-        c.scale(beta);
-    }
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-
-    // Packed KC x NC panel of B, NR-interleaved for the micro-kernel.
-    let mut bpack = vec![0.0f64; KC * NC];
-
+    let mut bpack = vec![0.0f64; PACK_LEN];
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
@@ -54,28 +61,10 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
     }
 }
 
-/// Pack B[pc..pc+kc, jc..jc+nc] into NR-wide column strips:
-/// bpack[strip][l * NR + r] = B[pc+l, jc + strip*NR + r].
-#[inline]
-fn pack_b(b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, bpack: &mut [f64]) {
-    let strips = nc.div_ceil(NR);
-    for s in 0..strips {
-        let j0 = s * NR;
-        let w = NR.min(nc - j0);
-        let dst = &mut bpack[s * kc * NR..(s + 1) * kc * NR];
-        for l in 0..kc {
-            let src = b.row(pc + l);
-            let d = &mut dst[l * NR..l * NR + NR];
-            for r in 0..w {
-                d[r] = src[jc + j0 + r];
-            }
-            for r in w..NR {
-                d[r] = 0.0;
-            }
-        }
-    }
-}
-
+/// The packed-panel micro-kernel of the serial schedule, writing straight
+/// into C. MUST stay operation-identical to the strip loop in
+/// [`gemm_tile`] — the bitwise serial/parallel equivalence (and its
+/// property test) depends on it.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn macro_kernel(
@@ -107,6 +96,130 @@ fn macro_kernel(
             let crow = &mut c.row_mut(ic + i)[jc + j0..jc + j0 + w];
             for r in 0..w {
                 crow[r] += acc[r];
+            }
+        }
+    }
+}
+
+/// Length of the B-panel packing scratch one thread needs for
+/// [`gemm_tile`]. Allocate once per GEMM (serial) or per pool thread
+/// (parallel); `pack_b` fully overwrites the region it reads back, so the
+/// buffer never needs re-zeroing between panels.
+pub(crate) const PACK_LEN: usize = KC * NC;
+
+/// Scale C by beta with the BLAS special cases (0 overwrites even NaN/Inf
+/// garbage, 1 is a no-op).
+pub(crate) fn apply_beta(c: &mut Matrix, beta: f64) {
+    if beta == 0.0 {
+        c.data.fill(0.0);
+    } else if beta != 1.0 {
+        c.scale(beta);
+    }
+}
+
+/// The MC×NC output tile grid of an m x n GEMM, in the serial schedule
+/// order (jc outer, ic inner). Each entry is `(ic, jc, mc, nc)`.
+pub(crate) fn tile_grid(m: usize, n: usize) -> Vec<(usize, usize, usize, usize)> {
+    let mut tiles = Vec::with_capacity(m.div_ceil(MC) * n.div_ceil(NC));
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for ic in (0..m).step_by(MC) {
+            let mc = MC.min(m - ic);
+            tiles.push((ic, jc, mc, nc));
+        }
+    }
+    tiles
+}
+
+/// Copy C[ic.., jc..] (mc x nc) into the row-major tile buffer.
+pub(crate) fn load_tile(
+    c: &Matrix,
+    ic: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    buf: &mut Vec<f64>,
+) {
+    buf.clear();
+    for i in 0..mc {
+        buf.extend_from_slice(&c.row(ic + i)[jc..jc + nc]);
+    }
+}
+
+/// Write the row-major tile buffer back into C[ic.., jc..].
+pub(crate) fn store_tile(c: &mut Matrix, ic: usize, jc: usize, mc: usize, nc: usize, buf: &[f64]) {
+    debug_assert_eq!(buf.len(), mc * nc);
+    for i in 0..mc {
+        c.row_mut(ic + i)[jc..jc + nc].copy_from_slice(&buf[i * nc..(i + 1) * nc]);
+    }
+}
+
+/// Accumulate one output tile over the full k extent:
+/// `tile += A[ic..ic+mc, :] * B[:, jc..jc+nc]`, `tile` row-major mc x nc,
+/// `bpack` a [`PACK_LEN`]-sized per-thread packing scratch.
+///
+/// This is the single reference kernel every backend schedules: ascending
+/// KC panels, packed B strips, 1 x NR FMA micro-kernel. The per-element
+/// operation sequence is a function of (element, k) only, so any tile
+/// execution order — serial or parallel — produces bitwise identical C.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_tile(
+    a: &Matrix,
+    b: &Matrix,
+    ic: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    bpack: &mut [f64],
+    tile: &mut [f64],
+) {
+    debug_assert_eq!(tile.len(), mc * nc);
+    debug_assert!(bpack.len() >= PACK_LEN);
+    let k = a.cols;
+    let strips = nc.div_ceil(NR);
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        pack_b(b, pc, jc, kc, nc, bpack);
+        for i in 0..mc {
+            let arow = &a.row(ic + i)[pc..pc + kc];
+            for s in 0..strips {
+                let j0 = s * NR;
+                let w = NR.min(nc - j0);
+                let bp = &bpack[s * kc * NR..(s + 1) * kc * NR];
+                // 1 x NR register accumulator micro-kernel.
+                let mut acc = [0.0f64; NR];
+                for (l, &al) in arow.iter().enumerate() {
+                    let brow = &bp[l * NR..l * NR + NR];
+                    for r in 0..NR {
+                        acc[r] = al.mul_add(brow[r], acc[r]);
+                    }
+                }
+                let crow = &mut tile[i * nc + j0..i * nc + j0 + w];
+                for r in 0..w {
+                    crow[r] += acc[r];
+                }
+            }
+        }
+    }
+}
+
+/// Pack B[pc..pc+kc, jc..jc+nc] into NR-wide column strips:
+/// bpack[strip][l * NR + r] = B[pc+l, jc + strip*NR + r].
+#[inline]
+fn pack_b(b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, bpack: &mut [f64]) {
+    let strips = nc.div_ceil(NR);
+    for s in 0..strips {
+        let j0 = s * NR;
+        let w = NR.min(nc - j0);
+        let dst = &mut bpack[s * kc * NR..(s + 1) * kc * NR];
+        for l in 0..kc {
+            let src = b.row(pc + l);
+            let d = &mut dst[l * NR..l * NR + NR];
+            for r in 0..w {
+                d[r] = src[jc + j0 + r];
+            }
+            for r in w..NR {
+                d[r] = 0.0;
             }
         }
     }
@@ -181,5 +294,33 @@ mod tests {
         let b = Matrix::zeros(5, 3);
         let c = gemm(&a, &b);
         assert_eq!((c.rows, c.cols), (0, 3));
+    }
+
+    #[test]
+    fn tile_grid_covers_exactly() {
+        for (m, n) in [(1, 1), (64, 256), (65, 257), (130, 513), (512, 512)] {
+            let mut covered = vec![false; m * n];
+            for (ic, jc, mc, nc) in tile_grid(m, n) {
+                for i in ic..ic + mc {
+                    for j in jc..jc + nc {
+                        assert!(!covered[i * n + j], "({m},{n}): ({i},{j}) covered twice");
+                        covered[i * n + j] = true;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "({m},{n}): grid left holes");
+        }
+    }
+
+    #[test]
+    fn tile_roundtrip() {
+        let mut rng = Rng::new(7);
+        let mut c = Matrix::uniform(10, 9, -1.0, 1.0, &mut rng);
+        let orig = c.clone();
+        let mut buf = Vec::new();
+        load_tile(&c, 2, 3, 5, 4, &mut buf);
+        assert_eq!(buf.len(), 20);
+        store_tile(&mut c, 2, 3, 5, 4, &buf);
+        assert_eq!(c, orig);
     }
 }

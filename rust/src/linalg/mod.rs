@@ -11,6 +11,6 @@ pub mod zgemm;
 
 pub use gemm::{gemm, gemm_into};
 pub use matrix::Matrix;
-pub use qr::{blocked_qr, GemmBackend, NativeGemm, Qr, QrStats};
-pub use strassen::strassen;
+pub use qr::{blocked_qr, ComputeBackendGemm, GemmBackend, NativeGemm, Qr, QrStats};
+pub use strassen::{strassen, strassen_on};
 pub use zgemm::{zgemm, ZMatrix};

@@ -6,30 +6,37 @@
 //! detect. Simple reference implementation (the paper's words: "a simple
 //! reference implementation that we include for comparison purposes").
 
-use super::gemm::gemm;
 use super::matrix::Matrix;
+use crate::backend::{ComputeBackend, SerialBackend};
 
 /// Below this size we switch to the blocked O(n^3) kernel.
 const CUTOFF: usize = 64;
 
-/// C = A * B via Strassen's seven-multiplication recursion.
+/// C = A * B via Strassen's seven-multiplication recursion on the serial
+/// reference backend.
+pub fn strassen(a: &Matrix, b: &Matrix) -> Matrix {
+    strassen_on(a, b, &SerialBackend)
+}
+
+/// C = A * B via Strassen's seven-multiplication recursion, base-case
+/// GEMMs dispatched through `backend`'s tile engine.
 /// Handles arbitrary square power-of-two-padded shapes; inputs of other
 /// shapes are zero-padded up to the next power of two >= CUTOFF.
-pub fn strassen(a: &Matrix, b: &Matrix) -> Matrix {
+pub fn strassen_on(a: &Matrix, b: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
     assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let dim = m.max(k).max(n).next_power_of_two().max(CUTOFF);
     if m == dim && k == dim && n == dim {
-        return strassen_square(a, b);
+        return strassen_square(a, b, backend);
     }
-    let c = strassen_square(&a.pad_to(dim, dim), &b.pad_to(dim, dim));
+    let c = strassen_square(&a.pad_to(dim, dim), &b.pad_to(dim, dim), backend);
     c.block(0, 0, m, n)
 }
 
-fn strassen_square(a: &Matrix, b: &Matrix) -> Matrix {
+fn strassen_square(a: &Matrix, b: &Matrix, backend: &dyn ComputeBackend) -> Matrix {
     let n = a.rows;
     if n <= CUTOFF {
-        return gemm(a, b);
+        return backend.fp64_gemm(a, b);
     }
     let h = n / 2;
     let a11 = a.block(0, 0, h, h);
@@ -47,13 +54,45 @@ fn strassen_square(a: &Matrix, b: &Matrix) -> Matrix {
         z
     };
 
-    let m1 = strassen_square(&add(&a11, &a22), &add(&b11, &b22));
-    let m2 = strassen_square(&add(&a21, &a22), &b11);
-    let m3 = strassen_square(&a11, &b12.sub(&b22));
-    let m4 = strassen_square(&a22, &b21.sub(&b11));
-    let m5 = strassen_square(&add(&a11, &a12), &b22);
-    let m6 = strassen_square(&a21.sub(&a11), &add(&b11, &b12));
-    let m7 = strassen_square(&a12.sub(&a22), &add(&b21, &b22));
+    // The seven products are independent. When the backend exposes a
+    // thread pool they are fanned out as tasks (nested recursion degrades
+    // to inline work once the pool's tokens are taken — never blocks);
+    // this materializes all seven operand pairs up front, the memory cost
+    // of the parallelism. Without a pool, keep the original streaming
+    // order: one operand pair alive at a time. Each product's internal
+    // arithmetic is schedule-invariant and the combination below always
+    // runs in fixed order, so both arms are bitwise identical.
+    let [m1, m2, m3, m4, m5, m6, m7] = if let Some(pool) = backend.pool() {
+        let ops: [(Matrix, Matrix); 7] = [
+            (add(&a11, &a22), add(&b11, &b22)),
+            (add(&a21, &a22), b11.clone()),
+            (a11.clone(), b12.sub(&b22)),
+            (a22.clone(), b21.sub(&b11)),
+            (add(&a11, &a12), b22.clone()),
+            (a21.sub(&a11), add(&b11, &b12)),
+            (a12.sub(&a22), add(&b21, &b22)),
+        ];
+        let mut slots: [Option<Matrix>; 7] = [None, None, None, None, None, None, None];
+        {
+            let work: Vec<(&mut Option<Matrix>, &(Matrix, Matrix))> =
+                slots.iter_mut().zip(ops.iter()).collect();
+            crate::backend::pool::drain(pool, work, |(slot, (x, y))| {
+                *slot = Some(strassen_square(x, y, backend));
+            });
+        }
+        slots.map(|m| m.expect("all products computed"))
+    } else {
+        // Separate statements so each pair of operand temporaries is
+        // dropped before the next product starts.
+        let m1 = strassen_square(&add(&a11, &a22), &add(&b11, &b22), backend);
+        let m2 = strassen_square(&add(&a21, &a22), &b11, backend);
+        let m3 = strassen_square(&a11, &b12.sub(&b22), backend);
+        let m4 = strassen_square(&a22, &b21.sub(&b11), backend);
+        let m5 = strassen_square(&add(&a11, &a12), &b22, backend);
+        let m6 = strassen_square(&a21.sub(&a11), &add(&b11, &b12), backend);
+        let m7 = strassen_square(&a12.sub(&a22), &add(&b21, &b22), backend);
+        [m1, m2, m3, m4, m5, m6, m7]
+    };
 
     // c11 = m1 + m4 - m5 + m7 ; c12 = m3 + m5
     // c21 = m2 + m4           ; c22 = m1 - m2 + m3 + m6
@@ -76,7 +115,22 @@ fn strassen_square(a: &Matrix, b: &Matrix) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::ParallelBackend;
+    use crate::linalg::gemm::gemm;
     use crate::util::Rng;
+
+    #[test]
+    fn parallel_backend_is_bitwise_identical() {
+        let mut rng = Rng::new(15);
+        let a = Matrix::uniform(150, 150, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(150, 150, -1.0, 1.0, &mut rng);
+        let c_ser = strassen(&a, &b);
+        let par = ParallelBackend::new(3).with_cutoff_ops(0);
+        let c_par = strassen_on(&a, &b, &par);
+        for (x, y) in c_ser.data.iter().zip(&c_par.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
 
     #[test]
     fn matches_gemm_power_of_two() {

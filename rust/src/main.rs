@@ -7,12 +7,17 @@
 //!   grade  --impl I --n N        grading-test verdict for implementation I
 //!   qr     --n N [..]            ADP-backed blocked QR demo
 //!
+//! `gemm`, `serve` and `qr` accept `--compute serial|parallel|parallel:N`
+//! to pick the compute backend (default: machine-sized parallel; results
+//! are bitwise identical either way).
+//!
 //! Argument parsing is hand-rolled (`--key value` pairs); clap is
 //! unavailable in the offline environment.
 
 use std::collections::HashMap;
 use std::path::Path;
 
+use adp_dgemm::backend::BackendSpec;
 use adp_dgemm::coordinator::heuristic::{AlwaysEmulate, CpuCalibration};
 use adp_dgemm::coordinator::{AdpConfig, AdpEngine, GemmService, ServiceConfig};
 use adp_dgemm::grading::{self, generators};
@@ -53,6 +58,14 @@ impl Args {
     fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.kv.get(key).map(|s| s.as_str()).unwrap_or(default)
     }
+}
+
+fn compute_spec(args: &Args) -> BackendSpec {
+    let s = args.str("compute", "parallel");
+    BackendSpec::parse(s).unwrap_or_else(|| {
+        eprintln!("note: unknown --compute '{s}' — using the serial backend");
+        BackendSpec::Serial
+    })
 }
 
 fn runtime(args: &Args) -> Option<RuntimeHandle> {
@@ -115,7 +128,10 @@ fn cmd_gemm(args: &Args) {
         generators::uniform_pair(n, -1.0, 1.0, &mut rng)
     };
     let engine = AdpEngine::new(
-        AdpConfig::fp64().with_heuristic(Box::new(AlwaysEmulate)).with_runtime(runtime(args)),
+        AdpConfig::fp64()
+            .with_heuristic(Box::new(AlwaysEmulate))
+            .with_runtime(runtime(args))
+            .with_backend(compute_spec(args).build()),
     );
     let (c, out) = engine.gemm(&a, &b);
     let rep = grading::grade::measure(&a, &b, &c);
@@ -141,7 +157,7 @@ fn cmd_serve(args: &Args) {
     let workers = args.usize("workers", 4);
     let seed = args.u64("seed", 7);
     let rt = runtime(args);
-    let cfg = ServiceConfig { workers, ..Default::default() };
+    let cfg = ServiceConfig { workers, backend: compute_spec(args), ..Default::default() };
     let svc = GemmService::start(cfg, rt, || Box::new(AlwaysEmulate));
     let mut rng = Rng::new(seed);
     let t0 = std::time::Instant::now();
@@ -151,7 +167,7 @@ fn cmd_serve(args: &Args) {
         if i % 16 == 5 {
             *a.at_mut(0, 0) = f64::NAN; // exercise the guardrails
         }
-        pending.push(svc.submit(a, b));
+        pending.push(svc.submit(a, b).expect("service running"));
     }
     let mut lat = Vec::new();
     for rx in pending {
@@ -213,7 +229,8 @@ fn cmd_qr(args: &Args) {
             let mut engine = AdpEngine::new(
                 AdpConfig::fp64()
                     .with_heuristic(Box::new(CpuCalibration::measure()))
-                    .with_runtime(runtime(args)),
+                    .with_runtime(runtime(args))
+                    .with_backend(compute_spec(args).build()),
             );
             let r = blocked_qr(&a, panel, &mut engine);
             let snap = engine.metrics.snapshot();

@@ -5,33 +5,62 @@
 //! `s(s+1)/2` of these (pairs with `t + u <= s-1`), which is where the
 //! quadratic-in-slices compute cost comes from (§4) and why the unsigned
 //! encoding's slice reduction translates into a 22% compute saving (§3).
+//!
+//! The per-level pair schedule is dispatched through a
+//! [`ComputeBackend`](crate::backend::ComputeBackend): the serial backend
+//! runs the pairs in order, the parallel backend splits the level's output
+//! rows across a thread pool. Both are bitwise identical — every i64
+//! accumulation here is exact, so the schedule cannot change a single bit.
 
 use super::recompose::{recompose, LevelAccumulator};
 use super::slicing::{slice_a, slice_b, SlicedMatrix};
 use super::OzakiConfig;
+use crate::backend::{ComputeBackend, SerialBackend};
 use crate::linalg::Matrix;
 
 /// Largest k processed in one i32 accumulation pass: |digit| <= 128 so each
-/// product is <= 2^14 and 2^17 summands stay below i32::MAX.
-pub const K_CHUNK: usize = 1 << 17;
+/// product is <= 2^14, and (2^17 - 1) summands reach at most
+/// 2^31 - 2^14 < i32::MAX. (A full 2^17 could hit exactly 2^31 when every
+/// product is (-128)*(-128) — one past i32::MAX.)
+pub const K_CHUNK: usize = (1 << 17) - 1;
 
 /// P[i,j] += sum_l a_t[i,l] * b_u[j,l] — exact integer GEMM of slice `t` of
-/// A against slice `u` of B (B slices are stored transposed). The inner
-/// accumulation is i32 (exact for k <= K_CHUNK); `out` aggregates in i64 so
-/// multiple pairs of the same weight level can share a buffer safely.
+/// A against slice `u` of B (B slices are stored transposed), over all of
+/// A's rows. See [`slice_pair_gemm_rows`] for the row-ranged kernel.
 pub fn slice_pair_gemm(a: &SlicedMatrix, t: usize, b: &SlicedMatrix, u: usize, out: &mut [i64]) {
-    let (m, k, n) = (a.rows, a.cols, b.rows);
+    assert_eq!(out.len(), a.rows * b.rows);
+    slice_pair_gemm_rows(a, t, b, u, 0, a.rows, out);
+}
+
+/// Rows `[row0, row0 + rows)` of the slice-pair GEMM, accumulating into
+/// `out`, the row-major `rows x n` sub-buffer for exactly that row range.
+/// The inner accumulation is i32 (exact for k <= K_CHUNK); `out` aggregates
+/// in i64 so multiple pairs of the same weight level can share a buffer
+/// safely. Disjoint row ranges may run concurrently: integer arithmetic
+/// makes any row partition bitwise identical to the full-matrix call.
+#[allow(clippy::too_many_arguments)]
+pub fn slice_pair_gemm_rows(
+    a: &SlicedMatrix,
+    t: usize,
+    b: &SlicedMatrix,
+    u: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [i64],
+) {
+    let (k, n) = (a.cols, b.rows);
     assert_eq!(a.cols, b.cols, "inner dimension mismatch");
-    assert_eq!(out.len(), m * n);
+    assert!(row0 + rows <= a.rows, "row range out of bounds");
+    assert_eq!(out.len(), rows * n);
     assert!(k <= K_CHUNK, "k chunking is handled by emulated_gemm");
     let at = a.slice(t);
     let bu = b.slice(u);
     // Row-major x row-major(transposed) dot kernel, 2x4 register blocked
     // (8 independent i32 accumulator chains for the auto-vectorizer).
     let mut i = 0;
-    while i + 2 <= m {
-        let a0 = &at[i * k..(i + 1) * k];
-        let a1 = &at[(i + 1) * k..(i + 2) * k];
+    while i + 2 <= rows {
+        let a0 = &at[(row0 + i) * k..(row0 + i + 1) * k];
+        let a1 = &at[(row0 + i + 1) * k..(row0 + i + 2) * k];
         let mut j = 0;
         while j + 4 <= n {
             let b0 = &bu[j * k..(j + 1) * k];
@@ -67,8 +96,8 @@ pub fn slice_pair_gemm(a: &SlicedMatrix, t: usize, b: &SlicedMatrix, u: usize, o
         }
         i += 2;
     }
-    if i < m {
-        let a0 = &at[i * k..(i + 1) * k];
+    if i < rows {
+        let a0 = &at[(row0 + i) * k..(row0 + i + 1) * k];
         for j in 0..n {
             let b0 = &bu[j * k..(j + 1) * k];
             let mut c = 0i32;
@@ -89,9 +118,21 @@ pub struct EmulationBreakdown {
     pub pairs: usize,
 }
 
-/// Full Ozaki-I emulated DGEMM: C ~= A * B with `cfg.slices` INT8 slices.
+/// Full Ozaki-I emulated DGEMM: C ~= A * B with `cfg.slices` INT8 slices,
+/// on the serial reference backend.
 pub fn emulated_gemm(a: &Matrix, b: &Matrix, cfg: &OzakiConfig) -> Matrix {
-    emulated_gemm_with_breakdown(a, b, cfg).0
+    emulated_gemm_on(a, b, cfg, &SerialBackend)
+}
+
+/// As [`emulated_gemm`], dispatching the slice-pair schedule through the
+/// given compute backend. Results are bitwise identical across backends.
+pub fn emulated_gemm_on(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &OzakiConfig,
+    backend: &dyn ComputeBackend,
+) -> Matrix {
+    emulated_gemm_with_breakdown_on(a, b, cfg, backend).0
 }
 
 /// As [`emulated_gemm`], also returning the per-phase timing breakdown.
@@ -100,22 +141,35 @@ pub fn emulated_gemm_with_breakdown(
     b: &Matrix,
     cfg: &OzakiConfig,
 ) -> (Matrix, EmulationBreakdown) {
+    emulated_gemm_with_breakdown_on(a, b, cfg, &SerialBackend)
+}
+
+/// Backend-dispatched emulation with the per-phase timing breakdown.
+pub fn emulated_gemm_with_breakdown_on(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &OzakiConfig,
+    backend: &dyn ComputeBackend,
+) -> (Matrix, EmulationBreakdown) {
     assert_eq!(a.cols, b.rows, "gemm shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut bd = EmulationBreakdown { pairs: cfg.pair_count(), ..Default::default() };
     if k == 0 || m == 0 || n == 0 {
         return (Matrix::zeros(m, n), bd);
     }
-    if k <= K_CHUNK {
-        return emulated_gemm_chunk(a, b, cfg);
+    let kchunk = cfg.k_chunk();
+    if k <= kchunk {
+        return emulated_gemm_chunk(a, b, cfg, backend);
     }
-    // Rare large-k path: exact i32 accumulation caps each pass at K_CHUNK;
-    // chunk results are summed in f64 (same rounding class as one pass).
+    // Rare large-k path: exact i32 accumulation caps each pass at the
+    // chunk size; chunk results are summed in f64 (same rounding class as
+    // one pass).
     let mut c = Matrix::zeros(m, n);
     let mut k0 = 0;
     while k0 < k {
-        let kc = K_CHUNK.min(k - k0);
-        let (cc, cbd) = emulated_gemm_chunk(&a.block(0, k0, m, kc), &b.block(k0, 0, kc, n), cfg);
+        let kc = kchunk.min(k - k0);
+        let (cc, cbd) =
+            emulated_gemm_chunk(&a.block(0, k0, m, kc), &b.block(k0, 0, kc, n), cfg, backend);
         c.add_assign(&cc);
         bd.slice_s += cbd.slice_s;
         bd.gemm_s += cbd.gemm_s;
@@ -125,7 +179,12 @@ pub fn emulated_gemm_with_breakdown(
     (c, bd)
 }
 
-fn emulated_gemm_chunk(a: &Matrix, b: &Matrix, cfg: &OzakiConfig) -> (Matrix, EmulationBreakdown) {
+fn emulated_gemm_chunk(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &OzakiConfig,
+    backend: &dyn ComputeBackend,
+) -> (Matrix, EmulationBreakdown) {
     let s = cfg.slices;
     let (m, n) = (a.rows, b.cols);
     let mut bd = EmulationBreakdown { pairs: cfg.pair_count(), ..Default::default() };
@@ -141,11 +200,13 @@ fn emulated_gemm_chunk(a: &Matrix, b: &Matrix, cfg: &OzakiConfig) -> (Matrix, Em
     let mut pbuf = vec![0i64; m * n];
     // Group pairs by weight level q = t+u; accumulate levels smallest
     // weight first (matches python/compile/ozaki.py::recompose exactly).
+    // Each level is one backend batch — the backend may run its pairs in
+    // any schedule (exact integer arithmetic), but levels feed the
+    // compensated accumulator strictly in this order.
     for q in (0..s).rev() {
         pbuf.fill(0);
-        for t in 0..=q {
-            slice_pair_gemm(&asl, t, &bsl, q - t, &mut pbuf);
-        }
+        let pairs: Vec<(usize, usize)> = (0..=q).map(|t| (t, q - t)).collect();
+        backend.slice_pair_gemm_batch(&asl, &bsl, &pairs, &mut pbuf);
         let w = 2 * rb * (s as i32 - 1) - rb * q as i32;
         acc.add_level(&pbuf, w);
     }
@@ -204,6 +265,37 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn row_ranged_pair_gemm_matches_full() {
+        // Any row partition must reproduce the full-matrix result exactly.
+        let mut rng = Rng::new(36);
+        let (m, k, n) = (11, 23, 6);
+        let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+        let asl = slice_a(&a, 3, SliceEncoding::Unsigned);
+        let bsl = slice_b(&b, 3, SliceEncoding::Unsigned);
+        let mut full = vec![0i64; m * n];
+        slice_pair_gemm(&asl, 1, &bsl, 0, &mut full);
+        for split in [1, 2, 3, 5, 11] {
+            let mut parts = vec![0i64; m * n];
+            let mut row0 = 0;
+            while row0 < m {
+                let rows = split.min(m - row0);
+                slice_pair_gemm_rows(
+                    &asl,
+                    1,
+                    &bsl,
+                    0,
+                    row0,
+                    rows,
+                    &mut parts[row0 * n..(row0 + rows) * n],
+                );
+                row0 += rows;
+            }
+            assert_eq!(parts, full, "split={split}");
         }
     }
 
@@ -277,6 +369,50 @@ mod tests {
         for (x, y) in c.data.iter().zip(&r.data) {
             assert_eq!(x.abs(), y.abs()); // -0 treated as 0 (§5.1)
         }
+    }
+
+    #[test]
+    fn chunked_k_matches_one_pass() {
+        // Satellite coverage for the large-k path: force chunking at small
+        // k via the injectable chunk size and compare against the one-pass
+        // result. Chunk sums commute with the compensated recompose only
+        // up to final rounding, so the bound is a few component eps.
+        let mut rng = Rng::new(37);
+        for (m, k, n, kc) in [(9, 70, 8, 16), (5, 64, 5, 64), (4, 65, 6, 64), (7, 40, 7, 1)] {
+            let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+            let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+            let one = emulated_gemm(&a, &b, &OzakiConfig::new(7));
+            let chunked = emulated_gemm(&a, &b, &OzakiConfig::new(7).with_k_chunk(kc));
+            let denom = a.abs().matmul_dd(&b.abs());
+            for idx in 0..one.data.len() {
+                let tol = 4.0 * (k as f64 + 4.0) * f64::EPSILON * denom.data[idx];
+                let d = (chunked.data[idx] - one.data[idx]).abs();
+                assert!(d <= tol, "kc={kc} idx={idx}: |{d}| > {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_path_stays_grade_a() {
+        // The chunked result must hold the same componentwise bound as the
+        // one-pass pipeline, not merely agree with it.
+        let mut rng = Rng::new(38);
+        let (m, k, n) = (8, 96, 9);
+        let a = Matrix::uniform(m, k, -3.0, 3.0, &mut rng);
+        let b = Matrix::uniform(k, n, -3.0, 3.0, &mut rng);
+        let c = emulated_gemm(&a, &b, &OzakiConfig::new(7).with_k_chunk(17));
+        let e = max_rel_err(&c, &a, &b);
+        let bound = (k as f64 + 4.0) * f64::EPSILON;
+        assert!(e <= bound, "err {e} > {bound}");
+    }
+
+    #[test]
+    fn k_chunk_is_clamped_to_exactness_cap() {
+        // A chunk size beyond K_CHUNK would overflow the i32 accumulator;
+        // the config clamps rather than trusting the caller.
+        assert_eq!(OzakiConfig::new(7).with_k_chunk(usize::MAX).k_chunk(), K_CHUNK);
+        assert_eq!(OzakiConfig::new(7).with_k_chunk(0).k_chunk(), 1);
+        assert_eq!(OzakiConfig::new(7).k_chunk(), K_CHUNK);
     }
 
     #[test]

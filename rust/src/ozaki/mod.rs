@@ -17,7 +17,10 @@ pub mod gemm;
 pub mod recompose;
 pub mod slicing;
 
-pub use gemm::{emulated_gemm, emulated_gemm_with_breakdown, slice_pair_gemm, EmulationBreakdown};
+pub use gemm::{
+    emulated_gemm, emulated_gemm_on, emulated_gemm_with_breakdown,
+    emulated_gemm_with_breakdown_on, slice_pair_gemm, slice_pair_gemm_rows, EmulationBreakdown,
+};
 pub use slicing::{slice_a, slice_b, SlicedMatrix};
 
 /// Which slice encoding to use (§3 of the paper).
@@ -66,20 +69,35 @@ impl SliceEncoding {
 pub struct OzakiConfig {
     pub slices: usize,
     pub encoding: SliceEncoding,
+    /// Largest k per exact accumulation pass. Defaults to the i32
+    /// exactness cap [`gemm::K_CHUNK`] and is clamped to it; tests inject
+    /// smaller values to exercise the chunked large-k path at small k.
+    pub k_chunk: usize,
 }
 
 impl OzakiConfig {
     pub fn new(slices: usize) -> Self {
-        OzakiConfig { slices, encoding: SliceEncoding::Unsigned }
+        OzakiConfig { slices, encoding: SliceEncoding::Unsigned, k_chunk: gemm::K_CHUNK }
     }
 
     pub fn with_encoding(slices: usize, encoding: SliceEncoding) -> Self {
-        OzakiConfig { slices, encoding }
+        OzakiConfig { slices, encoding, k_chunk: gemm::K_CHUNK }
     }
 
     /// Config reaching at least `bits` effective mantissa bits.
     pub fn for_bits(bits: i32, encoding: SliceEncoding) -> Self {
-        OzakiConfig { slices: encoding.slices_for_bits(bits), encoding }
+        OzakiConfig { slices: encoding.slices_for_bits(bits), encoding, k_chunk: gemm::K_CHUNK }
+    }
+
+    /// Override the accumulation chunk size (clamped to `[1, K_CHUNK]`).
+    pub fn with_k_chunk(mut self, k_chunk: usize) -> Self {
+        self.k_chunk = k_chunk;
+        self
+    }
+
+    /// Effective chunk size: never beyond the i32 exactness cap.
+    pub fn k_chunk(&self) -> usize {
+        self.k_chunk.clamp(1, gemm::K_CHUNK)
     }
 
     /// Slice-pair GEMMs executed under Ozaki-I triangular truncation.

@@ -81,7 +81,9 @@ fn service_survives_adversarial_stream() {
             *a.at_mut(0, 0) = f64::NAN;
         }
         let expect_finite = i % 7 != 3;
-        pending.push((a.clone(), b.clone(), expect_finite, svc.submit(a, b)));
+        let (ac, bc) = (a.clone(), b.clone());
+        let rx = svc.submit(a, b).expect("service running");
+        pending.push((ac, bc, expect_finite, rx));
     }
     for (a, b, expect_finite, rx) in pending {
         let resp = rx.recv().unwrap();
