@@ -16,8 +16,8 @@ use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend};
 use adp_dgemm::esc::coarse_esc_gemm;
 use adp_dgemm::linalg::{gemm, Matrix};
 use adp_dgemm::ozaki::{
-    emulated_gemm_on, emulated_gemm_with_breakdown, slice_a, slice_b, slice_pair_gemm,
-    OzakiConfig, SliceEncoding,
+    emulated_gemm_on, emulated_gemm_with_breakdown, gemm_grouped, slice_a, slice_b,
+    slice_pair_gemm, GroupedProblem, OzakiConfig, SliceCache, SliceEncoding,
 };
 use adp_dgemm::runtime::RuntimeHandle;
 use adp_dgemm::util::{benchkit, Rng};
@@ -98,6 +98,34 @@ fn main() {
             ("GFLOP/s", format!("{:.2}", st_fpar.per_sec(2.0 * (n * n * n) as f64) / 1e9)),
         ],
     );
+
+    // --- grouped pipeline: slice-cache amortization ---------------------
+    {
+        let group = 8usize;
+        let bs: Vec<Matrix> =
+            (0..group).map(|_| Matrix::uniform(n, n, -1.0, 1.0, &mut rng)).collect();
+        let st_seq = benchkit::bench_budget(2.0, || {
+            for b in &bs {
+                std::hint::black_box(emulated_gemm_on(&a, b, &cfg, &SerialBackend));
+            }
+        });
+        benchkit::report("emulated_group(per-request)", st_seq, &[("reqs", group.to_string())]);
+        let st_grp = benchkit::bench_budget(2.0, || {
+            // cold cache per iteration: amortization within the group only
+            let cache = SliceCache::new(2 * group + 2);
+            let probs: Vec<GroupedProblem<'_>> =
+                bs.iter().map(|b| GroupedProblem { a: &a, b, cfg }).collect();
+            std::hint::black_box(gemm_grouped(&probs, &cache, &SerialBackend))
+        });
+        benchkit::report(
+            "emulated_group(grouped)",
+            st_grp,
+            &[
+                ("reqs", group.to_string()),
+                ("speedup", format!("{:.2}x", st_seq.median_s / st_grp.median_s)),
+            ],
+        );
+    }
 
     // --- guardrails -----------------------------------------------------
     let st = benchkit::bench_budget(0.5, || coarse_esc_gemm(&a, &b, 64));

@@ -40,6 +40,24 @@ pub use serial::SerialBackend;
 /// [`ComputeBackend::fp64_gemm_tile`].
 pub const PACK_SCRATCH_LEN: usize = crate::linalg::gemm::PACK_LEN;
 
+/// One independent slice-pair batch of a grouped schedule: a weight level
+/// of one problem, fanned together with other problems' levels through
+/// [`ComputeBackend::slice_pair_gemm_batches`]. `out` is that problem's
+/// row-major `a.rows x b.rows` i64 accumulator for the level.
+pub struct SliceBatch<'a> {
+    pub a: &'a SlicedMatrix,
+    pub b: &'a SlicedMatrix,
+    pub pairs: &'a [(usize, usize)],
+    pub out: &'a mut [i64],
+}
+
+impl SliceBatch<'_> {
+    /// Integer MACs of this batch (scheduling-cost estimate).
+    pub fn ops(&self) -> usize {
+        self.pairs.len() * self.a.rows * self.b.rows * self.a.cols
+    }
+}
+
 /// A compute substrate for the two kernel families of the pipeline.
 ///
 /// Contract: for identical inputs, every implementation must produce
@@ -71,6 +89,18 @@ pub trait ComputeBackend: Send + Sync {
         pairs: &[(usize, usize)],
         out: &mut [i64],
     );
+
+    /// Run many *independent* slice-pair batches (distinct problems'
+    /// levels of one grouped-GEMM round) as one schedule. The default
+    /// runs them in submission order; parallel backends may interleave
+    /// work across batches freely — every batch is exact integer
+    /// accumulation into its own buffer, so any schedule is bitwise
+    /// identical to the sequential one.
+    fn slice_pair_gemm_batches(&self, batches: &mut [SliceBatch<'_>]) {
+        for bt in batches.iter_mut() {
+            self.slice_pair_gemm_batch(bt.a, bt.b, bt.pairs, bt.out);
+        }
+    }
 
     /// One MC×NC tile of the blocked FP64 GEMM: `tile += A[ic.., :] *
     /// B[:, jc..]` over the full k extent, `tile` a row-major `mc x nc`
@@ -197,6 +227,42 @@ mod tests {
         let par = ParallelBackend::new(4).with_cutoff_ops(0);
         par.slice_pair_gemm_batch(&asl, &bsl, &pairs, &mut out_par);
         assert_eq!(out_ser, out_par);
+    }
+
+    #[test]
+    fn fused_batches_match_sequential() {
+        // The grouped-schedule entry point: independent batches of
+        // different shapes fused into one parallel schedule must equal
+        // the one-at-a-time serial results exactly.
+        let mut rng = Rng::new(401);
+        let par = ParallelBackend::new(4).with_cutoff_ops(0);
+        let mk = |m: usize, k: usize, n: usize, s: usize, rng: &mut Rng| {
+            let a = Matrix::uniform(m, k, -2.0, 2.0, rng);
+            let b = Matrix::uniform(k, n, -2.0, 2.0, rng);
+            (slice_a(&a, s, SliceEncoding::Unsigned), slice_b(&b, s, SliceEncoding::Unsigned))
+        };
+        let (a1, b1) = mk(9, 17, 7, 4, &mut rng);
+        let (a2, b2) = mk(5, 23, 11, 3, &mut rng);
+        let p1: Vec<(usize, usize)> = vec![(0, 0), (1, 2), (3, 0)];
+        let p2: Vec<(usize, usize)> = vec![(2, 1), (0, 0)];
+        let mut ser1 = vec![0i64; 9 * 7];
+        let mut ser2 = vec![0i64; 5 * 11];
+        SerialBackend.slice_pair_gemm_batch(&a1, &b1, &p1, &mut ser1);
+        SerialBackend.slice_pair_gemm_batch(&a2, &b2, &p2, &mut ser2);
+        let mut par1 = vec![0i64; 9 * 7];
+        let mut par2 = vec![0i64; 5 * 11];
+        {
+            let mut batches = vec![
+                SliceBatch { a: &a1, b: &b1, pairs: p1.as_slice(), out: par1.as_mut_slice() },
+                SliceBatch { a: &a2, b: &b2, pairs: p2.as_slice(), out: par2.as_mut_slice() },
+            ];
+            par.slice_pair_gemm_batches(&mut batches);
+        }
+        assert_eq!(ser1, par1);
+        assert_eq!(ser2, par2);
+        // Empty fused schedule is a no-op on both implementations.
+        par.slice_pair_gemm_batches(&mut []);
+        SerialBackend.slice_pair_gemm_batches(&mut []);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use std::sync::Mutex;
 
 use super::pool::{drain, ThreadPool};
-use super::{ComputeBackend, PACK_SCRATCH_LEN};
+use super::{ComputeBackend, SliceBatch, PACK_SCRATCH_LEN};
 use crate::linalg::gemm::{apply_beta, load_tile, store_tile, tile_grid};
 use crate::linalg::Matrix;
 use crate::ozaki::gemm::slice_pair_gemm_rows;
@@ -114,6 +114,47 @@ impl ComputeBackend for ParallelBackend {
             let rows = chunk.len() / n;
             for &(t, u) in pairs {
                 slice_pair_gemm_rows(a, t, b, u, r0, rows, chunk);
+            }
+        });
+    }
+
+    fn slice_pair_gemm_batches(&self, batches: &mut [SliceBatch<'_>]) {
+        // One fused schedule for the whole round: every batch's output
+        // rows are chunked exactly as in `slice_pair_gemm_batch`, and all
+        // chunks across all problems drain through one work-stealing
+        // queue, so a round with many small problems still fills the
+        // machine. Integer accumulation into disjoint buffers keeps any
+        // interleaving bitwise identical to the sequential default.
+        let total_ops: usize = batches.iter().map(SliceBatch::ops).sum();
+        if total_ops < self.cutoff_ops {
+            for bt in batches.iter_mut() {
+                for &(t, u) in bt.pairs {
+                    slice_pair_gemm_rows(bt.a, t, bt.b, u, 0, bt.a.rows, bt.out);
+                }
+            }
+            return;
+        }
+        type Chunk<'q> =
+            (&'q SlicedMatrix, &'q SlicedMatrix, &'q [(usize, usize)], usize, usize, &'q mut [i64]);
+        let mut work: Vec<Chunk<'_>> = Vec::new();
+        for bt in batches.iter_mut() {
+            let (m, n) = (bt.a.rows, bt.b.rows);
+            assert_eq!(bt.out.len(), m * n);
+            if m == 0 || n == 0 || bt.pairs.is_empty() {
+                continue;
+            }
+            let chunk_rows = m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).max(2);
+            let mut row0 = 0;
+            for chunk in bt.out.chunks_mut(chunk_rows * n) {
+                let rows = chunk.len() / n;
+                work.push((bt.a, bt.b, bt.pairs, n, row0, chunk));
+                row0 += rows;
+            }
+        }
+        drain(&self.pool, work, |(a, b, pairs, n, row0, chunk)| {
+            let rows = chunk.len() / n;
+            for &(t, u) in pairs {
+                slice_pair_gemm_rows(a, t, b, u, row0, rows, chunk);
             }
         });
     }

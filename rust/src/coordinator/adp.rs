@@ -10,10 +10,12 @@ use std::time::Instant;
 
 use super::heuristic::{HeuristicInput, SelectionHeuristic};
 use super::metrics::Metrics;
+use super::plan::EscPlanCache;
 use super::scan::scan_pair;
 use crate::backend::{BackendSpec, ComputeBackend};
 use crate::esc::coarse::{coarse_esc_gemm, DEFAULT_BLOCK};
 use crate::linalg::Matrix;
+use crate::ozaki::batched::{gemm_grouped, GroupedProblem, SliceCache};
 use crate::ozaki::{emulated_gemm_on, OzakiConfig, SliceEncoding};
 use crate::runtime::{ArtifactKind, RuntimeHandle};
 
@@ -96,6 +98,13 @@ pub struct AdpConfig {
     /// only changes how much hardware a request uses. Share one `Arc`
     /// across engines to share its thread pool.
     pub backend: Arc<dyn ComputeBackend>,
+    /// ESC plan cache: skips the O(m·n·nb) coarse-ESC reduction when the
+    /// (shape, exponent-summary) key repeats. `None` => always reduce.
+    /// Share one `Arc` across engines so a whole service learns together.
+    pub plan_cache: Option<Arc<EscPlanCache>>,
+    /// Sliced-operand cache for [`AdpEngine::gemm_grouped`]. `None` =>
+    /// each grouped call amortizes only within itself (private cache).
+    pub slice_cache: Option<Arc<SliceCache>>,
 }
 
 impl AdpConfig {
@@ -111,6 +120,8 @@ impl AdpConfig {
             runtime: None,
             use_artifacts: true,
             backend: BackendSpec::Serial.build(),
+            plan_cache: None,
+            slice_cache: None,
         }
     }
 
@@ -131,6 +142,16 @@ impl AdpConfig {
 
     pub fn with_max_slices(mut self, s: usize) -> AdpConfig {
         self.max_slices = s;
+        self
+    }
+
+    pub fn with_plan_cache(mut self, cache: Arc<EscPlanCache>) -> AdpConfig {
+        self.plan_cache = Some(cache);
+        self
+    }
+
+    pub fn with_slice_cache(mut self, cache: Arc<SliceCache>) -> AdpConfig {
+        self.slice_cache = Some(cache);
         self
     }
 }
@@ -166,7 +187,7 @@ impl AdpEngine {
         }
 
         // ---- Guardrail 2: coarsened ESC (§5.2) -----------------------
-        let esc = coarse_esc_gemm(a, b, self.cfg.esc_block);
+        let esc = self.coarse_esc(a, b);
         let bits = self.cfg.target_mantissa + esc + 1;
         let slices = self.cfg.encoding.slices_for_bits(bits);
         if slices > self.cfg.max_slices {
@@ -176,7 +197,7 @@ impl AdpEngine {
         }
 
         // ---- Guardrail 3: profitability heuristic (§5.3) -------------
-        let hin = HeuristicInput { m: a.rows, k: a.cols, n: b.cols, slices };
+        let hin = HeuristicInput::single(a.rows, a.cols, b.cols, slices);
         if !self.cfg.heuristic.emulate(&hin) {
             let guardrail_s = t0.elapsed().as_secs_f64();
             let (c, exec_s) = self.native(a, b);
@@ -206,6 +227,154 @@ impl AdpEngine {
         let c = emulated_gemm_on(a, b, &cfg, self.cfg.backend.as_ref());
         let exec_s = te.elapsed().as_secs_f64();
         self.finish(c, GemmDecision::EmulatedNative { slices }, esc, slices, guardrail_s, exec_s)
+    }
+
+    /// Coarse ESC through the plan cache when configured (recording the
+    /// hit/miss), the direct reduction otherwise. Identical values either
+    /// way — the cache only reuses reductions whose exponent summary
+    /// matches exactly.
+    fn coarse_esc(&self, a: &Matrix, b: &Matrix) -> i32 {
+        match &self.cfg.plan_cache {
+            Some(pc) => {
+                let (esc, hit) = pc.esc_gemm(a, b, self.cfg.esc_block);
+                self.metrics.record_esc_cache(hit);
+                esc
+            }
+            None => coarse_esc_gemm(a, b, self.cfg.esc_block),
+        }
+    }
+
+    /// Grouped entry point of the coalescing dispatcher: run the Fig 8
+    /// guardrails per problem (the exception-handling fallbacks are fully
+    /// preserved), then execute every emulatable problem through the
+    /// slice-cached grouped pipeline as **one** backend schedule
+    /// ([`crate::ozaki::batched::gemm_grouped`]).
+    ///
+    /// Results are returned in input order. Emulated results are bitwise
+    /// identical to calling [`AdpEngine::gemm`] per problem on the native
+    /// pipeline; the AOT-artifact dispatch is intentionally not used here
+    /// (grouped schedules target the native pipeline). `exec_s` of each
+    /// grouped outcome is the group's wall time split evenly — the group
+    /// runs as one schedule, so no finer attribution exists.
+    ///
+    /// The profitability heuristic sees `batch` = how many group members
+    /// actually share the problem's operands (1 when nothing is shared),
+    /// so a batch-aware cost model can only flip emulate-vs-native where
+    /// slice-cache amortization is real; with such a model the *decision*
+    /// may legitimately differ from the standalone path — the emulated
+    /// numerics never do.
+    pub fn gemm_grouped(&self, problems: &[(&Matrix, &Matrix)]) -> Vec<(Matrix, AdpOutcome)> {
+        struct Pending {
+            idx: usize,
+            slices: usize,
+            esc: i32,
+            guardrail_s: f64,
+        }
+        let mut results: Vec<Option<(Matrix, AdpOutcome)>> =
+            (0..problems.len()).map(|_| None).collect();
+        let mut pending: Vec<Pending> = Vec::new();
+        // How many group members actually share each operand (by shape +
+        // content fingerprint): the heuristic's amortization factor must
+        // reflect real slice-cache sharing, not the raw bucket size —
+        // distinct-operand requests get batch = 1 and are judged exactly
+        // like standalone requests.
+        let mut multiplicity: std::collections::HashMap<(usize, usize, u64, u64), usize> =
+            std::collections::HashMap::new();
+        let fps: Vec<[(usize, usize, u64, u64); 2]> = problems
+            .iter()
+            .map(|&(a, b)| {
+                let fa = a.fingerprint();
+                let fb = b.fingerprint();
+                [(a.rows, a.cols, fa.0, fa.1), (b.rows, b.cols, fb.0, fb.1)]
+            })
+            .collect();
+        for fp in &fps {
+            *multiplicity.entry(fp[0]).or_insert(0) += 1;
+            *multiplicity.entry(fp[1]).or_insert(0) += 1;
+        }
+        for (idx, &(a, b)) in problems.iter().enumerate() {
+            assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+            let t0 = Instant::now();
+            let flags = scan_pair(a, b);
+            if !flags.clean() {
+                let decision = if flags.has_nan {
+                    GemmDecision::FallbackNan
+                } else {
+                    GemmDecision::FallbackInf
+                };
+                let guardrail_s = t0.elapsed().as_secs_f64();
+                let (c, exec_s) = self.native(a, b);
+                results[idx] = Some(self.finish(c, decision, 0, 0, guardrail_s, exec_s));
+                continue;
+            }
+            let esc = self.coarse_esc(a, b);
+            let bits = self.cfg.target_mantissa + esc + 1;
+            let slices = self.cfg.encoding.slices_for_bits(bits);
+            if slices > self.cfg.max_slices {
+                let guardrail_s = t0.elapsed().as_secs_f64();
+                let (c, exec_s) = self.native(a, b);
+                results[idx] = Some(self.finish(
+                    c,
+                    GemmDecision::FallbackEsc { esc },
+                    esc,
+                    slices,
+                    guardrail_s,
+                    exec_s,
+                ));
+                continue;
+            }
+            let batch = multiplicity[&fps[idx][0]].max(multiplicity[&fps[idx][1]]);
+            let hin = HeuristicInput { m: a.rows, k: a.cols, n: b.cols, slices, batch };
+            if !self.cfg.heuristic.emulate(&hin) {
+                let guardrail_s = t0.elapsed().as_secs_f64();
+                let (c, exec_s) = self.native(a, b);
+                results[idx] = Some(self.finish(
+                    c,
+                    GemmDecision::FallbackHeuristic,
+                    esc,
+                    slices,
+                    guardrail_s,
+                    exec_s,
+                ));
+                continue;
+            }
+            let guardrail_s = t0.elapsed().as_secs_f64();
+            pending.push(Pending { idx, slices, esc, guardrail_s });
+        }
+
+        if !pending.is_empty() {
+            let te = Instant::now();
+            let private;
+            let cache: &SliceCache = match &self.cfg.slice_cache {
+                Some(c) => c.as_ref(),
+                None => {
+                    private = SliceCache::default();
+                    &private
+                }
+            };
+            let probs: Vec<GroupedProblem<'_>> = pending
+                .iter()
+                .map(|p| GroupedProblem {
+                    a: problems[p.idx].0,
+                    b: problems[p.idx].1,
+                    cfg: OzakiConfig::with_encoding(p.slices, self.cfg.encoding),
+                })
+                .collect();
+            let (cs, gstats) = gemm_grouped(&probs, cache, self.cfg.backend.as_ref());
+            self.metrics.record_group(&gstats);
+            let exec_each = te.elapsed().as_secs_f64() / pending.len() as f64;
+            for (p, c) in pending.into_iter().zip(cs) {
+                results[p.idx] = Some(self.finish(
+                    c,
+                    GemmDecision::EmulatedNative { slices: p.slices },
+                    p.esc,
+                    p.slices,
+                    p.guardrail_s,
+                    exec_each,
+                ));
+            }
+        }
+        results.into_iter().map(|r| r.expect("every problem resolved")).collect()
     }
 
     /// Native FP64 fallback: prefer the DGEMM artifact if registered
@@ -381,6 +550,96 @@ mod tests {
             let e = (c.data[idx] - c_ref.data[idx]).abs() / denom.data[idx];
             assert!(e < 64.0 * f64::EPSILON, "err {e}");
         }
+    }
+
+    #[test]
+    fn grouped_matches_per_request_bitwise_and_counts_caches() {
+        let mut rng = Rng::new(88);
+        let eng = AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(AlwaysEmulate))
+                .with_plan_cache(Arc::new(EscPlanCache::default()))
+                .with_slice_cache(Arc::new(SliceCache::default())),
+        );
+        // [1, 2) entries: every problem's ESC (hence slice count) is the
+        // same, so the shared A is exactly one slice-cache key.
+        let a = Matrix::uniform(20, 20, 1.0, 2.0, &mut rng);
+        let bs: Vec<Matrix> =
+            (0..3).map(|_| Matrix::uniform(20, 20, 1.0, 2.0, &mut rng)).collect();
+        let probs: Vec<(&Matrix, &Matrix)> = bs.iter().map(|b| (&a, b)).collect();
+        let grouped = eng.gemm_grouped(&probs);
+        let reference = engine();
+        for ((c, out), b) in grouped.iter().zip(&bs) {
+            assert!(out.decision.is_emulated(), "{:?}", out.decision);
+            let (cr, _) = reference.gemm(&a, b);
+            for (x, y) in c.data.iter().zip(&cr.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // Shared A decomposed once: 4 misses (A + 3 Bs), 2 hits (A reuse).
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.slice_cache_misses, 4);
+        assert_eq!(snap.slice_cache_hits, 2);
+        // All [1,2) operands share one exponent summary per shape, so the
+        // plan cache converges after the very first reduction.
+        assert_eq!(snap.esc_cache_misses, 1);
+        assert_eq!(snap.esc_cache_hits, 2);
+        // Replay: everything hits (plan cache and slice cache).
+        eng.gemm_grouped(&probs);
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.slice_cache_misses, 4, "replay must not re-decompose");
+        assert_eq!(snap.slice_cache_hits, 8);
+        assert_eq!(snap.esc_cache_misses, 1);
+        assert_eq!(snap.esc_cache_hits, 5);
+    }
+
+    #[test]
+    fn grouped_preserves_guardrail_fallbacks() {
+        // A NaN problem and an over-span problem inside a group must fall
+        // back individually while their neighbors still emulate.
+        let mut rng = Rng::new(89);
+        let eng = engine();
+        let good_a = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+        let good_b = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+        let mut nan_a = good_a.clone();
+        *nan_a.at_mut(0, 0) = f64::NAN;
+        let mut span_a = good_a.clone();
+        let mut span_b = good_b.clone();
+        *span_a.at_mut(0, 0) = 1e300;
+        *span_b.at_mut(0, 0) = 1e-300;
+        let probs: Vec<(&Matrix, &Matrix)> =
+            vec![(&good_a, &good_b), (&nan_a, &good_b), (&span_a, &span_b)];
+        let rs = eng.gemm_grouped(&probs);
+        assert!(rs[0].1.decision.is_emulated());
+        assert_eq!(rs[1].1.decision, GemmDecision::FallbackNan);
+        assert!(rs[1].0.at(0, 0).is_nan());
+        assert!(matches!(rs[2].1.decision, GemmDecision::FallbackEsc { .. }));
+        // Fallback results equal the per-request engine's exactly.
+        let (c_nan, _) = engine().gemm(&nan_a, &good_b);
+        for (x, y) in rs[1].0.data.iter().zip(&c_nan.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn plan_cache_speeds_repeat_shapes_on_single_requests() {
+        let mut rng = Rng::new(90);
+        let eng = AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(AlwaysEmulate))
+                .with_plan_cache(Arc::new(EscPlanCache::default())),
+        );
+        let a = Matrix::uniform(12, 12, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(12, 12, 1.0, 2.0, &mut rng);
+        let (c1, o1) = eng.gemm(&a, &b);
+        let (c2, o2) = eng.gemm(&a, &b);
+        assert_eq!(o1.esc, o2.esc);
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.esc_cache_misses, 1);
+        assert_eq!(snap.esc_cache_hits, 1);
     }
 
     #[test]

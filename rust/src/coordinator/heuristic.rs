@@ -18,6 +18,17 @@ pub struct HeuristicInput {
     pub k: usize,
     pub n: usize,
     pub slices: usize,
+    /// Requests amortizing the same operand decompositions (1 for a
+    /// standalone GEMM). The coalescing dispatcher reports its shape
+    /// bucket size here so cost models can spread the slicing cost.
+    pub batch: usize,
+}
+
+impl HeuristicInput {
+    /// Standalone (unbatched) request.
+    pub fn single(m: usize, k: usize, n: usize, slices: usize) -> HeuristicInput {
+        HeuristicInput { m, k, n, slices, batch: 1 }
+    }
 }
 
 pub trait SelectionHeuristic: Send {
@@ -86,7 +97,10 @@ impl SelectionHeuristic for CpuCalibration {
         let elems = (inp.m * inp.k + inp.k * inp.n) as f64;
         let s = inp.slices as f64;
         let pairs = s * (s + 1.0) / 2.0;
-        let t_emu = self.pair_ns * pairs * ops + self.slice_ns * s * elems + self.fixed_ns;
+        // Slicing amortizes across a coalesced bucket (the slice cache
+        // decomposes a shared operand once); the pair GEMMs do not.
+        let amort = inp.batch.max(1) as f64;
+        let t_emu = self.pair_ns * pairs * ops + self.slice_ns * s * elems / amort + self.fixed_ns;
         let t_nat = self.fp64_ns * ops;
         t_emu < t_nat
     }
@@ -124,15 +138,15 @@ mod tests {
     #[test]
     fn platform_heuristic_matches_model() {
         let h = PlatformHeuristic { platform: GB200 };
-        assert!(!h.emulate(&HeuristicInput { m: 64, k: 64, n: 64, slices: 7 }));
-        assert!(h.emulate(&HeuristicInput { m: 8192, k: 8192, n: 8192, slices: 7 }));
+        assert!(!h.emulate(&HeuristicInput::single(64, 64, 64, 7)));
+        assert!(h.emulate(&HeuristicInput::single(8192, 8192, 8192, 7)));
     }
 
     #[test]
     fn rtx_emulates_much_earlier() {
         let g = PlatformHeuristic { platform: GB200 };
         let r = PlatformHeuristic { platform: RTX_PRO_6000 };
-        let mid = HeuristicInput { m: 1024, k: 1024, n: 1024, slices: 7 };
+        let mid = HeuristicInput::single(1024, 1024, 1024, 7);
         assert!(r.emulate(&mid));
         // GB200's strong FP64 makes mid sizes marginal there.
         let _ = g.emulate(&mid); // decision platform-dependent; just exercise
@@ -142,7 +156,18 @@ mod tests {
     fn huge_slice_counts_disable_emulation() {
         let h = PlatformHeuristic { platform: RTX_PRO_6000 };
         // ~64 slices => 2080 pair GEMMs: never profitable.
-        assert!(!h.emulate(&HeuristicInput { m: 4096, k: 4096, n: 4096, slices: 64 }));
+        assert!(!h.emulate(&HeuristicInput::single(4096, 4096, 4096, 64)));
+    }
+
+    #[test]
+    fn batch_amortization_only_helps() {
+        // A synthetic slicing-dominated cost model: batching amortizes the
+        // slicing term, so emulation can only become *more* attractive.
+        let c = CpuCalibration { fp64_ns: 1.0, pair_ns: 0.001, slice_ns: 50.0, fixed_ns: 0.0 };
+        let single = HeuristicInput::single(64, 64, 64, 7);
+        let batched = HeuristicInput { batch: 64, ..single };
+        assert!(!c.emulate(&single), "slicing-dominated single request stays native");
+        assert!(c.emulate(&batched), "amortized bucket flips to emulation");
     }
 
     #[test]
@@ -151,6 +176,6 @@ mod tests {
         assert!(c.fp64_ns > 0.0 && c.pair_ns > 0.0 && c.slice_ns > 0.0);
         // On a CPU substrate a 28-pair emulation is never faster than one
         // native FP64 GEMM — the calibrated heuristic must say "native".
-        assert!(!c.emulate(&HeuristicInput { m: 512, k: 512, n: 512, slices: 7 }));
+        assert!(!c.emulate(&HeuristicInput::single(512, 512, 512, 7)));
     }
 }

@@ -22,6 +22,12 @@ struct Inner {
     slice_histogram: BTreeMap<usize, u64>,
     guardrail_s: f64,
     exec_s: f64,
+    slice_cache_hits: u64,
+    slice_cache_misses: u64,
+    esc_cache_hits: u64,
+    esc_cache_misses: u64,
+    coalesced_batches: u64,
+    coalesced_requests: u64,
 }
 
 /// Immutable snapshot of the counters.
@@ -36,6 +42,19 @@ pub struct MetricsSnapshot {
     pub slice_histogram: Vec<(usize, u64)>,
     pub guardrail_s: f64,
     pub exec_s: f64,
+    /// Operand decompositions *reused* from the grouped-pipeline slice
+    /// cache (each hit is one `slice_a`/`slice_b` pass not paid).
+    pub slice_cache_hits: u64,
+    /// Operand decompositions actually performed by the grouped pipeline.
+    pub slice_cache_misses: u64,
+    /// Coarse-ESC reductions skipped by the plan cache.
+    pub esc_cache_hits: u64,
+    /// Coarse-ESC reductions performed through the plan cache.
+    pub esc_cache_misses: u64,
+    /// Shape-bucketed groups executed by the coalescing dispatcher.
+    pub coalesced_batches: u64,
+    /// Requests served inside those groups.
+    pub coalesced_requests: u64,
 }
 
 impl MetricsSnapshot {
@@ -73,6 +92,30 @@ impl Metrics {
         g.exec_s += out.exec_s;
     }
 
+    /// Fold one grouped-pipeline slicing report into the counters.
+    pub fn record_group(&self, stats: &crate::ozaki::GroupStats) {
+        let mut g = self.inner.lock().unwrap();
+        g.slice_cache_hits += stats.slice_cache_hits;
+        g.slice_cache_misses += stats.slice_cache_misses;
+    }
+
+    /// Record one plan-cache consultation.
+    pub fn record_esc_cache(&self, hit: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if hit {
+            g.esc_cache_hits += 1;
+        } else {
+            g.esc_cache_misses += 1;
+        }
+    }
+
+    /// Record one coalesced shape bucket of `n` requests.
+    pub fn record_coalesced_batch(&self, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.coalesced_batches += 1;
+        g.coalesced_requests += n;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap().clone();
         MetricsSnapshot {
@@ -85,6 +128,12 @@ impl Metrics {
             slice_histogram: g.slice_histogram.into_iter().collect(),
             guardrail_s: g.guardrail_s,
             exec_s: g.exec_s,
+            slice_cache_hits: g.slice_cache_hits,
+            slice_cache_misses: g.slice_cache_misses,
+            esc_cache_hits: g.esc_cache_hits,
+            esc_cache_misses: g.esc_cache_misses,
+            coalesced_batches: g.coalesced_batches,
+            coalesced_requests: g.coalesced_requests,
         }
     }
 
@@ -114,6 +163,23 @@ mod tests {
         assert_eq!(s.fallbacks(), 1);
         assert_eq!(s.slice_histogram, vec![(7, 2), (9, 1)]);
         assert!((s.guardrail_fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_and_coalesce_counters() {
+        let m = Metrics::default();
+        m.record_group(&crate::ozaki::GroupStats {
+            slice_cache_hits: 3,
+            slice_cache_misses: 5,
+            chunked_bypass: 0,
+        });
+        m.record_esc_cache(true);
+        m.record_esc_cache(false);
+        m.record_coalesced_batch(4);
+        let s = m.snapshot();
+        assert_eq!((s.slice_cache_hits, s.slice_cache_misses), (3, 5));
+        assert_eq!((s.esc_cache_hits, s.esc_cache_misses), (1, 1));
+        assert_eq!((s.coalesced_batches, s.coalesced_requests), (1, 4));
     }
 
     #[test]

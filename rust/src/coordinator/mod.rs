@@ -16,18 +16,25 @@
 //! ```
 //!
 //! * [`scan`] — NaN/Inf safety scan (§5.1).
-//! * [`heuristic`] — emulate-vs-native selection (§5.3).
-//! * [`adp`] — the decision engine (§5.4) and its outcome record.
+//! * [`heuristic`] — emulate-vs-native selection (§5.3), batch-aware.
+//! * [`adp`] — the decision engine (§5.4) and its outcome record, with a
+//!   grouped entry point feeding the slice-cached batched pipeline.
+//! * [`plan`] — the ESC plan cache: skips redundant coarse-ESC reductions
+//!   for repeat (shape, exponent-summary) keys, guarantee-preserving.
 //! * [`service`] — multi-worker batched GEMM service (the "cuBLAS behind a
-//!   queue" deployment shape; std threads — tokio unavailable offline).
-//! * [`metrics`] — dispatch/outcome/latency accounting (Fig 7/8 inputs).
+//!   queue" deployment shape; std threads — tokio unavailable offline),
+//!   with shape-bucketed request coalescing and `submit_batch`.
+//! * [`metrics`] — dispatch/outcome/latency accounting (Fig 7/8 inputs)
+//!   plus slice-/plan-cache and coalescing counters.
 
 pub mod adp;
 pub mod heuristic;
 pub mod metrics;
+pub mod plan;
 pub mod scan;
 pub mod service;
 
 pub use adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
 pub use metrics::Metrics;
-pub use service::{GemmService, ServiceConfig, SubmitError};
+pub use plan::EscPlanCache;
+pub use service::{GemmService, RejectedSubmit, ServiceConfig, SubmitError};

@@ -1,0 +1,222 @@
+//! ADP plan cache (§5.2 amortized): skip redundant coarse-ESC reductions
+//! for repeat shapes without weakening the accuracy guarantee.
+//!
+//! The coarse ESC of §4 has two phases with very different costs: building
+//! the per-row block exponent tables is **linear** in the operand sizes
+//! (O(mk + kn)), while the max-plus reduction over all (i, j) dots is
+//! O(m·n·nb). A service stream that keeps seeing the same shapes (and, per
+//! the batched-GEMM motivation, often the *same operands*) re-pays the
+//! expensive reduction for identical inputs.
+//!
+//! [`EscPlanCache`] keys a finished ESC by **(shape, coarsening block,
+//! exponent-span summary)** where the summary is the full pair of coarse
+//! block-exponent tables. The coarse ESC is a pure function of exactly
+//! those tables, so a key match reuses an ESC that is *identical* — not
+//! merely conservative — to what a fresh reduction would produce. The
+//! paper's "coarse never underestimates" safety proof is therefore
+//! untouched, and the NaN/Inf exception scan is never skipped (it runs
+//! before the cache is consulted, see [`super::adp::AdpEngine::gemm`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::esc::coarse::{coarse_esc_from, CoarseExponents};
+use crate::linalg::Matrix;
+
+/// Cache key: shape + coarsening block + both operands' coarse exponent
+/// tables. Exact equality only — no lossy hashing of the tables — so a
+/// hit can never smuggle in another input's (possibly smaller) ESC.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    a_bmax: Vec<i32>,
+    a_bmin: Vec<i32>,
+    b_bmax: Vec<i32>,
+    b_bmin: Vec<i32>,
+}
+
+struct Inner {
+    /// value = (esc, last-used stamp).
+    map: HashMap<PlanKey, (i32, u64)>,
+    tick: u64,
+}
+
+/// Bounded ESC plan cache; thread-safe, share per service via `Arc`.
+pub struct EscPlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EscPlanCache {
+    pub fn new(capacity: usize) -> EscPlanCache {
+        EscPlanCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Coarse ESC of `A * B` at coarsening `block`, reusing a cached
+    /// reduction when the exponent summary matches exactly. Returns
+    /// (esc, was_hit). Always bit-for-bit equal to
+    /// [`crate::esc::coarse_esc_gemm`] on the same inputs.
+    pub fn esc_gemm(&self, a: &Matrix, b: &Matrix, block: usize) -> (i32, bool) {
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let ca = CoarseExponents::of_rows(a, block);
+        let cb = CoarseExponents::of_rows(&b.transpose(), block);
+        let key = PlanKey {
+            m: a.rows,
+            k: a.cols,
+            n: b.cols,
+            block,
+            a_bmax: ca.bmax.clone(),
+            a_bmin: ca.bmin.clone(),
+            b_bmax: cb.bmax.clone(),
+            b_bmin: cb.bmin.clone(),
+        };
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(entry) = g.map.get_mut(&key) {
+                entry.1 = tick;
+                let esc = entry.0;
+                drop(g);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return (esc, true);
+            }
+        }
+        // Miss: the expensive O(m*n*nb) max-plus reduction.
+        let esc = coarse_esc_from(&ca, &cb);
+        let mut g = self.inner.lock().unwrap();
+        if g.map.len() >= self.capacity && !g.map.contains_key(&key) {
+            // Evict the least-recently-used entry (capacity is small; the
+            // linear scan is noise next to the reduction just paid).
+            if let Some(victim) = g
+                .map
+                .iter()
+                .min_by_key(|(_, &(_, stamp))| stamp)
+                .map(|(k, _)| k.clone())
+            {
+                g.map.remove(&victim);
+            }
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        g.map.insert(key, (esc, tick));
+        drop(g);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        (esc, false)
+    }
+
+    /// Lifetime (hits, misses).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Resident plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for EscPlanCache {
+    fn default() -> EscPlanCache {
+        EscPlanCache::new(64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::esc::coarse_esc_gemm;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn repeat_inputs_hit_and_agree() {
+        let mut rng = Rng::new(720);
+        let cache = EscPlanCache::new(8);
+        let a = Matrix::uniform(9, 40, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(40, 7, -2.0, 2.0, &mut rng);
+        let (e1, h1) = cache.esc_gemm(&a, &b, 16);
+        let (e2, h2) = cache.esc_gemm(&a, &b, 16);
+        assert!(!h1 && h2);
+        assert_eq!(e1, e2);
+        assert_eq!(e1, coarse_esc_gemm(&a, &b, 16));
+        // A different block size is a different plan.
+        let (_, h3) = cache.esc_gemm(&a, &b, 8);
+        assert!(!h3);
+        assert_eq!(cache.stats(), (1, 2));
+    }
+
+    #[test]
+    fn mantissa_changes_hit_exponent_changes_miss() {
+        // Same exponent structure => same summary => hit, and the reused
+        // ESC is exactly what a fresh reduction would compute (ESC is a
+        // function of exponents only). Changed exponents => miss.
+        let mut rng = Rng::new(721);
+        let cache = EscPlanCache::new(8);
+        // entries in [1, 2): frexp exponent 1 everywhere
+        let a = Matrix::uniform(6, 24, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(24, 6, 1.0, 2.0, &mut rng);
+        let (e1, _) = cache.esc_gemm(&a, &b, 8);
+        let a2 = Matrix::uniform(6, 24, 1.0, 2.0, &mut rng); // new mantissas
+        let (e2, hit) = cache.esc_gemm(&a2, &b, 8);
+        assert!(hit, "identical exponent summary must hit");
+        assert_eq!(e2, coarse_esc_gemm(&a2, &b, 8), "reused ESC must equal fresh ESC");
+        assert_eq!(e1, e2);
+        let mut a3 = a.clone();
+        *a3.at_mut(0, 0) = 4.0; // exponent 3 at one entry
+        let (_, hit3) = cache.esc_gemm(&a3, &b, 8);
+        assert!(!hit3, "changed exponent structure must miss");
+    }
+
+    #[test]
+    fn eviction_keeps_capacity_bounded() {
+        let mut rng = Rng::new(722);
+        let cache = EscPlanCache::new(2);
+        for i in 0..5 {
+            let a = Matrix::uniform(3 + i, 10, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(10, 3, -1.0, 1.0, &mut rng);
+            cache.esc_gemm(&a, &b, 4);
+        }
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn prop_cache_transparent() {
+        // Hit or miss, the cached path must be indistinguishable from
+        // calling coarse_esc_gemm directly.
+        let cache = EscPlanCache::new(4);
+        prop::check("plan cache == direct coarse ESC", 40, |rng| {
+            let m = rng.int(1, 8) as usize;
+            let k = rng.int(1, 40) as usize;
+            let n = rng.int(1, 8) as usize;
+            let span = rng.int(0, 40) as i32;
+            let a = Matrix::from_fn(m, k, |_, _| {
+                rng.uniform(1.0, 2.0) * 2f64.powi(rng.int(-span as i64, span as i64) as i32)
+            });
+            let b = Matrix::from_fn(k, n, |_, _| {
+                rng.uniform(1.0, 2.0) * 2f64.powi(rng.int(-span as i64, span as i64) as i32)
+            });
+            let block = rng.int(1, 16) as usize;
+            let (esc, _) = cache.esc_gemm(&a, &b, block);
+            prop::assert_that(
+                esc == coarse_esc_gemm(&a, &b, block),
+                format!("cached {esc} != direct"),
+            )
+        });
+    }
+}

@@ -11,18 +11,33 @@
 //! tiles across the whole machine, while a saturated queue degrades each
 //! worker to inline execution instead of oversubscribing cores with
 //! N workers × T oblivious threads.
+//!
+//! ## Coalescing dispatcher
+//!
+//! With [`ServiceConfig::coalesce`] enabled (or via [`GemmService::submit_batch`],
+//! which always groups), workers batch requests before execution: a worker
+//! that dequeues a request keeps draining the queue for a small
+//! micro-batching window (`coalesce_window`, up to `max_batch` requests),
+//! buckets what it collected by (m, k, n) shape, and runs each bucket
+//! through [`AdpEngine::gemm_grouped`] — one fused backend schedule per
+//! bucket, with operand decompositions shared through the service-wide
+//! [`SliceCache`] and ESC reductions through the [`EscPlanCache`].
+//! Grouped results are bitwise identical to the per-request path.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::adp::{AdpConfig, AdpEngine, AdpOutcome};
 use super::heuristic::SelectionHeuristic;
 use super::metrics::Metrics;
+use super::plan::EscPlanCache;
 use crate::backend::BackendSpec;
 use crate::linalg::Matrix;
+use crate::ozaki::batched::SliceCache;
 use crate::ozaki::SliceEncoding;
 use crate::runtime::RuntimeHandle;
 
@@ -42,23 +57,52 @@ pub struct GemmResponse {
     pub total_s: f64,
 }
 
+/// What travels through the bounded queue: a single request, or an
+/// explicit group from [`GemmService::submit_batch`] (always coalesced,
+/// regardless of the `coalesce` flag).
+enum QueueItem {
+    One(GemmRequest),
+    Batch(Vec<GemmRequest>),
+}
+
 /// Why a submission was rejected.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// The service was shut down (or every worker died); the request
-    /// queue is closed and the matrices were dropped.
+    /// queue is closed. Permanent — retrying cannot succeed.
     ServiceStopped,
+    /// The bounded queue is full right now. Transient backpressure:
+    /// retry later, shed load, or use the blocking [`GemmService::submit`].
+    /// Only [`GemmService::try_submit`] reports this.
+    QueueFull,
+}
+
+impl SubmitError {
+    /// Whether a later retry can succeed.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, SubmitError::QueueFull)
+    }
 }
 
 impl fmt::Display for SubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SubmitError::ServiceStopped => write!(f, "gemm service stopped"),
+            SubmitError::QueueFull => write!(f, "gemm service queue full"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// A rejected non-blocking submission: the error plus the operands, handed
+/// back so the caller can retry without cloning up front.
+#[derive(Debug)]
+pub struct RejectedSubmit {
+    pub error: SubmitError,
+    pub a: Matrix,
+    pub b: Matrix,
+}
 
 /// Service configuration. The heuristic/encoding mirror [`AdpConfig`];
 /// each worker constructs its own engine from a factory closure because
@@ -75,6 +119,19 @@ pub struct ServiceConfig {
     /// service). Bitwise identical across variants; default is the
     /// machine-sized parallel backend.
     pub backend: BackendSpec,
+    /// Coalesce individually-submitted requests: a worker drains the
+    /// queue for `coalesce_window` (up to `max_batch` requests), buckets
+    /// by shape and executes each bucket as one grouped schedule.
+    /// `submit_batch` groups are coalesced regardless of this flag.
+    pub coalesce: bool,
+    /// Micro-batching window a worker waits to fill a batch.
+    pub coalesce_window: Duration,
+    /// Max requests coalesced into one group.
+    pub max_batch: usize,
+    /// Resident decompositions in the service-wide [`SliceCache`].
+    pub slice_cache_entries: usize,
+    /// Resident plans in the service-wide [`EscPlanCache`].
+    pub plan_cache_entries: usize,
 }
 
 impl Default for ServiceConfig {
@@ -88,16 +145,23 @@ impl Default for ServiceConfig {
             esc_block: crate::esc::coarse::DEFAULT_BLOCK,
             use_artifacts: true,
             backend: BackendSpec::auto(),
+            coalesce: false,
+            coalesce_window: Duration::from_micros(200),
+            max_batch: 16,
+            slice_cache_entries: 32,
+            plan_cache_entries: 64,
         }
     }
 }
 
-/// Handle to the running service; cloneable, submission is thread-safe.
+/// Handle to the running service; submission and shutdown are
+/// thread-safe through `&self`, so the handle can be shared (e.g. in an
+/// `Arc`) between submitters and a controller racing them.
 pub struct GemmService {
-    tx: SyncSender<GemmRequest>,
+    tx: Mutex<Option<SyncSender<QueueItem>>>,
     pub metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl GemmService {
@@ -108,11 +172,14 @@ impl GemmService {
         heuristic_factory: impl Fn() -> Box<dyn SelectionHeuristic>,
     ) -> GemmService {
         let metrics = Arc::new(Metrics::default());
-        let (tx, rx) = mpsc::sync_channel::<GemmRequest>(cfg.queue_depth);
+        let (tx, rx) = mpsc::sync_channel::<QueueItem>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let inflight = Arc::new(AtomicU64::new(0));
-        // One backend (=> one thread pool) shared by every worker.
+        // One backend (=> one thread pool) and one cache pair shared by
+        // every worker: the whole service amortizes together.
         let backend = cfg.backend.build();
+        let plan_cache = Arc::new(EscPlanCache::new(cfg.plan_cache_entries));
+        let slice_cache = Arc::new(SliceCache::new(cfg.slice_cache_entries));
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let rx = rx.clone();
@@ -127,27 +194,111 @@ impl GemmService {
                 runtime: runtime.clone(),
                 use_artifacts: cfg.use_artifacts,
                 backend: backend.clone(),
+                plan_cache: Some(plan_cache.clone()),
+                slice_cache: Some(slice_cache.clone()),
+            };
+            let knobs = CoalesceKnobs {
+                coalesce: cfg.coalesce,
+                window: cfg.coalesce_window,
+                max_batch: cfg.max_batch.max(1),
             };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("adp-worker-{wid}"))
-                    .spawn(move || worker_main(rx, engine_cfg, metrics, inflight))
+                    .spawn(move || worker_main(rx, engine_cfg, metrics, inflight, knobs))
                     .expect("spawn worker"),
             );
         }
-        GemmService { tx, metrics, inflight, workers }
+        GemmService {
+            tx: Mutex::new(Some(tx)),
+            metrics,
+            inflight,
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// Clone the live sender, or fail if the service was shut down.
+    fn sender(&self) -> Result<SyncSender<QueueItem>, SubmitError> {
+        self.tx.lock().unwrap().clone().ok_or(SubmitError::ServiceStopped)
     }
 
     /// Submit a request; returns the receiver for its response, or
     /// [`SubmitError::ServiceStopped`] when the queue is closed.
     /// Blocks when the queue is full (backpressure).
     pub fn submit(&self, a: Matrix, b: Matrix) -> Result<Receiver<GemmResponse>, SubmitError> {
+        let tx = self.sender()?;
         let (rtx, rrx) = channel();
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        match self.tx.send(GemmRequest { a, b, reply: rtx, submitted: Instant::now() }) {
+        match tx.send(QueueItem::One(GemmRequest {
+            a,
+            b,
+            reply: rtx,
+            submitted: Instant::now(),
+        })) {
             Ok(()) => Ok(rrx),
             Err(_) => {
                 self.inflight.fetch_sub(1, Ordering::SeqCst);
+                Err(SubmitError::ServiceStopped)
+            }
+        }
+    }
+
+    /// Non-blocking submit. A full queue is reported as the *retryable*
+    /// [`SubmitError::QueueFull`] with the operands handed back, instead
+    /// of blocking the caller or conflating backpressure with shutdown.
+    pub fn try_submit(
+        &self,
+        a: Matrix,
+        b: Matrix,
+    ) -> Result<Receiver<GemmResponse>, RejectedSubmit> {
+        let tx = match self.sender() {
+            Ok(tx) => tx,
+            Err(error) => return Err(RejectedSubmit { error, a, b }),
+        };
+        let (rtx, rrx) = channel();
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let item = QueueItem::One(GemmRequest { a, b, reply: rtx, submitted: Instant::now() });
+        match tx.try_send(item) {
+            Ok(()) => Ok(rrx),
+            Err(e) => {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                let (error, item) = match e {
+                    TrySendError::Full(item) => (SubmitError::QueueFull, item),
+                    TrySendError::Disconnected(item) => (SubmitError::ServiceStopped, item),
+                };
+                let QueueItem::One(req) = item else { unreachable!("sent a One") };
+                Err(RejectedSubmit { error, a: req.a, b: req.b })
+            }
+        }
+    }
+
+    /// Submit a group of requests that should be executed together: the
+    /// group travels the queue as one item and is shape-bucketed and run
+    /// through the grouped pipeline by a single worker, sharing operand
+    /// decompositions via the service slice cache. Blocks when the queue
+    /// is full. Receivers are returned in submission order.
+    pub fn submit_batch(
+        &self,
+        pairs: Vec<(Matrix, Matrix)>,
+    ) -> Result<Vec<Receiver<GemmResponse>>, SubmitError> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let tx = self.sender()?;
+        let n = pairs.len() as u64;
+        let submitted = Instant::now();
+        let mut reqs = Vec::with_capacity(pairs.len());
+        let mut rxs = Vec::with_capacity(pairs.len());
+        for (a, b) in pairs {
+            let (rtx, rrx) = channel();
+            reqs.push(GemmRequest { a, b, reply: rtx, submitted });
+            rxs.push(rrx);
+        }
+        self.inflight.fetch_add(n, Ordering::SeqCst);
+        match tx.send(QueueItem::Batch(reqs)) {
+            Ok(()) => Ok(rxs),
+            Err(_) => {
+                self.inflight.fetch_sub(n, Ordering::SeqCst);
                 Err(SubmitError::ServiceStopped)
             }
         }
@@ -162,10 +313,20 @@ impl GemmService {
         self.inflight.load(Ordering::SeqCst)
     }
 
-    /// Stop accepting work and join the workers.
-    pub fn shutdown(self) {
-        drop(self.tx);
-        for w in self.workers {
+    /// Stop accepting work, drain the queue and join the workers.
+    /// Idempotent, and safe to race against concurrent `submit*` calls:
+    /// a submission either lands before the close (and is served) or
+    /// gets [`SubmitError::ServiceStopped`].
+    pub fn shutdown(&self) {
+        // Closing the queue: drop our sender; in-flight `submit` calls
+        // holding a clone finish their send, then the channel disconnects
+        // and workers drain what remains before exiting.
+        self.tx.lock().unwrap().take();
+        let workers: Vec<_> = {
+            let mut g = self.workers.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for w in workers {
             let _ = w.join();
         }
     }
@@ -182,39 +343,137 @@ impl Drop for InflightGuard<'_> {
     }
 }
 
+#[derive(Clone, Copy)]
+struct CoalesceKnobs {
+    coalesce: bool,
+    window: Duration,
+    max_batch: usize,
+}
+
 fn worker_main(
-    rx: Arc<Mutex<Receiver<GemmRequest>>>,
+    rx: Arc<Mutex<Receiver<QueueItem>>>,
     cfg: AdpConfig,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
+    knobs: CoalesceKnobs,
 ) {
-    let engine = AdpEngine::with_metrics(cfg, metrics);
+    let engine = AdpEngine::with_metrics(cfg, metrics.clone());
     loop {
         // Hold the lock only while dequeuing so workers pull concurrently.
-        let req = match rx.lock().unwrap().recv() {
+        let item = match rx.lock().unwrap().recv() {
             Ok(r) => r,
             Err(_) => break, // service dropped
         };
-        let queue_s = req.submitted.elapsed().as_secs_f64();
+        match item {
+            QueueItem::Batch(reqs) => process_group(&engine, reqs, &metrics, &inflight),
+            QueueItem::One(req) => {
+                if !knobs.coalesce {
+                    process_single(&engine, req, &inflight);
+                    continue;
+                }
+                // Micro-batching: keep draining for the window. Holding
+                // the queue lock here is deliberate — this worker is the
+                // coalescer for the window; an empty drain just means it
+                // processes its one request.
+                let mut batch = vec![req];
+                let deadline = Instant::now() + knobs.window;
+                {
+                    let g = rx.lock().unwrap();
+                    while batch.len() < knobs.max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match g.recv_timeout(deadline - now) {
+                            Ok(QueueItem::One(r)) => batch.push(r),
+                            Ok(QueueItem::Batch(rs)) => {
+                                batch.extend(rs);
+                                break;
+                            }
+                            Err(_) => break, // timeout or disconnect
+                        }
+                    }
+                }
+                if batch.len() == 1 {
+                    process_single(&engine, batch.pop().expect("len checked"), &inflight);
+                } else {
+                    process_group(&engine, batch, &metrics, &inflight);
+                }
+            }
+        }
+    }
+}
+
+fn process_single(engine: &AdpEngine, req: GemmRequest, inflight: &AtomicU64) {
+    let queue_s = req.submitted.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let (c, outcome) = {
+        // Scope the guard so the decrement lands before the reply is
+        // sent (a caller seeing its response must see inflight drop),
+        // while a panic in the engine still decrements during unwind.
+        let _guard = InflightGuard(inflight);
+        engine.gemm(&req.a, &req.b)
+    };
+    let total_s = queue_s + t0.elapsed().as_secs_f64();
+    let _ = req.reply.send(GemmResponse { c, outcome, queue_s, total_s });
+}
+
+fn process_group(
+    engine: &AdpEngine,
+    reqs: Vec<GemmRequest>,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+) {
+    // Shape-mismatched requests cannot enter a grouped schedule; drop
+    // their reply senders (the caller's recv fails, mirroring the
+    // per-request poison behavior) without killing the worker or the
+    // rest of the group.
+    let (valid, invalid): (Vec<GemmRequest>, Vec<GemmRequest>) =
+        reqs.into_iter().partition(|r| r.a.cols == r.b.rows);
+    for req in invalid {
+        let _guard = InflightGuard(inflight);
+        drop(req);
+    }
+    if valid.is_empty() {
+        return;
+    }
+    // Bucket by shape: plan-cache keys repeat within a bucket and the
+    // grouped schedule stays load-balanced.
+    let mut buckets: HashMap<(usize, usize, usize), Vec<GemmRequest>> = HashMap::new();
+    for req in valid {
+        buckets.entry((req.a.rows, req.a.cols, req.b.cols)).or_default().push(req);
+    }
+    // Deterministic bucket order (HashMap iteration order is arbitrary).
+    let mut buckets: Vec<_> = buckets.into_values().collect();
+    buckets.sort_by_key(|reqs| (reqs[0].a.rows, reqs[0].a.cols, reqs[0].b.cols));
+    for bucket in buckets {
+        metrics.record_coalesced_batch(bucket.len() as u64);
+        // One guard per request, held across the grouped call: a panic
+        // inside the engine unwinds through them, so the bucket cannot
+        // leak inflight counts (mirrors process_single's guard scope).
+        let mut guards: Vec<InflightGuard<'_>> =
+            bucket.iter().map(|_| InflightGuard(inflight)).collect();
         let t0 = Instant::now();
-        let (c, outcome) = {
-            // Scope the guard so the decrement lands before the reply is
-            // sent (a caller seeing its response must see inflight drop),
-            // while a panic in the engine still decrements during unwind.
-            let _guard = InflightGuard(&inflight);
-            engine.gemm(&req.a, &req.b)
-        };
-        let total_s = queue_s + t0.elapsed().as_secs_f64();
-        let _ = req.reply.send(GemmResponse { c, outcome, queue_s, total_s });
+        let probs: Vec<(&Matrix, &Matrix)> = bucket.iter().map(|r| (&r.a, &r.b)).collect();
+        let results = engine.gemm_grouped(&probs);
+        let proc_s = t0.elapsed().as_secs_f64();
+        for (req, (c, outcome)) in bucket.iter().zip(results) {
+            drop(guards.pop()); // decrement lands before the reply is sent
+            let queue_s = req.submitted.elapsed().as_secs_f64() - proc_s;
+            let total_s = queue_s + proc_s;
+            let _ = req.reply.send(GemmResponse { c, outcome, queue_s: queue_s.max(0.0), total_s });
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::heuristic::AlwaysEmulate;
+    use crate::coordinator::heuristic::{AlwaysEmulate, HeuristicInput};
     use crate::linalg::gemm;
     use crate::util::{prop, Rng};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Condvar;
 
     fn small_service(workers: usize) -> GemmService {
         let cfg = ServiceConfig { workers, use_artifacts: false, ..Default::default() };
@@ -297,6 +556,7 @@ mod tests {
                     stopped = true;
                     break;
                 }
+                Err(e) => panic!("unexpected submit error {e}"),
                 Ok(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
             }
         }
@@ -304,21 +564,240 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_then_submit_reports_stopped() {
+        let svc = small_service(2);
+        svc.shutdown();
+        assert_eq!(
+            svc.submit(Matrix::identity(2), Matrix::identity(2)).err(),
+            Some(SubmitError::ServiceStopped)
+        );
+        let rej = svc.try_submit(Matrix::identity(2), Matrix::identity(2)).unwrap_err();
+        assert_eq!(rej.error, SubmitError::ServiceStopped);
+        assert!(!rej.error.is_retryable());
+        assert_eq!((rej.a.rows, rej.b.rows), (2, 2), "operands returned for inspection");
+        assert_eq!(svc.submit_batch(vec![]).unwrap().len(), 0, "empty batch is trivially ok");
+        assert_eq!(
+            svc.submit_batch(vec![(Matrix::identity(2), Matrix::identity(2))]).err(),
+            Some(SubmitError::ServiceStopped)
+        );
+        svc.shutdown(); // idempotent
+        assert_eq!(svc.inflight(), 0);
+    }
+
+    /// Heuristic that parks its worker until the gate opens — makes the
+    /// queue-full condition deterministic.
+    struct GatedHeuristic {
+        entered: Arc<AtomicBool>,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl SelectionHeuristic for GatedHeuristic {
+        fn emulate(&self, _: &HeuristicInput) -> bool {
+            self.entered.store(true, Ordering::SeqCst);
+            let (m, cv) = &*self.gate;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            true
+        }
+        fn name(&self) -> &'static str {
+            "gated"
+        }
+    }
+
+    #[test]
+    fn try_submit_reports_queue_full_and_recovers() {
+        let entered = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            use_artifacts: false,
+            ..Default::default()
+        };
+        let svc = {
+            let (entered, gate) = (entered.clone(), gate.clone());
+            GemmService::start(cfg, None, move || {
+                Box::new(GatedHeuristic { entered: entered.clone(), gate: gate.clone() })
+            })
+        };
+        let mk = || (Matrix::identity(4), Matrix::identity(4));
+        // First request: picked up by the worker, parked in the heuristic.
+        let (a, b) = mk();
+        let rx1 = svc.submit(a, b).expect("queue open");
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Second request: fills the queue slot.
+        let (a, b) = mk();
+        let rx2 = svc.submit(a, b).expect("queue open");
+        // Third: the queue is full — retryable backpressure, not fatal.
+        let (a, b) = mk();
+        let rej = svc.try_submit(a, b).unwrap_err();
+        assert_eq!(rej.error, SubmitError::QueueFull);
+        assert!(rej.error.is_retryable());
+        // Open the gate; the backlog drains and the retry succeeds.
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        assert!(rx1.recv().is_ok());
+        assert!(rx2.recv().is_ok());
+        let rx3 = svc
+            .try_submit(rej.a, rej.b)
+            .map_err(|r| r.error)
+            .expect("retry after drain succeeds");
+        assert!(rx3.recv().is_ok());
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_batch_amortizes_shared_operand() {
+        // Acceptance criterion: N same-A requests through submit_batch
+        // perform exactly 1 decomposition of A (and N of B), bitwise
+        // identical to the per-request path.
+        let n_reqs = 5;
+        let svc = small_service(2);
+        let mut rng = Rng::new(94);
+        // Entries in [1, 2): every request's ESC (and hence slice count)
+        // is identical, so the shared A maps to exactly one cache key.
+        let a = Matrix::uniform(16, 16, 1.0, 2.0, &mut rng);
+        let bs: Vec<Matrix> =
+            (0..n_reqs).map(|_| Matrix::uniform(16, 16, 1.0, 2.0, &mut rng)).collect();
+        let pairs: Vec<(Matrix, Matrix)> =
+            bs.iter().map(|b| (a.clone(), b.clone())).collect();
+        let rxs = svc.submit_batch(pairs).expect("service running");
+        let grouped: Vec<Matrix> = rxs.into_iter().map(|rx| rx.recv().unwrap().c).collect();
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.slice_cache_misses, n_reqs as u64 + 1, "A once + N Bs");
+        assert_eq!(snap.slice_cache_hits, n_reqs as u64 - 1, "A reused N-1 times");
+        assert_eq!(snap.coalesced_batches, 1);
+        assert_eq!(snap.coalesced_requests, n_reqs as u64);
+        assert_eq!(snap.requests, n_reqs as u64);
+        assert_eq!(svc.inflight(), 0);
+        // Bitwise identity against the per-request service path.
+        let svc_ref = small_service(1);
+        for (b, c) in bs.iter().zip(&grouped) {
+            let c_ref = svc_ref.gemm_blocking(a.clone(), b.clone()).c;
+            for (x, y) in c.data.iter().zip(&c_ref.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        svc_ref.shutdown();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_batch_mixed_shapes_bucketed() {
+        let svc = small_service(2);
+        let mut rng = Rng::new(95);
+        let mut pairs = Vec::new();
+        let mut expects = Vec::new();
+        for i in 0..6 {
+            let n = if i % 2 == 0 { 8 } else { 12 };
+            let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            expects.push(gemm(&a, &b));
+            pairs.push((a, b));
+        }
+        let rxs = svc.submit_batch(pairs).expect("service running");
+        for (rx, expect) in rxs.into_iter().zip(expects) {
+            let resp = rx.recv().unwrap();
+            assert!(resp.c.sub(&expect).max_abs() < 1e-12);
+            assert!(resp.outcome.decision.is_emulated());
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.coalesced_batches, 2, "two shape buckets");
+        assert_eq!(snap.coalesced_requests, 6);
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batched_shape_mismatch_drops_reply_not_worker() {
+        let svc = small_service(1);
+        let mut rng = Rng::new(96);
+        let a = Matrix::uniform(6, 6, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(6, 6, -1.0, 1.0, &mut rng);
+        let rxs = svc
+            .submit_batch(vec![
+                (a.clone(), b.clone()),
+                (Matrix::zeros(2, 3), Matrix::zeros(4, 2)), // mismatched
+                (a.clone(), b.clone()),
+            ])
+            .expect("service running");
+        assert!(rxs[0].recv().is_ok());
+        assert!(rxs[1].recv().is_err(), "mismatched request gets no reply");
+        assert!(rxs[2].recv().is_ok());
+        assert_eq!(svc.inflight(), 0);
+        // The worker survived: new submissions still work.
+        assert!(svc.submit(a, b).is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn coalesced_service_agrees_bitwise_with_uncoalesced() {
+        let mk = |coalesce| {
+            let cfg = ServiceConfig {
+                workers: 2,
+                use_artifacts: false,
+                coalesce,
+                coalesce_window: Duration::from_millis(5),
+                ..Default::default()
+            };
+            GemmService::start(cfg, None, || Box::new(AlwaysEmulate))
+        };
+        let svc_c = mk(true);
+        let svc_u = mk(false);
+        let mut rng = Rng::new(97);
+        let a = Matrix::uniform(20, 20, -1.0, 1.0, &mut rng);
+        let bs: Vec<Matrix> =
+            (0..8).map(|_| Matrix::uniform(20, 20, -1.0, 1.0, &mut rng)).collect();
+        let pend_c: Vec<_> =
+            bs.iter().map(|b| svc_c.submit(a.clone(), b.clone()).unwrap()).collect();
+        let pend_u: Vec<_> =
+            bs.iter().map(|b| svc_u.submit(a.clone(), b.clone()).unwrap()).collect();
+        for (rc, ru) in pend_c.into_iter().zip(pend_u) {
+            let (cc, cu) = (rc.recv().unwrap().c, ru.recv().unwrap().c);
+            for (x, y) in cc.data.iter().zip(&cu.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(svc_c.metrics.snapshot().requests, 8);
+        svc_c.shutdown();
+        svc_u.shutdown();
+    }
+
+    #[test]
     fn prop_request_response_bijection() {
         // Every response matches *its own* request (no cross-wiring),
-        // verified by tagging requests with distinguishable scalings.
+        // verified by tagging requests with distinguishable scalings —
+        // through both the singleton and the batched submission paths.
         let svc = small_service(3);
         prop::check("service bijection", 8, |rng| {
             let mut pending = Vec::new();
+            let mut batch = Vec::new();
             for tag in 1..=6u32 {
                 let scale = tag as f64;
                 let a = Matrix::from_fn(4, 4, |i, j| {
                     scale * ((i * 4 + j) as f64 + 1.0) + rng.f64() * 0.0
                 });
                 let b = Matrix::identity(4);
-                let rx = svc.submit(a, b).expect("service running");
-                pending.push((scale, rx));
+                if tag % 2 == 0 {
+                    batch.push((scale, a, b));
+                } else {
+                    let rx = svc.submit(a, b).expect("service running");
+                    pending.push((scale, rx));
+                }
             }
+            let scales: Vec<f64> = batch.iter().map(|(s, _, _)| *s).collect();
+            let pairs: Vec<(Matrix, Matrix)> =
+                batch.into_iter().map(|(_, a, b)| (a, b)).collect();
+            let rxs = svc.submit_batch(pairs).expect("service running");
+            pending.extend(scales.into_iter().zip(rxs));
             for (scale, rx) in pending {
                 let resp = rx.recv().unwrap();
                 if (resp.c.at(0, 0) - scale).abs() > 1e-12 {
@@ -360,6 +839,33 @@ mod tests {
         assert_eq!(s.fallback_inf, 3);
         assert_eq!(s.fallback_esc, 3);
         assert_eq!(s.emulated, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_workload_accounting_through_submit_batch() {
+        // The grouped path must preserve the per-request guardrail
+        // accounting exactly.
+        let svc = small_service(2);
+        let mut rng = Rng::new(98);
+        let mut pairs = Vec::new();
+        for i in 0..8 {
+            let mut a = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+            let b = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+            if i % 4 == 1 {
+                *a.at_mut(0, 0) = f64::NAN;
+            }
+            pairs.push((a, b));
+        }
+        let rxs = svc.submit_batch(pairs).expect("service running");
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.fallback_nan, 2);
+        assert_eq!(s.emulated, 6);
+        assert_eq!(svc.inflight(), 0);
         svc.shutdown();
     }
 }

@@ -48,8 +48,10 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod util;
 
-pub use backend::{BackendSpec, ComputeBackend, ParallelBackend, SerialBackend};
+pub use backend::{BackendSpec, ComputeBackend, ParallelBackend, SerialBackend, SliceBatch};
 pub use coordinator::adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
+pub use coordinator::plan::EscPlanCache;
 pub use esc::{coarse_esc_gemm, exact_esc_dot, exact_esc_gemm, EscReport};
 pub use linalg::matrix::Matrix;
+pub use ozaki::batched::SliceCache;
 pub use ozaki::{OzakiConfig, SliceEncoding};

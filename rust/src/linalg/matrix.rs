@@ -70,6 +70,32 @@ impl Matrix {
         Matrix::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
     }
 
+    /// 128-bit content fingerprint over shape + raw bit patterns (two
+    /// independent multiplicative hashes). Used as the operand identity of
+    /// the `ozaki::batched` slice cache: equal fingerprints are treated as
+    /// the same operand, so the pair of streams keeps *accidental*
+    /// collision probability negligible (~2^-128 per pair). Bit-pattern
+    /// based, so -0.0 != 0.0 and NaN payloads are distinguished —
+    /// strictly finer than semantic equality, never coarser.
+    ///
+    /// These are non-cryptographic hashes: an adversary who controls the
+    /// raw operand bits can in principle construct a colliding pair and
+    /// poison a shared cache with a wrong decomposition. Deployments that
+    /// serve mutually untrusted clients from one cache should disable the
+    /// slice cache (`AdpConfig::slice_cache = None`, or a per-tenant
+    /// cache) rather than rely on this fingerprint as a security
+    /// boundary.
+    pub fn fingerprint(&self) -> (u64, u64) {
+        let mut h1: u64 = 0xcbf2_9ce4_8422_2325 ^ (self.rows as u64).rotate_left(17);
+        let mut h2: u64 = 0x9e37_79b9_7f4a_7c15 ^ (self.cols as u64).rotate_left(31);
+        for &x in &self.data {
+            let b = x.to_bits();
+            h1 = (h1 ^ b).wrapping_mul(0x0000_0100_0000_01b3);
+            h2 = (h2 ^ b.rotate_left(32)).wrapping_mul(0xff51_afd7_ed55_8ccd);
+        }
+        (h1, h2 ^ (h2 >> 29))
+    }
+
     /// Copy of the sub-block [r0, r0+nr) x [c0, c0+nc).
     pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix {
         assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);

@@ -9,7 +9,10 @@
 //!
 //! `gemm`, `serve` and `qr` accept `--compute serial|parallel|parallel:N`
 //! to pick the compute backend (default: machine-sized parallel; results
-//! are bitwise identical either way).
+//! are bitwise identical either way). `serve` additionally accepts
+//! `--coalesce true` to enable the grouped pipeline (micro-batching
+//! window + shape buckets + slice cache) and `--batch B` to size the
+//! shared-A request groups it submits (default 8).
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs); clap is
 //! unavailable in the offline environment.
@@ -156,18 +159,41 @@ fn cmd_serve(args: &Args) {
     let n = args.usize("n", 64);
     let workers = args.usize("workers", 4);
     let seed = args.u64("seed", 7);
+    let coalesce = args.str("coalesce", "false") == "true";
+    let batch = args.usize("batch", 8).max(1);
     let rt = runtime(args);
-    let cfg = ServiceConfig { workers, backend: compute_spec(args), ..Default::default() };
+    let cfg =
+        ServiceConfig { workers, backend: compute_spec(args), coalesce, ..Default::default() };
     let svc = GemmService::start(cfg, rt, || Box::new(AlwaysEmulate));
     let mut rng = Rng::new(seed);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
-    for i in 0..requests {
-        let (mut a, b) = generators::uniform_pair(n, -1.0, 1.0, &mut rng);
-        if i % 16 == 5 {
-            *a.at_mut(0, 0) = f64::NAN; // exercise the guardrails
+    if coalesce {
+        // Grouped submission: each group shares one A, so the slice cache
+        // decomposes it once per group (watch the hit counters below).
+        let mut i = 0;
+        while i < requests {
+            let g = batch.min(requests - i);
+            let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let mut pairs = Vec::with_capacity(g);
+            for j in 0..g {
+                let mut a = a.clone();
+                if (i + j) % 16 == 5 {
+                    *a.at_mut(0, 0) = f64::NAN; // exercise the guardrails
+                }
+                pairs.push((a, Matrix::uniform(n, n, -1.0, 1.0, &mut rng)));
+            }
+            pending.extend(svc.submit_batch(pairs).expect("service running"));
+            i += g;
         }
-        pending.push(svc.submit(a, b).expect("service running"));
+    } else {
+        for i in 0..requests {
+            let (mut a, b) = generators::uniform_pair(n, -1.0, 1.0, &mut rng);
+            if i % 16 == 5 {
+                *a.at_mut(0, 0) = f64::NAN; // exercise the guardrails
+            }
+            pending.push(svc.submit(a, b).expect("service running"));
+        }
     }
     let mut lat = Vec::new();
     for rx in pending {
@@ -177,7 +203,8 @@ fn cmd_serve(args: &Args) {
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let snap = svc.metrics.snapshot();
     println!(
-        "{requests} reqs x n={n}, {workers} workers: {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        "{requests} reqs x n={n}, {workers} workers{}: {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        if coalesce { " [coalesced]" } else { "" },
         requests as f64 / wall,
         lat[lat.len() / 2] * 1e3,
         lat[(lat.len() * 99) / 100] * 1e3
@@ -190,6 +217,15 @@ fn cmd_serve(args: &Args) {
         snap.fallback_esc,
         snap.fallback_heuristic,
         snap.guardrail_fraction() * 100.0
+    );
+    println!(
+        "caches: slice hits/misses {}/{} esc hits/misses {}/{} | {} reqs in {} buckets",
+        snap.slice_cache_hits,
+        snap.slice_cache_misses,
+        snap.esc_cache_hits,
+        snap.esc_cache_misses,
+        snap.coalesced_requests,
+        snap.coalesced_batches
     );
     svc.shutdown();
 }

@@ -1,0 +1,443 @@
+//! Grouped batched emulation: slice-operand caching + one fused schedule.
+//!
+//! The service path of the paper (§5.4/§8.2) sees *streams* of GEMMs, and
+//! in practice many of them share an operand (the same A against many
+//! partners — QR trailing updates, attention-style batches) or at least a
+//! shape. The decomposition/recomposition stages dominate once the integer
+//! GEMM is fast (Uchino & Ozaki 2024), so re-slicing a shared operand per
+//! request throws away the cheapest available throughput win (Mukunoki
+//! 2025 amortizes exactly these stages across batched multiplies).
+//!
+//! Two pieces implement that amortization here:
+//!
+//! * [`SliceCache`] — a ref-counted cache of finished decompositions,
+//!   keyed by (role, slice count, encoding, shape, content fingerprint).
+//!   Entries are `Arc<SlicedMatrix>`: eviction drops the cache's
+//!   reference while in-flight GEMMs keep theirs. Initialization is
+//!   exactly-once per resident key (a per-entry `OnceLock`), so N
+//!   concurrent requests sharing an operand cost one decomposition.
+//! * [`gemm_grouped`] — runs a group of problems through the level
+//!   pipeline in lockstep rounds: round `r` executes weight level
+//!   `q = s-1-r` of every problem that still has one, handing *all* of
+//!   the round's level batches to the backend as one schedule
+//!   ([`ComputeBackend::slice_pair_gemm_batches`]). Per problem the level
+//!   order, the i64 accumulations and the compensated recomposition are
+//!   exactly those of [`super::gemm::emulated_gemm_on`], so the grouped
+//!   result is **bitwise identical** to the per-request path — the
+//!   serial/parallel identity property extends to groups.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::recompose::{recompose, LevelAccumulator};
+use super::slicing::{slice_a, slice_b, SlicedMatrix};
+use super::{OzakiConfig, SliceEncoding};
+use crate::backend::{ComputeBackend, SliceBatch};
+use crate::linalg::Matrix;
+
+/// Which operand role a cached decomposition was built for. A-slicing
+/// stores row-major A, B-slicing stores B transposed — the two are not
+/// interchangeable even for the same underlying matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OperandRole {
+    A,
+    B,
+}
+
+/// Identity of one cached decomposition.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct SliceKey {
+    role: OperandRole,
+    slices: usize,
+    encoding: SliceEncoding,
+    rows: usize,
+    cols: usize,
+    fingerprint: (u64, u64),
+}
+
+/// One cache entry: exactly-once initialization so concurrent callers
+/// sharing an operand never decompose it twice (losers block briefly on
+/// the winner instead).
+struct CacheCell(OnceLock<Arc<SlicedMatrix>>);
+
+struct CacheInner {
+    map: HashMap<SliceKey, Arc<CacheCell>>,
+    /// LRU order, most recently used last.
+    order: Vec<SliceKey>,
+}
+
+/// Ref-counted sliced-operand cache (see module docs). Thread-safe;
+/// share one per service via `Arc`.
+pub struct SliceCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SliceCache {
+    /// `capacity` is the max number of *resident* decompositions (>= 1);
+    /// in-flight users of evicted entries keep them alive via `Arc`.
+    pub fn new(capacity: usize) -> SliceCache {
+        SliceCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), order: Vec::new() }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch (or compute, exactly once per resident key) the decomposition
+    /// of `m` in `role` under `cfg`. Returns the shared decomposition and
+    /// whether this call was a cache hit (i.e. did *not* decompose).
+    pub fn get_or_slice(
+        &self,
+        role: OperandRole,
+        m: &Matrix,
+        cfg: &OzakiConfig,
+    ) -> (Arc<SlicedMatrix>, bool) {
+        let key = SliceKey {
+            role,
+            slices: cfg.slices,
+            encoding: cfg.encoding,
+            rows: m.rows,
+            cols: m.cols,
+            fingerprint: m.fingerprint(),
+        };
+        let (cell, hit) = {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(c) = g.map.get(&key) {
+                let c = c.clone();
+                // LRU bump: move to the back of the order list.
+                if let Some(pos) = g.order.iter().position(|k| k == &key) {
+                    let k = g.order.remove(pos);
+                    g.order.push(k);
+                }
+                (c, true)
+            } else {
+                let c = Arc::new(CacheCell(OnceLock::new()));
+                g.map.insert(key.clone(), c.clone());
+                g.order.push(key.clone());
+                while g.map.len() > self.capacity {
+                    let victim = g.order.remove(0);
+                    g.map.remove(&victim);
+                }
+                (c, false)
+            }
+        };
+        // Decompose outside the cache lock; OnceLock serializes per entry.
+        let sl = cell
+            .0
+            .get_or_init(|| {
+                Arc::new(match role {
+                    OperandRole::A => slice_a(m, cfg.slices, cfg.encoding),
+                    OperandRole::B => slice_b(m, cfg.slices, cfg.encoding),
+                })
+            })
+            .clone();
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        (sl, hit)
+    }
+
+    /// Lifetime (hits, misses). Misses count decompositions performed.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every resident entry (in-flight `Arc`s stay valid).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.order.clear();
+    }
+}
+
+impl Default for SliceCache {
+    /// Default sized for a service worker set: a few dozen resident
+    /// operands (each up to s * m * k bytes).
+    fn default() -> SliceCache {
+        SliceCache::new(32)
+    }
+}
+
+/// One problem of a grouped GEMM. `cfg` may differ per problem (ESC sizes
+/// slices per request even inside one shape bucket).
+pub struct GroupedProblem<'a> {
+    pub a: &'a Matrix,
+    pub b: &'a Matrix,
+    pub cfg: OzakiConfig,
+}
+
+/// Slicing-amortization accounting of one [`gemm_grouped`] call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GroupStats {
+    /// Cache hits: operand decompositions *reused* instead of recomputed.
+    pub slice_cache_hits: u64,
+    /// Cache misses: decompositions actually performed by this call.
+    pub slice_cache_misses: u64,
+    /// Problems routed through the chunked large-k per-request path
+    /// (per-chunk decompositions are not cacheable across requests).
+    pub chunked_bypass: u64,
+}
+
+/// In-flight state of one problem between lockstep rounds.
+struct Active {
+    idx: usize,
+    asl: Arc<SlicedMatrix>,
+    bsl: Arc<SlicedMatrix>,
+    s: usize,
+    rb: i32,
+    acc: LevelAccumulator,
+    pbuf: Vec<i64>,
+    m: usize,
+    n: usize,
+}
+
+/// Grouped batched emulated DGEMM (see module docs). Results are bitwise
+/// identical to calling [`super::gemm::emulated_gemm_on`] per problem with
+/// the same configs, for any backend and any cache state.
+pub fn gemm_grouped(
+    problems: &[GroupedProblem<'_>],
+    cache: &SliceCache,
+    backend: &dyn ComputeBackend,
+) -> (Vec<Matrix>, GroupStats) {
+    let mut stats = GroupStats::default();
+    let mut out: Vec<Option<Matrix>> = (0..problems.len()).map(|_| None).collect();
+    let mut active: Vec<Active> = Vec::new();
+
+    for (idx, p) in problems.iter().enumerate() {
+        assert_eq!(p.a.cols, p.b.rows, "gemm shape mismatch");
+        let (m, k, n) = (p.a.rows, p.a.cols, p.b.cols);
+        if m == 0 || k == 0 || n == 0 {
+            out[idx] = Some(Matrix::zeros(m, n));
+            continue;
+        }
+        if k > p.cfg.k_chunk() {
+            // Rare large-k path: identical to the per-request pipeline by
+            // construction (it *is* the per-request pipeline).
+            out[idx] = Some(super::gemm::emulated_gemm_on(p.a, p.b, &p.cfg, backend));
+            stats.chunked_bypass += 1;
+            continue;
+        }
+        let (asl, hit_a) = cache.get_or_slice(OperandRole::A, p.a, &p.cfg);
+        let (bsl, hit_b) = cache.get_or_slice(OperandRole::B, p.b, &p.cfg);
+        stats.slice_cache_hits += hit_a as u64 + hit_b as u64;
+        stats.slice_cache_misses += (!hit_a) as u64 + (!hit_b) as u64;
+        active.push(Active {
+            idx,
+            asl,
+            bsl,
+            s: p.cfg.slices,
+            rb: p.cfg.encoding.radix_bits(),
+            acc: LevelAccumulator::new(m * n),
+            pbuf: vec![0i64; m * n],
+            m,
+            n,
+        });
+    }
+
+    // Lockstep rounds: round r runs weight level q = s-1-r of every
+    // problem that still has one, as ONE backend schedule. Levels feed
+    // each problem's compensated accumulator strictly in the per-request
+    // order (q = s-1 down to 0); the i64 level products are exact, so the
+    // cross-problem schedule cannot change a bit.
+    let rounds = active.iter().map(|a| a.s).max().unwrap_or(0);
+    for r in 0..rounds {
+        let round_pairs: Vec<Option<Vec<(usize, usize)>>> = active
+            .iter()
+            .map(|act| {
+                (r < act.s).then(|| {
+                    let q = act.s - 1 - r;
+                    (0..=q).map(|t| (t, q - t)).collect::<Vec<(usize, usize)>>()
+                })
+            })
+            .collect();
+        let mut batches: Vec<SliceBatch<'_>> = Vec::new();
+        for (act, rp) in active.iter_mut().zip(&round_pairs) {
+            if let Some(pairs) = rp {
+                act.pbuf.fill(0);
+                batches.push(SliceBatch {
+                    a: act.asl.as_ref(),
+                    b: act.bsl.as_ref(),
+                    pairs: pairs.as_slice(),
+                    out: act.pbuf.as_mut_slice(),
+                });
+            }
+        }
+        backend.slice_pair_gemm_batches(&mut batches);
+        drop(batches);
+        for act in active.iter_mut() {
+            if r < act.s {
+                let q = (act.s - 1 - r) as i32;
+                let w = 2 * act.rb * (act.s as i32 - 1) - act.rb * q;
+                act.acc.add_level(&act.pbuf, w);
+            }
+        }
+    }
+
+    for act in active {
+        let c = recompose(act.acc, &act.asl.sigma, &act.bsl.sigma, act.m, act.n);
+        out[act.idx] = Some(c);
+    }
+    (out.into_iter().map(|c| c.expect("every problem produced")).collect(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{ParallelBackend, SerialBackend};
+    use crate::ozaki::emulated_gemm_on;
+    use crate::util::{prop, Rng};
+
+    fn assert_bitwise(c1: &Matrix, c2: &Matrix, what: &str) {
+        assert_eq!((c1.rows, c1.cols), (c2.rows, c2.cols), "{what}: shape");
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn shared_a_decomposed_once() {
+        let mut rng = Rng::new(700);
+        let a = Matrix::uniform(12, 20, -2.0, 2.0, &mut rng);
+        let bs: Vec<Matrix> = (0..4).map(|_| Matrix::uniform(20, 9, -2.0, 2.0, &mut rng)).collect();
+        let cfg = OzakiConfig::new(7);
+        let probs: Vec<GroupedProblem<'_>> =
+            bs.iter().map(|b| GroupedProblem { a: &a, b, cfg }).collect();
+        let cache = SliceCache::new(32);
+        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend);
+        // A: 1 miss + 3 hits; B: 4 distinct misses.
+        assert_eq!(st.slice_cache_misses, 5, "{st:?}");
+        assert_eq!(st.slice_cache_hits, 3, "{st:?}");
+        for (c, b) in cs.iter().zip(&bs) {
+            assert_bitwise(c, &emulated_gemm_on(&a, b, &cfg, &SerialBackend), "shared-A group");
+        }
+        // Replaying the same group is all hits.
+        let (_, st2) = gemm_grouped(&probs, &cache, &SerialBackend);
+        assert_eq!(st2.slice_cache_misses, 0);
+        assert_eq!(st2.slice_cache_hits, 8);
+    }
+
+    #[test]
+    fn cache_keys_distinguish_role_config_and_content() {
+        let mut rng = Rng::new(701);
+        let sq = Matrix::uniform(10, 10, -1.0, 1.0, &mut rng);
+        let cache = SliceCache::new(32);
+        let c7 = OzakiConfig::new(7);
+        // Same matrix as A and as B: two decompositions (B is transposed).
+        assert!(!cache.get_or_slice(OperandRole::A, &sq, &c7).1);
+        assert!(!cache.get_or_slice(OperandRole::B, &sq, &c7).1);
+        // Same role, different slice count / encoding: new entries.
+        assert!(!cache.get_or_slice(OperandRole::A, &sq, &OzakiConfig::new(5)).1);
+        assert!(!cache
+            .get_or_slice(OperandRole::A, &sq, &OzakiConfig::with_encoding(7, SliceEncoding::Signed))
+            .1);
+        // Content change (a single flipped sign bit): new entry.
+        let mut sq2 = sq.clone();
+        let flipped = -sq2.at(0, 0);
+        *sq2.at_mut(0, 0) = flipped;
+        assert!(!cache.get_or_slice(OperandRole::A, &sq2, &c7).1);
+        // Replays all hit.
+        assert!(cache.get_or_slice(OperandRole::A, &sq, &c7).1);
+        assert_eq!(cache.stats(), (1, 5));
+    }
+
+    #[test]
+    fn lru_eviction_bounds_residency() {
+        let mut rng = Rng::new(702);
+        let cache = SliceCache::new(2);
+        let cfg = OzakiConfig::new(4);
+        let ms: Vec<Matrix> = (0..3).map(|_| Matrix::uniform(6, 6, -1.0, 1.0, &mut rng)).collect();
+        for m in &ms {
+            cache.get_or_slice(OperandRole::A, m, &cfg);
+        }
+        assert_eq!(cache.len(), 2);
+        // ms[0] was evicted (LRU): re-fetch is a miss; ms[2] still hits.
+        assert!(cache.get_or_slice(OperandRole::A, &ms[2], &cfg).1);
+        assert!(!cache.get_or_slice(OperandRole::A, &ms[0], &cfg).1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn empty_and_degenerate_problems() {
+        let cache = SliceCache::default();
+        let cfg = OzakiConfig::new(7);
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 2);
+        let a2 = Matrix::zeros(2, 0);
+        let b2 = Matrix::zeros(0, 2);
+        let probs = vec![
+            GroupedProblem { a: &a, b: &b, cfg },
+            GroupedProblem { a: &a2, b: &b2, cfg },
+        ];
+        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend);
+        assert_eq!((cs[0].rows, cs[0].cols), (0, 2));
+        assert_eq!((cs[1].rows, cs[1].cols), (2, 2));
+        assert!(cs[1].data.iter().all(|&x| x == 0.0));
+        assert_eq!(st.slice_cache_misses, 0, "degenerate problems skip the cache");
+        assert_eq!(gemm_grouped(&[], &cache, &SerialBackend).0.len(), 0);
+    }
+
+    #[test]
+    fn prop_grouped_bitwise_identical_to_sequential() {
+        // The tentpole property: gemm_grouped (cache hits included, serial
+        // AND parallel backends, mixed configs per group) is bitwise
+        // identical to the per-request pipeline.
+        let par = ParallelBackend::new(4).with_cutoff_ops(0);
+        let cache = SliceCache::new(16); // small: exercises eviction across cases
+        prop::check("grouped == sequential (bitwise)", 10, |rng| {
+            let nprobs = rng.int(1, 6) as usize;
+            let shared_a = rng.f64() < 0.5;
+            let k = rng.int(1, 40) as usize;
+            let a0 = Matrix::uniform(rng.int(1, 16) as usize, k, -3.0, 3.0, rng);
+            let mut mats: Vec<(Matrix, Matrix, OzakiConfig)> = Vec::new();
+            for _ in 0..nprobs {
+                let a = if shared_a {
+                    a0.clone()
+                } else {
+                    Matrix::uniform(rng.int(1, 16) as usize, k, -3.0, 3.0, rng)
+                };
+                let b = Matrix::uniform(k, rng.int(1, 16) as usize, -3.0, 3.0, rng);
+                let enc = if rng.f64() < 0.5 { SliceEncoding::Unsigned } else { SliceEncoding::Signed };
+                let mut cfg = OzakiConfig::with_encoding(rng.int(2, 8) as usize, enc);
+                if rng.f64() < 0.3 {
+                    // chunked-k config: forces the per-request bypass
+                    cfg = cfg.with_k_chunk(rng.int(1, k as i64).max(1) as usize);
+                }
+                mats.push((a, b, cfg));
+            }
+            let probs: Vec<GroupedProblem<'_>> =
+                mats.iter().map(|(a, b, cfg)| GroupedProblem { a, b, cfg: *cfg }).collect();
+            for backend in [&SerialBackend as &dyn ComputeBackend, &par] {
+                let (cs, _) = gemm_grouped(&probs, &cache, backend);
+                for ((a, b, cfg), c) in mats.iter().zip(&cs) {
+                    let c_ref = emulated_gemm_on(a, b, cfg, backend);
+                    for (x, y) in c.data.iter().zip(&c_ref.data) {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "grouped != sequential on {}: {x} vs {y}",
+                                backend.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

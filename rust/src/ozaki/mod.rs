@@ -13,10 +13,12 @@
 //! between the two, which is what lets ADP treat AOT artifacts and the
 //! native path as interchangeable dispatch targets.
 
+pub mod batched;
 pub mod gemm;
 pub mod recompose;
 pub mod slicing;
 
+pub use batched::{gemm_grouped, GroupStats, GroupedProblem, OperandRole, SliceCache};
 pub use gemm::{
     emulated_gemm, emulated_gemm_on, emulated_gemm_with_breakdown,
     emulated_gemm_with_breakdown_on, slice_pair_gemm, slice_pair_gemm_rows, EmulationBreakdown,
@@ -24,7 +26,7 @@ pub use gemm::{
 pub use slicing::{slice_a, slice_b, SlicedMatrix};
 
 /// Which slice encoding to use (§3 of the paper).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SliceEncoding {
     /// Leading slice signed; sub-leading slices use the full 8-bit range via
     /// the two's-complement redistribution. 8s-2 effective mantissa bits.

@@ -135,7 +135,7 @@ fn heuristic_decisions_consistent_with_cost_model() {
     for p in [GB200, RTX_PRO_6000] {
         let h = adp_dgemm::coordinator::heuristic::PlatformHeuristic { platform: p };
         for n in [64usize, 512, 2048, 8192] {
-            let inp = HeuristicInput { m: n, k: n, n, slices: 7 };
+            let inp = HeuristicInput::single(n, n, n, 7);
             assert_eq!(h.emulate(&inp), p.emulation_profitable(n, n, n, 7), "{} n={n}", p.name);
         }
     }
