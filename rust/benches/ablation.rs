@@ -3,15 +3,17 @@
 //!   (a) unsigned vs signed slice encoding (§3): slice count, pair-GEMM
 //!       count, measured time and accuracy at equal target bits;
 //!   (b) ESC coarsening block size (§4): estimate tightness vs cost;
-//!   (c) compensated vs what plain recomposition would cost in accuracy
-//!       (reported via the residual error of low-slice configs).
+//!   (c) fused tile engine vs the level-major reference schedule (same
+//!       bits out, one output pass instead of s level sweeps);
+//!   (d) grouped pipeline slice-cache amortization (the --coalesce path).
 
-use adp_dgemm::backend::SerialBackend;
+use adp_dgemm::backend::{SerialBackend, WorkspacePool};
 use adp_dgemm::esc::{coarse_esc_gemm, exact_esc_gemm};
 use adp_dgemm::grading::grade::measure;
 use adp_dgemm::linalg::Matrix;
 use adp_dgemm::ozaki::{
-    emulated_gemm, gemm_grouped, GroupedProblem, OzakiConfig, SliceCache, SliceEncoding,
+    emulated_gemm, fused_gemm_on, gemm_grouped, GroupedProblem, OzakiConfig, SliceCache,
+    SliceEncoding,
 };
 use adp_dgemm::util::{benchkit, Rng};
 
@@ -71,9 +73,30 @@ fn main() {
     println!("# exact ESC = {exact}; smaller blocks tighten the estimate at higher scan cost");
     println!("# (b=64 is the default: cost ~1/64 of a GEMM pass, overestimate within one slice)");
 
+    println!("\n# (c) fused tile engine vs level-major reference (n={n}, s=7, serial)");
+    let cfg7 = OzakiConfig::new(7);
+    let wpool = WorkspacePool::new();
+    let st_lvl = benchkit::bench(1, 3, || emulated_gemm(&a, &b, &cfg7));
+    let st_fus = benchkit::bench(1, 3, || fused_gemm_on(&a, &b, &cfg7, &SerialBackend, &wpool));
+    {
+        let c_lvl = emulated_gemm(&a, &b, &cfg7);
+        let c_fus = fused_gemm_on(&a, &b, &cfg7, &SerialBackend, &wpool);
+        let identical = c_lvl.data.iter().zip(&c_fus.data).all(|(x, y)| x.to_bits() == y.to_bits());
+        let ws = wpool.stats();
+        println!(
+            "level-major {:.1} ms vs fused {:.1} ms ({:.2}x); bitwise identical: {identical}; {} tiles, {} fresh allocs over {} checkouts",
+            st_lvl.median_s * 1e3,
+            st_fus.median_s * 1e3,
+            st_lvl.median_s / st_fus.median_s,
+            ws.fused_tiles,
+            ws.fresh_allocs,
+            ws.checkouts
+        );
+    }
+    println!("# one pass over the output (tile-resident pairs) instead of s matrix-wide level sweeps");
+
     println!("\n# (d) grouped-pipeline (--coalesce) ablation: 8 requests sharing one A (n={n}, s=7)");
     let group = 8usize;
-    let cfg7 = OzakiConfig::new(7);
     let bs: Vec<Matrix> =
         (0..group).map(|_| Matrix::uniform(n, n, -1.0, 1.0, &mut rng)).collect();
     let st_seq = benchkit::bench(1, 3, || {
@@ -87,12 +110,12 @@ fn main() {
         let cache = SliceCache::new(2 * group + 2);
         let probs: Vec<GroupedProblem<'_>> =
             bs.iter().map(|b| GroupedProblem { a: &a, b, cfg: cfg7 }).collect();
-        std::hint::black_box(gemm_grouped(&probs, &cache, &SerialBackend))
+        std::hint::black_box(gemm_grouped(&probs, &cache, &SerialBackend, &wpool))
     });
     let cache = SliceCache::new(2 * group + 2);
     let probs: Vec<GroupedProblem<'_>> =
         bs.iter().map(|b| GroupedProblem { a: &a, b, cfg: cfg7 }).collect();
-    let (_, gstats) = gemm_grouped(&probs, &cache, &SerialBackend);
+    let (_, gstats) = gemm_grouped(&probs, &cache, &SerialBackend, &wpool);
     println!(
         "per-request {:.1} ms vs grouped {:.1} ms ({:.2}x); decompositions {} vs {} (hits {})",
         st_seq.median_s * 1e3,

@@ -12,12 +12,12 @@
 
 use std::path::Path;
 
-use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend};
+use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend, WorkspacePool};
 use adp_dgemm::esc::coarse_esc_gemm;
 use adp_dgemm::linalg::{gemm, Matrix};
 use adp_dgemm::ozaki::{
-    emulated_gemm_on, emulated_gemm_with_breakdown, gemm_grouped, slice_a, slice_b,
-    slice_pair_gemm, GroupedProblem, OzakiConfig, SliceCache, SliceEncoding,
+    emulated_gemm_on, emulated_gemm_with_breakdown, fused_gemm_on, gemm_grouped, slice_a,
+    slice_b, slice_pair_gemm, GroupedProblem, OzakiConfig, SliceCache, SliceEncoding,
 };
 use adp_dgemm::runtime::RuntimeHandle;
 use adp_dgemm::util::{benchkit, Rng};
@@ -87,6 +87,29 @@ fn main() {
         "emulated_gemm backend speedup: {:.2}x over serial (n={n}, s={s}, {threads} threads)",
         st_ser.median_s / st_par.median_s
     );
+
+    // --- fused tile engine vs level-major, both backends ----------------
+    let wpool = WorkspacePool::new();
+    let st_fser = benchkit::bench_budget(2.0, || fused_gemm_on(&a, &b, &cfg, &SerialBackend, &wpool));
+    benchkit::report(
+        "fused_gemm(serial)",
+        st_fser,
+        &[("vs level-major", format!("{:.2}x", st_ser.median_s / st_fser.median_s))],
+    );
+    let st_fus_par = benchkit::bench_budget(2.0, || fused_gemm_on(&a, &b, &cfg, &parallel, &wpool));
+    benchkit::report(
+        "fused_gemm(parallel)",
+        st_fus_par,
+        &[
+            ("threads", threads.to_string()),
+            ("vs level-major", format!("{:.2}x", st_par.median_s / st_fus_par.median_s)),
+        ],
+    );
+    let ws = wpool.stats();
+    println!(
+        "fused engine: {} tiles, {} checkouts, {} fresh allocations (steady state reuses)",
+        ws.fused_tiles, ws.checkouts, ws.fresh_allocs
+    );
     let st_fpar = benchkit::bench_budget(1.0, || parallel.fp64_gemm(&a, &b));
     benchkit::report(
         "fp64_gemm(parallel)",
@@ -110,12 +133,13 @@ fn main() {
             }
         });
         benchkit::report("emulated_group(per-request)", st_seq, &[("reqs", group.to_string())]);
+        let gpool = WorkspacePool::new();
         let st_grp = benchkit::bench_budget(2.0, || {
             // cold cache per iteration: amortization within the group only
             let cache = SliceCache::new(2 * group + 2);
             let probs: Vec<GroupedProblem<'_>> =
                 bs.iter().map(|b| GroupedProblem { a: &a, b, cfg }).collect();
-            std::hint::black_box(gemm_grouped(&probs, &cache, &SerialBackend))
+            std::hint::black_box(gemm_grouped(&probs, &cache, &SerialBackend, &gpool))
         });
         benchkit::report(
             "emulated_group(grouped)",

@@ -9,32 +9,42 @@
 //! * [`SerialBackend`] — the original single-threaded kernels, the
 //!   deterministic reference;
 //! * [`ParallelBackend`] — work-stealing over (t, u) slice pairs (split by
-//!   output rows) and over MC×NC FP64 tiles on a shared token-budgeted
-//!   [`pool::ThreadPool`], **bitwise identical** to serial by
-//!   construction: integer accumulation is exact and the FP64 tile
-//!   schedule preserves the per-element operation order.
+//!   output rows), over fused-engine tile bands, and over MC×NC FP64
+//!   tiles on a shared token-budgeted [`pool::ThreadPool`], **bitwise
+//!   identical** to serial by construction: integer accumulation is exact
+//!   and the FP64 tile schedule preserves the per-element operation
+//!   order.
+//!
+//! The emulated hot path enters through
+//! [`ComputeBackend::fused_tile_gemm`] — the tile-major fused schedule
+//! drawing scratch from a shared [`WorkspacePool`] (zero steady-state
+//! allocation); the level-major `slice_pair_gemm_batch` entry points are
+//! retained as the property-test oracle and for the grouped lockstep
+//! pipeline.
 //!
 //! The trait is the plug point for every future backend (SIMD, GPU,
 //! distributed sharding): implement `slice_pair_gemm_batch` and
-//! `fp64_gemm_into` (plus `fp64_gemm_tile` if the tile kernel itself
-//! changes) and the whole stack — `ozaki::gemm`,
-//! `linalg::{gemm, strassen, qr}`, the ADP engine and the `GemmService`
-//! — picks it up through
+//! `fp64_gemm_into` (plus `fused_tile_gemm` / `fp64_gemm_tile` if the
+//! fused or tile kernels themselves change) and the whole stack —
+//! `ozaki::gemm`, `linalg::{gemm, strassen, qr}`, the ADP engine and the
+//! `GemmService` — picks it up through
 //! [`AdpConfig`](crate::coordinator::AdpConfig) /
 //! [`ServiceConfig`](crate::coordinator::ServiceConfig).
 
 pub mod parallel;
 pub mod pool;
 pub mod serial;
+pub mod workspace;
 
 use std::sync::Arc;
 
 use crate::linalg::Matrix;
-use crate::ozaki::SlicedMatrix;
+use crate::ozaki::{PairSchedule, SlicedMatrix};
 
 pub use parallel::ParallelBackend;
 pub use pool::ThreadPool;
 pub use serial::SerialBackend;
+pub use workspace::{Workspace, WorkspaceGuard, WorkspacePool, WorkspaceStats};
 
 /// Minimum length of the `bpack` scratch passed to
 /// [`ComputeBackend::fp64_gemm_tile`].
@@ -100,6 +110,30 @@ pub trait ComputeBackend: Send + Sync {
         for bt in batches.iter_mut() {
             self.slice_pair_gemm_batch(bt.a, bt.b, bt.pairs, bt.out);
         }
+    }
+
+    /// Fused tile-major emulated-GEMM schedule: for every
+    /// `FUSED_MC`×`FUSED_NC` output tile, run **all** of the schedule's
+    /// slice pairs while the operand slice rows are cache-resident,
+    /// folding per-tile level sums into a workspace-held compensated
+    /// accumulator and applying the sigma descaling per tile — one pass
+    /// over the output instead of `s` matrix-wide level barriers. The
+    /// default is the serial reference order
+    /// ([`crate::ozaki::gemm::fused_tile_gemm_serial`]); parallel
+    /// backends work-steal row bands of tiles in one parallel region,
+    /// each thread owning one pooled workspace. Bitwise identical to the
+    /// level-major reference for every implementation: all slice-pair
+    /// arithmetic is exact integer work and the per-element level /
+    /// descale order is unchanged (see `ozaki::gemm` module docs).
+    fn fused_tile_gemm(
+        &self,
+        a: &SlicedMatrix,
+        b: &SlicedMatrix,
+        schedule: &PairSchedule,
+        workspaces: &WorkspacePool,
+        c: &mut Matrix,
+    ) {
+        crate::ozaki::gemm::fused_tile_gemm_serial(a, b, schedule, workspaces, c);
     }
 
     /// One MC×NC tile of the blocked FP64 GEMM: `tile += A[ic.., :] *

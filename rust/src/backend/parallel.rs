@@ -1,6 +1,6 @@
 //! Work-stealing multi-threaded backend, bitwise identical to serial.
 //!
-//! Two sources of intra-GEMM parallelism, both chosen so that the
+//! Three sources of intra-GEMM parallelism, all chosen so that the
 //! *per-element* arithmetic sequence is exactly the serial one:
 //!
 //! * **INT8 slice-pair batches** — the output rows of a weight level are
@@ -10,6 +10,13 @@
 //!   cross-thread merge buffers are needed at all. Parallelism is
 //!   independent of how many pairs the level has (even the single-pair
 //!   level q = 0 scales across rows).
+//! * **Fused tile bands** — the fused engine's row bands of output tiles
+//!   (FUSED_MC rows, shrunk for wide flat outputs so m <= FUSED_MC still
+//!   fans out) drain through one work-stealing queue: a single parallel
+//!   region per emulated GEMM instead of one barrier per weight level,
+//!   each thread owning one pooled workspace for its whole run. Tiles
+//!   write disjoint elements with the serial per-element op sequence, so
+//!   any band partition or assignment is bitwise identical.
 //! * **FP64 tiles** — the MC×NC tile grid of the blocked GEMM is drained
 //!   by the pool; each tile accumulates over the full k extent in the same
 //!   ascending panel order as the serial loop nest (see
@@ -18,14 +25,18 @@
 //!   results are bitwise identical to [`super::SerialBackend`] — the
 //!   `prop_permutation_invariance` guarantee survives parallel dispatch.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::pool::{drain, ThreadPool};
+use super::workspace::WorkspacePool;
 use super::{ComputeBackend, SliceBatch, PACK_SCRATCH_LEN};
 use crate::linalg::gemm::{apply_beta, load_tile, store_tile, tile_grid};
 use crate::linalg::Matrix;
-use crate::ozaki::gemm::slice_pair_gemm_rows;
-use crate::ozaki::SlicedMatrix;
+use crate::ozaki::gemm::{
+    fused_band, fused_tile_gemm_serial, slice_pair_gemm_rows, FUSED_MC, FUSED_WS_ELEMS,
+};
+use crate::ozaki::{PairSchedule, SlicedMatrix};
 
 /// Row-chunks per pool thread when splitting a slice-pair batch: >1 so the
 /// dynamic queue can balance uneven chunk costs.
@@ -157,6 +168,55 @@ impl ComputeBackend for ParallelBackend {
                 slice_pair_gemm_rows(a, t, b, u, row0, rows, chunk);
             }
         });
+    }
+
+    fn fused_tile_gemm(
+        &self,
+        a: &SlicedMatrix,
+        b: &SlicedMatrix,
+        schedule: &PairSchedule,
+        workspaces: &WorkspacePool,
+        c: &mut Matrix,
+    ) {
+        let (m, n) = (a.rows, b.rows);
+        assert_eq!(c.rows, m, "output rows mismatch");
+        assert_eq!(c.cols, n, "output cols mismatch");
+        if m == 0 || n == 0 {
+            return;
+        }
+        if schedule.pair_count() * m * n * a.cols < self.cutoff_ops {
+            return fused_tile_gemm_serial(a, b, schedule, workspaces, c);
+        }
+        // One parallel region for the whole GEMM (instead of one barrier
+        // per weight level): row bands of C — contiguous, disjoint `&mut`
+        // slices — drain through a work-stealing queue, each band running
+        // its column tiles left to right. Every thread owns one pooled
+        // workspace for its entire run. Band height is FUSED_MC, shrunk
+        // when the row count alone cannot feed the pool (wide, flat
+        // outputs: m <= FUSED_MC must still fan out). Tiles write
+        // disjoint output elements and every element's arithmetic is
+        // independent of the tile partition, so any band height and any
+        // band-to-thread assignment is bitwise identical to
+        // `fused_tile_gemm_serial`.
+        let band_rows = m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).clamp(2, FUSED_MC);
+        let mut bands: Vec<(usize, &mut [f64])> = Vec::new();
+        for (bi, band) in c.data.chunks_mut(band_rows * n).enumerate() {
+            bands.push((bi * band_rows, band));
+        }
+        let max_helpers = bands.len().saturating_sub(1);
+        let queue = Mutex::new(bands);
+        let tiles = AtomicU64::new(0);
+        self.pool.run_n(max_helpers, || {
+            let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+            let mut local = 0u64;
+            loop {
+                let next = queue.lock().unwrap().pop();
+                let Some((row0, band)) = next else { break };
+                local += fused_band(a, b, schedule, row0, &mut ws, band);
+            }
+            tiles.fetch_add(local, Ordering::Relaxed);
+        });
+        workspaces.record_tiles(tiles.load(Ordering::Relaxed));
     }
 
     fn fp64_gemm_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {

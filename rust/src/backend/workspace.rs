@@ -1,0 +1,296 @@
+//! Pooled scratch workspaces for the emulated-GEMM hot paths.
+//!
+//! Every emulated GEMM needs the same three scratch buffers: an integer
+//! level/tile accumulator (`pbuf`), and the compensated hi/lo pair the
+//! weight levels fold into. Allocating them per request is pure hot-path
+//! overhead — the fused tile engine needs only a tile's worth per thread,
+//! and a service sees the same shapes over and over. The
+//! [`WorkspacePool`] amortizes them: `checkout` hands back a pooled
+//! [`Workspace`] (growing one only when no pooled buffer is big enough),
+//! and the RAII [`WorkspaceGuard`] returns it on drop — panic or not —
+//! so steady-state traffic performs **zero** hot-path heap allocation.
+//!
+//! The pool also carries the fused-engine observability counters
+//! (checkouts, fresh allocations, fused tiles executed): it is the one
+//! object already threaded through every layer that runs the engine
+//! (`AdpEngine`, `ozaki::batched`, `GemmService`), so
+//! `coordinator::Metrics` snapshots read straight from it
+//! ([`WorkspacePool::stats`]).
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One reusable scratch set. Buffers are handed out **dirty** (whatever
+/// the previous user left); every consumer fully initializes the prefix
+/// it uses (`fill(0)` / full overwrite) before reading.
+pub struct Workspace {
+    /// Integer level/tile accumulator (one weight level of a tile or of a
+    /// whole problem).
+    pub pbuf: Vec<i64>,
+    /// Compensated accumulator, high parts.
+    pub hi: Vec<f64>,
+    /// Compensated accumulator, low (error) parts.
+    pub lo: Vec<f64>,
+}
+
+impl Workspace {
+    /// Fresh workspace holding `elems` elements per buffer.
+    pub fn with_capacity(elems: usize) -> Workspace {
+        Workspace { pbuf: vec![0; elems], hi: vec![0.0; elems], lo: vec![0.0; elems] }
+    }
+
+    /// Elements each buffer can hold.
+    pub fn capacity(&self) -> usize {
+        self.pbuf.len()
+    }
+
+    /// Grow every buffer to at least `elems` elements. Returns whether a
+    /// reallocation happened (i.e. this checkout was not served from
+    /// resident capacity).
+    pub fn ensure(&mut self, elems: usize) -> bool {
+        if self.pbuf.len() >= elems {
+            return false;
+        }
+        self.pbuf.resize(elems, 0);
+        self.hi.resize(elems, 0.0);
+        self.lo.resize(elems, 0.0);
+        true
+    }
+}
+
+/// Lifetime totals of a [`WorkspacePool`] (monotone counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Workspaces handed out (pooled or fresh).
+    pub checkouts: u64,
+    /// Checkouts that had to allocate or grow a buffer. A warm pool
+    /// serving repeat shapes keeps this flat.
+    pub fresh_allocs: u64,
+    /// Output tiles executed by the fused tile engine.
+    pub fused_tiles: u64,
+}
+
+/// Thread-safe pool of [`Workspace`]s; share one per service via `Arc`.
+///
+/// Unbounded on purpose: residency is capped by the high-water mark of
+/// *concurrent* checkouts (workers × pool threads), which the service
+/// already bounds.
+pub struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+    checkouts: AtomicU64,
+    fresh_allocs: AtomicU64,
+    fused_tiles: AtomicU64,
+}
+
+impl WorkspacePool {
+    pub fn new() -> WorkspacePool {
+        WorkspacePool {
+            free: Mutex::new(Vec::new()),
+            checkouts: AtomicU64::new(0),
+            fresh_allocs: AtomicU64::new(0),
+            fused_tiles: AtomicU64::new(0),
+        }
+    }
+
+    /// Check out a workspace with room for `elems` elements per buffer.
+    /// Best-fit from the free list (the smallest resident buffer that is
+    /// big enough, so large buffers stay available for large requests);
+    /// when nothing resident fits, the largest candidate is grown (or a
+    /// fresh one built) and the fresh-allocation counter ticks. The free
+    /// list is bounded by the concurrent-checkout high-water mark, so the
+    /// O(len) scan is on a handful of entries. The guard returns the
+    /// workspace on drop.
+    pub fn checkout(&self, elems: usize) -> WorkspaceGuard<'_> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let pooled = {
+            let mut g = self.free.lock().unwrap();
+            let mut best: Option<(usize, usize)> = None; // smallest fitting (idx, cap)
+            let mut largest: Option<(usize, usize)> = None; // largest overall (idx, cap)
+            for (i, w) in g.iter().enumerate() {
+                let cap = w.capacity();
+                let better_fit = match best {
+                    None => cap >= elems,
+                    Some((_, c)) => cap >= elems && cap < c,
+                };
+                if better_fit {
+                    best = Some((i, cap));
+                }
+                let bigger = match largest {
+                    None => true,
+                    Some((_, c)) => cap > c,
+                };
+                if bigger {
+                    largest = Some((i, cap));
+                }
+            }
+            best.or(largest).map(|(i, _)| g.swap_remove(i))
+        };
+        let ws = match pooled {
+            Some(mut w) => {
+                if w.ensure(elems) {
+                    self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+                }
+                w
+            }
+            None => {
+                self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+                Workspace::with_capacity(elems)
+            }
+        };
+        WorkspaceGuard { pool: self, ws: Some(ws) }
+    }
+
+    /// Fold `n` executed fused tiles into the counters.
+    pub fn record_tiles(&self, n: u64) {
+        self.fused_tiles.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lifetime totals (see [`WorkspaceStats`]).
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+            fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
+            fused_tiles: self.fused_tiles.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Workspaces currently resident in the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+impl Default for WorkspacePool {
+    fn default() -> WorkspacePool {
+        WorkspacePool::new()
+    }
+}
+
+/// RAII checkout: derefs to the [`Workspace`], returns it to the pool on
+/// drop (including during a panic unwind, so one poisoned request cannot
+/// leak the pool's buffers).
+pub struct WorkspaceGuard<'a> {
+    pool: &'a WorkspacePool,
+    ws: Option<Workspace>,
+}
+
+impl Deref for WorkspaceGuard<'_> {
+    type Target = Workspace;
+    fn deref(&self) -> &Workspace {
+        self.ws.as_ref().expect("workspace present until drop")
+    }
+}
+
+impl DerefMut for WorkspaceGuard<'_> {
+    fn deref_mut(&mut self) -> &mut Workspace {
+        self.ws.as_mut().expect("workspace present until drop")
+    }
+}
+
+impl Drop for WorkspaceGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool.free.lock().unwrap().push(ws);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_return_reuse() {
+        let pool = WorkspacePool::new();
+        {
+            let ws = pool.checkout(100);
+            assert!(ws.capacity() >= 100);
+            assert_eq!(pool.pooled(), 0, "checked-out workspace is not resident");
+        }
+        assert_eq!(pool.pooled(), 1, "guard returned the workspace");
+        {
+            let _ws = pool.checkout(80);
+        }
+        let st = pool.stats();
+        assert_eq!(st.checkouts, 2);
+        assert_eq!(st.fresh_allocs, 1, "second checkout fits in the pooled buffer");
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn undersized_pooled_workspace_grows_and_counts() {
+        let pool = WorkspacePool::new();
+        drop(pool.checkout(10));
+        {
+            let ws = pool.checkout(50);
+            assert!(ws.capacity() >= 50);
+        }
+        assert_eq!(pool.stats().fresh_allocs, 2, "growth counts as a fresh allocation");
+        drop(pool.checkout(50));
+        assert_eq!(pool.stats().fresh_allocs, 2, "grown buffer now serves repeats");
+    }
+
+    #[test]
+    fn checkout_is_best_fit_and_grows_the_largest() {
+        let pool = WorkspacePool::new();
+        // Seed the free list with a large and a small buffer.
+        {
+            let g_big = pool.checkout(1000);
+            let g_small = pool.checkout(10);
+            drop(g_big);
+            drop(g_small);
+        }
+        assert_eq!(pool.stats().fresh_allocs, 2);
+        // A small request must take the small buffer (best fit), leaving
+        // the large one resident for a large request — zero new allocs.
+        let small = pool.checkout(8);
+        assert!(small.capacity() < 1000, "best fit must pick the small buffer");
+        let big = pool.checkout(900);
+        assert_eq!(big.capacity(), 1000, "large buffer stayed available");
+        assert_eq!(pool.stats().fresh_allocs, 2, "no fresh allocation for either");
+        drop(small);
+        drop(big);
+        // When nothing fits, the largest resident buffer is grown.
+        let huge = pool.checkout(2000);
+        assert!(huge.capacity() >= 2000);
+        assert_eq!(pool.stats().fresh_allocs, 3, "growth ticks the counter once");
+        drop(huge);
+        assert_eq!(pool.pooled(), 2, "still two resident workspaces");
+    }
+
+    #[test]
+    fn concurrent_checkouts_get_distinct_workspaces() {
+        let pool = WorkspacePool::new();
+        let g1 = pool.checkout(8);
+        let g2 = pool.checkout(8);
+        // Writing through one must not affect the other (distinct buffers).
+        let (mut g1, mut g2) = (g1, g2);
+        g1.pbuf[0] = 7;
+        g2.pbuf[0] = 9;
+        assert_ne!(g1.pbuf[0], g2.pbuf[0]);
+        drop(g1);
+        drop(g2);
+        assert_eq!(pool.pooled(), 2);
+        assert_eq!(pool.stats().fresh_allocs, 2);
+    }
+
+    #[test]
+    fn guard_returns_workspace_on_panic() {
+        let pool = WorkspacePool::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ws = pool.checkout(4);
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.pooled(), 1, "unwind must return the workspace");
+    }
+
+    #[test]
+    fn tile_counter_accumulates() {
+        let pool = WorkspacePool::new();
+        pool.record_tiles(3);
+        pool.record_tiles(4);
+        assert_eq!(pool.stats().fused_tiles, 7);
+    }
+}

@@ -12,11 +12,11 @@ use super::heuristic::{HeuristicInput, SelectionHeuristic};
 use super::metrics::Metrics;
 use super::plan::EscPlanCache;
 use super::scan::scan_pair;
-use crate::backend::{BackendSpec, ComputeBackend};
+use crate::backend::{BackendSpec, ComputeBackend, WorkspacePool};
 use crate::esc::coarse::{coarse_esc_gemm, DEFAULT_BLOCK};
 use crate::linalg::Matrix;
 use crate::ozaki::batched::{gemm_grouped, GroupedProblem, SliceCache};
-use crate::ozaki::{emulated_gemm_on, OzakiConfig, SliceEncoding};
+use crate::ozaki::{fused_gemm_on, OzakiConfig, SliceEncoding};
 use crate::runtime::{ArtifactKind, RuntimeHandle};
 
 /// Why ADP dispatched the way it did (Fig 8 / Fig 7-right inputs).
@@ -105,6 +105,11 @@ pub struct AdpConfig {
     /// Sliced-operand cache for [`AdpEngine::gemm_grouped`]. `None` =>
     /// each grouped call amortizes only within itself (private cache).
     pub slice_cache: Option<Arc<SliceCache>>,
+    /// Scratch pool for the fused tile engine and the grouped pipeline:
+    /// per-thread tile accumulators and hi/lo buffers, checked out per
+    /// request. Share one `Arc` across engines (the service does) so the
+    /// whole deployment reaches zero steady-state scratch allocation.
+    pub workspace_pool: Arc<WorkspacePool>,
 }
 
 impl AdpConfig {
@@ -122,6 +127,7 @@ impl AdpConfig {
             backend: BackendSpec::Serial.build(),
             plan_cache: None,
             slice_cache: None,
+            workspace_pool: Arc::new(WorkspacePool::new()),
         }
     }
 
@@ -152,6 +158,11 @@ impl AdpConfig {
 
     pub fn with_slice_cache(mut self, cache: Arc<SliceCache>) -> AdpConfig {
         self.slice_cache = Some(cache);
+        self
+    }
+
+    pub fn with_workspace_pool(mut self, pool: Arc<WorkspacePool>) -> AdpConfig {
+        self.workspace_pool = pool;
         self
     }
 }
@@ -223,8 +234,16 @@ impl AdpEngine {
                 }
             }
         }
+        // Native emulation runs the fused tile engine (bitwise identical
+        // to the level-major reference; scratch from the shared pool).
         let cfg = OzakiConfig::with_encoding(slices, self.cfg.encoding);
-        let c = emulated_gemm_on(a, b, &cfg, self.cfg.backend.as_ref());
+        let c = fused_gemm_on(
+            a,
+            b,
+            &cfg,
+            self.cfg.backend.as_ref(),
+            self.cfg.workspace_pool.as_ref(),
+        );
         let exec_s = te.elapsed().as_secs_f64();
         self.finish(c, GemmDecision::EmulatedNative { slices }, esc, slices, guardrail_s, exec_s)
     }
@@ -360,7 +379,8 @@ impl AdpEngine {
                     cfg: OzakiConfig::with_encoding(p.slices, self.cfg.encoding),
                 })
                 .collect();
-            let (cs, gstats) = gemm_grouped(&probs, cache, self.cfg.backend.as_ref());
+            let (cs, gstats) =
+                gemm_grouped(&probs, cache, self.cfg.backend.as_ref(), self.cfg.workspace_pool.as_ref());
             self.metrics.record_group(&gstats);
             let exec_each = te.elapsed().as_secs_f64() / pending.len() as f64;
             for (p, c) in pending.into_iter().zip(cs) {
@@ -407,6 +427,9 @@ impl AdpEngine {
     ) -> (Matrix, AdpOutcome) {
         let outcome = AdpOutcome { decision, esc, slices_required, guardrail_s, exec_s };
         self.metrics.record(&outcome);
+        // Refresh the workspace-pool gauges (pool lifetime totals) so
+        // snapshots expose checkout/fresh-allocation/fused-tile counts.
+        self.metrics.sync_workspace(self.cfg.workspace_pool.stats());
         (c, outcome)
     }
 }

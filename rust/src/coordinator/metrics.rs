@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use super::adp::{AdpOutcome, GemmDecision};
+use crate::backend::WorkspaceStats;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -28,6 +29,9 @@ struct Inner {
     esc_cache_misses: u64,
     coalesced_batches: u64,
     coalesced_requests: u64,
+    workspace_checkouts: u64,
+    workspace_fresh: u64,
+    fused_tiles: u64,
 }
 
 /// Immutable snapshot of the counters.
@@ -55,6 +59,19 @@ pub struct MetricsSnapshot {
     pub coalesced_batches: u64,
     /// Requests served inside those groups.
     pub coalesced_requests: u64,
+    /// Workspace-pool checkouts (fused engine + grouped pipeline scratch).
+    /// Pool lifetime total, refreshed per request — like the other
+    /// workspace gauges below it tracks the shared pool, not this
+    /// `Metrics` instance, so [`Metrics::reset`] does not rewind it (the
+    /// next sync restores the pool total); measure windows as deltas
+    /// between snapshots.
+    pub workspace_checkouts: u64,
+    /// Checkouts that had to allocate or grow a buffer. A warm service
+    /// serving repeat shapes keeps this flat — the zero-hot-path-
+    /// allocation criterion, asserted by a counter test.
+    pub workspace_fresh: u64,
+    /// Output tiles executed by the fused tile engine.
+    pub fused_tiles: u64,
 }
 
 impl MetricsSnapshot {
@@ -116,6 +133,17 @@ impl Metrics {
         g.coalesced_requests += n;
     }
 
+    /// Refresh the workspace gauges from a pool's lifetime totals. The
+    /// pool is shared service-wide, so totals (not per-request deltas)
+    /// are the meaningful series; `max` keeps the gauges monotone even
+    /// when racing workers sync out of order.
+    pub fn sync_workspace(&self, stats: WorkspaceStats) {
+        let mut g = self.inner.lock().unwrap();
+        g.workspace_checkouts = g.workspace_checkouts.max(stats.checkouts);
+        g.workspace_fresh = g.workspace_fresh.max(stats.fresh_allocs);
+        g.fused_tiles = g.fused_tiles.max(stats.fused_tiles);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap().clone();
         MetricsSnapshot {
@@ -134,9 +162,16 @@ impl Metrics {
             esc_cache_misses: g.esc_cache_misses,
             coalesced_batches: g.coalesced_batches,
             coalesced_requests: g.coalesced_requests,
+            workspace_checkouts: g.workspace_checkouts,
+            workspace_fresh: g.workspace_fresh,
+            fused_tiles: g.fused_tiles,
         }
     }
 
+    /// Zero every counter. The workspace gauges (`workspace_checkouts`,
+    /// `workspace_fresh`, `fused_tiles`) mirror the *shared pool's*
+    /// lifetime totals, so the first post-reset sync restores them —
+    /// treat them as gauges and difference snapshots for window math.
     pub fn reset(&self) {
         *self.inner.lock().unwrap() = Inner::default();
     }
@@ -180,6 +215,20 @@ mod tests {
         assert_eq!((s.slice_cache_hits, s.slice_cache_misses), (3, 5));
         assert_eq!((s.esc_cache_hits, s.esc_cache_misses), (1, 1));
         assert_eq!((s.coalesced_batches, s.coalesced_requests), (1, 4));
+    }
+
+    #[test]
+    fn workspace_gauges_track_pool_totals_monotonically() {
+        use crate::backend::WorkspaceStats;
+        let m = Metrics::default();
+        m.sync_workspace(WorkspaceStats { checkouts: 4, fresh_allocs: 2, fused_tiles: 9 });
+        // A stale (smaller) sync from a racing worker must not regress.
+        m.sync_workspace(WorkspaceStats { checkouts: 3, fresh_allocs: 1, fused_tiles: 5 });
+        let s = m.snapshot();
+        assert_eq!((s.workspace_checkouts, s.workspace_fresh, s.fused_tiles), (4, 2, 9));
+        m.sync_workspace(WorkspaceStats { checkouts: 10, fresh_allocs: 2, fused_tiles: 20 });
+        let s = m.snapshot();
+        assert_eq!((s.workspace_checkouts, s.workspace_fresh, s.fused_tiles), (10, 2, 20));
     }
 
     #[test]

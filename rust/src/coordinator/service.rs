@@ -35,7 +35,7 @@ use super::adp::{AdpConfig, AdpEngine, AdpOutcome};
 use super::heuristic::SelectionHeuristic;
 use super::metrics::Metrics;
 use super::plan::EscPlanCache;
-use crate::backend::BackendSpec;
+use crate::backend::{BackendSpec, WorkspacePool};
 use crate::linalg::Matrix;
 use crate::ozaki::batched::SliceCache;
 use crate::ozaki::SliceEncoding;
@@ -175,11 +175,14 @@ impl GemmService {
         let (tx, rx) = mpsc::sync_channel::<QueueItem>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let inflight = Arc::new(AtomicU64::new(0));
-        // One backend (=> one thread pool) and one cache pair shared by
-        // every worker: the whole service amortizes together.
+        // One backend (=> one thread pool), one cache pair and one
+        // workspace pool shared by every worker: the whole service
+        // amortizes together, and steady-state traffic recycles the same
+        // scratch buffers instead of allocating per request.
         let backend = cfg.backend.build();
         let plan_cache = Arc::new(EscPlanCache::new(cfg.plan_cache_entries));
         let slice_cache = Arc::new(SliceCache::new(cfg.slice_cache_entries));
+        let workspace_pool = Arc::new(WorkspacePool::new());
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let rx = rx.clone();
@@ -196,6 +199,7 @@ impl GemmService {
                 backend: backend.clone(),
                 plan_cache: Some(plan_cache.clone()),
                 slice_cache: Some(slice_cache.clone()),
+                workspace_pool: workspace_pool.clone(),
             };
             let knobs = CoalesceKnobs {
                 coalesce: cfg.coalesce,
@@ -536,6 +540,40 @@ mod tests {
         }
         svc_ser.shutdown();
         svc_par.shutdown();
+    }
+
+    #[test]
+    fn warm_service_serves_repeat_shapes_with_zero_fresh_workspaces() {
+        // Acceptance criterion of the workspace satellite: once warm, a
+        // service sees repeat shapes without a single fresh scratch
+        // allocation — checkouts and fused tiles keep climbing, the
+        // fresh-allocation gauge stays flat.
+        let svc = small_service(2);
+        let mut rng = Rng::new(99);
+        let mk = |rng: &mut Rng| {
+            (Matrix::uniform(16, 16, -1.0, 1.0, rng), Matrix::uniform(16, 16, -1.0, 1.0, rng))
+        };
+        for _ in 0..4 {
+            let (a, b) = mk(&mut rng);
+            let resp = svc.gemm_blocking(a, b);
+            assert!(resp.outcome.decision.is_emulated());
+        }
+        let warm = svc.metrics.snapshot();
+        assert!(warm.workspace_checkouts >= 4, "one checkout per fused request: {warm:?}");
+        assert!(warm.fused_tiles >= 4, "each 16x16 request runs one fused tile: {warm:?}");
+        assert!(warm.workspace_fresh >= 1, "cold pool must have allocated once");
+        for _ in 0..6 {
+            let (a, b) = mk(&mut rng);
+            svc.gemm_blocking(a, b);
+        }
+        let after = svc.metrics.snapshot();
+        assert!(after.workspace_checkouts >= warm.workspace_checkouts + 6);
+        assert!(after.fused_tiles >= warm.fused_tiles + 6);
+        assert_eq!(
+            after.workspace_fresh, warm.workspace_fresh,
+            "warm service must serve repeat shapes with zero fresh workspace allocations"
+        );
+        svc.shutdown();
     }
 
     #[test]

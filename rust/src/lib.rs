@@ -6,11 +6,13 @@
 //! The library provides:
 //!
 //! * [`backend`] — the pluggable compute-backend layer: a
-//!   [`ComputeBackend`] trait over the INT8 slice-pair and FP64 tile
+//!   [`ComputeBackend`] trait over the INT8 slice-pair kernels (the
+//!   tile-major fused engine and the level-major reference) and FP64 tile
 //!   kernels, with a serial reference implementation and a work-stealing
 //!   parallel one (bitwise identical by construction) on a shared
-//!   token-budgeted scoped-thread pool. The seam future SIMD/GPU/sharded
-//!   backends plug into.
+//!   token-budgeted scoped-thread pool, plus the pooled [`Workspace`]
+//!   scratch that makes the steady-state hot path allocation-free. The
+//!   seam future SIMD/GPU/sharded backends plug into.
 //! * [`ozaki`] — the Ozaki-I decomposition with the paper's **unsigned slice
 //!   encoding** (two's-complement remapping, §3 of the paper), a pure-Rust
 //!   INT8-slice GEMM emulation pipeline.
@@ -48,10 +50,13 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod util;
 
-pub use backend::{BackendSpec, ComputeBackend, ParallelBackend, SerialBackend, SliceBatch};
+pub use backend::{
+    BackendSpec, ComputeBackend, ParallelBackend, SerialBackend, SliceBatch, Workspace,
+    WorkspacePool, WorkspaceStats,
+};
 pub use coordinator::adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
 pub use coordinator::plan::EscPlanCache;
 pub use esc::{coarse_esc_gemm, exact_esc_dot, exact_esc_gemm, EscReport};
 pub use linalg::matrix::Matrix;
 pub use ozaki::batched::SliceCache;
-pub use ozaki::{OzakiConfig, SliceEncoding};
+pub use ozaki::{OzakiConfig, PairSchedule, SliceEncoding};

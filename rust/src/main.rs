@@ -227,6 +227,10 @@ fn cmd_serve(args: &Args) {
         snap.coalesced_requests,
         snap.coalesced_batches
     );
+    println!(
+        "fused engine: {} tiles | workspaces: {} checkouts, {} fresh allocations",
+        snap.fused_tiles, snap.workspace_checkouts, snap.workspace_fresh
+    );
     svc.shutdown();
 }
 

@@ -30,10 +30,11 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use super::recompose::{recompose, LevelAccumulator};
+use super::recompose::{add_level_into, recompose_slices};
+use super::schedule::PairSchedule;
 use super::slicing::{slice_a, slice_b, SlicedMatrix};
 use super::{OzakiConfig, SliceEncoding};
-use crate::backend::{ComputeBackend, SliceBatch};
+use crate::backend::{ComputeBackend, SliceBatch, WorkspaceGuard, WorkspacePool};
 use crate::linalg::Matrix;
 
 /// Which operand role a cached decomposition was built for. A-slicing
@@ -194,30 +195,34 @@ pub struct GroupStats {
     pub chunked_bypass: u64,
 }
 
-/// In-flight state of one problem between lockstep rounds.
-struct Active {
+/// In-flight state of one problem between lockstep rounds. The level
+/// buffer and compensated hi/lo accumulator live in a pooled workspace
+/// checked out for the duration of the call, so a warm pool makes the
+/// whole group allocation-free apart from the result matrices.
+struct Active<'p> {
     idx: usize,
     asl: Arc<SlicedMatrix>,
     bsl: Arc<SlicedMatrix>,
     s: usize,
-    rb: i32,
-    acc: LevelAccumulator,
-    pbuf: Vec<i64>,
+    schedule: Arc<PairSchedule>,
+    ws: WorkspaceGuard<'p>,
     m: usize,
     n: usize,
 }
 
 /// Grouped batched emulated DGEMM (see module docs). Results are bitwise
-/// identical to calling [`super::gemm::emulated_gemm_on`] per problem with
-/// the same configs, for any backend and any cache state.
+/// identical to calling [`super::gemm::emulated_gemm_on`] (equivalently,
+/// the fused engine [`super::gemm::fused_gemm_on`]) per problem with the
+/// same configs, for any backend, cache or workspace-pool state.
 pub fn gemm_grouped(
     problems: &[GroupedProblem<'_>],
     cache: &SliceCache,
     backend: &dyn ComputeBackend,
+    workspaces: &WorkspacePool,
 ) -> (Vec<Matrix>, GroupStats) {
     let mut stats = GroupStats::default();
     let mut out: Vec<Option<Matrix>> = (0..problems.len()).map(|_| None).collect();
-    let mut active: Vec<Active> = Vec::new();
+    let mut active: Vec<Active<'_>> = Vec::new();
 
     for (idx, p) in problems.iter().enumerate() {
         assert_eq!(p.a.cols, p.b.rows, "gemm shape mismatch");
@@ -227,9 +232,10 @@ pub fn gemm_grouped(
             continue;
         }
         if k > p.cfg.k_chunk() {
-            // Rare large-k path: identical to the per-request pipeline by
-            // construction (it *is* the per-request pipeline).
-            out[idx] = Some(super::gemm::emulated_gemm_on(p.a, p.b, &p.cfg, backend));
+            // Rare large-k path: bitwise identical to the per-request
+            // pipeline by construction (it *is* the per-request fused
+            // pipeline, which matches the level-major reference).
+            out[idx] = Some(super::gemm::fused_gemm_on(p.a, p.b, &p.cfg, backend, workspaces));
             stats.chunked_bypass += 1;
             continue;
         }
@@ -237,14 +243,16 @@ pub fn gemm_grouped(
         let (bsl, hit_b) = cache.get_or_slice(OperandRole::B, p.b, &p.cfg);
         stats.slice_cache_hits += hit_a as u64 + hit_b as u64;
         stats.slice_cache_misses += (!hit_a) as u64 + (!hit_b) as u64;
+        let mut ws = workspaces.checkout(m * n);
+        ws.hi[..m * n].fill(0.0);
+        ws.lo[..m * n].fill(0.0);
         active.push(Active {
             idx,
             asl,
             bsl,
             s: p.cfg.slices,
-            rb: p.cfg.encoding.radix_bits(),
-            acc: LevelAccumulator::new(m * n),
-            pbuf: vec![0i64; m * n],
+            schedule: PairSchedule::for_config(&p.cfg),
+            ws,
             m,
             n,
         });
@@ -253,28 +261,22 @@ pub fn gemm_grouped(
     // Lockstep rounds: round r runs weight level q = s-1-r of every
     // problem that still has one, as ONE backend schedule. Levels feed
     // each problem's compensated accumulator strictly in the per-request
-    // order (q = s-1 down to 0); the i64 level products are exact, so the
-    // cross-problem schedule cannot change a bit.
+    // order (q = s-1 down to 0, i.e. schedule order); the i64 level
+    // products are exact, so the cross-problem schedule cannot change a
+    // bit.
     let rounds = active.iter().map(|a| a.s).max().unwrap_or(0);
     for r in 0..rounds {
-        let round_pairs: Vec<Option<Vec<(usize, usize)>>> = active
-            .iter()
-            .map(|act| {
-                (r < act.s).then(|| {
-                    let q = act.s - 1 - r;
-                    (0..=q).map(|t| (t, q - t)).collect::<Vec<(usize, usize)>>()
-                })
-            })
-            .collect();
         let mut batches: Vec<SliceBatch<'_>> = Vec::new();
-        for (act, rp) in active.iter_mut().zip(&round_pairs) {
-            if let Some(pairs) = rp {
-                act.pbuf.fill(0);
+        for act in active.iter_mut() {
+            if r < act.s {
+                let e = act.m * act.n;
+                let ws = &mut *act.ws;
+                ws.pbuf[..e].fill(0);
                 batches.push(SliceBatch {
                     a: act.asl.as_ref(),
                     b: act.bsl.as_ref(),
-                    pairs: pairs.as_slice(),
-                    out: act.pbuf.as_mut_slice(),
+                    pairs: act.schedule.level(r).0,
+                    out: &mut ws.pbuf[..e],
                 });
             }
         }
@@ -282,15 +284,26 @@ pub fn gemm_grouped(
         drop(batches);
         for act in active.iter_mut() {
             if r < act.s {
-                let q = (act.s - 1 - r) as i32;
-                let w = 2 * act.rb * (act.s as i32 - 1) - act.rb * q;
-                act.acc.add_level(&act.pbuf, w);
+                let e = act.m * act.n;
+                let (_, w) = act.schedule.level(r);
+                let ws = &mut *act.ws;
+                add_level_into(&mut ws.hi[..e], &mut ws.lo[..e], &ws.pbuf[..e], w);
             }
         }
     }
 
-    for act in active {
-        let c = recompose(act.acc, &act.asl.sigma, &act.bsl.sigma, act.m, act.n);
+    for mut act in active {
+        let e = act.m * act.n;
+        let (m, n) = (act.m, act.n);
+        let ws = &mut *act.ws;
+        let c = recompose_slices(
+            &mut ws.hi[..e],
+            &mut ws.lo[..e],
+            &act.asl.sigma,
+            &act.bsl.sigma,
+            m,
+            n,
+        );
         out[act.idx] = Some(c);
     }
     (out.into_iter().map(|c| c.expect("every problem produced")).collect(), stats)
@@ -319,17 +332,23 @@ mod tests {
         let probs: Vec<GroupedProblem<'_>> =
             bs.iter().map(|b| GroupedProblem { a: &a, b, cfg }).collect();
         let cache = SliceCache::new(32);
-        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend);
+        let pool = WorkspacePool::new();
+        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend, &pool);
         // A: 1 miss + 3 hits; B: 4 distinct misses.
         assert_eq!(st.slice_cache_misses, 5, "{st:?}");
         assert_eq!(st.slice_cache_hits, 3, "{st:?}");
         for (c, b) in cs.iter().zip(&bs) {
             assert_bitwise(c, &emulated_gemm_on(&a, b, &cfg, &SerialBackend), "shared-A group");
         }
-        // Replaying the same group is all hits.
-        let (_, st2) = gemm_grouped(&probs, &cache, &SerialBackend);
+        // Replaying the same group is all hits, and the warm workspace
+        // pool serves it without a single fresh allocation.
+        let fresh_after_first = pool.stats().fresh_allocs;
+        let (_, st2) = gemm_grouped(&probs, &cache, &SerialBackend, &pool);
         assert_eq!(st2.slice_cache_misses, 0);
         assert_eq!(st2.slice_cache_hits, 8);
+        let ws = pool.stats();
+        assert_eq!(ws.fresh_allocs, fresh_after_first, "warm pool must not allocate");
+        assert_eq!(ws.checkouts, 8, "one workspace checkout per problem per call");
     }
 
     #[test]
@@ -385,12 +404,14 @@ mod tests {
             GroupedProblem { a: &a, b: &b, cfg },
             GroupedProblem { a: &a2, b: &b2, cfg },
         ];
-        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend);
+        let pool = WorkspacePool::new();
+        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend, &pool);
         assert_eq!((cs[0].rows, cs[0].cols), (0, 2));
         assert_eq!((cs[1].rows, cs[1].cols), (2, 2));
         assert!(cs[1].data.iter().all(|&x| x == 0.0));
         assert_eq!(st.slice_cache_misses, 0, "degenerate problems skip the cache");
-        assert_eq!(gemm_grouped(&[], &cache, &SerialBackend).0.len(), 0);
+        assert_eq!(pool.stats().checkouts, 0, "degenerate problems skip the pool");
+        assert_eq!(gemm_grouped(&[], &cache, &SerialBackend, &pool).0.len(), 0);
     }
 
     #[test]
@@ -400,6 +421,7 @@ mod tests {
         // identical to the per-request pipeline.
         let par = ParallelBackend::new(4).with_cutoff_ops(0);
         let cache = SliceCache::new(16); // small: exercises eviction across cases
+        let pool = WorkspacePool::new();
         prop::check("grouped == sequential (bitwise)", 10, |rng| {
             let nprobs = rng.int(1, 6) as usize;
             let shared_a = rng.f64() < 0.5;
@@ -424,7 +446,7 @@ mod tests {
             let probs: Vec<GroupedProblem<'_>> =
                 mats.iter().map(|(a, b, cfg)| GroupedProblem { a, b, cfg: *cfg }).collect();
             for backend in [&SerialBackend as &dyn ComputeBackend, &par] {
-                let (cs, _) = gemm_grouped(&probs, &cache, backend);
+                let (cs, _) = gemm_grouped(&probs, &cache, backend, &pool);
                 for ((a, b, cfg), c) in mats.iter().zip(&cs) {
                     let c_ref = emulated_gemm_on(a, b, cfg, backend);
                     for (x, y) in c.data.iter().zip(&c_ref.data) {

@@ -1,4 +1,4 @@
-//! Exact INT8 slice-pair GEMM and the full emulated-DGEMM pipeline.
+//! Exact INT8 slice-pair GEMM and the two emulated-DGEMM drivers.
 //!
 //! The slice-pair GEMM is the Tensor-Core workload of the paper: INT8
 //! inputs, INT32 accumulation, exact integer arithmetic. Ozaki-I runs
@@ -6,16 +6,42 @@
 //! quadratic-in-slices compute cost comes from (§4) and why the unsigned
 //! encoding's slice reduction translates into a 22% compute saving (§3).
 //!
-//! The per-level pair schedule is dispatched through a
-//! [`ComputeBackend`](crate::backend::ComputeBackend): the serial backend
-//! runs the pairs in order, the parallel backend splits the level's output
-//! rows across a thread pool. Both are bitwise identical — every i64
-//! accumulation here is exact, so the schedule cannot change a single bit.
+//! Two drivers execute that pair set, sharing one precomputed
+//! [`PairSchedule`]:
+//!
+//! * **Level-major reference** ([`emulated_gemm`] and friends) — one
+//!   matrix-wide backend batch per weight level `q`, feeding an `m x n`
+//!   [`LevelAccumulator`]. Simple, and retained as the oracle every other
+//!   schedule is property-tested against — but it rewrites and re-reads
+//!   an `m*n` i64 buffer `s` times and re-streams every INT8 slice from
+//!   memory once per pair, the memory-traffic pattern fused-kernel work
+//!   (EmuGEMM; PAPERS.md) shows dominates emulation cost.
+//! * **Fused tile engine** ([`fused_gemm`], [`fused_gemm_on`],
+//!   [`ComputeBackend::fused_tile_gemm`]) — the output is partitioned
+//!   into [`FUSED_MC`]×[`FUSED_NC`] tiles and **all** `s(s+1)/2` pairs of
+//!   a tile run while its operand slice rows are cache-resident, with the
+//!   per-tile level sums folded into a tile-sized compensated accumulator
+//!   and the sigma descaling applied per tile. One pass over the output,
+//!   one parallel region (work-stealing over row bands of tiles) instead
+//!   of `s` barriers, and scratch from a pooled
+//!   [`Workspace`](crate::backend::Workspace) — zero hot-path allocation.
+//!
+//! **Why tile-major preserves bitwise identity.** Per output element
+//! `(i, j)` the arithmetic sequence is exactly the reference one: the
+//! level-`q` pair sum is exact integer work (any pair/row/tile order
+//! yields the identical i64), levels enter the two_sum compensation in
+//! the same smallest-weight-first order, and the four descaling passes
+//! plus the final `hi + lo` collapse read nothing outside the element
+//! itself. Reordering elements (tile-major instead of matrix-wide) can
+//! therefore not change a single bit — asserted by property test against
+//! the level-major oracle across shapes, encodings, backends and forced
+//! k-chunking.
 
-use super::recompose::{recompose, LevelAccumulator};
+use super::recompose::{add_level_into, descale_tile, recompose, LevelAccumulator};
+use super::schedule::PairSchedule;
 use super::slicing::{slice_a, slice_b, SlicedMatrix};
 use super::OzakiConfig;
-use crate::backend::{ComputeBackend, SerialBackend};
+use crate::backend::{ComputeBackend, SerialBackend, Workspace, WorkspacePool};
 use crate::linalg::Matrix;
 
 /// Largest k processed in one i32 accumulation pass: |digit| <= 128 so each
@@ -34,10 +60,9 @@ pub fn slice_pair_gemm(a: &SlicedMatrix, t: usize, b: &SlicedMatrix, u: usize, o
 
 /// Rows `[row0, row0 + rows)` of the slice-pair GEMM, accumulating into
 /// `out`, the row-major `rows x n` sub-buffer for exactly that row range.
-/// The inner accumulation is i32 (exact for k <= K_CHUNK); `out` aggregates
-/// in i64 so multiple pairs of the same weight level can share a buffer
-/// safely. Disjoint row ranges may run concurrently: integer arithmetic
-/// makes any row partition bitwise identical to the full-matrix call.
+/// Delegates to the full tile kernel with the complete column extent.
+/// Disjoint row ranges may run concurrently: integer arithmetic makes any
+/// row partition bitwise identical to the full-matrix call.
 #[allow(clippy::too_many_arguments)]
 pub fn slice_pair_gemm_rows(
     a: &SlicedMatrix,
@@ -48,19 +73,43 @@ pub fn slice_pair_gemm_rows(
     rows: usize,
     out: &mut [i64],
 ) {
-    let (k, n) = (a.cols, b.rows);
+    slice_pair_gemm_tile(a, t, b, u, row0, rows, 0, b.rows, out);
+}
+
+/// The `rows x cols` output tile at `(row0, col0)` of the slice-pair
+/// GEMM, accumulating into `out`, the row-major `rows x cols` buffer for
+/// exactly that tile. The inner accumulation is i32 (exact for
+/// k <= K_CHUNK); `out` aggregates in i64 so multiple pairs of the same
+/// weight level can share a buffer safely. Disjoint tiles may run
+/// concurrently, and any tile partition is bitwise identical to the
+/// full-matrix call — every accumulation is exact integer arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub fn slice_pair_gemm_tile(
+    a: &SlicedMatrix,
+    t: usize,
+    b: &SlicedMatrix,
+    u: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    out: &mut [i64],
+) {
+    let k = a.cols;
     assert_eq!(a.cols, b.cols, "inner dimension mismatch");
     assert!(row0 + rows <= a.rows, "row range out of bounds");
-    assert_eq!(out.len(), rows * n);
-    assert!(k <= K_CHUNK, "k chunking is handled by emulated_gemm");
-    let at = a.slice(t);
-    let bu = b.slice(u);
+    assert!(col0 + cols <= b.rows, "column range out of bounds");
+    assert_eq!(out.len(), rows * cols);
+    assert!(k <= K_CHUNK, "k chunking is handled by the gemm drivers");
+    let at = a.slice_rows(t, row0, rows);
+    let bu = b.slice_rows(u, col0, cols);
+    let n = cols;
     // Row-major x row-major(transposed) dot kernel, 2x4 register blocked
     // (8 independent i32 accumulator chains for the auto-vectorizer).
     let mut i = 0;
     while i + 2 <= rows {
-        let a0 = &at[(row0 + i) * k..(row0 + i + 1) * k];
-        let a1 = &at[(row0 + i + 1) * k..(row0 + i + 2) * k];
+        let a0 = &at[i * k..(i + 1) * k];
+        let a1 = &at[(i + 1) * k..(i + 2) * k];
         let mut j = 0;
         while j + 4 <= n {
             let b0 = &bu[j * k..(j + 1) * k];
@@ -97,7 +146,7 @@ pub fn slice_pair_gemm_rows(
         i += 2;
     }
     if i < rows {
-        let a0 = &at[(row0 + i) * k..(row0 + i + 1) * k];
+        let a0 = &at[i * k..(i + 1) * k];
         for j in 0..n {
             let b0 = &bu[j * k..(j + 1) * k];
             let mut c = 0i32;
@@ -163,7 +212,10 @@ pub fn emulated_gemm_with_breakdown_on(
     }
     // Rare large-k path: exact i32 accumulation caps each pass at the
     // chunk size; chunk results are summed in f64 (same rounding class as
-    // one pass).
+    // one pass). Every breakdown field — `pairs` included — accumulates
+    // across chunks: each chunk really executes its own pair_count()
+    // slice-pair GEMMs, and the Fig 5 GMAC/s rates divide by `pairs`.
+    bd.pairs = 0;
     let mut c = Matrix::zeros(m, n);
     let mut k0 = 0;
     while k0 < k {
@@ -174,6 +226,7 @@ pub fn emulated_gemm_with_breakdown_on(
         bd.slice_s += cbd.slice_s;
         bd.gemm_s += cbd.gemm_s;
         bd.recompose_s += cbd.recompose_s;
+        bd.pairs += cbd.pairs;
         k0 += kc;
     }
     (c, bd)
@@ -195,19 +248,18 @@ fn emulated_gemm_chunk(
     bd.slice_s = ts.elapsed().as_secs_f64();
 
     let tg = std::time::Instant::now();
-    let rb = cfg.encoding.radix_bits();
+    let schedule = PairSchedule::for_config(cfg);
     let mut acc = LevelAccumulator::new(m * n);
     let mut pbuf = vec![0i64; m * n];
-    // Group pairs by weight level q = t+u; accumulate levels smallest
-    // weight first (matches python/compile/ozaki.py::recompose exactly).
-    // Each level is one backend batch — the backend may run its pairs in
-    // any schedule (exact integer arithmetic), but levels feed the
-    // compensated accumulator strictly in this order.
-    for q in (0..s).rev() {
+    // Pairs grouped by weight level q = t+u, accumulated smallest weight
+    // first (matches python/compile/ozaki.py::recompose exactly) — both
+    // from the shared precomputed schedule, so no per-level pair vectors
+    // are rebuilt. Each level is one backend batch: the backend may run
+    // its pairs in any order (exact integer arithmetic), but levels feed
+    // the compensated accumulator strictly in schedule order.
+    for (pairs, w) in schedule.levels() {
         pbuf.fill(0);
-        let pairs: Vec<(usize, usize)> = (0..=q).map(|t| (t, q - t)).collect();
-        backend.slice_pair_gemm_batch(&asl, &bsl, &pairs, &mut pbuf);
-        let w = 2 * rb * (s as i32 - 1) - rb * q as i32;
+        backend.slice_pair_gemm_batch(&asl, &bsl, pairs, &mut pbuf);
         acc.add_level(&pbuf, w);
     }
     bd.gemm_s = tg.elapsed().as_secs_f64();
@@ -216,6 +268,175 @@ fn emulated_gemm_chunk(
     let c = recompose(acc, &asl.sigma, &bsl.sigma, m, n);
     bd.recompose_s = tr.elapsed().as_secs_f64();
     (c, bd)
+}
+
+// ---------------------------------------------------------------------
+// Fused tile engine (see module docs)
+// ---------------------------------------------------------------------
+
+/// Output-tile height of the fused engine: one row band of A slices plus
+/// the tile accumulators stay cache-resident while all `s(s+1)/2` pairs
+/// run.
+pub const FUSED_MC: usize = 64;
+/// Output-tile width of the fused engine.
+pub const FUSED_NC: usize = 64;
+/// Workspace elements a fused-engine thread checks out: one full tile of
+/// i64 + hi + lo scratch.
+pub const FUSED_WS_ELEMS: usize = FUSED_MC * FUSED_NC;
+
+/// Fused tile-major emulated DGEMM on the serial reference backend with a
+/// throwaway workspace pool — the convenience form of [`fused_gemm_on`].
+pub fn fused_gemm(a: &Matrix, b: &Matrix, cfg: &OzakiConfig) -> Matrix {
+    fused_gemm_on(a, b, cfg, &SerialBackend, &WorkspacePool::default())
+}
+
+/// Fused tile-major emulated DGEMM: slice once, then run every weight
+/// level of every [`FUSED_MC`]×[`FUSED_NC`] output tile while the
+/// operands are cache-resident, through
+/// [`ComputeBackend::fused_tile_gemm`]. Bitwise identical to
+/// [`emulated_gemm_on`] for every input, backend and chunking (see the
+/// module docs for the argument); scratch comes from `workspaces`, so a
+/// warm pool makes the hot path allocation-free apart from the result.
+pub fn fused_gemm_on(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &OzakiConfig,
+    backend: &dyn ComputeBackend,
+    workspaces: &WorkspacePool,
+) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if k == 0 || m == 0 || n == 0 {
+        return Matrix::zeros(m, n);
+    }
+    let kchunk = cfg.k_chunk();
+    if k <= kchunk {
+        return fused_gemm_chunk(a, b, cfg, backend, workspaces);
+    }
+    // Rare large-k path: chunk results are summed in f64 in the same
+    // ascending-chunk order as the level-major driver, so the chunked
+    // fused result stays bitwise identical to the chunked reference.
+    let mut c = Matrix::zeros(m, n);
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = kchunk.min(k - k0);
+        let (ac, bc) = (a.block(0, k0, m, kc), b.block(k0, 0, kc, n));
+        c.add_assign(&fused_gemm_chunk(&ac, &bc, cfg, backend, workspaces));
+        k0 += kc;
+    }
+    c
+}
+
+fn fused_gemm_chunk(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &OzakiConfig,
+    backend: &dyn ComputeBackend,
+    workspaces: &WorkspacePool,
+) -> Matrix {
+    let asl = slice_a(a, cfg.slices, cfg.encoding);
+    let bsl = slice_b(b, cfg.slices, cfg.encoding);
+    let schedule = PairSchedule::for_config(cfg);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    backend.fused_tile_gemm(&asl, &bsl, &schedule, workspaces, &mut c);
+    c
+}
+
+/// The serial reference fused schedule: row bands of [`FUSED_MC`] output
+/// rows in order, column tiles in order within each band, one workspace
+/// for the whole pass. The [`ComputeBackend::fused_tile_gemm`] default
+/// runs this; parallel backends also use it as their small-problem inline
+/// path (bitwise identical either way).
+pub fn fused_tile_gemm_serial(
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    schedule: &PairSchedule,
+    workspaces: &WorkspacePool,
+    c: &mut Matrix,
+) {
+    let n = b.rows;
+    assert_eq!(c.rows, a.rows, "output rows mismatch");
+    assert_eq!(c.cols, n, "output cols mismatch");
+    if a.rows == 0 || n == 0 {
+        return;
+    }
+    let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+    let mut tiles = 0u64;
+    for (bi, band) in c.data.chunks_mut(FUSED_MC * n).enumerate() {
+        tiles += fused_band(a, b, schedule, bi * FUSED_MC, &mut ws, band);
+    }
+    workspaces.record_tiles(tiles);
+}
+
+/// One row band of the fused schedule: every [`FUSED_NC`]-wide column
+/// tile of output rows `[row0, row0 + band.len()/n)`, left to right.
+/// `band` is the contiguous row-major sub-slice of C for exactly those
+/// rows. Returns the number of tiles executed. Disjoint bands may run
+/// concurrently — each tile's arithmetic touches only its own elements.
+pub fn fused_band(
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    schedule: &PairSchedule,
+    row0: usize,
+    ws: &mut Workspace,
+    band: &mut [f64],
+) -> u64 {
+    let n = b.rows;
+    debug_assert!(n > 0 && band.len() % n == 0, "band must be whole output rows");
+    let rows = band.len() / n;
+    let mut tiles = 0u64;
+    let mut col0 = 0;
+    while col0 < n {
+        let cols = FUSED_NC.min(n - col0);
+        fused_tile(a, b, schedule, row0, rows, col0, cols, ws, band);
+        tiles += 1;
+        col0 += cols;
+    }
+    tiles
+}
+
+/// One output tile of the fused engine: all `s(s+1)/2` slice pairs,
+/// grouped by weight level in schedule (smallest-weight-first) order,
+/// accumulated into the workspace's tile-sized compensated hi/lo pair,
+/// then sigma-descaled and written into `band` (the row-major band slice
+/// of C covering rows `[row0, row0 + rows)`; the tile lands at column
+/// offset `col0` inside it). Per element this performs exactly the
+/// level-major reference arithmetic — see the module docs.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_tile(
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    schedule: &PairSchedule,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    ws: &mut Workspace,
+    band: &mut [f64],
+) {
+    let e = rows * cols;
+    assert!(ws.capacity() >= e, "workspace too small for a {rows}x{cols} tile");
+    let hi = &mut ws.hi[..e];
+    let lo = &mut ws.lo[..e];
+    let pbuf = &mut ws.pbuf[..e];
+    hi.fill(0.0);
+    lo.fill(0.0);
+    for (pairs, w) in schedule.levels() {
+        pbuf.fill(0);
+        for &(t, u) in pairs {
+            slice_pair_gemm_tile(a, t, b, u, row0, rows, col0, cols, pbuf);
+        }
+        add_level_into(hi, lo, pbuf, w);
+    }
+    descale_tile(hi, lo, &a.sigma, &b.sigma, row0, rows, col0, cols);
+    let n = b.rows;
+    for i in 0..rows {
+        let src = i * cols;
+        let dst = i * n + col0;
+        for j in 0..cols {
+            band[dst + j] = hi[src + j] + lo[src + j];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -297,6 +518,115 @@ mod tests {
             }
             assert_eq!(parts, full, "split={split}");
         }
+    }
+
+    #[test]
+    fn tile_ranged_pair_gemm_matches_full() {
+        // Any 2-D tile partition must reproduce the full-matrix result
+        // exactly (the fused-engine kernel invariant).
+        let mut rng = Rng::new(39);
+        let (m, k, n) = (11, 19, 10);
+        let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+        let asl = slice_a(&a, 3, SliceEncoding::Unsigned);
+        let bsl = slice_b(&b, 3, SliceEncoding::Unsigned);
+        let mut full = vec![0i64; m * n];
+        slice_pair_gemm(&asl, 2, &bsl, 0, &mut full);
+        for (tr, tc) in [(1usize, 1usize), (2, 3), (4, 4), (11, 10), (3, 7)] {
+            let mut got = vec![0i64; m * n];
+            let mut row0 = 0;
+            while row0 < m {
+                let rows = tr.min(m - row0);
+                let mut col0 = 0;
+                while col0 < n {
+                    let cols = tc.min(n - col0);
+                    let mut tile = vec![0i64; rows * cols];
+                    slice_pair_gemm_tile(&asl, 2, &bsl, 0, row0, rows, col0, cols, &mut tile);
+                    for i in 0..rows {
+                        for j in 0..cols {
+                            got[(row0 + i) * n + col0 + j] += tile[i * cols + j];
+                        }
+                    }
+                    col0 += cols;
+                }
+                row0 += rows;
+            }
+            assert_eq!(got, full, "tile {tr}x{tc}");
+        }
+    }
+
+    fn assert_bitwise(c1: &Matrix, c2: &Matrix, what: &str) {
+        assert_eq!((c1.rows, c1.cols), (c2.rows, c2.cols), "{what}: shape");
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fused_is_bitwise_identical_to_level_major() {
+        // Multi-band / multi-tile shapes straddling the FUSED_MC/FUSED_NC
+        // boundaries, both encodings.
+        let mut rng = Rng::new(40);
+        let pool = crate::backend::WorkspacePool::new();
+        for (m, k, n) in [(1, 1, 1), (8, 12, 8), (65, 20, 63), (70, 9, 130), (129, 7, 64)] {
+            let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+            let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+            for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+                let cfg = OzakiConfig::with_encoding(5, enc);
+                let c_ref = emulated_gemm(&a, &b, &cfg);
+                let c_fus = fused_gemm_on(&a, &b, &cfg, &SerialBackend, &pool);
+                assert_bitwise(&c_ref, &c_fus, &format!("fused ({m},{k},{n}) {enc:?}"));
+            }
+        }
+        let st = pool.stats();
+        assert!(st.fused_tiles > 0 && st.checkouts > 0);
+    }
+
+    #[test]
+    fn fused_chunked_k_is_bitwise_identical_to_level_major_chunked() {
+        let mut rng = Rng::new(41);
+        let (m, k, n) = (9, 70, 8);
+        let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+        for kc in [16usize, 64, 1] {
+            let cfg = OzakiConfig::new(6).with_k_chunk(kc);
+            let c_ref = emulated_gemm(&a, &b, &cfg);
+            let c_fus = fused_gemm(&a, &b, &cfg);
+            assert_bitwise(&c_ref, &c_fus, &format!("fused chunked kc={kc}"));
+        }
+    }
+
+    #[test]
+    fn fused_empty_shapes() {
+        let pool = crate::backend::WorkspacePool::new();
+        let cfg = OzakiConfig::new(4);
+        for (m, k, n) in [(0usize, 3usize, 2usize), (2, 0, 2), (2, 3, 0)] {
+            let c = fused_gemm_on(
+                &Matrix::zeros(m, k),
+                &Matrix::zeros(k, n),
+                &cfg,
+                &SerialBackend,
+                &pool,
+            );
+            assert_eq!((c.rows, c.cols), (m, n));
+            assert!(c.data.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn breakdown_pairs_accumulate_across_chunks() {
+        // Satellite fix: the chunked-k path must report the pair GEMMs it
+        // actually executed (one pair_count per chunk), not one chunk's.
+        let mut rng = Rng::new(42);
+        let (m, k, n) = (5, 70, 4);
+        let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+        let cfg = OzakiConfig::new(7);
+        let (_, bd_one) = emulated_gemm_with_breakdown(&a, &b, &cfg);
+        assert_eq!(bd_one.pairs, cfg.pair_count(), "single pass runs pair_count pairs");
+        let chunked = cfg.with_k_chunk(16); // ceil(70/16) = 5 chunks
+        let (_, bd) = emulated_gemm_with_breakdown(&a, &b, &chunked);
+        assert_eq!(bd.pairs, 5 * cfg.pair_count(), "pairs must accumulate across chunks");
     }
 
     #[test]

@@ -4,8 +4,13 @@
 //!   **unsigned encoding** (§3: leading signed slice, full 8-bit sub-leading
 //!   slices via the two's-complement remap) and the naive **signed
 //!   encoding** (the ablation baseline: one redundant sign bit per slice).
-//! * [`gemm`] — exact INT8×INT8→INT32 slice-pair GEMM and the full
-//!   emulated-DGEMM pipeline with Ozaki-I triangular truncation.
+//! * [`gemm`] — exact INT8×INT8→INT32 slice-pair GEMM and the two
+//!   emulated-DGEMM drivers with Ozaki-I triangular truncation: the
+//!   level-major reference (the property-test oracle) and the tile-major
+//!   **fused tile engine** (the hot path — cache-resident tiles, pooled
+//!   workspaces, one parallel region, bitwise identical).
+//! * [`schedule`] — the precomputed per-level slice-pair schedule shared
+//!   by both drivers and the grouped pipeline.
 //! * [`recompose`] — scaled recombination of slice products back to FP64.
 //!
 //! This native-Rust pipeline mirrors `python/compile/ozaki.py` formula for
@@ -16,13 +21,16 @@
 pub mod batched;
 pub mod gemm;
 pub mod recompose;
+pub mod schedule;
 pub mod slicing;
 
 pub use batched::{gemm_grouped, GroupStats, GroupedProblem, OperandRole, SliceCache};
 pub use gemm::{
     emulated_gemm, emulated_gemm_on, emulated_gemm_with_breakdown,
-    emulated_gemm_with_breakdown_on, slice_pair_gemm, slice_pair_gemm_rows, EmulationBreakdown,
+    emulated_gemm_with_breakdown_on, fused_gemm, fused_gemm_on, slice_pair_gemm,
+    slice_pair_gemm_rows, slice_pair_gemm_tile, EmulationBreakdown, FUSED_MC, FUSED_NC,
 };
+pub use schedule::PairSchedule;
 pub use slicing::{slice_a, slice_b, SlicedMatrix};
 
 /// Which slice encoding to use (§3 of the paper).

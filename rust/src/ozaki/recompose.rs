@@ -25,22 +25,30 @@ impl LevelAccumulator {
         LevelAccumulator { hi: vec![0.0; len], lo: vec![0.0; len] }
     }
 
-    /// hi,lo += P_q * 2^w for one weight level q. P entries are exact
-    /// integers (|P| <= s * k * 2^14 < 2^53), so `P as f64 * 2^w` is exact
-    /// and two_sum captures the entire rounding residue of the add.
+    /// hi,lo += P_q * 2^w for one weight level q (see [`add_level_into`]).
     pub fn add_level(&mut self, pbuf: &[i64], weight_exp: i32) {
-        debug_assert_eq!(self.hi.len(), pbuf.len());
-        debug_assert!((-1074..=1023).contains(&weight_exp));
-        let w = exp2i(weight_exp);
-        for ((h, l), &p) in self.hi.iter_mut().zip(self.lo.iter_mut()).zip(pbuf) {
-            let x = p as f64 * w;
-            // two_sum(h, x) — branch-free Knuth
-            let s = *h + x;
-            let bb = s - *h;
-            let e = (*h - (s - bb)) + (x - bb);
-            *h = s;
-            *l += e;
-        }
+        add_level_into(&mut self.hi, &mut self.lo, pbuf, weight_exp);
+    }
+}
+
+/// hi,lo += P_q * 2^w for one weight level q, on caller-owned buffers
+/// (the fused tile engine and the pooled-workspace grouped pipeline feed
+/// workspace slices here; [`LevelAccumulator`] delegates). P entries are
+/// exact integers (|P| <= s * k * 2^14 < 2^53), so `P as f64 * 2^w` is
+/// exact and two_sum captures the entire rounding residue of the add.
+pub fn add_level_into(hi: &mut [f64], lo: &mut [f64], pbuf: &[i64], weight_exp: i32) {
+    debug_assert_eq!(hi.len(), pbuf.len());
+    debug_assert_eq!(lo.len(), pbuf.len());
+    debug_assert!((-1074..=1023).contains(&weight_exp));
+    let w = exp2i(weight_exp);
+    for ((h, l), &p) in hi.iter_mut().zip(lo.iter_mut()).zip(pbuf) {
+        let x = p as f64 * w;
+        // two_sum(h, x) — branch-free Knuth
+        let s = *h + x;
+        let bb = s - *h;
+        let e = (*h - (s - bb)) + (x - bb);
+        *h = s;
+        *l += e;
     }
 }
 
@@ -51,18 +59,65 @@ impl LevelAccumulator {
 /// accumulator bounded by ~2^139; see DESIGN.md), then collapse hi + lo.
 pub fn recompose(acc: LevelAccumulator, sigma_a: &[i32], sigma_b: &[i32], m: usize, n: usize) -> Matrix {
     let LevelAccumulator { mut hi, mut lo } = acc;
+    recompose_slices(&mut hi, &mut lo, sigma_a, sigma_b, m, n)
+}
+
+/// [`recompose`] on caller-owned hi/lo buffers (the pooled-workspace
+/// grouped pipeline recomposes straight out of its checkout). The buffers
+/// are consumed as scratch — descaled in place — and the collapsed
+/// `hi + lo` matrix is returned.
+pub fn recompose_slices(
+    hi: &mut [f64],
+    lo: &mut [f64],
+    sigma_a: &[i32],
+    sigma_b: &[i32],
+    m: usize,
+    n: usize,
+) -> Matrix {
     debug_assert_eq!(hi.len(), m * n);
+    debug_assert_eq!(lo.len(), m * n);
     debug_assert_eq!(sigma_a.len(), m);
     debug_assert_eq!(sigma_b.len(), n);
-    let ha: Vec<i32> = sigma_a.iter().map(|&s| s.div_euclid(2)).collect();
-    let hb: Vec<i32> = sigma_b.iter().map(|&s| s.div_euclid(2)).collect();
+    descale_tile(hi, lo, sigma_a, sigma_b, 0, m, 0, n);
+    let data: Vec<f64> = hi.iter().zip(lo.iter()).map(|(h, l)| h + l).collect();
+    Matrix { rows: m, cols: n, data }
+}
+
+/// Tile-ranged descaling: apply the four interleaved half-scale passes to
+/// the `rows x cols` hi/lo tile covering output rows `[row0, row0+rows)`
+/// and columns `[col0, col0+cols)`. `sigma_a`/`sigma_b` are the **full**
+/// per-row/per-column exponent vectors; the tile indexes into them.
+///
+/// Every pass touches each element exactly once and reads nothing but
+/// that element and its own row/column sigma, so the per-element multiply
+/// sequence (pass 0 → 1 → 2 → 3, then the caller's `hi + lo` collapse) is
+/// identical whether the output is descaled whole ([`recompose`]) or tile
+/// by tile (the fused engine) — bitwise identical results by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+pub fn descale_tile(
+    hi: &mut [f64],
+    lo: &mut [f64],
+    sigma_a: &[i32],
+    sigma_b: &[i32],
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+) {
+    debug_assert_eq!(hi.len(), rows * cols);
+    debug_assert_eq!(lo.len(), rows * cols);
+    debug_assert!(row0 + rows <= sigma_a.len());
+    debug_assert!(col0 + cols <= sigma_b.len());
     for pass in 0..4 {
-        for i in 0..m {
-            let hrow = &mut hi[i * n..(i + 1) * n];
-            let lrow = &mut lo[i * n..(i + 1) * n];
+        for i in 0..rows {
+            let sa = sigma_a[row0 + i];
+            let ha = sa.div_euclid(2);
+            let hrow = &mut hi[i * cols..(i + 1) * cols];
+            let lrow = &mut lo[i * cols..(i + 1) * cols];
             match pass {
                 0 => {
-                    let f = ldexp(1.0, -ha[i]);
+                    let f = ldexp(1.0, -ha);
                     for (h, l) in hrow.iter_mut().zip(lrow.iter_mut()) {
                         *h *= f;
                         *l *= f;
@@ -70,13 +125,13 @@ pub fn recompose(acc: LevelAccumulator, sigma_a: &[i32], sigma_b: &[i32], m: usi
                 }
                 1 => {
                     for (j, (h, l)) in hrow.iter_mut().zip(lrow.iter_mut()).enumerate() {
-                        let f = ldexp(1.0, -hb[j]);
+                        let f = ldexp(1.0, -sigma_b[col0 + j].div_euclid(2));
                         *h *= f;
                         *l *= f;
                     }
                 }
                 2 => {
-                    let f = ldexp(1.0, -(sigma_a[i] - ha[i]));
+                    let f = ldexp(1.0, -(sa - ha));
                     for (h, l) in hrow.iter_mut().zip(lrow.iter_mut()) {
                         *h *= f;
                         *l *= f;
@@ -84,7 +139,8 @@ pub fn recompose(acc: LevelAccumulator, sigma_a: &[i32], sigma_b: &[i32], m: usi
                 }
                 _ => {
                     for (j, (h, l)) in hrow.iter_mut().zip(lrow.iter_mut()).enumerate() {
-                        let f = ldexp(1.0, -(sigma_b[j] - hb[j]));
+                        let sb = sigma_b[col0 + j];
+                        let f = ldexp(1.0, -(sb - sb.div_euclid(2)));
                         *h *= f;
                         *l *= f;
                     }
@@ -92,8 +148,6 @@ pub fn recompose(acc: LevelAccumulator, sigma_a: &[i32], sigma_b: &[i32], m: usi
             }
         }
     }
-    let data: Vec<f64> = hi.iter().zip(&lo).map(|(h, l)| h + l).collect();
-    Matrix { rows: m, cols: n, data }
 }
 
 #[cfg(test)]
@@ -135,6 +189,51 @@ mod tests {
         let c = recompose(acc, &sa, &sb, m, n);
         for v in &c.data {
             assert_eq!(*v, 1.0);
+        }
+    }
+
+    #[test]
+    fn tiled_descaling_is_bitwise_identical_to_whole() {
+        // Descale a 5x7 accumulator whole, and again as 2x3 tiles: every
+        // element must come out bitwise identical (the fused-engine
+        // invariant).
+        let (m, n) = (5usize, 7usize);
+        let sa: Vec<i32> = (0..m as i32).map(|i| 40 * i - 60).collect();
+        let sb: Vec<i32> = (0..n as i32).map(|j| 25 - 17 * j).collect();
+        let fill = |idx: usize| ((idx * 37 % 19) as f64 - 9.0) * 1.5;
+        let mut acc = LevelAccumulator::new(m * n);
+        for idx in 0..m * n {
+            acc.hi[idx] = fill(idx);
+            acc.lo[idx] = fill(idx + 3) * 1e-18;
+        }
+        let whole = recompose(acc, &sa, &sb, m, n);
+        let (tr, tc) = (2usize, 3usize);
+        let mut row0 = 0;
+        while row0 < m {
+            let rows = tr.min(m - row0);
+            let mut col0 = 0;
+            while col0 < n {
+                let cols = tc.min(n - col0);
+                let mut hi = vec![0.0; rows * cols];
+                let mut lo = vec![0.0; rows * cols];
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let idx = (row0 + i) * n + (col0 + j);
+                        hi[i * cols + j] = fill(idx);
+                        lo[i * cols + j] = fill(idx + 3) * 1e-18;
+                    }
+                }
+                descale_tile(&mut hi, &mut lo, &sa, &sb, row0, rows, col0, cols);
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let got = hi[i * cols + j] + lo[i * cols + j];
+                        let want = whole.at(row0 + i, col0 + j);
+                        assert_eq!(got.to_bits(), want.to_bits(), "({},{})", row0 + i, col0 + j);
+                    }
+                }
+                col0 += cols;
+            }
+            row0 += rows;
         }
     }
 

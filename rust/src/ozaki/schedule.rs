@@ -1,0 +1,146 @@
+//! The precomputed slice-pair schedule of one Ozaki-I configuration.
+//!
+//! Both emulated-GEMM drivers walk the same triangular pair set: every
+//! `(t, u)` with `t + u <= s - 1`, grouped by weight level `q = t + u`
+//! and accumulated **smallest weight first** (`q = s-1` down to `0`) into
+//! the compensated accumulator. The level-major reference used to rebuild
+//! each level's `Vec<(t, u)>` on the fly — `s` heap allocations per GEMM,
+//! per request. [`PairSchedule`] hoists that: the pairs are laid out once
+//! in a flat arena with per-level ranges and weight exponents, and a
+//! process-wide cache ([`PairSchedule::get`]) shares one `Arc` per
+//! `(slices, radix_bits)` configuration, so steady-state requests touch
+//! no allocator at all. The schedule is shared verbatim by the
+//! level-major reference path, the fused tile engine, and the grouped
+//! lockstep pipeline — one source of truth for pair order and weights.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::OzakiConfig;
+
+/// One weight level: a range into the flat pair arena plus its exponent.
+struct Level {
+    start: usize,
+    end: usize,
+    weight: i32,
+}
+
+/// Immutable pair schedule of an `(s, radix_bits)` configuration (see
+/// module docs). Levels are stored in accumulation order: index `r`
+/// holds level `q = s - 1 - r`, so iterating `0..s` feeds the
+/// compensated accumulator smallest weight first — exactly the
+/// level-major reference order.
+pub struct PairSchedule {
+    s: usize,
+    rb: i32,
+    pairs: Vec<(usize, usize)>,
+    levels: Vec<Level>,
+}
+
+static SCHEDULE_CACHE: OnceLock<Mutex<HashMap<(usize, i32), Arc<PairSchedule>>>> = OnceLock::new();
+
+impl PairSchedule {
+    /// Build the schedule for `s` slices at `rb` radix bits.
+    pub fn new(s: usize, rb: i32) -> PairSchedule {
+        assert!(s >= 1, "slice count must be >= 1");
+        let mut pairs = Vec::with_capacity(s * (s + 1) / 2);
+        let mut levels = Vec::with_capacity(s);
+        for q in (0..s).rev() {
+            let start = pairs.len();
+            pairs.extend((0..=q).map(|t| (t, q - t)));
+            let weight = 2 * rb * (s as i32 - 1) - rb * q as i32;
+            levels.push(Level { start, end: pairs.len(), weight });
+        }
+        PairSchedule { s, rb, pairs, levels }
+    }
+
+    /// The process-wide shared schedule for `(s, rb)`; computed once per
+    /// configuration (the key space is tiny: `s <= max_slices`, `rb` in
+    /// {7, 8}), then served allocation-free.
+    pub fn get(s: usize, rb: i32) -> Arc<PairSchedule> {
+        let cache = SCHEDULE_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut g = cache.lock().unwrap();
+        g.entry((s, rb)).or_insert_with(|| Arc::new(PairSchedule::new(s, rb))).clone()
+    }
+
+    /// Shared schedule of an [`OzakiConfig`].
+    pub fn for_config(cfg: &OzakiConfig) -> Arc<PairSchedule> {
+        PairSchedule::get(cfg.slices, cfg.encoding.radix_bits())
+    }
+
+    /// Slice count `s` (also the number of levels).
+    pub fn slices(&self) -> usize {
+        self.s
+    }
+
+    pub fn radix_bits(&self) -> i32 {
+        self.rb
+    }
+
+    /// Total `(t, u)` pairs: `s(s+1)/2`.
+    pub fn pair_count(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Level `r` in accumulation order (`r = 0` is `q = s-1`, the
+    /// smallest weight): its pairs and weight exponent.
+    pub fn level(&self, r: usize) -> (&[(usize, usize)], i32) {
+        let l = &self.levels[r];
+        (&self.pairs[l.start..l.end], l.weight)
+    }
+
+    /// All levels in accumulation order.
+    pub fn levels(&self) -> impl Iterator<Item = (&[(usize, usize)], i32)> + '_ {
+        self.levels.iter().map(move |l| (&self.pairs[l.start..l.end], l.weight))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_reference_enumeration() {
+        // The level-major reference: q = s-1 down to 0, pairs (t, q-t) for
+        // t = 0..=q, weight 2*rb*(s-1) - rb*q.
+        for (s, rb) in [(1usize, 8i32), (4, 8), (7, 8), (8, 7)] {
+            let sched = PairSchedule::new(s, rb);
+            assert_eq!(sched.slices(), s);
+            assert_eq!(sched.radix_bits(), rb);
+            assert_eq!(sched.pair_count(), s * (s + 1) / 2);
+            let mut seen = 0;
+            for (r, (pairs, w)) in sched.levels().enumerate() {
+                let q = s - 1 - r;
+                let expect: Vec<(usize, usize)> = (0..=q).map(|t| (t, q - t)).collect();
+                assert_eq!(pairs, expect.as_slice(), "s={s} rb={rb} q={q}");
+                assert_eq!(w, 2 * rb * (s as i32 - 1) - rb * q as i32);
+                assert_eq!(sched.level(r).0, expect.as_slice());
+                assert_eq!(sched.level(r).1, w);
+                seen += pairs.len();
+            }
+            assert_eq!(seen, sched.pair_count(), "levels partition the pair set");
+        }
+    }
+
+    #[test]
+    fn weights_increase_along_accumulation_order() {
+        // Smallest-weight-first is what keeps the compensated sum's
+        // per-element order identical to python/compile/ozaki.py.
+        let sched = PairSchedule::new(7, 8);
+        let ws: Vec<i32> = sched.levels().map(|(_, w)| w).collect();
+        for pair in ws.windows(2) {
+            assert!(pair[0] < pair[1], "weights must ascend: {ws:?}");
+        }
+    }
+
+    #[test]
+    fn global_cache_shares_one_arc_per_config() {
+        let a = PairSchedule::get(5, 8);
+        let b = PairSchedule::get(5, 8);
+        assert!(Arc::ptr_eq(&a, &b), "same config must share one schedule");
+        let c = PairSchedule::get(5, 7);
+        assert!(!Arc::ptr_eq(&a, &c), "different radix is a different schedule");
+        let d = PairSchedule::for_config(&OzakiConfig::new(5));
+        assert!(Arc::ptr_eq(&a, &d), "for_config resolves through the same cache");
+    }
+}

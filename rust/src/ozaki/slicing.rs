@@ -37,6 +37,17 @@ impl SlicedMatrix {
         &self.data[base..base + self.cols]
     }
 
+    /// Rows `[row0, row0 + rows)` of slice `t`, as one contiguous
+    /// row-major block — the tile-ranged accessor of the fused engine:
+    /// a tile's operand rows (for B: its output columns, since B is
+    /// stored transposed) are one cache-friendly slab.
+    #[inline]
+    pub fn slice_rows(&self, t: usize, row0: usize, rows: usize) -> &[i8] {
+        debug_assert!(row0 + rows <= self.rows);
+        let base = t * self.rows * self.cols + row0 * self.cols;
+        &self.data[base..base + rows * self.cols]
+    }
+
     /// Reconstruct element (i, j) — test/debug helper, O(s). Accumulates
     /// in double-double: exact for windows up to ~106 bits (s <= 13).
     pub fn reconstruct(&self, i: usize, j: usize) -> f64 {
@@ -312,6 +323,28 @@ mod tests {
         for i in 0..2 {
             for j in 0..2 {
                 assert_eq!(sl.reconstruct(i, j), a.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn slice_rows_matches_per_row_accessor() {
+        let mut rng = Rng::new(23);
+        let a = Matrix::uniform(7, 5, -2.0, 2.0, &mut rng);
+        let sl = slice_a(&a, 4, SliceEncoding::Unsigned);
+        for t in 0..4 {
+            assert_eq!(sl.slice_rows(t, 0, 7), sl.slice(t), "full range is the whole slice");
+            for row0 in 0..7 {
+                for rows in 0..=(7 - row0) {
+                    let block = sl.slice_rows(t, row0, rows);
+                    for i in 0..rows {
+                        assert_eq!(
+                            &block[i * 5..(i + 1) * 5],
+                            sl.slice_row(t, row0 + i),
+                            "t={t} row0={row0} rows={rows} i={i}"
+                        );
+                    }
+                }
             }
         }
     }

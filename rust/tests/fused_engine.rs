@@ -1,0 +1,205 @@
+//! Property suite for the tile-resident fused slice-pair engine: the
+//! level-major serial pipeline is the retained oracle, and every other
+//! schedule — fused serial, fused parallel (forced past the inline
+//! cutoff), the grouped lockstep pipeline, and the ADP engine routing —
+//! must reproduce it **bitwise** (`f64::to_bits`) across random shapes,
+//! both slice encodings, and forced k-chunking. Also asserts the
+//! workspace pool's zero-steady-state-allocation behavior end to end.
+
+use std::sync::Arc;
+
+use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend, WorkspacePool};
+use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
+use adp_dgemm::linalg::Matrix;
+use adp_dgemm::ozaki::{
+    emulated_gemm_on, fused_gemm_on, gemm_grouped, GroupedProblem, OzakiConfig, PairSchedule,
+    SliceCache, SliceEncoding, FUSED_MC, FUSED_NC,
+};
+use adp_dgemm::util::{prop, Rng};
+use adp_dgemm::{AdpConfig, AdpEngine};
+
+fn assert_bitwise(c1: &Matrix, c2: &Matrix, what: &str) -> prop::PropResult {
+    if (c1.rows, c1.cols) != (c2.rows, c2.cols) {
+        return Err(format!("{what}: shape mismatch"));
+    }
+    for (x, y) in c1.data.iter().zip(&c2.data) {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{what}: not bitwise identical ({x} vs {y})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fused_engine_bitwise_identical_to_level_major_oracle() {
+    // The tentpole acceptance property: random shapes (biased to straddle
+    // the FUSED_MC/FUSED_NC tile boundaries), random slice counts, both
+    // encodings, optional forced k-chunking — fused serial and fused
+    // parallel must match the level-major serial oracle bit for bit.
+    let par = ParallelBackend::new(4).with_cutoff_ops(0);
+    let pool = WorkspacePool::new();
+    prop::check("fused == level-major (bitwise)", 12, |rng| {
+        let m = (if rng.f64() < 0.5 { rng.int(1, 24) } else { rng.int(60, 80) }) as usize;
+        let n = (if rng.f64() < 0.5 { rng.int(1, 24) } else { rng.int(60, 80) }) as usize;
+        let k = rng.int(1, 40) as usize;
+        let s = rng.int(2, 8) as usize;
+        let enc =
+            if rng.f64() < 0.5 { SliceEncoding::Unsigned } else { SliceEncoding::Signed };
+        let mut cfg = OzakiConfig::with_encoding(s, enc);
+        if rng.f64() < 0.3 {
+            // forced k-chunking: both drivers must chunk identically
+            cfg = cfg.with_k_chunk(rng.int(1, k as i64).max(1) as usize);
+        }
+        let a = Matrix::uniform(m, k, -3.0, 3.0, rng);
+        let b = Matrix::uniform(k, n, -3.0, 3.0, rng);
+        let oracle = emulated_gemm_on(&a, &b, &cfg, &SerialBackend);
+        let fused_ser = fused_gemm_on(&a, &b, &cfg, &SerialBackend, &pool);
+        assert_bitwise(&oracle, &fused_ser, &format!("fused serial ({m},{k},{n}) s={s}"))?;
+        let fused_par = fused_gemm_on(&a, &b, &cfg, &par, &pool);
+        assert_bitwise(&oracle, &fused_par, &format!("fused parallel ({m},{k},{n}) s={s}"))
+    });
+    assert!(pool.stats().fused_tiles > 0, "the fused schedule must actually have run");
+}
+
+#[test]
+fn fused_parallel_covers_multi_band_shapes() {
+    // Deterministic shapes straddling the tile boundaries — including a
+    // wide, flat output (m < FUSED_MC) whose parallel schedule must
+    // shrink its band height to fan out — with cutoff forced to zero so
+    // even these sizes run the work-stealing band queue.
+    let par = ParallelBackend::new(3).with_cutoff_ops(0);
+    let par_pool = WorkspacePool::new();
+    let ser_pool = WorkspacePool::new();
+    let mut rng = Rng::new(4100);
+    let shapes = [
+        (FUSED_MC + 1, 17, FUSED_NC - 1),
+        (3 * FUSED_MC - 5, 8, FUSED_NC + 3),
+        (16, 11, 2 * FUSED_NC + 9),
+        (40, 9, 3 * FUSED_NC), // wide flat: band height < FUSED_MC
+    ];
+    for (m, k, n) in shapes {
+        let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+        let cfg = OzakiConfig::new(6);
+        let oracle = emulated_gemm_on(&a, &b, &cfg, &SerialBackend);
+        let fused_ser = fused_gemm_on(&a, &b, &cfg, &SerialBackend, &ser_pool);
+        assert_bitwise(&oracle, &fused_ser, &format!("serial multi-band ({m},{k},{n})")).unwrap();
+        let fused_par = fused_gemm_on(&a, &b, &cfg, &par, &par_pool);
+        assert_bitwise(&oracle, &fused_par, &format!("parallel multi-band ({m},{k},{n})")).unwrap();
+    }
+    // The serial engine's tile accounting is deterministic: the
+    // FUSED_MC x FUSED_NC grid. The parallel engine may split shorter
+    // bands (more, smaller tiles) but never fewer.
+    let expect_tiles: u64 = shapes
+        .iter()
+        .map(|&(m, _, n)| (m.div_ceil(FUSED_MC) * n.div_ceil(FUSED_NC)) as u64)
+        .sum();
+    assert_eq!(ser_pool.stats().fused_tiles, expect_tiles, "serial tile grid accounting");
+    assert!(
+        par_pool.stats().fused_tiles >= expect_tiles,
+        "parallel bands cover at least the serial grid"
+    );
+}
+
+#[test]
+fn prop_grouped_pipeline_matches_fused_oracle() {
+    // gemm_grouped (the lockstep cross-problem schedule, pooled
+    // workspaces, shared slice cache) against both the level-major and
+    // fused per-request paths — everything must agree bitwise.
+    let par = ParallelBackend::new(4).with_cutoff_ops(0);
+    let cache = SliceCache::new(16);
+    let pool = WorkspacePool::new();
+    prop::check("grouped == fused == level-major", 8, |rng| {
+        let nprobs = rng.int(1, 4) as usize;
+        let k = rng.int(1, 24) as usize;
+        let mut mats: Vec<(Matrix, Matrix, OzakiConfig)> = Vec::new();
+        for _ in 0..nprobs {
+            let m = rng.int(1, 70) as usize;
+            let n = rng.int(1, 70) as usize;
+            let enc =
+                if rng.f64() < 0.5 { SliceEncoding::Unsigned } else { SliceEncoding::Signed };
+            let cfg = OzakiConfig::with_encoding(rng.int(2, 7) as usize, enc);
+            mats.push((
+                Matrix::uniform(m, k, -3.0, 3.0, rng),
+                Matrix::uniform(k, n, -3.0, 3.0, rng),
+                cfg,
+            ));
+        }
+        let probs: Vec<GroupedProblem<'_>> =
+            mats.iter().map(|(a, b, cfg)| GroupedProblem { a, b, cfg: *cfg }).collect();
+        // The oracle is backend-independent: compute it once per problem.
+        let oracles: Vec<Matrix> =
+            mats.iter().map(|(a, b, cfg)| emulated_gemm_on(a, b, cfg, &SerialBackend)).collect();
+        for backend in [&SerialBackend as &dyn ComputeBackend, &par] {
+            let (cs, _) = gemm_grouped(&probs, &cache, backend, &pool);
+            for (((a, b, cfg), oracle), c) in mats.iter().zip(&oracles).zip(&cs) {
+                assert_bitwise(c, oracle, &format!("grouped vs oracle on {}", backend.name()))?;
+                let fused = fused_gemm_on(a, b, cfg, backend, &pool);
+                assert_bitwise(c, &fused, &format!("grouped vs fused on {}", backend.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adp_engine_routes_through_fused_and_reuses_workspaces() {
+    // The engine-level acceptance criterion: AdpEngine serves emulated
+    // requests through the fused path (fused tiles appear in metrics),
+    // results equal the level-major oracle bitwise, and repeat shapes
+    // stop allocating scratch once the pool is warm.
+    let pool = Arc::new(WorkspacePool::new());
+    let eng = AdpEngine::new(
+        AdpConfig::fp64()
+            .with_heuristic(Box::new(AlwaysEmulate))
+            .with_workspace_pool(pool.clone()),
+    );
+    let mut rng = Rng::new(4200);
+    let a = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);
+    let b = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);
+    let (c, out) = eng.gemm(&a, &b);
+    assert!(out.decision.is_emulated(), "{:?}", out.decision);
+    let cfg = OzakiConfig::new(out.decision.slices().unwrap());
+    let oracle = emulated_gemm_on(&a, &b, &cfg, &SerialBackend);
+    assert_bitwise(&c, &oracle, "engine vs level-major oracle").unwrap();
+    let warm = eng.metrics.snapshot();
+    assert!(warm.fused_tiles >= 1, "engine must route through the fused engine: {warm:?}");
+    assert!(warm.workspace_checkouts >= 1);
+    let fresh_warm = warm.workspace_fresh;
+    for _ in 0..5 {
+        let a = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);
+        let (_, out) = eng.gemm(&a, &b);
+        assert!(out.decision.is_emulated());
+    }
+    let after = eng.metrics.snapshot();
+    assert!(after.workspace_checkouts > warm.workspace_checkouts);
+    assert!(after.fused_tiles > warm.fused_tiles);
+    assert_eq!(
+        after.workspace_fresh, fresh_warm,
+        "repeat shapes on a warm pool must not allocate fresh workspaces"
+    );
+}
+
+#[test]
+fn shared_schedule_is_one_arc_per_config() {
+    // The hoisted pair schedule: repeated GEMMs of one config share one
+    // precomputed schedule instead of rebuilding per-level pair vectors.
+    let s1 = PairSchedule::get(7, 8);
+    let s2 = PairSchedule::for_config(&OzakiConfig::new(7));
+    assert!(Arc::ptr_eq(&s1, &s2));
+    assert_eq!(s1.pair_count(), 28);
+    // Levels cover the triangular pair set exactly once, smallest weight
+    // first.
+    let mut total = 0;
+    let mut last_w = i32::MIN;
+    for (pairs, w) in s1.levels() {
+        assert!(w > last_w, "weights must ascend");
+        last_w = w;
+        for &(t, u) in pairs {
+            assert!(t + u <= 6, "Ozaki-I truncation: t+u <= s-1");
+        }
+        total += pairs.len();
+    }
+    assert_eq!(total, 28);
+}
