@@ -11,9 +11,11 @@ use adp_dgemm::backend::{SerialBackend, WorkspacePool};
 use adp_dgemm::esc::{coarse_esc_gemm, exact_esc_gemm};
 use adp_dgemm::grading::grade::measure;
 use adp_dgemm::linalg::Matrix;
+use adp_dgemm::ozaki::gemm::fused_tile_gemm_serial_on;
+use adp_dgemm::ozaki::kernel;
 use adp_dgemm::ozaki::{
-    emulated_gemm, fused_gemm_on, gemm_grouped, GroupedProblem, OzakiConfig, SliceCache,
-    SliceEncoding,
+    emulated_gemm, fused_gemm_on, gemm_grouped, slice_a, slice_b, GroupedProblem, OzakiConfig,
+    PairSchedule, SliceCache, SliceEncoding,
 };
 use adp_dgemm::util::{benchkit, Rng};
 
@@ -126,4 +128,43 @@ fn main() {
         gstats.slice_cache_hits
     );
     println!("# shared A sliced once per group: the §5.4 queue amortizes decomposition");
+
+    println!("\n# (e) int8 microkernel ablation: fused engine per kernel (n={n}, s=7, serial)");
+    let asl = slice_a(&a, 7, SliceEncoding::Unsigned);
+    let bsl = slice_b(&b, 7, SliceEncoding::Unsigned);
+    let schedule = PairSchedule::get(7, SliceEncoding::Unsigned.radix_bits());
+    let mut c_ref = Matrix::zeros(n, n);
+    fused_tile_gemm_serial_on(&kernel::ScalarKernel, &asl, &bsl, &schedule, &wpool, &mut c_ref);
+    let mut scalar_ms = 0.0;
+    println!("{:>20} {:>12} {:>12} {:>10}", "kernel", "time_ms", "vs scalar", "bitwise");
+    for kern in kernel::available_kernels() {
+        let st = benchkit::bench(1, 3, || {
+            let mut c = Matrix::zeros(n, n);
+            fused_tile_gemm_serial_on(*kern, &asl, &bsl, &schedule, &wpool, &mut c);
+            c
+        });
+        let mut c = Matrix::zeros(n, n);
+        fused_tile_gemm_serial_on(*kern, &asl, &bsl, &schedule, &wpool, &mut c);
+        let identical =
+            c.data.iter().zip(&c_ref.data).all(|(x, y)| x.to_bits() == y.to_bits());
+        let ms = st.median_s * 1e3;
+        if kern.id() == kernel::KernelId::Scalar {
+            scalar_ms = ms;
+        }
+        println!(
+            "{:>20} {:>12.1} {:>12} {:>10}",
+            kern.id().label(),
+            ms,
+            if scalar_ms > 0.0 { format!("{:.2}x", scalar_ms / ms) } else { "-".into() },
+            identical
+        );
+    }
+    let ws = wpool.stats();
+    println!(
+        "# dispatched: {} | packed panels: {} packs, {} pair reuses (reuse = s(s+1)/2 - 1 per tile)",
+        kernel::active_id(SliceEncoding::Unsigned).label(),
+        ws.panel_packs,
+        ws.panel_reuses
+    );
+    println!("# ADP_FORCE_SCALAR=1 pins the scalar reference; RUSTFLAGS=-Ctarget-cpu=native helps the packers");
 }

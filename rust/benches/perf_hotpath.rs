@@ -15,6 +15,8 @@ use std::path::Path;
 use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend, WorkspacePool};
 use adp_dgemm::esc::coarse_esc_gemm;
 use adp_dgemm::linalg::{gemm, Matrix};
+use adp_dgemm::ozaki::gemm::slice_pair_gemm_tile_on;
+use adp_dgemm::ozaki::kernel::{self, ScalarKernel};
 use adp_dgemm::ozaki::{
     emulated_gemm_on, emulated_gemm_with_breakdown, fused_gemm_on, gemm_grouped, slice_a,
     slice_b, slice_pair_gemm, GroupedProblem, OzakiConfig, SliceCache, SliceEncoding,
@@ -63,6 +65,69 @@ fn main() {
         st,
         &[("GMAC/s", format!("{:.2}", st.per_sec((n * n * n) as f64) / 1e9))],
     );
+
+    // --- int8 microkernel ablation: scalar vs dispatched SIMD ----------
+    // (a) single pair per kernel (pack cost included — the standalone
+    //     entry-point cost model); (b) the fused-style sweep: pack once,
+    //     run all s(s+1)/2 pairs off the packed panels (amortized).
+    println!(
+        "# kernel dispatch: unsigned -> {}, signed -> {} (ADP_FORCE_SCALAR=1 pins scalar)",
+        kernel::active_id(SliceEncoding::Unsigned).label(),
+        kernel::active_id(SliceEncoding::Signed).label()
+    );
+    for kern in kernel::available_kernels() {
+        let st = benchkit::bench_budget(1.0, || {
+            out.fill(0);
+            slice_pair_gemm_tile_on(*kern, &asl, 1, &bsl, 0, 0, n, 0, n, &mut out);
+        });
+        benchkit::report(
+            &format!("pair_gemm[{}]", kern.id().label()),
+            st,
+            &[("GMAC/s", format!("{:.2}", st.per_sec((n * n * n) as f64) / 1e9))],
+        );
+    }
+    {
+        // packed vs unpacked pair sweep: all pairs of the s=7 schedule.
+        let pairs: Vec<(usize, usize)> =
+            (0..s).flat_map(|t| (0..s - t).map(move |u| (t, u))).collect();
+        let npairs = pairs.len();
+        let st_unp = benchkit::bench_budget(1.5, || {
+            out.fill(0);
+            for &(t, u) in &pairs {
+                slice_pair_gemm_tile_on(&ScalarKernel, &asl, t, &bsl, u, 0, n, 0, n, &mut out);
+            }
+        });
+        benchkit::report(
+            "pair_sweep[scalar unpacked]",
+            st_unp,
+            &[("GMAC/s", format!("{:.2}", st_unp.per_sec((npairs * n * n * n) as f64) / 1e9))],
+        );
+        for kern in kernel::available_kernels() {
+            let mut apack = vec![0u8; s * kern.a_slice_bytes(n, n)];
+            let mut bpack = vec![0u8; s * kern.b_slice_bytes(n, n)];
+            let (ab, bb) = (kern.a_slice_bytes(n, n), kern.b_slice_bytes(n, n));
+            let st = benchkit::bench_budget(1.5, || {
+                out.fill(0);
+                for t in 0..s {
+                    kern.pack_a_slice(&asl, t, 0, n, &mut apack[t * ab..(t + 1) * ab]);
+                    kern.pack_b_slice(&bsl, t, 0, n, &mut bpack[t * bb..(t + 1) * bb]);
+                }
+                for &(t, u) in &pairs {
+                    let ap = &apack[t * ab..(t + 1) * ab];
+                    let bp = &bpack[u * bb..(u + 1) * bb];
+                    kern.pair_tile(ap, bp, n, n, n, &mut out);
+                }
+            });
+            benchkit::report(
+                &format!("pair_sweep[{} packed]", kern.id().label()),
+                st,
+                &[
+                    ("GMAC/s", format!("{:.2}", st.per_sec((npairs * n * n * n) as f64) / 1e9)),
+                    ("vs scalar unpacked", format!("{:.2}x", st_unp.median_s / st.median_s)),
+                ],
+            );
+        }
+    }
 
     // --- full emulated pipeline with breakdown -------------------------
     let cfg = OzakiConfig::new(s);

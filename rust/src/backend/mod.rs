@@ -22,7 +22,14 @@
 //! retained as the property-test oracle and for the grouped lockstep
 //! pipeline.
 //!
-//! The trait is the plug point for every future backend (SIMD, GPU,
+//! Below the backend seam sits a second, finer one: every INT8
+//! slice-pair tile — fused bands, level batches, grouped rounds — runs
+//! on the runtime-dispatched `ozaki::kernel` microkernels (scalar
+//! reference or AVX2 packed-panel kernels, bitwise interchangeable), so
+//! backends choose *how much hardware* while kernels choose *which
+//! instructions*.
+//!
+//! The trait is the plug point for every future backend (GPU,
 //! distributed sharding): implement `slice_pair_gemm_batch` and
 //! `fp64_gemm_into` (plus `fused_tile_gemm` / `fp64_gemm_tile` if the
 //! fused or tile kernels themselves change) and the whole stack —

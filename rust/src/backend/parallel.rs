@@ -14,7 +14,10 @@
 //!   (FUSED_MC rows, shrunk for wide flat outputs so m <= FUSED_MC still
 //!   fans out) drain through one work-stealing queue: a single parallel
 //!   region per emulated GEMM instead of one barrier per weight level,
-//!   each thread owning one pooled workspace for its whole run. Tiles
+//!   each thread owning one pooled workspace (tile accumulators *and*
+//!   the `ozaki::kernel` packed-panel scratch) for its whole run, on the
+//!   runtime-dispatched SIMD/scalar kernel — exact integer arithmetic,
+//!   so kernel choice changes no bits. Tiles
 //!   write disjoint elements with the serial per-element op sequence, so
 //!   any band partition or assignment is bitwise identical.
 //! * **FP64 tiles** — the MC×NC tile grid of the blocked GEMM is drained
@@ -25,7 +28,6 @@
 //!   results are bitwise identical to [`super::SerialBackend`] — the
 //!   `prop_permutation_invariance` guarantee survives parallel dispatch.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::pool::{drain, ThreadPool};
@@ -34,8 +36,10 @@ use super::{ComputeBackend, SliceBatch, PACK_SCRATCH_LEN};
 use crate::linalg::gemm::{apply_beta, load_tile, store_tile, tile_grid};
 use crate::linalg::Matrix;
 use crate::ozaki::gemm::{
-    fused_band, fused_tile_gemm_serial, slice_pair_gemm_rows, FUSED_MC, FUSED_WS_ELEMS,
+    fused_band, fused_tile_gemm_serial, slice_pair_gemm_rows, slice_pairs_rows_on_packed,
+    FusedTally, PackedBSlices, FUSED_MC, FUSED_WS_ELEMS,
 };
+use crate::ozaki::kernel::{self, KernelId};
 use crate::ozaki::{PairSchedule, SlicedMatrix};
 
 /// Row-chunks per pool thread when splitting a slice-pair batch: >1 so the
@@ -121,6 +125,19 @@ impl ComputeBackend for ParallelBackend {
             work.push((row0, chunk));
             row0 += chunk.len() / n;
         }
+        let kern = kernel::active(a.encoding);
+        if kern.id() != KernelId::Scalar {
+            // SIMD kernels pack panels: build each distinct B slice once
+            // and share the read-only panels across every (pair, chunk) —
+            // re-packing O(n·k) per pair per chunk would eat the SIMD win
+            // on thin chunks. Exact integers: bitwise identical either way.
+            let bp = PackedBSlices::pack(kern, b, pairs);
+            drain(&self.pool, work, |(r0, chunk)| {
+                let rows = chunk.len() / n;
+                slice_pairs_rows_on_packed(a, &bp, pairs, r0, rows, chunk);
+            });
+            return;
+        }
         drain(&self.pool, work, |(r0, chunk)| {
             let rows = chunk.len() / n;
             for &(t, u) in pairs {
@@ -145,10 +162,32 @@ impl ComputeBackend for ParallelBackend {
             }
             return;
         }
-        type Chunk<'q> =
-            (&'q SlicedMatrix, &'q SlicedMatrix, &'q [(usize, usize)], usize, usize, &'q mut [i64]);
+        // Pre-pack every batch's distinct B slices once (SIMD kernels
+        // only; encodings — and hence kernels — may differ per batch in
+        // mixed grouped rounds): all row chunks of a batch share its
+        // read-only panels.
+        let packs: Vec<Option<PackedBSlices>> = batches
+            .iter()
+            .map(|bt| {
+                let kern = kernel::active(bt.a.encoding);
+                if kern.id() == KernelId::Scalar || bt.a.rows == 0 || bt.b.rows == 0 {
+                    None
+                } else {
+                    Some(PackedBSlices::pack(kern, bt.b, bt.pairs))
+                }
+            })
+            .collect();
+        type Chunk<'q> = (
+            &'q SlicedMatrix,
+            &'q SlicedMatrix,
+            Option<&'q PackedBSlices>,
+            &'q [(usize, usize)],
+            usize,
+            usize,
+            &'q mut [i64],
+        );
         let mut work: Vec<Chunk<'_>> = Vec::new();
-        for bt in batches.iter_mut() {
+        for (bt, pk) in batches.iter_mut().zip(&packs) {
             let (m, n) = (bt.a.rows, bt.b.rows);
             assert_eq!(bt.out.len(), m * n);
             if m == 0 || n == 0 || bt.pairs.is_empty() {
@@ -158,14 +197,19 @@ impl ComputeBackend for ParallelBackend {
             let mut row0 = 0;
             for chunk in bt.out.chunks_mut(chunk_rows * n) {
                 let rows = chunk.len() / n;
-                work.push((bt.a, bt.b, bt.pairs, n, row0, chunk));
+                work.push((bt.a, bt.b, pk.as_ref(), bt.pairs, n, row0, chunk));
                 row0 += rows;
             }
         }
-        drain(&self.pool, work, |(a, b, pairs, n, row0, chunk)| {
+        drain(&self.pool, work, |(a, b, pk, pairs, n, row0, chunk)| {
             let rows = chunk.len() / n;
-            for &(t, u) in pairs {
-                slice_pair_gemm_rows(a, t, b, u, row0, rows, chunk);
+            match pk {
+                Some(bp) => slice_pairs_rows_on_packed(a, bp, pairs, row0, rows, chunk),
+                None => {
+                    for &(t, u) in pairs {
+                        slice_pair_gemm_rows(a, t, b, u, row0, rows, chunk);
+                    }
+                }
             }
         });
     }
@@ -198,6 +242,7 @@ impl ComputeBackend for ParallelBackend {
         // independent of the tile partition, so any band height and any
         // band-to-thread assignment is bitwise identical to
         // `fused_tile_gemm_serial`.
+        let kern = kernel::active(a.encoding);
         let band_rows = m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).clamp(2, FUSED_MC);
         let mut bands: Vec<(usize, &mut [f64])> = Vec::new();
         for (bi, band) in c.data.chunks_mut(band_rows * n).enumerate() {
@@ -205,18 +250,21 @@ impl ComputeBackend for ParallelBackend {
         }
         let max_helpers = bands.len().saturating_sub(1);
         let queue = Mutex::new(bands);
-        let tiles = AtomicU64::new(0);
+        let tally = Mutex::new(FusedTally::default());
         self.pool.run_n(max_helpers, || {
             let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
-            let mut local = 0u64;
+            let mut local = FusedTally::default();
             loop {
                 let next = queue.lock().unwrap().pop();
                 let Some((row0, band)) = next else { break };
-                local += fused_band(a, b, schedule, row0, &mut ws, band);
+                local.merge(fused_band(kern, a, b, schedule, row0, &mut ws, band));
             }
-            tiles.fetch_add(local, Ordering::Relaxed);
+            tally.lock().unwrap().merge(local);
         });
-        workspaces.record_tiles(tiles.load(Ordering::Relaxed));
+        let t = tally.into_inner().unwrap();
+        workspaces.record_tiles(t.tiles);
+        workspaces.record_panels(t.packs, t.reuses);
+        workspaces.record_pack_growth(t.pack_growths);
     }
 
     fn fp64_gemm_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {

@@ -32,22 +32,36 @@ pub struct Workspace {
     pub hi: Vec<f64>,
     /// Compensated accumulator, low (error) parts.
     pub lo: Vec<f64>,
+    /// Packed A-band panel scratch of the `ozaki::kernel` layer (all
+    /// slices of one fused band, in the dispatched kernel's layout).
+    pub apack: Vec<u8>,
+    /// Packed B-panel scratch (all slices of one fused column tile).
+    pub bpack: Vec<u8>,
 }
 
 impl Workspace {
-    /// Fresh workspace holding `elems` elements per buffer.
+    /// Fresh workspace holding `elems` elements per buffer. Panel
+    /// scratch starts empty and is sized by [`Workspace::ensure_pack`]
+    /// on first use (its size depends on the dispatched kernel's
+    /// layout, not on `elems`).
     pub fn with_capacity(elems: usize) -> Workspace {
-        Workspace { pbuf: vec![0; elems], hi: vec![0.0; elems], lo: vec![0.0; elems] }
+        Workspace {
+            pbuf: vec![0; elems],
+            hi: vec![0.0; elems],
+            lo: vec![0.0; elems],
+            apack: Vec::new(),
+            bpack: Vec::new(),
+        }
     }
 
-    /// Elements each buffer can hold.
+    /// Elements each accumulator buffer can hold.
     pub fn capacity(&self) -> usize {
         self.pbuf.len()
     }
 
-    /// Grow every buffer to at least `elems` elements. Returns whether a
-    /// reallocation happened (i.e. this checkout was not served from
-    /// resident capacity).
+    /// Grow every accumulator buffer to at least `elems` elements.
+    /// Returns whether a reallocation happened (i.e. this checkout was
+    /// not served from resident capacity).
     pub fn ensure(&mut self, elems: usize) -> bool {
         if self.pbuf.len() >= elems {
             return false;
@@ -56,6 +70,23 @@ impl Workspace {
         self.hi.resize(elems, 0.0);
         self.lo.resize(elems, 0.0);
         true
+    }
+
+    /// Grow the packed-panel scratch to at least the given byte sizes.
+    /// Returns whether a reallocation happened; once a pooled workspace
+    /// has served a shape, warm runs never grow again — the
+    /// zero-per-pair-packing-allocation property of the fused engine.
+    pub fn ensure_pack(&mut self, a_bytes: usize, b_bytes: usize) -> bool {
+        let mut grew = false;
+        if self.apack.len() < a_bytes {
+            self.apack.resize(a_bytes, 0);
+            grew = true;
+        }
+        if self.bpack.len() < b_bytes {
+            self.bpack.resize(b_bytes, 0);
+            grew = true;
+        }
+        grew
     }
 }
 
@@ -69,6 +100,13 @@ pub struct WorkspaceStats {
     pub fresh_allocs: u64,
     /// Output tiles executed by the fused tile engine.
     pub fused_tiles: u64,
+    /// Operand panel builds by the fused engine's packing layer (one per
+    /// A band + one per B column tile, each covering every slice).
+    pub panel_packs: u64,
+    /// Slice-pair kernel calls served from already-packed panels (the
+    /// `s(s+1)/2 - 1` pair calls after the first of every fused tile).
+    /// Nonzero means the pack cost really is amortized across pairs.
+    pub panel_reuses: u64,
 }
 
 /// Thread-safe pool of [`Workspace`]s; share one per service via `Arc`.
@@ -81,6 +119,8 @@ pub struct WorkspacePool {
     checkouts: AtomicU64,
     fresh_allocs: AtomicU64,
     fused_tiles: AtomicU64,
+    panel_packs: AtomicU64,
+    panel_reuses: AtomicU64,
 }
 
 impl WorkspacePool {
@@ -90,6 +130,8 @@ impl WorkspacePool {
             checkouts: AtomicU64::new(0),
             fresh_allocs: AtomicU64::new(0),
             fused_tiles: AtomicU64::new(0),
+            panel_packs: AtomicU64::new(0),
+            panel_reuses: AtomicU64::new(0),
         }
     }
 
@@ -146,12 +188,30 @@ impl WorkspacePool {
         self.fused_tiles.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Fold one fused run's packing accounting into the counters:
+    /// `packs` operand panel builds, `reuses` pair kernel calls served
+    /// from panels that were already packed.
+    pub fn record_panels(&self, packs: u64, reuses: u64) {
+        self.panel_packs.fetch_add(packs, Ordering::Relaxed);
+        self.panel_reuses.fetch_add(reuses, Ordering::Relaxed);
+    }
+
+    /// Fold panel-scratch reallocations (`ensure_pack` growths inside a
+    /// checked-out workspace) into the fresh-allocation gauge, so the
+    /// zero-fresh-allocation warm-run criterion covers packing scratch
+    /// too.
+    pub fn record_pack_growth(&self, n: u64) {
+        self.fresh_allocs.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Lifetime totals (see [`WorkspaceStats`]).
     pub fn stats(&self) -> WorkspaceStats {
         WorkspaceStats {
             checkouts: self.checkouts.load(Ordering::Relaxed),
             fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
             fused_tiles: self.fused_tiles.load(Ordering::Relaxed),
+            panel_packs: self.panel_packs.load(Ordering::Relaxed),
+            panel_reuses: self.panel_reuses.load(Ordering::Relaxed),
         }
     }
 
@@ -292,5 +352,43 @@ mod tests {
         pool.record_tiles(3);
         pool.record_tiles(4);
         assert_eq!(pool.stats().fused_tiles, 7);
+    }
+
+    #[test]
+    fn panel_counters_accumulate() {
+        let pool = WorkspacePool::new();
+        pool.record_panels(2, 27);
+        pool.record_panels(3, 27);
+        let st = pool.stats();
+        assert_eq!((st.panel_packs, st.panel_reuses), (5, 54));
+    }
+
+    #[test]
+    fn pack_growth_feeds_the_fresh_allocation_gauge() {
+        // Panel-scratch growth inside a checked-out workspace must be
+        // visible to the zero-fresh-allocation warm-run criterion.
+        let pool = WorkspacePool::new();
+        drop(pool.checkout(4));
+        assert_eq!(pool.stats().fresh_allocs, 1);
+        pool.record_pack_growth(1);
+        assert_eq!(pool.stats().fresh_allocs, 2);
+        pool.record_pack_growth(0);
+        assert_eq!(pool.stats().fresh_allocs, 2, "no growth, no tick");
+    }
+
+    #[test]
+    fn pack_scratch_grows_once_then_persists_through_the_pool() {
+        let pool = WorkspacePool::new();
+        {
+            let mut ws = pool.checkout(16);
+            assert!(ws.ensure_pack(100, 200), "first sizing must grow");
+            assert!(!ws.ensure_pack(100, 200), "repeat sizing is a no-op");
+            assert!(!ws.ensure_pack(40, 60), "smaller requests reuse the buffers");
+            assert!(ws.apack.len() >= 100 && ws.bpack.len() >= 200);
+        }
+        // The returned workspace keeps its panel scratch: a warm checkout
+        // of the same shape never grows again.
+        let mut ws = pool.checkout(16);
+        assert!(!ws.ensure_pack(100, 200), "warm pool must not regrow pack scratch");
     }
 }

@@ -428,8 +428,16 @@ impl AdpEngine {
         let outcome = AdpOutcome { decision, esc, slices_required, guardrail_s, exec_s };
         self.metrics.record(&outcome);
         // Refresh the workspace-pool gauges (pool lifetime totals) so
-        // snapshots expose checkout/fresh-allocation/fused-tile counts.
+        // snapshots expose checkout/fresh-allocation/fused-tile counts
+        // and the packed-panel amortization counters.
         self.metrics.sync_workspace(self.cfg.workspace_pool.stats());
+        // Native emulation ran on the runtime-dispatched slice-pair
+        // kernel; expose which one as a gauge (artifact dispatch and
+        // FP64 fallbacks never touch the kernel layer).
+        if matches!(outcome.decision, GemmDecision::EmulatedNative { .. }) {
+            self.metrics
+                .record_kernel(crate::ozaki::kernel::active_id(self.cfg.encoding).label());
+        }
         (c, outcome)
     }
 }
@@ -663,6 +671,45 @@ mod tests {
         let snap = eng.metrics.snapshot();
         assert_eq!(snap.esc_cache_misses, 1);
         assert_eq!(snap.esc_cache_hits, 1);
+    }
+
+    #[test]
+    fn warm_fused_run_reports_kernel_id_and_panel_reuse() {
+        // Satellite counter test: a warm fused-engine run must report
+        // the dispatched kernel id and a packed-panel reuse count of at
+        // least s(s+1)/2 - 1 per executed tile (panels packed once per
+        // tile, reused by every remaining slice pair).
+        let pool = Arc::new(WorkspacePool::new());
+        let eng = AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(AlwaysEmulate))
+                .with_workspace_pool(pool.clone()),
+        );
+        let mut rng = Rng::new(91);
+        let a = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);
+        let (_, first) = eng.gemm(&a, &b); // cold: sizes the pool
+        let (_, out) = eng.gemm(&a, &b); // warm run under test
+        assert!(first.decision.is_emulated() && out.decision.is_emulated());
+        let s = out.decision.slices().expect("emulated");
+        let pairs = (s * (s + 1) / 2) as u64;
+        let snap = eng.metrics.snapshot();
+        assert_eq!(
+            snap.kernel,
+            crate::ozaki::kernel::active_id(SliceEncoding::Unsigned).label(),
+            "metrics must report the dispatched kernel id"
+        );
+        assert!(snap.fused_tiles >= 2, "both requests run the fused engine: {snap:?}");
+        // One B pack per tile plus at least one A-band pack per run.
+        assert!(snap.panel_packs > snap.fused_tiles, "A band + B panel packs: {snap:?}");
+        assert!(
+            snap.panel_reuses >= snap.fused_tiles * (pairs - 1),
+            "panels must be reused across all {pairs} slice pairs of each tile: {snap:?}"
+        );
+        // The pool totals agree with the metrics gauges.
+        let ws = pool.stats();
+        assert_eq!(ws.panel_reuses, snap.panel_reuses);
+        assert_eq!(ws.panel_packs, snap.panel_packs);
     }
 
     #[test]

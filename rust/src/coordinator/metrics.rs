@@ -32,6 +32,9 @@ struct Inner {
     workspace_checkouts: u64,
     workspace_fresh: u64,
     fused_tiles: u64,
+    panel_packs: u64,
+    panel_reuses: u64,
+    kernel: &'static str,
 }
 
 /// Immutable snapshot of the counters.
@@ -72,6 +75,17 @@ pub struct MetricsSnapshot {
     pub workspace_fresh: u64,
     /// Output tiles executed by the fused tile engine.
     pub fused_tiles: u64,
+    /// Operand panel builds by the fused engine's packing layer (pool
+    /// lifetime gauge, like the workspace gauges above).
+    pub panel_packs: u64,
+    /// Slice-pair kernel calls served from already-packed panels
+    /// (`s(s+1)/2 - 1` per fused tile): the packed-panel amortization
+    /// criterion, asserted by a counter test.
+    pub panel_reuses: u64,
+    /// Label of the slice-pair kernel the runtime dispatch selected for
+    /// the last native emulated request (`""` until one ran) — e.g.
+    /// `"avx2-maddubs"`, or `"scalar"` under `ADP_FORCE_SCALAR=1`.
+    pub kernel: &'static str,
 }
 
 impl MetricsSnapshot {
@@ -142,6 +156,14 @@ impl Metrics {
         g.workspace_checkouts = g.workspace_checkouts.max(stats.checkouts);
         g.workspace_fresh = g.workspace_fresh.max(stats.fresh_allocs);
         g.fused_tiles = g.fused_tiles.max(stats.fused_tiles);
+        g.panel_packs = g.panel_packs.max(stats.panel_packs);
+        g.panel_reuses = g.panel_reuses.max(stats.panel_reuses);
+    }
+
+    /// Record which slice-pair kernel the runtime dispatch selected (the
+    /// dispatched-kernel gauge; recorded per native emulated request).
+    pub fn record_kernel(&self, label: &'static str) {
+        self.inner.lock().unwrap().kernel = label;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -165,6 +187,9 @@ impl Metrics {
             workspace_checkouts: g.workspace_checkouts,
             workspace_fresh: g.workspace_fresh,
             fused_tiles: g.fused_tiles,
+            panel_packs: g.panel_packs,
+            panel_reuses: g.panel_reuses,
+            kernel: g.kernel,
         }
     }
 
@@ -221,14 +246,46 @@ mod tests {
     fn workspace_gauges_track_pool_totals_monotonically() {
         use crate::backend::WorkspaceStats;
         let m = Metrics::default();
-        m.sync_workspace(WorkspaceStats { checkouts: 4, fresh_allocs: 2, fused_tiles: 9 });
+        m.sync_workspace(WorkspaceStats {
+            checkouts: 4,
+            fresh_allocs: 2,
+            fused_tiles: 9,
+            panel_packs: 18,
+            panel_reuses: 243,
+        });
         // A stale (smaller) sync from a racing worker must not regress.
-        m.sync_workspace(WorkspaceStats { checkouts: 3, fresh_allocs: 1, fused_tiles: 5 });
+        m.sync_workspace(WorkspaceStats {
+            checkouts: 3,
+            fresh_allocs: 1,
+            fused_tiles: 5,
+            panel_packs: 10,
+            panel_reuses: 100,
+        });
         let s = m.snapshot();
         assert_eq!((s.workspace_checkouts, s.workspace_fresh, s.fused_tiles), (4, 2, 9));
-        m.sync_workspace(WorkspaceStats { checkouts: 10, fresh_allocs: 2, fused_tiles: 20 });
+        assert_eq!((s.panel_packs, s.panel_reuses), (18, 243));
+        m.sync_workspace(WorkspaceStats {
+            checkouts: 10,
+            fresh_allocs: 2,
+            fused_tiles: 20,
+            panel_packs: 40,
+            panel_reuses: 540,
+        });
         let s = m.snapshot();
         assert_eq!((s.workspace_checkouts, s.workspace_fresh, s.fused_tiles), (10, 2, 20));
+        assert_eq!((s.panel_packs, s.panel_reuses), (40, 540));
+    }
+
+    #[test]
+    fn kernel_gauge_records_last_dispatch() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().kernel, "", "no kernel before the first emulated request");
+        m.record_kernel("avx2-maddubs");
+        assert_eq!(m.snapshot().kernel, "avx2-maddubs");
+        m.record_kernel("scalar");
+        assert_eq!(m.snapshot().kernel, "scalar");
+        m.reset();
+        assert_eq!(m.snapshot().kernel, "");
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!   seam future SIMD/GPU/sharded backends plug into.
 //! * [`ozaki`] — the Ozaki-I decomposition with the paper's **unsigned slice
 //!   encoding** (two's-complement remapping, §3 of the paper), a pure-Rust
-//!   INT8-slice GEMM emulation pipeline.
+//!   INT8-slice GEMM emulation pipeline on runtime-dispatched
+//!   [`ozaki::kernel`] microkernels (scalar reference + AVX2
+//!   `maddubs`/`pmaddwd` packed-panel kernels, bitwise interchangeable;
+//!   `ADP_FORCE_SCALAR=1` pins the reference).
 //! * [`esc`] — the **Exponent Span Capacity** estimator (§4), both the exact
 //!   per-dot-product formulation and the coarsened block algorithm, with the
 //!   proven no-overestimate guarantee.
@@ -59,4 +62,4 @@ pub use coordinator::plan::EscPlanCache;
 pub use esc::{coarse_esc_gemm, exact_esc_dot, exact_esc_gemm, EscReport};
 pub use linalg::matrix::Matrix;
 pub use ozaki::batched::SliceCache;
-pub use ozaki::{OzakiConfig, PairSchedule, SliceEncoding};
+pub use ozaki::{KernelId, OzakiConfig, PairSchedule, SliceEncoding, SliceKernel};

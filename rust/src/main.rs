@@ -228,8 +228,13 @@ fn cmd_serve(args: &Args) {
         snap.coalesced_batches
     );
     println!(
-        "fused engine: {} tiles | workspaces: {} checkouts, {} fresh allocations",
-        snap.fused_tiles, snap.workspace_checkouts, snap.workspace_fresh
+        "fused engine: {} tiles on kernel '{}' ({} panel packs, {} pair reuses) | workspaces: {} checkouts, {} fresh allocations",
+        snap.fused_tiles,
+        if snap.kernel.is_empty() { "n/a" } else { snap.kernel },
+        snap.panel_packs,
+        snap.panel_reuses,
+        snap.workspace_checkouts,
+        snap.workspace_fresh
     );
     svc.shutdown();
 }

@@ -24,7 +24,11 @@
 //!   order, the i64 accumulations and the compensated recomposition are
 //!   exactly those of [`super::gemm::emulated_gemm_on`], so the grouped
 //!   result is **bitwise identical** to the per-request path — the
-//!   serial/parallel identity property extends to groups.
+//!   serial/parallel identity property extends to groups. The round
+//!   batches execute on the runtime-dispatched
+//!   [`ozaki::kernel`](super::kernel) microkernels (via
+//!   `slice_pair_gemm_tile`), so grouped traffic gets the SIMD path —
+//!   and, being exact integer work, stays bitwise identical under it.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -6,6 +6,13 @@
 //! quadratic-in-slices compute cost comes from (§4) and why the unsigned
 //! encoding's slice reduction translates into a 22% compute saving (§3).
 //!
+//! Both drivers execute their pair GEMMs on the runtime-dispatched
+//! [`ozaki::kernel`](super::kernel) layer — AVX2 `maddubs`/`pmaddwd`
+//! microkernels on packed panels where the CPU has them, the scalar
+//! reference otherwise (`ADP_FORCE_SCALAR=1` pins it). Every kernel
+//! computes the exact integer pair product, so kernel choice can never
+//! change a bit of any result below.
+//!
 //! Two drivers execute that pair set, sharing one precomputed
 //! [`PairSchedule`]:
 //!
@@ -37,6 +44,9 @@
 //! the level-major oracle across shapes, encodings, backends and forced
 //! k-chunking.
 
+use std::cell::RefCell;
+
+use super::kernel::{self, KernelId, SliceKernel};
 use super::recompose::{add_level_into, descale_tile, recompose, LevelAccumulator};
 use super::schedule::PairSchedule;
 use super::slicing::{slice_a, slice_b, SlicedMatrix};
@@ -83,8 +93,45 @@ pub fn slice_pair_gemm_rows(
 /// weight level can share a buffer safely. Disjoint tiles may run
 /// concurrently, and any tile partition is bitwise identical to the
 /// full-matrix call — every accumulation is exact integer arithmetic.
+///
+/// Runs on the runtime-dispatched [`ozaki::kernel`](super::kernel): the
+/// AVX2 microkernel matching the slice encoding where available, the
+/// scalar reference otherwise (or under `ADP_FORCE_SCALAR=1`). Every
+/// kernel computes the exact integer pair product, so the dispatch can
+/// never change a bit of any result.
 #[allow(clippy::too_many_arguments)]
 pub fn slice_pair_gemm_tile(
+    a: &SlicedMatrix,
+    t: usize,
+    b: &SlicedMatrix,
+    u: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    out: &mut [i64],
+) {
+    slice_pair_gemm_tile_on(kernel::active(a.encoding), a, t, b, u, row0, rows, col0, cols, out);
+}
+
+thread_local! {
+    /// Per-thread panel scratch for the standalone (non-fused) tile entry
+    /// point: the level-major reference and the grouped batch rounds call
+    /// one pair at a time, so their panels cannot be pooled per tile —
+    /// the buffers persist per thread instead, making warm runs
+    /// allocation-free here too.
+    static PAIR_PACK_SCRATCH: RefCell<(Vec<u8>, Vec<u8>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// [`slice_pair_gemm_tile`] on an explicit kernel (benches and the
+/// oracle tests inject [`kernel::ScalarKernel`] or a specific SIMD
+/// kernel; the dispatch wrapper passes the active one). The scalar
+/// kernel runs straight off the slice tensors — no packing copy; SIMD
+/// kernels pack the two panels into thread-local scratch first.
+#[allow(clippy::too_many_arguments)]
+pub fn slice_pair_gemm_tile_on(
+    kern: &dyn SliceKernel,
     a: &SlicedMatrix,
     t: usize,
     b: &SlicedMatrix,
@@ -101,61 +148,120 @@ pub fn slice_pair_gemm_tile(
     assert!(col0 + cols <= b.rows, "column range out of bounds");
     assert_eq!(out.len(), rows * cols);
     assert!(k <= K_CHUNK, "k chunking is handled by the gemm drivers");
-    let at = a.slice_rows(t, row0, rows);
-    let bu = b.slice_rows(u, col0, cols);
-    let n = cols;
-    // Row-major x row-major(transposed) dot kernel, 2x4 register blocked
-    // (8 independent i32 accumulator chains for the auto-vectorizer).
-    let mut i = 0;
-    while i + 2 <= rows {
-        let a0 = &at[i * k..(i + 1) * k];
-        let a1 = &at[(i + 1) * k..(i + 2) * k];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = &bu[j * k..(j + 1) * k];
-            let b1 = &bu[(j + 1) * k..(j + 2) * k];
-            let b2 = &bu[(j + 2) * k..(j + 3) * k];
-            let b3 = &bu[(j + 3) * k..(j + 4) * k];
-            let mut c0 = [0i32; 4];
-            let mut c1 = [0i32; 4];
-            for l in 0..k {
-                let (x0, x1) = (a0[l] as i32, a1[l] as i32);
-                let y = [b0[l] as i32, b1[l] as i32, b2[l] as i32, b3[l] as i32];
-                for r in 0..4 {
-                    c0[r] += x0 * y[r];
-                    c1[r] += x1 * y[r];
-                }
-            }
-            for r in 0..4 {
-                out[i * n + j + r] += c0[r] as i64;
-                out[(i + 1) * n + j + r] += c1[r] as i64;
-            }
-            j += 4;
-        }
-        while j < n {
-            let b0 = &bu[j * k..(j + 1) * k];
-            let (mut c00, mut c10) = (0i32, 0i32);
-            for l in 0..k {
-                c00 += a0[l] as i32 * b0[l] as i32;
-                c10 += a1[l] as i32 * b0[l] as i32;
-            }
-            out[i * n + j] += c00 as i64;
-            out[(i + 1) * n + j] += c10 as i64;
-            j += 1;
-        }
-        i += 2;
+    debug_assert_eq!(a.encoding, b.encoding, "slice-pair operands must share an encoding");
+    if kern.id() == KernelId::Scalar {
+        kernel::scalar::tile_unpacked(
+            a.slice_rows(t, row0, rows),
+            b.slice_rows(u, col0, cols),
+            rows,
+            cols,
+            k,
+            out,
+        );
+        return;
     }
-    if i < rows {
-        let a0 = &at[i * k..(i + 1) * k];
-        for j in 0..n {
-            let b0 = &bu[j * k..(j + 1) * k];
-            let mut c = 0i32;
-            for l in 0..k {
-                c += a0[l] as i32 * b0[l] as i32;
-            }
-            out[i * n + j] += c as i64;
+    PAIR_PACK_SCRATCH.with(|cell| {
+        let (apack, bpack) = &mut *cell.borrow_mut();
+        let ab = kern.a_slice_bytes(rows, k);
+        let bb = kern.b_slice_bytes(cols, k);
+        if apack.len() < ab {
+            apack.resize(ab, 0);
         }
+        if bpack.len() < bb {
+            bpack.resize(bb, 0);
+        }
+        kern.pack_a_slice(a, t, row0, rows, &mut apack[..ab]);
+        kern.pack_b_slice(b, u, col0, cols, &mut bpack[..bb]);
+        kern.pair_tile(&apack[..ab], &bpack[..bb], rows, cols, k, out);
+    });
+}
+
+/// The distinct B slices of a pair set, packed once in a kernel's panel
+/// layout over the full column extent. Built per backend batch by the
+/// parallel level/grouped schedules so every row chunk of every pair
+/// reuses the shared read-only panels instead of re-packing O(n·k)
+/// bytes per (pair, chunk); `Sync`, so chunks on different pool threads
+/// read it concurrently.
+pub struct PackedBSlices {
+    kern: &'static dyn SliceKernel,
+    /// Columns packed (`b.rows`: B slice tensors store B transposed).
+    n: usize,
+    k: usize,
+    /// Sorted distinct `u` values of the pair set.
+    us: Vec<usize>,
+    /// Sorted distinct `t` values of the pair set — hoisted here so the
+    /// per-chunk A packing doesn't recompute it per row chunk.
+    ts: Vec<usize>,
+    stride: usize,
+    buf: Vec<u8>,
+}
+
+impl PackedBSlices {
+    /// Pack every B slice named by `pairs` (full column extent) in
+    /// `kern`'s layout.
+    pub fn pack(
+        kern: &'static dyn SliceKernel,
+        b: &SlicedMatrix,
+        pairs: &[(usize, usize)],
+    ) -> PackedBSlices {
+        let (n, k) = (b.rows, b.cols);
+        let mut us: Vec<usize> = pairs.iter().map(|&(_, u)| u).collect();
+        us.sort_unstable();
+        us.dedup();
+        let mut ts: Vec<usize> = pairs.iter().map(|&(t, _)| t).collect();
+        ts.sort_unstable();
+        ts.dedup();
+        let stride = kern.b_slice_bytes(n, k);
+        let mut buf = vec![0u8; us.len() * stride];
+        for (i, &u) in us.iter().enumerate() {
+            kern.pack_b_slice(b, u, 0, n, &mut buf[i * stride..(i + 1) * stride]);
+        }
+        PackedBSlices { kern, n, k, us, ts, stride, buf }
     }
+
+    /// The packed panel of slice `u` (must be in the pair set packed).
+    pub fn panel(&self, u: usize) -> &[u8] {
+        let i = self.us.binary_search(&u).expect("B slice was packed");
+        &self.buf[i * self.stride..(i + 1) * self.stride]
+    }
+}
+
+/// Every pair of `pairs` over output rows `[row0, row0 + rows)` against
+/// pre-packed B panels, accumulating into `out` (the row-major
+/// `rows x n` sub-buffer for exactly that row range). The row range's
+/// distinct A slices are packed once into thread-local scratch and
+/// reused by every pair — the level-major analog of the fused engine's
+/// per-band A pack. Bitwise identical to calling
+/// [`slice_pair_gemm_rows`] per pair (exact integer arithmetic).
+pub fn slice_pairs_rows_on_packed(
+    a: &SlicedMatrix,
+    bp: &PackedBSlices,
+    pairs: &[(usize, usize)],
+    row0: usize,
+    rows: usize,
+    out: &mut [i64],
+) {
+    let kern = bp.kern;
+    let k = a.cols;
+    assert_eq!(k, bp.k, "inner dimension mismatch");
+    assert!(row0 + rows <= a.rows, "row range out of bounds");
+    assert_eq!(out.len(), rows * bp.n);
+    assert!(k <= K_CHUNK, "k chunking is handled by the gemm drivers");
+    PAIR_PACK_SCRATCH.with(|cell| {
+        let (apack, _) = &mut *cell.borrow_mut();
+        let ab = kern.a_slice_bytes(rows, k);
+        let ts = &bp.ts;
+        if apack.len() < ts.len() * ab {
+            apack.resize(ts.len() * ab, 0);
+        }
+        for (i, &t) in ts.iter().enumerate() {
+            kern.pack_a_slice(a, t, row0, rows, &mut apack[i * ab..(i + 1) * ab]);
+        }
+        for &(t, u) in pairs {
+            let ti = ts.binary_search(&t).expect("A slice was packed");
+            kern.pair_tile(&apack[ti * ab..(ti + 1) * ab], bp.panel(u), rows, bp.n, k, out);
+        }
+    });
 }
 
 /// Timing breakdown of one emulated GEMM (feeds the Fig 5 harness).
@@ -342,12 +448,54 @@ fn fused_gemm_chunk(
     c
 }
 
+/// Packing/reuse accounting of one fused run (folded into the
+/// [`WorkspacePool`] counters, surfaced by `coordinator::Metrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FusedTally {
+    /// Output tiles executed.
+    pub tiles: u64,
+    /// Operand panel builds: one per A band + one per B column tile,
+    /// each covering every slice of the operand.
+    pub packs: u64,
+    /// Pair kernel calls served from panels packed earlier in the same
+    /// tile — `pair_count - 1` per tile. The amortization the packing
+    /// layer exists for.
+    pub reuses: u64,
+    /// Panel-scratch reallocations (`ensure_pack` growths) — folded into
+    /// the pool's fresh-allocation gauge so a warm run that regrows pack
+    /// scratch cannot hide from the zero-fresh-allocation counter tests.
+    pub pack_growths: u64,
+}
+
+impl FusedTally {
+    pub fn merge(&mut self, o: FusedTally) {
+        self.tiles += o.tiles;
+        self.packs += o.packs;
+        self.reuses += o.reuses;
+        self.pack_growths += o.pack_growths;
+    }
+}
+
 /// The serial reference fused schedule: row bands of [`FUSED_MC`] output
 /// rows in order, column tiles in order within each band, one workspace
-/// for the whole pass. The [`ComputeBackend::fused_tile_gemm`] default
-/// runs this; parallel backends also use it as their small-problem inline
-/// path (bitwise identical either way).
+/// for the whole pass, on the runtime-dispatched kernel. The
+/// [`ComputeBackend::fused_tile_gemm`] default runs this; parallel
+/// backends also use it as their small-problem inline path (bitwise
+/// identical either way).
 pub fn fused_tile_gemm_serial(
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    schedule: &PairSchedule,
+    workspaces: &WorkspacePool,
+    c: &mut Matrix,
+) {
+    fused_tile_gemm_serial_on(kernel::active(a.encoding), a, b, schedule, workspaces, c);
+}
+
+/// [`fused_tile_gemm_serial`] on an explicit kernel (the ablation bench
+/// and the oracle tests compare kernels through this seam).
+pub fn fused_tile_gemm_serial_on(
+    kern: &dyn SliceKernel,
     a: &SlicedMatrix,
     b: &SlicedMatrix,
     schedule: &PairSchedule,
@@ -361,82 +509,99 @@ pub fn fused_tile_gemm_serial(
         return;
     }
     let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
-    let mut tiles = 0u64;
+    let mut tally = FusedTally::default();
     for (bi, band) in c.data.chunks_mut(FUSED_MC * n).enumerate() {
-        tiles += fused_band(a, b, schedule, bi * FUSED_MC, &mut ws, band);
+        tally.merge(fused_band(kern, a, b, schedule, bi * FUSED_MC, &mut ws, band));
     }
-    workspaces.record_tiles(tiles);
+    workspaces.record_tiles(tally.tiles);
+    workspaces.record_panels(tally.packs, tally.reuses);
+    workspaces.record_pack_growth(tally.pack_growths);
 }
 
 /// One row band of the fused schedule: every [`FUSED_NC`]-wide column
 /// tile of output rows `[row0, row0 + band.len()/n)`, left to right.
 /// `band` is the contiguous row-major sub-slice of C for exactly those
-/// rows. Returns the number of tiles executed. Disjoint bands may run
-/// concurrently — each tile's arithmetic touches only its own elements.
+/// rows. Disjoint bands may run concurrently — each tile's arithmetic
+/// touches only its own elements.
+///
+/// This is where the packing layer earns its keep: the band's A slice
+/// rows are packed **once** into the workspace's panel scratch and
+/// reused by every column tile and every slice pair; each column tile
+/// packs its B panel once and reuses it across all `s(s+1)/2` pairs.
+/// Per output element the arithmetic sequence is exactly the level-major
+/// reference one (every kernel computes the exact integer pair product;
+/// levels feed the compensated accumulator smallest weight first; the
+/// descale passes are per-element) — see the module docs for why that
+/// makes any tile partition and any kernel bitwise identical.
 pub fn fused_band(
+    kern: &dyn SliceKernel,
     a: &SlicedMatrix,
     b: &SlicedMatrix,
     schedule: &PairSchedule,
     row0: usize,
     ws: &mut Workspace,
     band: &mut [f64],
-) -> u64 {
+) -> FusedTally {
     let n = b.rows;
+    let k = a.cols;
+    let s = schedule.slices();
+    assert!(k <= K_CHUNK, "k chunking is handled by the fused gemm drivers");
     debug_assert!(n > 0 && band.len() % n == 0, "band must be whole output rows");
+    debug_assert_eq!(s, a.s, "schedule must match the decomposition");
     let rows = band.len() / n;
-    let mut tiles = 0u64;
+    let ab = kern.a_slice_bytes(rows, k);
+    let bb_max = kern.b_slice_bytes(FUSED_NC.min(n), k);
+    assert!(ws.capacity() >= rows * FUSED_NC.min(n), "workspace too small for a band tile");
+    let grew = ws.ensure_pack(s * ab, s * bb_max);
+    let Workspace { pbuf, hi, lo, apack, bpack } = ws;
+    let mut tally = FusedTally { pack_growths: grew as u64, ..FusedTally::default() };
+    // Pack the band's A rows once — every column tile and every slice
+    // pair below reads these panels.
+    for t in 0..s {
+        kern.pack_a_slice(a, t, row0, rows, &mut apack[t * ab..(t + 1) * ab]);
+    }
+    tally.packs += 1;
     let mut col0 = 0;
     while col0 < n {
         let cols = FUSED_NC.min(n - col0);
-        fused_tile(a, b, schedule, row0, rows, col0, cols, ws, band);
-        tiles += 1;
+        let bb = kern.b_slice_bytes(cols, k);
+        for u in 0..s {
+            kern.pack_b_slice(b, u, col0, cols, &mut bpack[u * bb..(u + 1) * bb]);
+        }
+        tally.packs += 1;
+        let e = rows * cols;
+        let hi_t = &mut hi[..e];
+        let lo_t = &mut lo[..e];
+        let pb = &mut pbuf[..e];
+        hi_t.fill(0.0);
+        lo_t.fill(0.0);
+        for (pairs, w) in schedule.levels() {
+            pb.fill(0);
+            for &(t, u) in pairs {
+                kern.pair_tile(
+                    &apack[t * ab..(t + 1) * ab],
+                    &bpack[u * bb..(u + 1) * bb],
+                    rows,
+                    cols,
+                    k,
+                    pb,
+                );
+            }
+            add_level_into(hi_t, lo_t, pb, w);
+        }
+        descale_tile(hi_t, lo_t, &a.sigma, &b.sigma, row0, rows, col0, cols);
+        for i in 0..rows {
+            let src = i * cols;
+            let dst = i * n + col0;
+            for j in 0..cols {
+                band[dst + j] = hi_t[src + j] + lo_t[src + j];
+            }
+        }
+        tally.tiles += 1;
+        tally.reuses += (schedule.pair_count() as u64).saturating_sub(1);
         col0 += cols;
     }
-    tiles
-}
-
-/// One output tile of the fused engine: all `s(s+1)/2` slice pairs,
-/// grouped by weight level in schedule (smallest-weight-first) order,
-/// accumulated into the workspace's tile-sized compensated hi/lo pair,
-/// then sigma-descaled and written into `band` (the row-major band slice
-/// of C covering rows `[row0, row0 + rows)`; the tile lands at column
-/// offset `col0` inside it). Per element this performs exactly the
-/// level-major reference arithmetic — see the module docs.
-#[allow(clippy::too_many_arguments)]
-pub fn fused_tile(
-    a: &SlicedMatrix,
-    b: &SlicedMatrix,
-    schedule: &PairSchedule,
-    row0: usize,
-    rows: usize,
-    col0: usize,
-    cols: usize,
-    ws: &mut Workspace,
-    band: &mut [f64],
-) {
-    let e = rows * cols;
-    assert!(ws.capacity() >= e, "workspace too small for a {rows}x{cols} tile");
-    let hi = &mut ws.hi[..e];
-    let lo = &mut ws.lo[..e];
-    let pbuf = &mut ws.pbuf[..e];
-    hi.fill(0.0);
-    lo.fill(0.0);
-    for (pairs, w) in schedule.levels() {
-        pbuf.fill(0);
-        for &(t, u) in pairs {
-            slice_pair_gemm_tile(a, t, b, u, row0, rows, col0, cols, pbuf);
-        }
-        add_level_into(hi, lo, pbuf, w);
-    }
-    descale_tile(hi, lo, &a.sigma, &b.sigma, row0, rows, col0, cols);
-    let n = b.rows;
-    for i in 0..rows {
-        let src = i * cols;
-        let dst = i * n + col0;
-        for j in 0..cols {
-            band[dst + j] = hi[src + j] + lo[src + j];
-        }
-    }
+    tally
 }
 
 #[cfg(test)]

@@ -1,0 +1,300 @@
+//! AVX2 slice-pair microkernels — the CPU stand-in for the paper's INT8
+//! tensor-core (IMMA / dp4a) path.
+//!
+//! Both kernels compute the *exact* integer pair product `P_tu` for the
+//! digits as stored, so their results are bitwise identical to the scalar
+//! oracle by construction (exact integer arithmetic commutes with any
+//! evaluation order); the property suites assert it anyway.
+//!
+//! # Panel formats
+//!
+//! The packing layer lays each operand slice out for the instruction
+//! that consumes it, padded to the instruction's 2/4-element k-groups:
+//!
+//! * **B panels** (both kernels) are k-interleaved and [`NR`]-wide:
+//!   `[ceil(cols/NR)][ceil(k/G)][NR][G]`, one 32-byte group per
+//!   (column-block, k-group) — a single `vmovdqu` feeds all `NR` output
+//!   columns. `G` is 4 bytes for `maddubs`, 2 i16 (4 bytes) for
+//!   `pmaddwd`.
+//! * **A panels** stay row-major (one k-group is broadcast to all lanes
+//!   per step). The `maddubs` kernel stores *two* u8 planes per slice —
+//!   the positive and negative parts of each digit — and the `pmaddwd`
+//!   kernel stores sign-extended i16 rows.
+//!
+//! # Saturation-freedom proof (the `maddubs` kernel)
+//!
+//! `vpmaddubsw` multiplies unsigned bytes `u` by signed bytes `s` and
+//! adds adjacent pairs with *saturating* i16 arithmetic, so it is exact
+//! only while `u[0]*s[0] + u[1]*s[1]` stays inside `[-2^15, 2^15 - 1]`.
+//! The digit bounds of the slicing layer make the split evaluation below
+//! provably exact:
+//!
+//! * Stored digits: unsigned encoding — leading slice in `[-64, 64]`
+//!   (6-bit window top plus the remap carry), sub-leading in
+//!   `[-128, 127]` (full two's-complement range after the §3 remap);
+//!   signed encoding — all slices in `[-127, 127]`.
+//! * Each A digit is split as `d = d⁺ - d⁻` with
+//!   `d⁺ = max(d, 0) ∈ [0, 127]` and `d⁻ = max(-d, 0) ∈ [0, 128]`, and
+//!   the two maddubs passes run on the u8 planes `d⁺` and `d⁻` against
+//!   the raw signed B digits `b ∈ [-128, 127]`:
+//!   - positive plane: `d⁺[0]·b[0] + d⁺[1]·b[1] ∈ [-2·127·128, 2·127·127]
+//!     = [-32512, 32258]` — strictly inside i16;
+//!   - negative plane: `d⁻[0]·b[0] + d⁻[1]·b[1] ∈ [-2·128·128, 2·128·127]
+//!     = [-32768, 32512]` — the minimum is exactly `i16::MIN`, which is
+//!     representable, so saturation never fires.
+//! * `vpmaddwd` against `1i16` then widens each pair sum to i32 exactly,
+//!   and the per-lane i32 accumulators hold full per-column partial dot
+//!   products: `|Σ d⁺·b| <= K_CHUNK·127·128` and
+//!   `|Σ d⁻·b| <= K_CHUNK·128·128 = 2^31 - 2^14 < 2^31` — the same
+//!   `K_CHUNK = 2^17 - 1` cap that already guarantees the scalar i32
+//!   accumulator. The final lane-wise `acc⁺ - acc⁻` equals the true pair
+//!   dot, which obeys the same bound, so the wrapping `vpsubd` is exact.
+//!
+//! The `pmaddwd` kernel needs no split: products of sign-extended i8
+//! values are at most `128·128 = 2^14`, one `vpmaddwd` pair sum is at
+//! most `2^15`, and the per-lane totals obey the `K_CHUNK` bound above.
+//! It serves the signed encoding (whose per-slice sign bit leaves no
+//! unsigned operand for `maddubs`) and doubles as a second independent
+//! SIMD oracle for the property tests.
+
+use std::arch::x86_64::*;
+
+use super::{KernelId, SliceKernel};
+use crate::ozaki::slicing::SlicedMatrix;
+
+/// Output columns per packed B group (i32 lanes of one ymm register).
+pub const NR: usize = 8;
+
+pub static MADDUBS: MaddubsKernel = MaddubsKernel;
+pub static PMADDWD: PmaddwdKernel = PmaddwdKernel;
+
+#[inline]
+fn groups(k: usize, g: usize) -> usize {
+    k.div_ceil(g)
+}
+
+/// u8×s8 pair kernel on `vpmaddubsw` + `vpmaddwd` widening (see the
+/// module docs for the exactness proof). Dispatched for the unsigned
+/// encoding — the AVX2 analog of the paper's u8-slice IMMA argument.
+pub struct MaddubsKernel;
+
+impl SliceKernel for MaddubsKernel {
+    fn id(&self) -> KernelId {
+        KernelId::Avx2Maddubs
+    }
+
+    fn a_slice_bytes(&self, rows: usize, k: usize) -> usize {
+        2 * rows * groups(k, 4) * 4
+    }
+
+    fn b_slice_bytes(&self, cols: usize, k: usize) -> usize {
+        cols.div_ceil(NR) * groups(k, 4) * 32
+    }
+
+    fn pack_a_slice(&self, a: &SlicedMatrix, t: usize, row0: usize, rows: usize, dst: &mut [u8]) {
+        let k = a.cols;
+        let rb = groups(k, 4) * 4;
+        let plane = rows * rb;
+        debug_assert_eq!(dst.len(), 2 * plane);
+        dst.fill(0);
+        let src = a.slice_rows(t, row0, rows);
+        for i in 0..rows {
+            let row = &src[i * k..(i + 1) * k];
+            for (l, &dgt) in row.iter().enumerate() {
+                let d = dgt as i32;
+                dst[i * rb + l] = d.max(0) as u8;
+                dst[plane + i * rb + l] = (-d).max(0) as u8;
+            }
+        }
+    }
+
+    fn pack_b_slice(&self, b: &SlicedMatrix, u: usize, col0: usize, cols: usize, dst: &mut [u8]) {
+        let k = b.cols;
+        let kg = groups(k, 4);
+        let nb = cols.div_ceil(NR);
+        debug_assert_eq!(dst.len(), nb * kg * 32);
+        dst.fill(0);
+        let src = b.slice_rows(u, col0, cols);
+        for jb in 0..nb {
+            let base = jb * kg * 32;
+            for c in 0..NR {
+                let j = jb * NR + c;
+                if j >= cols {
+                    break;
+                }
+                let row = &src[j * k..(j + 1) * k];
+                for (l, &dgt) in row.iter().enumerate() {
+                    dst[base + (l / 4) * 32 + c * 4 + (l % 4)] = dgt as u8;
+                }
+            }
+        }
+    }
+
+    fn pair_tile(
+        &self,
+        apack: &[u8],
+        bpack: &[u8],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        out: &mut [i64],
+    ) {
+        debug_assert!(apack.len() >= self.a_slice_bytes(rows, k));
+        debug_assert!(bpack.len() >= self.b_slice_bytes(cols, k));
+        debug_assert_eq!(out.len(), rows * cols);
+        // SAFETY: the kernel is only reachable through the dispatch layer
+        // (or `available_kernels`), both of which gate on a cached
+        // `is_x86_feature_detected!("avx2")`; panel sizes are checked
+        // above and every pointer stays inside the checked extents.
+        unsafe { maddubs_tile(apack, bpack, rows, cols, k, out) }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn maddubs_tile(
+    apack: &[u8],
+    bpack: &[u8],
+    rows: usize,
+    cols: usize,
+    k: usize,
+    out: &mut [i64],
+) {
+    let kg = k.div_ceil(4);
+    let rb = kg * 4;
+    let plane = rows * rb;
+    let nb = cols.div_ceil(NR);
+    let ones = _mm256_set1_epi16(1);
+    for i in 0..rows {
+        let pos = apack.as_ptr().add(i * rb);
+        let neg = apack.as_ptr().add(plane + i * rb);
+        for jb in 0..nb {
+            let bb = bpack.as_ptr().add(jb * kg * 32);
+            let mut accp = _mm256_setzero_si256();
+            let mut accn = _mm256_setzero_si256();
+            for g in 0..kg {
+                let ap = _mm256_set1_epi32(pos.add(g * 4).cast::<i32>().read_unaligned());
+                let an = _mm256_set1_epi32(neg.add(g * 4).cast::<i32>().read_unaligned());
+                let bv = _mm256_loadu_si256(bb.add(g * 32) as *const __m256i);
+                let wp = _mm256_madd_epi16(_mm256_maddubs_epi16(ap, bv), ones);
+                let wn = _mm256_madd_epi16(_mm256_maddubs_epi16(an, bv), ones);
+                accp = _mm256_add_epi32(accp, wp);
+                accn = _mm256_add_epi32(accn, wn);
+            }
+            let diff = _mm256_sub_epi32(accp, accn);
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, diff);
+            let take = NR.min(cols - jb * NR);
+            for (c, &v) in lanes.iter().take(take).enumerate() {
+                out[i * cols + jb * NR + c] += v as i64;
+            }
+        }
+    }
+}
+
+/// Sign-extended i16 pair kernel on `vpmaddwd` — exact for any i8 digit
+/// range without a split pass. Dispatched for the signed encoding.
+pub struct PmaddwdKernel;
+
+impl SliceKernel for PmaddwdKernel {
+    fn id(&self) -> KernelId {
+        KernelId::Avx2Pmaddwd
+    }
+
+    fn a_slice_bytes(&self, rows: usize, k: usize) -> usize {
+        rows * groups(k, 2) * 4
+    }
+
+    fn b_slice_bytes(&self, cols: usize, k: usize) -> usize {
+        cols.div_ceil(NR) * groups(k, 2) * 32
+    }
+
+    fn pack_a_slice(&self, a: &SlicedMatrix, t: usize, row0: usize, rows: usize, dst: &mut [u8]) {
+        let k = a.cols;
+        let rb = groups(k, 2) * 4;
+        debug_assert_eq!(dst.len(), rows * rb);
+        dst.fill(0);
+        let src = a.slice_rows(t, row0, rows);
+        for i in 0..rows {
+            let row = &src[i * k..(i + 1) * k];
+            for (l, &dgt) in row.iter().enumerate() {
+                let v = (dgt as i16).to_le_bytes();
+                dst[i * rb + 2 * l] = v[0];
+                dst[i * rb + 2 * l + 1] = v[1];
+            }
+        }
+    }
+
+    fn pack_b_slice(&self, b: &SlicedMatrix, u: usize, col0: usize, cols: usize, dst: &mut [u8]) {
+        let k = b.cols;
+        let kg = groups(k, 2);
+        let nb = cols.div_ceil(NR);
+        debug_assert_eq!(dst.len(), nb * kg * 32);
+        dst.fill(0);
+        let src = b.slice_rows(u, col0, cols);
+        for jb in 0..nb {
+            let base = jb * kg * 32;
+            for c in 0..NR {
+                let j = jb * NR + c;
+                if j >= cols {
+                    break;
+                }
+                let row = &src[j * k..(j + 1) * k];
+                for (l, &dgt) in row.iter().enumerate() {
+                    let v = (dgt as i16).to_le_bytes();
+                    let off = base + (l / 2) * 32 + c * 4 + (l % 2) * 2;
+                    dst[off] = v[0];
+                    dst[off + 1] = v[1];
+                }
+            }
+        }
+    }
+
+    fn pair_tile(
+        &self,
+        apack: &[u8],
+        bpack: &[u8],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        out: &mut [i64],
+    ) {
+        debug_assert!(apack.len() >= self.a_slice_bytes(rows, k));
+        debug_assert!(bpack.len() >= self.b_slice_bytes(cols, k));
+        debug_assert_eq!(out.len(), rows * cols);
+        // SAFETY: as in `MaddubsKernel::pair_tile` — AVX2 presence is
+        // gated by the dispatch layer, extents are checked above.
+        unsafe { pmaddwd_tile(apack, bpack, rows, cols, k, out) }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn pmaddwd_tile(
+    apack: &[u8],
+    bpack: &[u8],
+    rows: usize,
+    cols: usize,
+    k: usize,
+    out: &mut [i64],
+) {
+    let kg = k.div_ceil(2);
+    let rb = kg * 4;
+    let nb = cols.div_ceil(NR);
+    for i in 0..rows {
+        let ar = apack.as_ptr().add(i * rb);
+        for jb in 0..nb {
+            let bb = bpack.as_ptr().add(jb * kg * 32);
+            let mut acc = _mm256_setzero_si256();
+            for g in 0..kg {
+                let av = _mm256_set1_epi32(ar.add(g * 4).cast::<i32>().read_unaligned());
+                let bv = _mm256_loadu_si256(bb.add(g * 32) as *const __m256i);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            }
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            let take = NR.min(cols - jb * NR);
+            for (c, &v) in lanes.iter().take(take).enumerate() {
+                out[i * cols + jb * NR + c] += v as i64;
+            }
+        }
+    }
+}

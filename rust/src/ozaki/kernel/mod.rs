@@ -1,0 +1,264 @@
+//! Pluggable INT8 slice-pair microkernels with packed operand panels —
+//! the CPU analog of the paper's tensor-core (IMMA) substrate.
+//!
+//! The paper's whole premise is that int8 matrix-multiply units are the
+//! fast path for Ozaki-style emulated DGEMM, and its unsigned slicing
+//! scheme exists precisely to maximize what each 8-bit product
+//! contributes to a native dot-product instruction (§3; ozIMMU and
+//! EmuGEMM in PAPERS.md show the win comes from feeding *packed* int8
+//! panels to those instructions rather than scalar loops). On x86 the
+//! analogous instructions are `vpmaddubsw` (u8×s8 pair dot) and
+//! `vpmaddwd` (i16 pair dot); this module puts them behind one seam:
+//!
+//! * [`SliceKernel`] — packed-panel slice-pair tile GEMM: a kernel owns
+//!   its panel layout (`a_slice_bytes`/`b_slice_bytes` +
+//!   `pack_a_slice`/`pack_b_slice`) and the compute on it (`pair_tile`).
+//!   Panels are packed **once per fused tile/band and reused across all
+//!   `s(s+1)/2` slice pairs**, with scratch drawn from the pooled
+//!   [`Workspace`](crate::backend::Workspace) — the packing cost is
+//!   amortized quadratically while the kernel streams contiguous
+//!   32-byte groups.
+//! * [`ScalarKernel`] — the reference loop nest extracted from the
+//!   original `slice_pair_gemm_tile`, the oracle every other kernel must
+//!   match **bitwise** (trivial for exact integer arithmetic, asserted
+//!   by the property suites in `tests/kernel_oracle.rs`).
+//! * [`avx2::MaddubsKernel`] / [`avx2::PmaddwdKernel`] — the AVX2
+//!   kernels (x86_64 only), with the i16 saturation-freedom proof in the
+//!   `avx2` module docs.
+//!
+//! # Dispatch
+//!
+//! [`active`] picks the kernel at runtime: AVX2 detection is done once
+//! and cached (`OnceLock`), the unsigned encoding routes to the
+//! `maddubs` kernel and the signed encoding to `pmaddwd`, and setting
+//! `ADP_FORCE_SCALAR=1` (checked once, also cached) pins the scalar
+//! reference end to end — the knob the CI fallback job and A/B perf runs
+//! use. Every integer-GEMM path in the repo funnels through this
+//! dispatch: `slice_pair_gemm_tile` (hence the level-major reference,
+//! both backends' batch schedules and the grouped `ozaki::batched`
+//! rounds) and the fused tile engine (`fused_tile_gemm_*`).
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+use std::sync::OnceLock;
+
+use super::slicing::SlicedMatrix;
+use super::SliceEncoding;
+
+pub use scalar::ScalarKernel;
+
+/// Identity of a dispatched kernel (exported to `Metrics` as a gauge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    /// The scalar reference loop nest.
+    Scalar,
+    /// AVX2 `vpmaddubsw` + `vpmaddwd` widening (unsigned encoding).
+    Avx2Maddubs,
+    /// AVX2 sign-extended `vpmaddwd` (signed encoding).
+    Avx2Pmaddwd,
+}
+
+impl KernelId {
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelId::Scalar => "scalar",
+            KernelId::Avx2Maddubs => "avx2-maddubs",
+            KernelId::Avx2Pmaddwd => "avx2-pmaddwd",
+        }
+    }
+}
+
+/// A packed-panel slice-pair tile GEMM microkernel.
+///
+/// Contract: `pair_tile` must accumulate the **exact** integer pair
+/// product — `out[i*cols + j] += sum_l a_t[i, l] * b_u[j, l]` for the
+/// digits as stored in the slice tensors — for any `k <= K_CHUNK`, so
+/// every kernel is bitwise identical to [`ScalarKernel`] by
+/// construction. Panels are opaque to callers: a kernel defines its own
+/// layout via the size/pack methods and is the only reader of the bytes
+/// it packed. Packed panels depend only on (operand, slice, row range,
+/// k), never on the partner slice, which is what makes one pack
+/// reusable across every slice pair of a tile.
+pub trait SliceKernel: Send + Sync {
+    fn id(&self) -> KernelId;
+
+    /// Bytes one packed A slice of `rows` rows × `k` digits occupies.
+    fn a_slice_bytes(&self, rows: usize, k: usize) -> usize;
+
+    /// Bytes one packed B slice of `cols` columns × `k` digits occupies
+    /// (B slice tensors store B transposed, so a "column" is a row).
+    fn b_slice_bytes(&self, cols: usize, k: usize) -> usize;
+
+    /// Pack rows `[row0, row0 + rows)` of slice `t` of A into `dst`
+    /// (`dst.len() == a_slice_bytes(rows, k)`, fully overwritten).
+    fn pack_a_slice(&self, a: &SlicedMatrix, t: usize, row0: usize, rows: usize, dst: &mut [u8]);
+
+    /// Pack columns `[col0, col0 + cols)` of slice `u` of B into `dst`
+    /// (`dst.len() == b_slice_bytes(cols, k)`, fully overwritten).
+    fn pack_b_slice(&self, b: &SlicedMatrix, u: usize, col0: usize, cols: usize, dst: &mut [u8]);
+
+    /// `out[i*cols + j] += dot(packed A row i, packed B column j)` over
+    /// the full `k` extent; `out` is the row-major `rows x cols` i64
+    /// tile accumulator.
+    fn pair_tile(
+        &self,
+        apack: &[u8],
+        bpack: &[u8],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        out: &mut [i64],
+    );
+}
+
+static SCALAR: ScalarKernel = ScalarKernel;
+
+/// `ADP_FORCE_SCALAR=1` (or `true`/`on`) pins the scalar reference
+/// kernel for the whole process. Read once and cached: dispatch sits on
+/// the per-pair hot path.
+pub fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        matches!(
+            std::env::var("ADP_FORCE_SCALAR").ok().as_deref(),
+            Some("1") | Some("true") | Some("on")
+        )
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_kernel(encoding: SliceEncoding) -> Option<&'static dyn SliceKernel> {
+    if !avx2_available() {
+        return None;
+    }
+    Some(match encoding {
+        SliceEncoding::Unsigned => &avx2::MADDUBS,
+        SliceEncoding::Signed => &avx2::PMADDWD,
+    })
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn simd_kernel(_encoding: SliceEncoding) -> Option<&'static dyn SliceKernel> {
+    None
+}
+
+/// The kernel the runtime dispatch selects for `encoding` on this
+/// machine: the AVX2 kernel matching the encoding when the CPU has AVX2
+/// and `ADP_FORCE_SCALAR` is unset, the scalar reference otherwise.
+pub fn active(encoding: SliceEncoding) -> &'static dyn SliceKernel {
+    if force_scalar() {
+        return &SCALAR;
+    }
+    simd_kernel(encoding).unwrap_or(&SCALAR)
+}
+
+/// [`KernelId`] of the dispatched kernel (the `Metrics` gauge value).
+pub fn active_id(encoding: SliceEncoding) -> KernelId {
+    active(encoding).id()
+}
+
+/// Every kernel runnable on this machine (scalar first). Benches and the
+/// oracle test suite iterate this to compare all implementations.
+pub fn available_kernels() -> &'static [&'static dyn SliceKernel] {
+    static ALL: OnceLock<Vec<&'static dyn SliceKernel>> = OnceLock::new();
+    ALL.get_or_init(|| {
+        let mut v: Vec<&'static dyn SliceKernel> = vec![&SCALAR];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx2_available() {
+                v.push(&avx2::MADDUBS);
+                v.push(&avx2::PMADDWD);
+            }
+        }
+        v
+    })
+    .as_slice()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::ozaki::slicing::{slice_a, slice_b};
+    use crate::util::Rng;
+
+    #[test]
+    fn labels_are_distinct() {
+        let ids = [KernelId::Scalar, KernelId::Avx2Maddubs, KernelId::Avx2Pmaddwd];
+        for (i, a) in ids.iter().enumerate() {
+            for b in &ids[i + 1..] {
+                assert_ne!(a.label(), b.label());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_is_consistent_with_availability() {
+        // Whatever `active` picks must be in the advertised kernel set,
+        // and forcing scalar via the env (as the CI job does) must pin
+        // the scalar reference for both encodings.
+        for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+            let id = active_id(enc);
+            assert!(
+                available_kernels().iter().any(|k| k.id() == id),
+                "dispatched {id:?} not in the available set"
+            );
+            if force_scalar() {
+                assert_eq!(id, KernelId::Scalar, "ADP_FORCE_SCALAR must pin the scalar kernel");
+            }
+        }
+        assert_eq!(available_kernels()[0].id(), KernelId::Scalar);
+    }
+
+    #[test]
+    fn every_available_kernel_matches_the_naive_dot() {
+        // Small smoke oracle (the heavy boundary/property suite lives in
+        // tests/kernel_oracle.rs): pack + pair_tile of every kernel must
+        // reproduce the naive i64 dot of the stored digits exactly.
+        let mut rng = Rng::new(77);
+        for (m, k, n, s) in [(1usize, 1usize, 1usize, 2usize), (3, 7, 5, 3), (9, 33, 12, 4)] {
+            let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+            let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+            for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+                let asl = slice_a(&a, s, enc);
+                let bsl = slice_b(&b, s, enc);
+                for kern in available_kernels() {
+                    for t in 0..s {
+                        for u in 0..s {
+                            let mut apack = vec![0u8; kern.a_slice_bytes(m, k)];
+                            let mut bpack = vec![0u8; kern.b_slice_bytes(n, k)];
+                            kern.pack_a_slice(&asl, t, 0, m, &mut apack);
+                            kern.pack_b_slice(&bsl, u, 0, n, &mut bpack);
+                            let mut out = vec![0i64; m * n];
+                            kern.pair_tile(&apack, &bpack, m, n, k, &mut out);
+                            for i in 0..m {
+                                for j in 0..n {
+                                    let mut want = 0i64;
+                                    for l in 0..k {
+                                        want += asl.slice_row(t, i)[l] as i64
+                                            * bsl.slice_row(u, j)[l] as i64;
+                                    }
+                                    assert_eq!(
+                                        out[i * n + j],
+                                        want,
+                                        "{:?} ({m},{k},{n}) {enc:?} t={t} u={u} i={i} j={j}",
+                                        kern.id()
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! The scalar reference microkernel — the oracle every SIMD kernel must
+//! match bit for bit.
+//!
+//! [`tile_unpacked`] is the original 2x4 register-blocked loop nest of
+//! `slice_pair_gemm_tile`, extracted so it can run either directly on the
+//! slice tensors (the dispatch fast path when the scalar kernel is
+//! selected — no packing copy) or on packed plain-row panels through the
+//! [`SliceKernel`] interface (so the packed-panel plumbing itself is
+//! covered by the same oracle). Both call the identical arithmetic:
+//! exact i32 accumulation chains (valid for `k <= K_CHUNK`), widened to
+//! the caller's i64 tile buffer.
+
+use super::{KernelId, SliceKernel};
+use crate::ozaki::slicing::SlicedMatrix;
+
+/// Reinterpret a byte panel as the i8 digits it stores (bit patterns are
+/// preserved by packing; see [`ScalarKernel::pack_a_slice`]).
+#[inline]
+fn as_i8(b: &[u8]) -> &[i8] {
+    // SAFETY: i8 and u8 have identical size/alignment and every bit
+    // pattern is valid for both.
+    unsafe { std::slice::from_raw_parts(b.as_ptr() as *const i8, b.len()) }
+}
+
+/// `out[i*cols + j] += sum_l at[i*k + l] * bu[j*k + l]` — the scalar
+/// slice-pair tile GEMM on two contiguous row-major digit blocks (`at` is
+/// `rows x k`, `bu` is `cols x k`; B slices are stored transposed, so both
+/// operands walk k contiguously). Row-major x row-major(transposed) dot
+/// kernel, 2x4 register blocked (8 independent i32 accumulator chains for
+/// the auto-vectorizer). Exact for `k <= K_CHUNK`.
+pub fn tile_unpacked(at: &[i8], bu: &[i8], rows: usize, cols: usize, k: usize, out: &mut [i64]) {
+    debug_assert!(at.len() >= rows * k);
+    debug_assert!(bu.len() >= cols * k);
+    debug_assert_eq!(out.len(), rows * cols);
+    let n = cols;
+    let mut i = 0;
+    while i + 2 <= rows {
+        let a0 = &at[i * k..(i + 1) * k];
+        let a1 = &at[(i + 1) * k..(i + 2) * k];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &bu[j * k..(j + 1) * k];
+            let b1 = &bu[(j + 1) * k..(j + 2) * k];
+            let b2 = &bu[(j + 2) * k..(j + 3) * k];
+            let b3 = &bu[(j + 3) * k..(j + 4) * k];
+            let mut c0 = [0i32; 4];
+            let mut c1 = [0i32; 4];
+            for l in 0..k {
+                let (x0, x1) = (a0[l] as i32, a1[l] as i32);
+                let y = [b0[l] as i32, b1[l] as i32, b2[l] as i32, b3[l] as i32];
+                for r in 0..4 {
+                    c0[r] += x0 * y[r];
+                    c1[r] += x1 * y[r];
+                }
+            }
+            for r in 0..4 {
+                out[i * n + j + r] += c0[r] as i64;
+                out[(i + 1) * n + j + r] += c1[r] as i64;
+            }
+            j += 4;
+        }
+        while j < n {
+            let b0 = &bu[j * k..(j + 1) * k];
+            let (mut c00, mut c10) = (0i32, 0i32);
+            for l in 0..k {
+                c00 += a0[l] as i32 * b0[l] as i32;
+                c10 += a1[l] as i32 * b0[l] as i32;
+            }
+            out[i * n + j] += c00 as i64;
+            out[(i + 1) * n + j] += c10 as i64;
+            j += 1;
+        }
+        i += 2;
+    }
+    if i < rows {
+        let a0 = &at[i * k..(i + 1) * k];
+        for j in 0..n {
+            let b0 = &bu[j * k..(j + 1) * k];
+            let mut c = 0i32;
+            for l in 0..k {
+                c += a0[l] as i32 * b0[l] as i32;
+            }
+            out[i * n + j] += c as i64;
+        }
+    }
+}
+
+/// The reference kernel: plain row-major panels (packing is a straight
+/// copy of the slice rows, no interleave, no padding) and the scalar loop
+/// nest above.
+pub struct ScalarKernel;
+
+impl SliceKernel for ScalarKernel {
+    fn id(&self) -> KernelId {
+        KernelId::Scalar
+    }
+
+    fn a_slice_bytes(&self, rows: usize, k: usize) -> usize {
+        rows * k
+    }
+
+    fn b_slice_bytes(&self, cols: usize, k: usize) -> usize {
+        cols * k
+    }
+
+    fn pack_a_slice(&self, a: &SlicedMatrix, t: usize, row0: usize, rows: usize, dst: &mut [u8]) {
+        let src = a.slice_rows(t, row0, rows);
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s as u8;
+        }
+    }
+
+    fn pack_b_slice(&self, b: &SlicedMatrix, u: usize, col0: usize, cols: usize, dst: &mut [u8]) {
+        let src = b.slice_rows(u, col0, cols);
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s as u8;
+        }
+    }
+
+    fn pair_tile(
+        &self,
+        apack: &[u8],
+        bpack: &[u8],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        out: &mut [i64],
+    ) {
+        tile_unpacked(as_i8(apack), as_i8(bpack), rows, cols, k, out);
+    }
+}

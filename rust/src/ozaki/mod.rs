@@ -9,6 +9,11 @@
 //!   level-major reference (the property-test oracle) and the tile-major
 //!   **fused tile engine** (the hot path — cache-resident tiles, pooled
 //!   workspaces, one parallel region, bitwise identical).
+//! * [`kernel`] — the runtime-dispatched slice-pair **microkernels**
+//!   (the CPU tensor-core analog): a packed-panel [`SliceKernel`] seam
+//!   with the scalar reference and AVX2 `maddubs`/`pmaddwd`
+//!   implementations, all exact-integer and therefore bitwise
+//!   interchangeable; `ADP_FORCE_SCALAR=1` pins the reference.
 //! * [`schedule`] — the precomputed per-level slice-pair schedule shared
 //!   by both drivers and the grouped pipeline.
 //! * [`recompose`] — scaled recombination of slice products back to FP64.
@@ -20,6 +25,7 @@
 
 pub mod batched;
 pub mod gemm;
+pub mod kernel;
 pub mod recompose;
 pub mod schedule;
 pub mod slicing;
@@ -30,6 +36,7 @@ pub use gemm::{
     emulated_gemm_with_breakdown_on, fused_gemm, fused_gemm_on, slice_pair_gemm,
     slice_pair_gemm_rows, slice_pair_gemm_tile, EmulationBreakdown, FUSED_MC, FUSED_NC,
 };
+pub use kernel::{KernelId, SliceKernel};
 pub use schedule::PairSchedule;
 pub use slicing::{slice_a, slice_b, SlicedMatrix};
 

@@ -61,20 +61,66 @@ impl SlicedMatrix {
     }
 }
 
+/// Row accessor the decomposition loop walks: A is sliced row-major as
+/// stored; B is sliced as B^T **without materializing the transpose** —
+/// the strided column walk happens inside the accessor instead of an
+/// O(k·n) allocate-and-copy per decomposition on the hot path.
+trait SliceSource {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// Element (i, l) of the logical row-major source.
+    fn at(&self, i: usize, l: usize) -> f64;
+}
+
+/// A as-is: logical row i is the stored row i.
+struct RowMajor<'a>(&'a Matrix);
+
+impl SliceSource for RowMajor<'_> {
+    fn rows(&self) -> usize {
+        self.0.rows
+    }
+    fn cols(&self) -> usize {
+        self.0.cols
+    }
+    #[inline(always)]
+    fn at(&self, i: usize, l: usize) -> f64 {
+        self.0.data[i * self.0.cols + l]
+    }
+}
+
+/// B^T view: logical row i is stored column i of B, read with stride
+/// `b.cols`.
+struct Transposed<'a>(&'a Matrix);
+
+impl SliceSource for Transposed<'_> {
+    fn rows(&self) -> usize {
+        self.0.cols
+    }
+    fn cols(&self) -> usize {
+        self.0.rows
+    }
+    #[inline(always)]
+    fn at(&self, i: usize, l: usize) -> f64 {
+        self.0.data[l * self.0.cols + i]
+    }
+}
+
 /// Decompose rows of A. `a` is (m, k); result tensor is (s, m, k) with
 /// per-row scaling.
 pub fn slice_a(a: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatrix {
-    slice_rows_impl(a, s, encoding)
+    slice_rows_impl(&RowMajor(a), s, encoding)
 }
 
 /// Decompose columns of B. `b` is (k, n); result tensor is (s, n, k) —
-/// i.e. slices of B^T with per-column (of B) scaling.
+/// i.e. slices of B^T with per-column (of B) scaling. The transpose is
+/// fused into the element walk (see [`SliceSource`]); digits and sigma
+/// are identical to slicing a materialized `b.transpose()`.
 pub fn slice_b(b: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatrix {
-    slice_rows_impl(&b.transpose(), s, encoding)
+    slice_rows_impl(&Transposed(b), s, encoding)
 }
 
-fn slice_rows_impl(a: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatrix {
-    let (m, k) = (a.rows, a.cols);
+fn slice_rows_impl<S: SliceSource>(a: &S, s: usize, encoding: SliceEncoding) -> SlicedMatrix {
+    let (m, k) = (a.rows(), a.cols());
     let rb = encoding.radix_bits();
     let mut sigma = vec![0i32; m];
     let mut data = vec![0i8; s * m * k];
@@ -90,8 +136,8 @@ fn slice_rows_impl(a: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatri
     for i in 0..m {
         // Row max exponent (frexp convention, zeros excluded).
         let mut emax = ZERO_EXP;
-        for &x in a.row(i) {
-            let e = frexp_exponent(x);
+        for l in 0..k {
+            let e = frexp_exponent(a.at(i, l));
             if e > emax {
                 emax = e;
             }
@@ -106,13 +152,12 @@ fn slice_rows_impl(a: &Matrix, s: usize, encoding: SliceEncoding) -> SlicedMatri
         let h = sig.div_euclid(2);
         let (f1, f2) = (ldexp(1.0, h), ldexp(1.0, sig - h));
 
-        let row = a.row(i);
         // Fast path: pure-integer bit-field extraction in u128 (no serial
         // FP dependency chain). Valid while the window's top bit position
         // rb*(s-1)+6 fits u128; beyond that (s > 16) use the float path.
         let int_path = rb * (s as i32 - 1) + 7 < 128;
         for j in 0..k {
-            let x = row[j];
+            let x = a.at(i, j);
             if x == 0.0 {
                 continue; // digits stay zero
             }
@@ -344,6 +389,32 @@ mod tests {
                             "t={t} row0={row0} rows={rows} i={i}"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_b_matches_transposed_slice_a() {
+        // The fused-transpose satellite: slicing B through the strided
+        // view must produce the identical tensor (digits, sigma, shape)
+        // as slicing a materialized B^T — including wide exponent spans
+        // and zeros, where the per-row emax scan matters most.
+        let mut rng = Rng::new(26);
+        for (kk, n) in [(1usize, 1usize), (7, 9), (16, 5)] {
+            let mut b = Matrix::uniform(kk, n, -3.0, 3.0, &mut rng);
+            if kk > 2 && n > 2 {
+                *b.at_mut(1, 1) = 0.0;
+                *b.at_mut(2, 0) *= 2f64.powi(200);
+                *b.at_mut(0, 2) *= 2f64.powi(-180);
+            }
+            for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+                for s in [2usize, 5, 8] {
+                    let sb = slice_b(&b, s, enc);
+                    let sa = slice_a(&b.transpose(), s, enc);
+                    assert_eq!((sb.rows, sb.cols, sb.s), (n, kk, s));
+                    assert_eq!(sb.sigma, sa.sigma, "k={kk} n={n} {enc:?} s={s}");
+                    assert_eq!(sb.data, sa.data, "k={kk} n={n} {enc:?} s={s}");
                 }
             }
         }

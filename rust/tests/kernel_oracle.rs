@@ -1,0 +1,317 @@
+//! Boundary-value and property oracle suite for the `ozaki::kernel`
+//! microkernel layer: every kernel runnable on this machine (scalar
+//! reference, AVX2 maddubs, AVX2 pmaddwd) must reproduce the naive i64
+//! digit dot product **exactly** — on digit extremes sitting right at
+//! the i16 pairwise and i32 accumulator bounds, on odd/tiny shapes that
+//! don't fill a register block, on both encodings, and through the
+//! fused engine end to end.
+
+use adp_dgemm::backend::WorkspacePool;
+use adp_dgemm::linalg::Matrix;
+use adp_dgemm::ozaki::gemm::{fused_tile_gemm_serial_on, slice_pair_gemm_tile_on, K_CHUNK};
+use adp_dgemm::ozaki::kernel::{self, KernelId, ScalarKernel, SliceKernel};
+use adp_dgemm::ozaki::{slice_a, slice_b, PairSchedule, SliceEncoding, SlicedMatrix};
+use adp_dgemm::util::{prop, Rng};
+
+/// Naive i64 oracle straight off the slice tensors — independent of
+/// every kernel, including the scalar one.
+fn naive_pair(a: &SlicedMatrix, t: usize, b: &SlicedMatrix, u: usize) -> Vec<i64> {
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let mut out = vec![0i64; m * n];
+    for i in 0..m {
+        let ar = a.slice_row(t, i);
+        for j in 0..n {
+            let br = b.slice_row(u, j);
+            let mut acc = 0i64;
+            for l in 0..k {
+                acc += ar[l] as i64 * br[l] as i64;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Run one pair on `kern` via its own pack + compute path.
+fn kernel_pair(
+    kern: &dyn SliceKernel,
+    a: &SlicedMatrix,
+    t: usize,
+    b: &SlicedMatrix,
+    u: usize,
+) -> Vec<i64> {
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let mut apack = vec![0u8; kern.a_slice_bytes(m, k)];
+    let mut bpack = vec![0u8; kern.b_slice_bytes(n, k)];
+    kern.pack_a_slice(a, t, 0, m, &mut apack);
+    kern.pack_b_slice(b, u, 0, n, &mut bpack);
+    let mut out = vec![0i64; m * n];
+    kern.pair_tile(&apack, &bpack, m, n, k, &mut out);
+    out
+}
+
+/// A hand-built slice tensor with digits from `f(slice, row, col)`.
+fn digits(
+    s: usize,
+    rows: usize,
+    cols: usize,
+    enc: SliceEncoding,
+    f: impl Fn(usize, usize, usize) -> i8,
+) -> SlicedMatrix {
+    let mut data = vec![0i8; s * rows * cols];
+    for t in 0..s {
+        for i in 0..rows {
+            for j in 0..cols {
+                data[t * rows * cols + i * cols + j] = f(t, i, j);
+            }
+        }
+    }
+    SlicedMatrix { s, rows, cols, sigma: vec![0; rows], data, encoding: enc }
+}
+
+fn check_all_kernels(a: &SlicedMatrix, b: &SlicedMatrix, what: &str) {
+    for kern in kernel::available_kernels() {
+        for t in 0..a.s {
+            for u in 0..b.s {
+                let want = naive_pair(a, t, b, u);
+                let got = kernel_pair(*kern, a, t, b, u);
+                assert_eq!(got, want, "{what}: kernel {:?} t={t} u={u}", kern.id());
+            }
+        }
+    }
+}
+
+#[test]
+fn digit_extremes_exercise_the_i16_pairwise_bounds() {
+    // The saturation-frontier cases of the maddubs proof: unsigned-
+    // encoding extremes (leading ±64, sub-leading 127 / -128) paired so
+    // adjacent products push the i16 intermediate to its limits —
+    // including the exact i16::MIN case (-128 digit against -128 digit
+    // on the negative plane: 2 * 128 * -128 = -32768).
+    let enc = SliceEncoding::Unsigned;
+    let k = 9; // odd: pairing groups of 2 and 4 both see a ragged tail
+    let cases: [(&str, i8, i8); 6] = [
+        ("max-pos x max-pos", 127, 127),
+        ("min-neg x min-neg", -128, -128),
+        ("min-neg x max-pos", -128, 127),
+        ("leading-bound x min-neg", 64, -128),
+        ("neg-leading x max-pos", -64, 127),
+        ("mixed-ones", 1, -1),
+    ];
+    for (what, da, db) in cases {
+        let a = digits(2, 2, k, enc, |t, i, j| {
+            if t == 0 {
+                64
+            } else {
+                da.wrapping_add((i + j) as i8 % 2)
+            }
+        });
+        let b = digits(2, 3, k, enc, |t, _, j| {
+            if t == 0 {
+                -64
+            } else if j % 2 == 0 {
+                db
+            } else {
+                db.wrapping_neg()
+            }
+        });
+        check_all_kernels(&a, &b, what);
+    }
+    // Exact i16::MIN on the negative plane: adjacent (-128, -128) A
+    // digits against (-128, -128) B digits give a pair sum of
+    // 2 * 128 * (-128) = -32768 — representable, must not clamp.
+    let a = digits(1, 1, 8, enc, |_, _, _| -128);
+    let b = digits(1, 1, 8, enc, |_, _, _| -128);
+    check_all_kernels(&a, &b, "exact i16::MIN pair sum");
+    // +32512 frontier: (-128, -128) against (127, 127) maximizes the
+    // negative plane's positive pair sum (2 * 128 * 127).
+    let b = digits(1, 1, 8, enc, |_, _, _| 127);
+    check_all_kernels(&a, &b, "positive pairwise frontier 32512");
+    // Alternating-sign worst case: successive pair sums swing between
+    // +32512 and -32512, so a signed/unsigned operand mix-up or a wrong
+    // saturation would surface here.
+    let a = digits(1, 1, 8, enc, |_, _, j| if j % 4 < 2 { -128 } else { 127 });
+    let b = digits(1, 1, 8, enc, |_, _, j| if j % 4 < 2 { 127 } else { -128 });
+    check_all_kernels(&a, &b, "alternating-sign pairwise frontier");
+}
+
+#[test]
+fn signed_encoding_extremes() {
+    let enc = SliceEncoding::Signed;
+    let a = digits(3, 3, 7, enc, |t, i, j| [127i8, -127, 64, -64, 1, 0][(t + i + j) % 6]);
+    let b = digits(3, 4, 7, enc, |t, i, j| [-127i8, 127, -64, 63, -1, 0][(2 * t + i + 2 * j) % 6]);
+    check_all_kernels(&a, &b, "signed extremes");
+}
+
+#[test]
+fn tiny_and_odd_shapes_all_kernels() {
+    // 1xKx1, single-row / single-column, and row/col counts that are not
+    // multiples of the register blocks (2x4 scalar, 8-wide SIMD).
+    let mut rng = Rng::new(500);
+    for (m, k, n) in [
+        (1usize, 1usize, 1usize),
+        (1, 17, 1),
+        (1, 4, 9),
+        (7, 3, 1),
+        (3, 8, 5),
+        (9, 31, 7),
+        (2, 33, 15),
+        (13, 40, 17),
+    ] {
+        let a = Matrix::uniform(m, k, -3.0, 3.0, &mut rng);
+        let b = Matrix::uniform(k, n, -3.0, 3.0, &mut rng);
+        for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+            for s in [2usize, 4] {
+                let asl = slice_a(&a, s, enc);
+                let bsl = slice_b(&b, s, enc);
+                check_all_kernels(&asl, &bsl, &format!("({m},{k},{n}) {enc:?} s={s}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn i32_accumulator_edge_at_full_k_chunk() {
+    // k = K_CHUNK = 2^17 - 1 with worst-magnitude digits drives the
+    // per-lane i32 accumulators to within 2^14 of overflow — the exact
+    // frontier the kernel proofs (and the scalar K_CHUNK cap) rely on.
+    let k = K_CHUNK;
+    let enc = SliceEncoding::Unsigned;
+    for (da, db) in [(-128i8, -128i8), (-128, 127), (127, 127), (127, -128)] {
+        let a = digits(1, 1, k, enc, |_, _, _| da);
+        let b = digits(1, 1, k, enc, |_, _, _| db);
+        let want = (k as i64) * (da as i64) * (db as i64);
+        for kern in kernel::available_kernels() {
+            let got = kernel_pair(*kern, &a, 0, &b, 0);
+            assert_eq!(got, vec![want], "kernel {:?} digits ({da},{db})", kern.id());
+        }
+    }
+}
+
+#[test]
+fn sub_tile_ranges_match_the_dispatch_entry_point() {
+    // The ranged entry point (`slice_pair_gemm_tile_on`) with nonzero
+    // row0/col0 offsets, per kernel, against the naive oracle restricted
+    // to the same window.
+    let mut rng = Rng::new(501);
+    let (m, k, n, s) = (11usize, 23usize, 10usize, 3usize);
+    let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+    let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+    for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+        let asl = slice_a(&a, s, enc);
+        let bsl = slice_b(&b, s, enc);
+        let full = naive_pair(&asl, 1, &bsl, 2);
+        for kern in kernel::available_kernels() {
+            for (row0, rows, col0, cols) in
+                [(0usize, 2usize, 0usize, 3usize), (3, 5, 2, 7), (9, 2, 8, 2), (0, 11, 0, 10)]
+            {
+                let mut out = vec![0i64; rows * cols];
+                slice_pair_gemm_tile_on(*kern, &asl, 1, &bsl, 2, row0, rows, col0, cols, &mut out);
+                for i in 0..rows {
+                    for j in 0..cols {
+                        assert_eq!(
+                            out[i * cols + j],
+                            full[(row0 + i) * n + col0 + j],
+                            "{:?} {enc:?} window ({row0},{col0})+({rows},{cols}) at ({i},{j})",
+                            kern.id()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_engine_is_bitwise_identical_across_kernels() {
+    // End-to-end: the fused tile engine on every kernel must produce the
+    // bit-identical FP64 result the scalar reference produces — shapes
+    // straddling the FUSED tile boundaries, both encodings.
+    let pool = WorkspacePool::new();
+    let mut rng = Rng::new(502);
+    for (m, k, n, s) in [(1usize, 1usize, 1usize, 2usize), (65, 20, 63, 5), (40, 9, 130, 7)] {
+        let a = Matrix::uniform(m, k, -3.0, 3.0, &mut rng);
+        let b = Matrix::uniform(k, n, -3.0, 3.0, &mut rng);
+        for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+            let asl = slice_a(&a, s, enc);
+            let bsl = slice_b(&b, s, enc);
+            let schedule = PairSchedule::get(s, enc.radix_bits());
+            let mut c_ref = Matrix::zeros(m, n);
+            fused_tile_gemm_serial_on(&ScalarKernel, &asl, &bsl, &schedule, &pool, &mut c_ref);
+            for kern in kernel::available_kernels() {
+                let mut c = Matrix::zeros(m, n);
+                fused_tile_gemm_serial_on(*kern, &asl, &bsl, &schedule, &pool, &mut c);
+                for (x, y) in c.data.iter().zip(&c_ref.data) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "fused {:?} vs scalar ({m},{k},{n}) {enc:?}: {x} vs {y}",
+                        kern.id()
+                    );
+                }
+            }
+        }
+    }
+    let st = pool.stats();
+    assert!(st.panel_packs > 0 && st.panel_reuses > 0, "fused runs must pack and reuse: {st:?}");
+}
+
+#[test]
+fn prop_random_digit_tensors_match_across_kernels() {
+    // Fully random digit tensors (not reachable by slicing — every i8
+    // value in every slice) still must agree: the kernels' exactness
+    // argument is digit-range independent for pmaddwd and range-checked
+    // for maddubs via the pos/neg split.
+    prop::check("kernels == naive on random digits", 24, |rng| {
+        let m = rng.int(1, 12) as usize;
+        let n = rng.int(1, 12) as usize;
+        let k = rng.int(1, 70) as usize;
+        let s = rng.int(1, 3) as usize;
+        let enc =
+            if rng.f64() < 0.5 { SliceEncoding::Unsigned } else { SliceEncoding::Signed };
+        let mut a = digits(s, m, k, enc, |_, _, _| 0);
+        let mut b = digits(s, n, k, enc, |_, _, _| 0);
+        for d in a.data.iter_mut() {
+            *d = rng.int(-128, 127) as i8;
+        }
+        for d in b.data.iter_mut() {
+            *d = rng.int(-128, 127) as i8;
+        }
+        for kern in kernel::available_kernels() {
+            for t in 0..s {
+                for u in 0..s {
+                    let want = naive_pair(&a, t, &b, u);
+                    let got = kernel_pair(*kern, &a, t, &b, u);
+                    if got != want {
+                        return Err(format!(
+                            "kernel {:?} ({m},{k},{n}) {enc:?} t={t} u={u}",
+                            kern.id()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatch_honors_force_scalar_and_stays_in_the_available_set() {
+    // Under `ADP_FORCE_SCALAR=1` (the CI fallback job) the dispatch must
+    // pin the scalar kernel for both encodings; otherwise it must pick a
+    // kernel this machine can actually run.
+    let forced = matches!(
+        std::env::var("ADP_FORCE_SCALAR").ok().as_deref(),
+        Some("1") | Some("true") | Some("on")
+    );
+    for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+        let id = kernel::active_id(enc);
+        if forced {
+            assert_eq!(id, KernelId::Scalar, "ADP_FORCE_SCALAR must pin the scalar kernel");
+        }
+        assert!(
+            kernel::available_kernels().iter().any(|k| k.id() == id),
+            "dispatched {id:?} not runnable here"
+        );
+    }
+}
