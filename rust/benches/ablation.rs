@@ -5,7 +5,12 @@
 //!   (b) ESC coarsening block size (§4): estimate tightness vs cost;
 //!   (c) fused tile engine vs the level-major reference schedule (same
 //!       bits out, one output pass instead of s level sweeps);
-//!   (d) grouped pipeline slice-cache amortization (the --coalesce path).
+//!   (d) grouped pipeline slice-cache amortization (the --coalesce path);
+//!   (f) scheme families at a matched window: native FP64 vs Ozaki-I
+//!       slice pairs vs Ozaki-II/CRT — launches, time, accuracy.
+//!
+//! Section (f) also emits `BENCH_ablation.json` (machine-readable arms)
+//! next to the working directory so CI can archive the comparison.
 
 use adp_dgemm::backend::{SerialBackend, WorkspacePool};
 use adp_dgemm::esc::{coarse_esc_gemm, exact_esc_gemm};
@@ -14,8 +19,8 @@ use adp_dgemm::linalg::Matrix;
 use adp_dgemm::ozaki::gemm::fused_tile_gemm_serial_on;
 use adp_dgemm::ozaki::kernel;
 use adp_dgemm::ozaki::{
-    emulated_gemm, fused_gemm_on, gemm_grouped, slice_a, slice_b, GroupedProblem, OzakiConfig,
-    PairSchedule, SliceCache, SliceEncoding,
+    crt_gemm_on, emulated_gemm, fused_gemm_on, gemm_grouped, slice_a, slice_b, CrtConfig,
+    GroupedProblem, OzakiConfig, PairSchedule, SchemeKind, SliceCache, SliceEncoding,
 };
 use adp_dgemm::util::{benchkit, Rng};
 
@@ -110,13 +115,17 @@ fn main() {
     // (a warm service cache only improves on this).
     let st_grp = benchkit::bench(1, 3, || {
         let cache = SliceCache::new(2 * group + 2);
-        let probs: Vec<GroupedProblem<'_>> =
-            bs.iter().map(|b| GroupedProblem { a: &a, b, cfg: cfg7 }).collect();
+        let probs: Vec<GroupedProblem<'_>> = bs
+            .iter()
+            .map(|b| GroupedProblem { a: &a, b, cfg: cfg7, scheme: SchemeKind::SlicePair })
+            .collect();
         std::hint::black_box(gemm_grouped(&probs, &cache, &SerialBackend, &wpool))
     });
     let cache = SliceCache::new(2 * group + 2);
-    let probs: Vec<GroupedProblem<'_>> =
-        bs.iter().map(|b| GroupedProblem { a: &a, b, cfg: cfg7 }).collect();
+    let probs: Vec<GroupedProblem<'_>> = bs
+        .iter()
+        .map(|b| GroupedProblem { a: &a, b, cfg: cfg7, scheme: SchemeKind::SlicePair })
+        .collect();
     let (_, gstats) = gemm_grouped(&probs, &cache, &SerialBackend, &wpool);
     println!(
         "per-request {:.1} ms vs grouped {:.1} ms ({:.2}x); decompositions {} vs {} (hits {})",
@@ -167,4 +176,45 @@ fn main() {
         ws.panel_reuses
     );
     println!("# ADP_FORCE_SCALAR=1 pins the scalar reference; RUSTFLAGS=-Ctarget-cpu=native helps the packers");
+
+    println!("\n# (f) scheme families at a matched 7-slice window (n={n}, serial)");
+    let ccfg = CrtConfig::for_window(7, n).expect("7-slice window fits the modulus basis");
+    let native = || adp_dgemm::linalg::gemm::gemm(&a, &b);
+    let spair = || fused_gemm_on(&a, &b, &cfg7, &SerialBackend, &wpool);
+    let crt = || crt_gemm_on(&a, &b, &ccfg, &SerialBackend, &wpool);
+    let mut arms: Vec<(&str, usize, f64, f64)> = Vec::new();
+    {
+        let st = benchkit::bench(1, 3, native);
+        arms.push(("native-fp64", 1, st.median_s * 1e3, measure(&a, &b, &native()).max_comp_eps));
+        let st = benchkit::bench(1, 3, spair);
+        let eps = measure(&a, &b, &spair()).max_comp_eps;
+        arms.push(("slice-pair", cfg7.pair_count(), st.median_s * 1e3, eps));
+        let st = benchkit::bench(1, 3, crt);
+        let eps = measure(&a, &b, &crt()).max_comp_eps;
+        arms.push(("crt", ccfg.gemm_count(), st.median_s * 1e3, eps));
+    }
+    println!("{:>12} {:>8} {:>12} {:>12}", "scheme", "gemms", "time_ms", "maxerr_eps");
+    for (name, gemms, ms, eps) in &arms {
+        println!("{name:>12} {gemms:>8} {ms:>12.1} {eps:>12.3}");
+    }
+    println!(
+        "# CRT runs {} integer GEMMs vs {} slice pairs for the same 54-bit window (linear vs quadratic)",
+        ccfg.gemm_count(),
+        cfg7.pair_count()
+    );
+
+    // Machine-readable copy for CI artifacts. The repo is dependency-free,
+    // so the JSON is assembled by hand.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"n\": {n},\n  \"window_slices\": 7,\n  \"arms\": [\n"));
+    for (i, (name, gemms, ms, eps)) in arms.iter().enumerate() {
+        let sep = if i + 1 < arms.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"scheme\": \"{name}\", \"integer_gemms\": {gemms}, \
+             \"time_ms\": {ms:.3}, \"maxerr_eps\": {eps:.3}}}{sep}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_ablation.json", &json).expect("write BENCH_ablation.json");
+    println!("# wrote BENCH_ablation.json");
 }

@@ -19,7 +19,7 @@ use adp_dgemm::ozaki::gemm::slice_pair_gemm_tile_on;
 use adp_dgemm::ozaki::kernel::{self, ScalarKernel};
 use adp_dgemm::ozaki::{
     emulated_gemm_on, emulated_gemm_with_breakdown, fused_gemm_on, gemm_grouped, slice_a,
-    slice_b, slice_pair_gemm, GroupedProblem, OzakiConfig, SliceCache, SliceEncoding,
+    slice_b, slice_pair_gemm, GroupedProblem, OzakiConfig, SchemeKind, SliceCache, SliceEncoding,
 };
 use adp_dgemm::runtime::RuntimeHandle;
 use adp_dgemm::util::{benchkit, Rng};
@@ -202,8 +202,10 @@ fn main() {
         let st_grp = benchkit::bench_budget(2.0, || {
             // cold cache per iteration: amortization within the group only
             let cache = SliceCache::new(2 * group + 2);
-            let probs: Vec<GroupedProblem<'_>> =
-                bs.iter().map(|b| GroupedProblem { a: &a, b, cfg }).collect();
+            let probs: Vec<GroupedProblem<'_>> = bs
+                .iter()
+                .map(|b| GroupedProblem { a: &a, b, cfg, scheme: SchemeKind::SlicePair })
+                .collect();
             std::hint::black_box(gemm_grouped(&probs, &cache, &SerialBackend, &gpool))
         });
         benchkit::report(

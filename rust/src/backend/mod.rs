@@ -46,7 +46,7 @@ pub mod workspace;
 use std::sync::Arc;
 
 use crate::linalg::Matrix;
-use crate::ozaki::{PairSchedule, SlicedMatrix};
+use crate::ozaki::{CrtBasis, PairSchedule, SlicedMatrix};
 
 pub use parallel::ParallelBackend;
 pub use pool::ThreadPool;
@@ -141,6 +141,26 @@ pub trait ComputeBackend: Send + Sync {
         c: &mut Matrix,
     ) {
         crate::ozaki::gemm::fused_tile_gemm_serial(a, b, schedule, workspaces, c);
+    }
+
+    /// CRT-scheme counterpart of [`ComputeBackend::fused_tile_gemm`]:
+    /// `a`/`b` hold centered residue planes (one per basis modulus), and
+    /// each output tile runs one integer GEMM per modulus followed by the
+    /// balanced-Garner reconstruction and the shared sigma descaling. The
+    /// default is the serial reference order; parallel backends
+    /// work-steal row bands exactly as for the slice-pair engine. Every
+    /// step is exact integer arithmetic or a per-element FP sequence
+    /// independent of the partition, so all implementations are bitwise
+    /// identical.
+    fn crt_tile_gemm(
+        &self,
+        a: &SlicedMatrix,
+        b: &SlicedMatrix,
+        basis: &CrtBasis,
+        workspaces: &WorkspacePool,
+        c: &mut Matrix,
+    ) {
+        crate::ozaki::crt::crt_tile_gemm_serial(a, b, basis, workspaces, c);
     }
 
     /// One MC×NC tile of the blocked FP64 GEMM: `tile += A[ic.., :] *

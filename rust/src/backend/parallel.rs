@@ -35,12 +35,13 @@ use super::workspace::WorkspacePool;
 use super::{ComputeBackend, SliceBatch, PACK_SCRATCH_LEN};
 use crate::linalg::gemm::{apply_beta, load_tile, store_tile, tile_grid};
 use crate::linalg::Matrix;
+use crate::ozaki::crt::{crt_band, crt_tile_gemm_serial};
 use crate::ozaki::gemm::{
     fused_band, fused_tile_gemm_serial, slice_pair_gemm_rows, slice_pairs_rows_on_packed,
     FusedTally, PackedBSlices, FUSED_MC, FUSED_WS_ELEMS,
 };
 use crate::ozaki::kernel::{self, KernelId};
-use crate::ozaki::{PairSchedule, SlicedMatrix};
+use crate::ozaki::{CrtBasis, PairSchedule, SlicedMatrix};
 
 /// Row-chunks per pool thread when splitting a slice-pair batch: >1 so the
 /// dynamic queue can balance uneven chunk costs.
@@ -258,6 +259,53 @@ impl ComputeBackend for ParallelBackend {
                 let next = queue.lock().unwrap().pop();
                 let Some((row0, band)) = next else { break };
                 local.merge(fused_band(kern, a, b, schedule, row0, &mut ws, band));
+            }
+            tally.lock().unwrap().merge(local);
+        });
+        let t = tally.into_inner().unwrap();
+        workspaces.record_tiles(t.tiles);
+        workspaces.record_panels(t.packs, t.reuses);
+        workspaces.record_pack_growth(t.pack_growths);
+    }
+
+    fn crt_tile_gemm(
+        &self,
+        a: &SlicedMatrix,
+        b: &SlicedMatrix,
+        basis: &CrtBasis,
+        workspaces: &WorkspacePool,
+        c: &mut Matrix,
+    ) {
+        let (m, n) = (a.rows, b.rows);
+        assert_eq!(c.rows, m, "output rows mismatch");
+        assert_eq!(c.cols, n, "output cols mismatch");
+        if m == 0 || n == 0 {
+            return;
+        }
+        if basis.len() * m * n * a.cols < self.cutoff_ops {
+            return crt_tile_gemm_serial(a, b, basis, workspaces, c);
+        }
+        // Same band schedule as `fused_tile_gemm`: disjoint row bands of C
+        // drain through one work-stealing queue, each thread owning one
+        // pooled workspace. Integer GEMMs, residue folds, and the
+        // per-element Garner/descale tail are all independent of the band
+        // partition, so any assignment is bitwise identical to serial.
+        let kern = kernel::active(a.encoding);
+        let band_rows = m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).clamp(2, FUSED_MC);
+        let mut bands: Vec<(usize, &mut [f64])> = Vec::new();
+        for (bi, band) in c.data.chunks_mut(band_rows * n).enumerate() {
+            bands.push((bi * band_rows, band));
+        }
+        let max_helpers = bands.len().saturating_sub(1);
+        let queue = Mutex::new(bands);
+        let tally = Mutex::new(FusedTally::default());
+        self.pool.run_n(max_helpers, || {
+            let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+            let mut local = FusedTally::default();
+            loop {
+                let next = queue.lock().unwrap().pop();
+                let Some((row0, band)) = next else { break };
+                local.merge(crt_band(kern, a, b, basis, row0, &mut ws, band));
             }
             tally.lock().unwrap().merge(local);
         });

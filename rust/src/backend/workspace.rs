@@ -37,6 +37,10 @@ pub struct Workspace {
     pub apack: Vec<u8>,
     /// Packed B-panel scratch (all slices of one fused column tile).
     pub bpack: Vec<u8>,
+    /// Centered residue planes of the CRT scheme (one `rows*cols` i32
+    /// plane per modulus of one fused tile). Empty until a CRT run sizes
+    /// it via [`Workspace::ensure_res`]; slice-pair runs never touch it.
+    pub rbuf: Vec<i32>,
 }
 
 impl Workspace {
@@ -51,6 +55,7 @@ impl Workspace {
             lo: vec![0.0; elems],
             apack: Vec::new(),
             bpack: Vec::new(),
+            rbuf: Vec::new(),
         }
     }
 
@@ -87,6 +92,17 @@ impl Workspace {
             grew = true;
         }
         grew
+    }
+
+    /// Grow the CRT residue-plane scratch to at least `elems` i32
+    /// entries. Returns whether a reallocation happened (same warm-run
+    /// contract as [`Workspace::ensure_pack`]).
+    pub fn ensure_res(&mut self, elems: usize) -> bool {
+        if self.rbuf.len() >= elems {
+            return false;
+        }
+        self.rbuf.resize(elems, 0);
+        true
     }
 }
 
@@ -390,5 +406,19 @@ mod tests {
         // of the same shape never grows again.
         let mut ws = pool.checkout(16);
         assert!(!ws.ensure_pack(100, 200), "warm pool must not regrow pack scratch");
+    }
+
+    #[test]
+    fn res_scratch_grows_once_then_persists_through_the_pool() {
+        let pool = WorkspacePool::new();
+        {
+            let mut ws = pool.checkout(16);
+            assert!(ws.ensure_res(500), "first sizing must grow");
+            assert!(!ws.ensure_res(500), "repeat sizing is a no-op");
+            assert!(!ws.ensure_res(100), "smaller requests reuse the buffer");
+            assert!(ws.rbuf.len() >= 500);
+        }
+        let mut ws = pool.checkout(16);
+        assert!(!ws.ensure_res(500), "warm pool must not regrow residue scratch");
     }
 }

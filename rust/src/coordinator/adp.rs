@@ -8,7 +8,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::heuristic::{HeuristicInput, SelectionHeuristic};
+use super::heuristic::{EmulationChoice, HeuristicInput, SelectionHeuristic};
 use super::metrics::Metrics;
 use super::plan::EscPlanCache;
 use super::scan::scan_pair;
@@ -16,7 +16,10 @@ use crate::backend::{BackendSpec, ComputeBackend, WorkspacePool};
 use crate::esc::coarse::{coarse_esc_gemm, DEFAULT_BLOCK};
 use crate::linalg::Matrix;
 use crate::ozaki::batched::{gemm_grouped, GroupedProblem, SliceCache};
-use crate::ozaki::{fused_gemm_on, OzakiConfig, SliceEncoding};
+use crate::ozaki::{
+    fused_gemm_on, CrtConfig, CrtScheme, DecompositionScheme, OzakiConfig, SchemeKind,
+    SliceEncoding,
+};
 use crate::runtime::{ArtifactKind, RuntimeHandle};
 
 /// Why ADP dispatched the way it did (Fig 8 / Fig 7-right inputs).
@@ -26,6 +29,9 @@ pub enum GemmDecision {
     EmulatedArtifact { n: usize, slices: usize },
     /// Emulated via the native Rust pipeline (unregistered shape).
     EmulatedNative { slices: usize },
+    /// Emulated via the Ozaki-II/CRT scheme family: `moduli` integer
+    /// GEMMs at the window an `slices`-slice configuration would use.
+    EmulatedCrt { slices: usize, moduli: usize },
     /// NaN detected in the inputs (§5.1).
     FallbackNan,
     /// Inf detected in the inputs (§5.1).
@@ -40,14 +46,17 @@ impl GemmDecision {
     pub fn is_emulated(&self) -> bool {
         matches!(
             self,
-            GemmDecision::EmulatedArtifact { .. } | GemmDecision::EmulatedNative { .. }
+            GemmDecision::EmulatedArtifact { .. }
+                | GemmDecision::EmulatedNative { .. }
+                | GemmDecision::EmulatedCrt { .. }
         )
     }
 
     pub fn slices(&self) -> Option<usize> {
         match *self {
             GemmDecision::EmulatedArtifact { slices, .. }
-            | GemmDecision::EmulatedNative { slices } => Some(slices),
+            | GemmDecision::EmulatedNative { slices }
+            | GemmDecision::EmulatedCrt { slices, .. } => Some(slices),
             _ => None,
         }
     }
@@ -56,6 +65,7 @@ impl GemmDecision {
         match self {
             GemmDecision::EmulatedArtifact { .. } => "emulated-artifact",
             GemmDecision::EmulatedNative { .. } => "emulated-native",
+            GemmDecision::EmulatedCrt { .. } => "emulated-crt",
             GemmDecision::FallbackNan => "fallback-nan",
             GemmDecision::FallbackInf => "fallback-inf",
             GemmDecision::FallbackEsc { .. } => "fallback-esc",
@@ -208,8 +218,16 @@ impl AdpEngine {
         }
 
         // ---- Guardrail 3: profitability heuristic (§5.3) -------------
-        let hin = HeuristicInput::single(a.rows, a.cols, b.cols, slices);
-        if !self.cfg.heuristic.emulate(&hin) {
+        // Both scheme families are sized from the same coarse ESC: slice
+        // pairs at `slices`, CRT at the unsigned-equivalent window when
+        // the modulus basis covers it. The heuristic picks the cheapest
+        // of native / slice-pair / CRT (boolean policies keep their
+        // pre-CRT slice-pair behavior via the default `choose`).
+        let crt_cfg = CrtConfig::for_bits(bits, a.cols);
+        let hin = HeuristicInput::single(a.rows, a.cols, b.cols, slices)
+            .with_crt(crt_cfg.map(|c| c.gemm_count()));
+        let choice = self.cfg.heuristic.choose(&hin);
+        if choice == EmulationChoice::Native {
             let guardrail_s = t0.elapsed().as_secs_f64();
             let (c, exec_s) = self.native(a, b);
             return self.finish(c, GemmDecision::FallbackHeuristic, esc, slices, guardrail_s, exec_s);
@@ -217,9 +235,23 @@ impl AdpEngine {
         let guardrail_s = t0.elapsed().as_secs_f64();
 
         // ---- Dispatch emulation (§5.4) -------------------------------
+        // CRT dispatch always runs the native pipeline (AOT artifacts
+        // are compiled for the slice-pair schedule only); exception
+        // fallbacks above are scheme-independent and already handled.
+        let te = Instant::now();
+        if let (EmulationChoice::Crt, Some(ccfg)) = (choice, crt_cfg) {
+            let c = CrtScheme::new(ccfg).gemm_on(
+                a,
+                b,
+                self.cfg.backend.as_ref(),
+                self.cfg.workspace_pool.as_ref(),
+            );
+            let exec_s = te.elapsed().as_secs_f64();
+            let d = GemmDecision::EmulatedCrt { slices: ccfg.s_eq, moduli: ccfg.gemm_count() };
+            return self.finish(c, d, esc, slices, guardrail_s, exec_s);
+        }
         // Subnormal inputs are exact on the native pipeline but flushed by
         // the XLA-CPU artifact substrate (DAZ/FTZ): steer them native.
-        let te = Instant::now();
         if self.cfg.use_artifacts && !flags.has_subnormal {
             if let Some(rt) = &self.cfg.runtime {
                 if let Some(nreg) = rt.catalog().fitting_size(a.rows, a.cols, b.cols) {
@@ -288,6 +320,9 @@ impl AdpEngine {
             slices: usize,
             esc: i32,
             guardrail_s: f64,
+            /// `Some` when the heuristic routed this problem to the CRT
+            /// family (the config records the window + modulus count).
+            crt: Option<CrtConfig>,
         }
         let mut results: Vec<Option<(Matrix, AdpOutcome)>> =
             (0..problems.len()).map(|_| None).collect();
@@ -343,8 +378,17 @@ impl AdpEngine {
                 continue;
             }
             let batch = multiplicity[&fps[idx][0]].max(multiplicity[&fps[idx][1]]);
-            let hin = HeuristicInput { m: a.rows, k: a.cols, n: b.cols, slices, batch };
-            if !self.cfg.heuristic.emulate(&hin) {
+            let crt_cfg = CrtConfig::for_bits(bits, a.cols);
+            let hin = HeuristicInput {
+                m: a.rows,
+                k: a.cols,
+                n: b.cols,
+                slices,
+                batch,
+                crt_moduli: crt_cfg.map(|c| c.gemm_count()),
+            };
+            let choice = self.cfg.heuristic.choose(&hin);
+            if choice == EmulationChoice::Native {
                 let guardrail_s = t0.elapsed().as_secs_f64();
                 let (c, exec_s) = self.native(a, b);
                 results[idx] = Some(self.finish(
@@ -358,7 +402,8 @@ impl AdpEngine {
                 continue;
             }
             let guardrail_s = t0.elapsed().as_secs_f64();
-            pending.push(Pending { idx, slices, esc, guardrail_s });
+            let crt = if choice == EmulationChoice::Crt { crt_cfg } else { None };
+            pending.push(Pending { idx, slices, esc, guardrail_s, crt });
         }
 
         if !pending.is_empty() {
@@ -377,6 +422,7 @@ impl AdpEngine {
                     a: problems[p.idx].0,
                     b: problems[p.idx].1,
                     cfg: OzakiConfig::with_encoding(p.slices, self.cfg.encoding),
+                    scheme: if p.crt.is_some() { SchemeKind::Crt } else { SchemeKind::SlicePair },
                 })
                 .collect();
             let (cs, gstats) =
@@ -384,14 +430,15 @@ impl AdpEngine {
             self.metrics.record_group(&gstats);
             let exec_each = te.elapsed().as_secs_f64() / pending.len() as f64;
             for (p, c) in pending.into_iter().zip(cs) {
-                results[p.idx] = Some(self.finish(
-                    c,
-                    GemmDecision::EmulatedNative { slices: p.slices },
-                    p.esc,
-                    p.slices,
-                    p.guardrail_s,
-                    exec_each,
-                ));
+                let decision = match p.crt {
+                    Some(ccfg) => GemmDecision::EmulatedCrt {
+                        slices: ccfg.s_eq,
+                        moduli: ccfg.gemm_count(),
+                    },
+                    None => GemmDecision::EmulatedNative { slices: p.slices },
+                };
+                results[p.idx] =
+                    Some(self.finish(c, decision, p.esc, p.slices, p.guardrail_s, exec_each));
             }
         }
         results.into_iter().map(|r| r.expect("every problem resolved")).collect()
@@ -432,9 +479,13 @@ impl AdpEngine {
         // and the packed-panel amortization counters.
         self.metrics.sync_workspace(self.cfg.workspace_pool.stats());
         // Native emulation ran on the runtime-dispatched slice-pair
-        // kernel; expose which one as a gauge (artifact dispatch and
-        // FP64 fallbacks never touch the kernel layer).
-        if matches!(outcome.decision, GemmDecision::EmulatedNative { .. }) {
+        // kernel — the CRT family reuses the same microkernels; expose
+        // which one as a gauge (artifact dispatch and FP64 fallbacks
+        // never touch the kernel layer).
+        if matches!(
+            outcome.decision,
+            GemmDecision::EmulatedNative { .. } | GemmDecision::EmulatedCrt { .. }
+        ) {
             self.metrics
                 .record_kernel(crate::ozaki::kernel::active_id(self.cfg.encoding).label());
         }
@@ -455,7 +506,7 @@ impl crate::linalg::qr::GemmBackend for AdpEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::heuristic::{AlwaysEmulate, NeverEmulate};
+    use crate::coordinator::heuristic::{AlwaysEmulate, ForceCrt, NeverEmulate};
     use crate::linalg::gemm as native_gemm;
     use crate::util::Rng;
 
@@ -710,6 +761,45 @@ mod tests {
         let ws = pool.stats();
         assert_eq!(ws.panel_reuses, snap.panel_reuses);
         assert_eq!(ws.panel_packs, snap.panel_packs);
+    }
+
+    #[test]
+    fn force_crt_routes_the_crt_family_end_to_end() {
+        let eng = AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(ForceCrt)));
+        let mut rng = Rng::new(92);
+        let a = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let (c, out) = eng.gemm(&a, &b);
+        assert!(
+            matches!(out.decision, GemmDecision::EmulatedCrt { .. }),
+            "{:?}",
+            out.decision
+        );
+        if let GemmDecision::EmulatedCrt { slices, moduli } = out.decision {
+            assert_eq!(slices, out.slices_required, "CRT window == ESC-sized slice count");
+            assert!(moduli > 0 && moduli < slices * (slices + 1) / 2);
+        }
+        let c_ref = a.matmul_dd(&b);
+        let denom = a.abs().matmul_dd(&b.abs());
+        for idx in 0..c.data.len() {
+            let e = (c.data[idx] - c_ref.data[idx]).abs() / denom.data[idx];
+            assert!(e < 64.0 * f64::EPSILON, "err {e}");
+        }
+        // The grouped path takes the same decision and produces the same
+        // bits (cached residue planes + the same modulus tile engine).
+        let grouped = eng.gemm_grouped(&[(&a, &b)]);
+        assert!(matches!(grouped[0].1.decision, GemmDecision::EmulatedCrt { .. }));
+        for (x, y) in grouped[0].0.data.iter().zip(&c.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.emulated_crt, 2, "standalone + grouped CRT requests");
+        assert_eq!(snap.emulated, 2);
+        // NaN guardrails stay scheme-independent under ForceCrt.
+        let mut nan_a = a.clone();
+        *nan_a.at_mut(0, 0) = f64::NAN;
+        let (_, o) = eng.gemm(&nan_a, &b);
+        assert_eq!(o.decision, GemmDecision::FallbackNan);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Heuristic run-time selection (§5.3): decide emulate-vs-native from the
-//! ESC-derived slice count and problem shape.
+//! Heuristic run-time selection (§5.3): decide emulate-vs-native — and,
+//! with the Ozaki-II extension, *which* decomposition family — from the
+//! ESC-derived window and problem shape.
 //!
 //! Two heuristic sources:
 //!
@@ -8,6 +9,11 @@
 //! * [`CpuCalibration`] — measured constants of *this* substrate (what is
 //!   actually faster here), auto-calibrated on first use so the
 //!   end-to-end examples never regress below native on this machine.
+//!
+//! Both implement [`SelectionHeuristic::choose`], the three-way
+//! native / slice-pair / CRT comparison; the boolean
+//! [`SelectionHeuristic::emulate`] is its pre-CRT projection and keeps
+//! every existing policy working unchanged.
 
 use crate::perfmodel::Platform;
 
@@ -22,18 +28,65 @@ pub struct HeuristicInput {
     /// standalone GEMM). The coalescing dispatcher reports its shape
     /// bucket size here so cost models can spread the slicing cost.
     pub batch: usize,
+    /// Modulus count of the CRT family for the same window, when the
+    /// basis covers it (`CrtConfig::for_window` returned `Some`);
+    /// `None` disables the CRT arm. Linear counterpart of `slices`'
+    /// quadratic `s(s+1)/2` pair-GEMM count.
+    pub crt_moduli: Option<usize>,
 }
 
 impl HeuristicInput {
-    /// Standalone (unbatched) request.
+    /// Standalone (unbatched) request, slice-pair vs native only.
     pub fn single(m: usize, k: usize, n: usize, slices: usize) -> HeuristicInput {
-        HeuristicInput { m, k, n, slices, batch: 1 }
+        HeuristicInput { m, k, n, slices, batch: 1, crt_moduli: None }
+    }
+
+    /// Advertise the CRT family (its modulus count) to the cost models.
+    pub fn with_crt(mut self, moduli: Option<usize>) -> HeuristicInput {
+        self.crt_moduli = moduli;
+        self
+    }
+}
+
+/// Which execution family the heuristic picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EmulationChoice {
+    Native,
+    SlicePair,
+    Crt,
+}
+
+impl EmulationChoice {
+    pub fn label(self) -> &'static str {
+        match self {
+            EmulationChoice::Native => "native",
+            EmulationChoice::SlicePair => "slice-pair",
+            EmulationChoice::Crt => "crt",
+        }
+    }
+
+    pub fn is_emulated(self) -> bool {
+        !matches!(self, EmulationChoice::Native)
     }
 }
 
 pub trait SelectionHeuristic: Send {
     /// true => dispatch emulation; false => native FP64.
     fn emulate(&self, inp: &HeuristicInput) -> bool;
+
+    /// Scheme-aware refinement of [`SelectionHeuristic::emulate`]: pick
+    /// the cheapest of native FP64, slice-pair and (when `inp`
+    /// advertises one) CRT emulation. The default preserves pre-CRT
+    /// behavior — `emulate()` maps to slice pairs — so boolean policies
+    /// need no changes.
+    fn choose(&self, inp: &HeuristicInput) -> EmulationChoice {
+        if self.emulate(inp) {
+            EmulationChoice::SlicePair
+        } else {
+            EmulationChoice::Native
+        }
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -46,30 +99,68 @@ impl SelectionHeuristic for PlatformHeuristic {
     fn emulate(&self, inp: &HeuristicInput) -> bool {
         self.platform.emulation_profitable(inp.m, inp.k, inp.n, inp.slices)
     }
+
+    fn choose(&self, inp: &HeuristicInput) -> EmulationChoice {
+        let t_nat = self.platform.dgemm_time(inp.m, inp.k, inp.n);
+        let t_sp = self.platform.emulated_time(inp.m, inp.k, inp.n, inp.slices, true);
+        let t_crt = inp
+            .crt_moduli
+            .map(|nm| self.platform.crt_emulated_time(inp.m, inp.k, inp.n, nm, true));
+        match t_crt {
+            Some(tc) if tc < t_sp && tc < t_nat => EmulationChoice::Crt,
+            _ if t_sp < t_nat => EmulationChoice::SlicePair,
+            _ => EmulationChoice::Native,
+        }
+    }
+
     fn name(&self) -> &'static str {
         "platform-model"
     }
 }
 
+/// Floor for per-element measured constants: coarse or quantized timers
+/// can report zero (or denormal garbage) for cheap phases, which would
+/// make every downstream cost comparison degenerate.
+const MIN_NS: f64 = 1e-3;
+/// Floor for the fixed decision overhead (1 us — below any real scan).
+const MIN_FIXED_NS: f64 = 1_000.0;
+
+/// Guard one measured constant against zero/denormal/NaN timings.
+fn sane(x: f64, floor: f64) -> f64 {
+    if x.is_finite() && x >= floor {
+        x
+    } else {
+        floor
+    }
+}
+
 /// Measured-constant heuristic for the CPU substrate: emulation costs
 /// ~`pair_cost * s(s+1)/2 + slice_cost * s` per element-op vs `fp64_cost`
-/// for native. Constants come from a one-shot micro-calibration.
+/// for native; the CRT family costs `pair_cost * nm` GEMMs plus an
+/// `nm`-residue extraction/reconstruction term. Constants come from a
+/// one-shot micro-calibration.
 pub struct CpuCalibration {
     /// ns per element-op (2 flops) of the native FP64 GEMM.
     pub fp64_ns: f64,
-    /// ns per element-op of one INT8 slice-pair GEMM.
+    /// ns per element-op of one INT8 slice-pair GEMM. The CRT scheme's
+    /// per-modulus GEMMs run the same microkernels, so this constant is
+    /// shared by both families.
     pub pair_ns: f64,
     /// ns per element of slicing, per slice.
     pub slice_ns: f64,
-    /// Fixed decision overhead, ns.
+    /// ns per element per modulus of the CRT scheme's residue extraction
+    /// and Garner reconstruction (everything its GEMMs don't explain).
+    pub crt_ns: f64,
+    /// Fixed decision overhead, ns (measured: the coarse-ESC pre-pass).
     pub fixed_ns: f64,
 }
 
 impl CpuCalibration {
     /// Measure the constants on this machine (one-time, ~100 ms).
     pub fn measure() -> CpuCalibration {
+        use crate::esc::coarse::{coarse_esc_gemm, DEFAULT_BLOCK};
         use crate::linalg::{gemm, Matrix};
-        use crate::ozaki::{emulated_gemm_with_breakdown, OzakiConfig};
+        use crate::ozaki::{crt_gemm, emulated_gemm_with_breakdown, CrtConfig, OzakiConfig};
         use crate::util::Rng;
         let n = 96;
         let mut rng = Rng::new(0xCA11B);
@@ -77,22 +168,55 @@ impl CpuCalibration {
         let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
         let ops = (n * n * n) as f64;
 
+        // Warmup pass: fault in the matrices, spin the core out of idle
+        // states and prime the caches, so the timed loops below measure
+        // steady-state throughput. Without it the first run's one-time
+        // costs landed entirely in fp64_ns and skewed every decision
+        // toward emulation.
+        std::hint::black_box(gemm(&a, &b));
+
         let t0 = std::time::Instant::now();
         for _ in 0..3 {
             std::hint::black_box(gemm(&a, &b));
         }
-        let fp64_ns = t0.elapsed().as_secs_f64() * 1e9 / (3.0 * ops);
+        let fp64_ns = sane(t0.elapsed().as_secs_f64() * 1e9 / (3.0 * ops), MIN_NS);
 
         let cfg = OzakiConfig::new(7);
         let (_, bd) = emulated_gemm_with_breakdown(&a, &b, &cfg);
-        let pair_ns = bd.gemm_s * 1e9 / (cfg.pair_count() as f64 * ops);
-        let slice_ns = bd.slice_s * 1e9 / (7.0 * 2.0 * (n * n) as f64);
-        CpuCalibration { fp64_ns, pair_ns, slice_ns, fixed_ns: 20_000.0 }
-    }
-}
+        let pair_ns = sane(bd.gemm_s * 1e9 / (cfg.pair_count() as f64 * ops), MIN_NS);
+        let slice_ns = sane(bd.slice_s * 1e9 / (7.0 * 2.0 * (n * n) as f64), MIN_NS);
 
-impl SelectionHeuristic for CpuCalibration {
-    fn emulate(&self, inp: &HeuristicInput) -> bool {
+        // CRT arm: time the whole CRT GEMM at the same window and
+        // attribute what its per-modulus GEMMs (same microkernels, so
+        // pair_ns applies) don't explain to the per-element-per-modulus
+        // extraction + reconstruction constant.
+        let crt_cfg = CrtConfig::for_window(7, n).expect("96-deep window fits the basis");
+        let nm = crt_cfg.gemm_count() as f64;
+        let t1 = std::time::Instant::now();
+        std::hint::black_box(crt_gemm(&a, &b, &crt_cfg));
+        let crt_total = t1.elapsed().as_secs_f64() * 1e9;
+        let crt_elems = nm * (3 * n * n) as f64; // A + B planes + output recon
+        let crt_ns = sane((crt_total - pair_ns * nm * ops) / crt_elems, MIN_NS);
+
+        // The fixed overhead is the decision pre-pass itself — measure
+        // the coarse-ESC reduction instead of hard-coding a guess (the
+        // old 20 us constant was an order of magnitude off on some
+        // substrates, mis-pricing every small GEMM).
+        let reps = 8;
+        let t2 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(coarse_esc_gemm(&a, &b, DEFAULT_BLOCK));
+        }
+        let fixed_ns = sane(t2.elapsed().as_secs_f64() * 1e9 / reps as f64, MIN_FIXED_NS);
+
+        CpuCalibration { fp64_ns, pair_ns, slice_ns, crt_ns, fixed_ns }
+    }
+
+    fn t_native(&self, inp: &HeuristicInput) -> f64 {
+        self.fp64_ns * inp.m as f64 * inp.k as f64 * inp.n as f64
+    }
+
+    fn t_slice_pair(&self, inp: &HeuristicInput) -> f64 {
         let ops = inp.m as f64 * inp.k as f64 * inp.n as f64;
         let elems = (inp.m * inp.k + inp.k * inp.n) as f64;
         let s = inp.slices as f64;
@@ -100,10 +224,39 @@ impl SelectionHeuristic for CpuCalibration {
         // Slicing amortizes across a coalesced bucket (the slice cache
         // decomposes a shared operand once); the pair GEMMs do not.
         let amort = inp.batch.max(1) as f64;
-        let t_emu = self.pair_ns * pairs * ops + self.slice_ns * s * elems / amort + self.fixed_ns;
-        let t_nat = self.fp64_ns * ops;
-        t_emu < t_nat
+        self.pair_ns * pairs * ops + self.slice_ns * s * elems / amort + self.fixed_ns
     }
+
+    /// CRT cost at `inp`'s window, when the basis covers it: `nm` GEMMs
+    /// on the same microkernels, residue extraction amortizable like
+    /// slicing, Garner reconstruction on the output (never amortizable).
+    fn t_crt(&self, inp: &HeuristicInput) -> Option<f64> {
+        inp.crt_moduli.map(|nm| {
+            let ops = inp.m as f64 * inp.k as f64 * inp.n as f64;
+            let elems = (inp.m * inp.k + inp.k * inp.n) as f64;
+            let mn = (inp.m * inp.n) as f64;
+            let amort = inp.batch.max(1) as f64;
+            let nm = nm as f64;
+            self.pair_ns * nm * ops + self.crt_ns * nm * (elems / amort + mn) + self.fixed_ns
+        })
+    }
+}
+
+impl SelectionHeuristic for CpuCalibration {
+    fn emulate(&self, inp: &HeuristicInput) -> bool {
+        self.t_slice_pair(inp) < self.t_native(inp)
+    }
+
+    fn choose(&self, inp: &HeuristicInput) -> EmulationChoice {
+        let t_nat = self.t_native(inp);
+        let t_sp = self.t_slice_pair(inp);
+        match self.t_crt(inp) {
+            Some(tc) if tc < t_sp && tc < t_nat => EmulationChoice::Crt,
+            _ if t_sp < t_nat => EmulationChoice::SlicePair,
+            _ => EmulationChoice::Native,
+        }
+    }
+
     fn name(&self) -> &'static str {
         "cpu-calibrated"
     }
@@ -127,6 +280,25 @@ impl SelectionHeuristic for NeverEmulate {
     }
     fn name(&self) -> &'static str {
         "never-emulate"
+    }
+}
+
+/// Test/ablation policy: always the CRT family when the window admits
+/// one, slice pairs otherwise (never native).
+pub struct ForceCrt;
+impl SelectionHeuristic for ForceCrt {
+    fn emulate(&self, _: &HeuristicInput) -> bool {
+        true
+    }
+    fn choose(&self, inp: &HeuristicInput) -> EmulationChoice {
+        if inp.crt_moduli.is_some() {
+            EmulationChoice::Crt
+        } else {
+            EmulationChoice::SlicePair
+        }
+    }
+    fn name(&self) -> &'static str {
+        "force-crt"
     }
 }
 
@@ -160,10 +332,34 @@ mod tests {
     }
 
     #[test]
+    fn platform_choose_prefers_linear_crt() {
+        // Large GEMM on RTX: both families beat native; CRT's 17
+        // launches beat the 28 slice pairs for the same window.
+        let r = PlatformHeuristic { platform: RTX_PRO_6000 };
+        let big = HeuristicInput::single(4096, 4096, 4096, 7).with_crt(Some(17));
+        assert_eq!(r.choose(&big), EmulationChoice::Crt);
+        // Without a CRT arm the same problem stays on slice pairs.
+        assert_eq!(
+            r.choose(&HeuristicInput::single(4096, 4096, 4096, 7)),
+            EmulationChoice::SlicePair
+        );
+        // Tiny GEMM on GB200: launch overheads dominate both families.
+        let g = PlatformHeuristic { platform: GB200 };
+        let tiny = HeuristicInput::single(128, 128, 128, 7).with_crt(Some(17));
+        assert_eq!(g.choose(&tiny), EmulationChoice::Native);
+    }
+
+    #[test]
     fn batch_amortization_only_helps() {
         // A synthetic slicing-dominated cost model: batching amortizes the
         // slicing term, so emulation can only become *more* attractive.
-        let c = CpuCalibration { fp64_ns: 1.0, pair_ns: 0.001, slice_ns: 50.0, fixed_ns: 0.0 };
+        let c = CpuCalibration {
+            fp64_ns: 1.0,
+            pair_ns: 0.001,
+            slice_ns: 50.0,
+            crt_ns: 0.0,
+            fixed_ns: 0.0,
+        };
         let single = HeuristicInput::single(64, 64, 64, 7);
         let batched = HeuristicInput { batch: 64, ..single };
         assert!(!c.emulate(&single), "slicing-dominated single request stays native");
@@ -171,11 +367,77 @@ mod tests {
     }
 
     #[test]
+    fn choose_picks_the_cheapest_family() {
+        // GEMM-dominated model: 28 pairs cost 0.84 ops, 17 moduli 0.51,
+        // native 1.0 — CRT wins exactly when it is advertised.
+        let c = CpuCalibration {
+            fp64_ns: 1.0,
+            pair_ns: 0.03,
+            slice_ns: 0.0,
+            crt_ns: 0.0,
+            fixed_ns: 0.0,
+        };
+        let sp_only = HeuristicInput::single(256, 256, 256, 7);
+        assert_eq!(c.choose(&sp_only), EmulationChoice::SlicePair);
+        assert_eq!(c.choose(&sp_only.with_crt(Some(17))), EmulationChoice::Crt);
+        // A reconstruction-heavy substrate flips back to slice pairs.
+        let heavy = CpuCalibration {
+            fp64_ns: 1.0,
+            pair_ns: 0.03,
+            slice_ns: 0.0,
+            crt_ns: 1e6,
+            fixed_ns: 0.0,
+        };
+        assert_eq!(heavy.choose(&sp_only.with_crt(Some(17))), EmulationChoice::SlicePair);
+        // When neither family beats native, CRT availability is moot.
+        let slow = CpuCalibration {
+            fp64_ns: 1.0,
+            pair_ns: 1.0,
+            slice_ns: 0.0,
+            crt_ns: 0.0,
+            fixed_ns: 0.0,
+        };
+        assert_eq!(slow.choose(&sp_only.with_crt(Some(17))), EmulationChoice::Native);
+    }
+
+    #[test]
+    fn default_choose_mirrors_emulate() {
+        // Boolean policies keep working untouched: choose() maps their
+        // verdict onto slice-pair/native even when a CRT arm is offered.
+        let crt = HeuristicInput::single(64, 64, 64, 7).with_crt(Some(17));
+        assert_eq!(AlwaysEmulate.choose(&crt), EmulationChoice::SlicePair);
+        assert_eq!(NeverEmulate.choose(&crt), EmulationChoice::Native);
+        assert!(EmulationChoice::SlicePair.is_emulated());
+        assert!(!EmulationChoice::Native.is_emulated());
+        assert_eq!(EmulationChoice::Crt.label(), "crt");
+    }
+
+    #[test]
+    fn force_crt_policy() {
+        let h = ForceCrt;
+        let inp = HeuristicInput::single(64, 64, 64, 7);
+        assert!(h.emulate(&inp));
+        assert_eq!(h.choose(&inp), EmulationChoice::SlicePair, "no basis => slice pairs");
+        assert_eq!(h.choose(&inp.with_crt(Some(17))), EmulationChoice::Crt);
+        assert_eq!(h.name(), "force-crt");
+    }
+
+    #[test]
     fn cpu_calibration_sane() {
         let c = CpuCalibration::measure();
-        assert!(c.fp64_ns > 0.0 && c.pair_ns > 0.0 && c.slice_ns > 0.0);
+        assert!(c.fp64_ns > 0.0 && c.pair_ns > 0.0 && c.slice_ns > 0.0 && c.crt_ns > 0.0);
+        assert!(c.fp64_ns.is_finite() && c.crt_ns.is_finite());
+        // Measured, not the old hard-coded 20 us guess — but still
+        // floored against degenerate timer readings.
+        assert!(c.fixed_ns >= MIN_FIXED_NS && c.fixed_ns.is_finite());
         // On a CPU substrate a 28-pair emulation is never faster than one
         // native FP64 GEMM — the calibrated heuristic must say "native".
         assert!(!c.emulate(&HeuristicInput::single(512, 512, 512, 7)));
+        // The three-way choice at that size never picks slice pairs
+        // (native beats them, per the assert above); whether CRT's 17
+        // GEMMs beat native here is genuinely substrate-dependent, so
+        // only the slice-pair exclusion is pinned.
+        let choice = c.choose(&HeuristicInput::single(512, 512, 512, 7).with_crt(Some(17)));
+        assert_ne!(choice, EmulationChoice::SlicePair);
     }
 }

@@ -16,6 +16,7 @@ pub struct Metrics {
 struct Inner {
     requests: u64,
     emulated: u64,
+    emulated_crt: u64,
     fallback_nan: u64,
     fallback_inf: u64,
     fallback_esc: u64,
@@ -42,6 +43,9 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub emulated: u64,
+    /// Emulated requests served by the Ozaki-II/CRT scheme family (a
+    /// subset of `emulated`; the remainder ran slice pairs).
+    pub emulated_crt: u64,
     pub fallback_nan: u64,
     pub fallback_inf: u64,
     pub fallback_esc: u64,
@@ -114,6 +118,11 @@ impl Metrics {
                 g.emulated += 1;
                 *g.slice_histogram.entry(slices).or_insert(0) += 1;
             }
+            GemmDecision::EmulatedCrt { slices, .. } => {
+                g.emulated += 1;
+                g.emulated_crt += 1;
+                *g.slice_histogram.entry(slices).or_insert(0) += 1;
+            }
             GemmDecision::FallbackNan => g.fallback_nan += 1,
             GemmDecision::FallbackInf => g.fallback_inf += 1,
             GemmDecision::FallbackEsc { .. } => g.fallback_esc += 1,
@@ -171,6 +180,7 @@ impl Metrics {
         MetricsSnapshot {
             requests: g.requests,
             emulated: g.emulated,
+            emulated_crt: g.emulated_crt,
             fallback_nan: g.fallback_nan,
             fallback_inf: g.fallback_inf,
             fallback_esc: g.fallback_esc,
@@ -216,12 +226,14 @@ mod tests {
         m.record(&outcome(GemmDecision::EmulatedNative { slices: 7 }));
         m.record(&outcome(GemmDecision::EmulatedNative { slices: 7 }));
         m.record(&outcome(GemmDecision::EmulatedArtifact { n: 64, slices: 9 }));
+        m.record(&outcome(GemmDecision::EmulatedCrt { slices: 9, moduli: 17 }));
         m.record(&outcome(GemmDecision::FallbackNan));
         let s = m.snapshot();
-        assert_eq!(s.requests, 4);
-        assert_eq!(s.emulated, 3);
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.emulated, 4);
+        assert_eq!(s.emulated_crt, 1, "CRT requests counted inside `emulated`");
         assert_eq!(s.fallbacks(), 1);
-        assert_eq!(s.slice_histogram, vec![(7, 2), (9, 1)]);
+        assert_eq!(s.slice_histogram, vec![(7, 2), (9, 2)]);
         assert!((s.guardrail_fraction() - 0.1).abs() < 1e-12);
     }
 
@@ -232,6 +244,7 @@ mod tests {
             slice_cache_hits: 3,
             slice_cache_misses: 5,
             chunked_bypass: 0,
+            crt_routed: 0,
         });
         m.record_esc_cache(true);
         m.record_esc_cache(false);

@@ -70,7 +70,7 @@ impl EscPlanCache {
     pub fn esc_gemm(&self, a: &Matrix, b: &Matrix, block: usize) -> (i32, bool) {
         assert_eq!(a.cols, b.rows, "gemm shape mismatch");
         let ca = CoarseExponents::of_rows(a, block);
-        let cb = CoarseExponents::of_rows(&b.transpose(), block);
+        let cb = CoarseExponents::of_cols(b, block);
         let key = PlanKey {
             m: a.rows,
             k: a.cols,

@@ -22,27 +22,44 @@ pub const DEFAULT_BLOCK: usize = 64;
 pub struct CoarseExponents {
     pub rows: usize,
     pub nblocks: usize,
+    /// The coarsening block the tables were built with (blocks of the k
+    /// dimension; the last block may be shorter).
+    pub block: usize,
     pub bmax: Vec<i32>, // rows x nblocks
     pub bmin: Vec<i32>,
     pub row_max: Vec<i32>, // exp(x_p) per row
 }
 
 impl CoarseExponents {
-    /// Coarsen the rows of `a` (call with B^T for columns of B).
+    /// Coarsen the rows of `a`.
     pub fn of_rows(a: &Matrix, block: usize) -> CoarseExponents {
-        let (m, k) = (a.rows, a.cols);
+        Self::of_source(a.rows, a.cols, block, |i, l| a.row(i)[l])
+    }
+
+    /// Coarsen the columns of `b` through a strided view — exponent tables
+    /// identical to `of_rows(&b.transpose(), block)` without materializing
+    /// the O(k·n) transpose temporary (test-pinned).
+    pub fn of_cols(b: &Matrix, block: usize) -> CoarseExponents {
+        Self::of_source(b.cols, b.rows, block, |j, l| b.data[l * b.cols + j])
+    }
+
+    fn of_source(
+        m: usize,
+        k: usize,
+        block: usize,
+        at: impl Fn(usize, usize) -> f64,
+    ) -> CoarseExponents {
         let nb = k.div_ceil(block);
         let mut bmax = vec![ZERO_EXP; m * nb];
         let mut bmin = vec![i32::MAX; m * nb];
         let mut row_max = vec![ZERO_EXP; m];
         for i in 0..m {
-            let row = a.row(i);
             for bi in 0..nb {
                 let lo = bi * block;
                 let hi = (lo + block).min(k);
                 let (mut mx, mut mn) = (ZERO_EXP, i32::MAX);
-                for &x in &row[lo..hi] {
-                    let e = frexp_exponent(x);
+                for l in lo..hi {
+                    let e = frexp_exponent(at(i, l));
                     mx = mx.max(e);
                     mn = mn.min(e);
                 }
@@ -51,7 +68,34 @@ impl CoarseExponents {
                 row_max[i] = row_max[i].max(mx);
             }
         }
-        CoarseExponents { rows: m, nblocks: nb, bmax, bmin, row_max }
+        CoarseExponents { rows: m, nblocks: nb, block, bmax, bmin, row_max }
+    }
+
+    /// Collapse the block tables to a single whole-k block. Equivalent to
+    /// coarsening with `block >= k`, so the no-underestimate guarantee is
+    /// preserved — merely the loosest member of the refinement family.
+    fn collapse(&self) -> CoarseExponents {
+        let m = self.rows;
+        let nb = self.nblocks;
+        let mut bmax = vec![ZERO_EXP; m];
+        let mut bmin = vec![i32::MAX; m];
+        for i in 0..m {
+            for bi in 0..nb {
+                // ZERO_EXP block maxes (all-zero blocks) lose the max and
+                // i32::MAX mins (empty blocks can't occur: nb covers k)
+                // lose the min, matching a direct whole-row scan.
+                bmax[i] = bmax[i].max(self.bmax[i * nb + bi]);
+                bmin[i] = bmin[i].min(self.bmin[i * nb + bi]);
+            }
+        }
+        CoarseExponents {
+            rows: m,
+            nblocks: 1,
+            block: usize::MAX,
+            bmax,
+            bmin,
+            row_max: self.row_max.clone(),
+        }
     }
 }
 
@@ -59,14 +103,28 @@ impl CoarseExponents {
 pub fn coarse_esc_gemm(a: &Matrix, b: &Matrix, block: usize) -> i32 {
     assert_eq!(a.cols, b.rows);
     let ca = CoarseExponents::of_rows(a, block);
-    let cb = CoarseExponents::of_rows(&b.transpose(), block);
+    let cb = CoarseExponents::of_cols(b, block);
     coarse_esc_from(&ca, &cb)
 }
 
 /// ESC from precomputed coarse exponents (the runtime path: A's coarse form
 /// can be reused across many B's, e.g. the QR trailing updates).
+///
+/// The fast path requires both operands coarsened with the same block
+/// grid. On a mismatch (e.g. cached tables built under different
+/// coarsening blocks meeting at a shared call site) this no longer
+/// panics: both tables are collapsed to the whole-k block — a checked
+/// recompute that stays on the conservative side of the §4 guarantee
+/// at the cost of a looser estimate.
 pub fn coarse_esc_from(ca: &CoarseExponents, cb: &CoarseExponents) -> i32 {
-    assert_eq!(ca.nblocks, cb.nblocks, "operands coarsened with different blocks");
+    if ca.nblocks != cb.nblocks || (ca.nblocks > 1 && ca.block != cb.block) {
+        return coarse_esc_tables(&ca.collapse(), &cb.collapse());
+    }
+    coarse_esc_tables(ca, cb)
+}
+
+fn coarse_esc_tables(ca: &CoarseExponents, cb: &CoarseExponents) -> i32 {
+    debug_assert_eq!(ca.nblocks, cb.nblocks);
     let nb = ca.nblocks;
     let mut esc = 0i32;
     for i in 0..ca.rows {
@@ -167,6 +225,58 @@ mod tests {
         let b = rand_spanned(&mut rng, 16, 3, 10);
         assert_eq!(coarse_esc_gemm(&a, &b, 4), 0);
         assert_eq!(exact_esc_gemm(&a, &b), 0);
+    }
+
+    #[test]
+    fn of_cols_matches_transposed_of_rows() {
+        // Satellite pin: the strided column coarsening must produce tables
+        // (and hence ESC values) bit-identical to coarsening the
+        // materialized transpose, for every block size and shape, zeros
+        // included.
+        let mut rng = Rng::new(57);
+        for (k, n) in [(1usize, 1usize), (7, 3), (48, 5), (65, 9)] {
+            let mut b = rand_spanned(&mut rng, k, n, 30);
+            for v in b.data.iter_mut() {
+                if rng.f64() < 0.2 {
+                    *v = 0.0;
+                }
+            }
+            let bt = b.transpose();
+            for block in [1usize, 4, 16, 64, 100] {
+                let via_cols = CoarseExponents::of_cols(&b, block);
+                let via_rows = CoarseExponents::of_rows(&bt, block);
+                assert_eq!(via_cols.rows, via_rows.rows);
+                assert_eq!(via_cols.nblocks, via_rows.nblocks);
+                assert_eq!(via_cols.bmax, via_rows.bmax, "k={k} n={n} block={block}");
+                assert_eq!(via_cols.bmin, via_rows.bmin, "k={k} n={n} block={block}");
+                assert_eq!(via_cols.row_max, via_rows.row_max, "k={k} n={n} block={block}");
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_blocks_recompute_conservatively() {
+        // Satellite regression: coarse_esc_from used to assert_eq! (and
+        // kill the service) when tables built under different coarsening
+        // blocks met. Now it collapses to the whole-k block — still never
+        // below the exact ESC, and never below the matched-block estimate
+        // it degrades from.
+        let mut rng = Rng::new(58);
+        let a = rand_spanned(&mut rng, 6, 80, 25);
+        let b = rand_spanned(&mut rng, 80, 6, 25);
+        let exact = exact_esc_gemm(&a, &b);
+        for (ba, bb) in [(8usize, 16usize), (16, 8), (40, 50), (1, 80)] {
+            let ca = CoarseExponents::of_rows(&a, ba);
+            let cb = CoarseExponents::of_cols(&b, bb);
+            let esc = coarse_esc_from(&ca, &cb);
+            assert!(esc >= exact, "blocks ({ba},{bb}): esc {esc} < exact {exact}");
+            // the collapse is exactly the whole-k coarsening
+            assert_eq!(esc, coarse_esc_gemm(&a, &b, 80), "blocks ({ba},{bb})");
+        }
+        // same-grid tables still take the fast (uncollapsed) path
+        let ca = CoarseExponents::of_rows(&a, 8);
+        let cb = CoarseExponents::of_cols(&b, 8);
+        assert_eq!(coarse_esc_from(&ca, &cb), coarse_esc_gemm(&a, &b, 8));
     }
 
     #[test]

@@ -34,9 +34,11 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use super::crt::{crt_gemm_on, CrtBasis, CrtConfig};
 use super::recompose::{add_level_into, recompose_slices};
 use super::schedule::PairSchedule;
-use super::slicing::{slice_a, slice_b, SlicedMatrix};
+use super::scheme::SchemeKind;
+use super::slicing::{crt_slice_a, crt_slice_b, slice_a, slice_b, SlicedMatrix};
 use super::{OzakiConfig, SliceEncoding};
 use crate::backend::{ComputeBackend, SliceBatch, WorkspaceGuard, WorkspacePool};
 use crate::linalg::Matrix;
@@ -50,12 +52,18 @@ pub enum OperandRole {
     B,
 }
 
-/// Identity of one cached decomposition.
+/// Identity of one cached decomposition. Slice-pair digit planes and CRT
+/// residue planes are never interchangeable, so the key carries the
+/// scheme family (and for CRT the basis length — a wider basis means
+/// more residue planes for the same `s_eq` window).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct SliceKey {
     role: OperandRole,
+    scheme: SchemeKind,
     slices: usize,
     encoding: SliceEncoding,
+    /// CRT basis length; 0 for slice-pair entries.
+    moduli: usize,
     rows: usize,
     cols: usize,
     fingerprint: (u64, u64),
@@ -93,9 +101,42 @@ impl SliceCache {
         }
     }
 
-    /// Fetch (or compute, exactly once per resident key) the decomposition
-    /// of `m` in `role` under `cfg`. Returns the shared decomposition and
-    /// whether this call was a cache hit (i.e. did *not* decompose).
+    /// Acquire (or insert) the cell for `key`, applying the LRU policy.
+    /// Returns the cell and whether it was already resident.
+    fn cell_for(&self, key: SliceKey) -> (Arc<CacheCell>, bool) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(c) = g.map.get(&key) {
+            let c = c.clone();
+            // LRU bump: move to the back of the order list.
+            if let Some(pos) = g.order.iter().position(|k| k == &key) {
+                let k = g.order.remove(pos);
+                g.order.push(k);
+            }
+            (c, true)
+        } else {
+            let c = Arc::new(CacheCell(OnceLock::new()));
+            g.map.insert(key.clone(), c.clone());
+            g.order.push(key);
+            while g.map.len() > self.capacity {
+                let victim = g.order.remove(0);
+                g.map.remove(&victim);
+            }
+            (c, false)
+        }
+    }
+
+    fn count(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fetch (or compute, exactly once per resident key) the slice-pair
+    /// decomposition of `m` in `role` under `cfg`. Returns the shared
+    /// decomposition and whether this call was a cache hit (i.e. did
+    /// *not* decompose).
     pub fn get_or_slice(
         &self,
         role: OperandRole,
@@ -104,33 +145,15 @@ impl SliceCache {
     ) -> (Arc<SlicedMatrix>, bool) {
         let key = SliceKey {
             role,
+            scheme: SchemeKind::SlicePair,
             slices: cfg.slices,
             encoding: cfg.encoding,
+            moduli: 0,
             rows: m.rows,
             cols: m.cols,
             fingerprint: m.fingerprint(),
         };
-        let (cell, hit) = {
-            let mut g = self.inner.lock().unwrap();
-            if let Some(c) = g.map.get(&key) {
-                let c = c.clone();
-                // LRU bump: move to the back of the order list.
-                if let Some(pos) = g.order.iter().position(|k| k == &key) {
-                    let k = g.order.remove(pos);
-                    g.order.push(k);
-                }
-                (c, true)
-            } else {
-                let c = Arc::new(CacheCell(OnceLock::new()));
-                g.map.insert(key.clone(), c.clone());
-                g.order.push(key.clone());
-                while g.map.len() > self.capacity {
-                    let victim = g.order.remove(0);
-                    g.map.remove(&victim);
-                }
-                (c, false)
-            }
-        };
+        let (cell, hit) = self.cell_for(key);
         // Decompose outside the cache lock; OnceLock serializes per entry.
         let sl = cell
             .0
@@ -141,11 +164,42 @@ impl SliceCache {
                 })
             })
             .clone();
-        if hit {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        }
+        self.count(hit);
+        (sl, hit)
+    }
+
+    /// CRT twin of [`SliceCache::get_or_slice`]: fetch (or compute,
+    /// exactly once) the residue-plane decomposition of `m` under `cfg`.
+    /// CRT planes always ride the unsigned 8-bit window, so the key's
+    /// encoding is fixed and the basis length disambiguates.
+    pub fn get_or_slice_crt(
+        &self,
+        role: OperandRole,
+        m: &Matrix,
+        cfg: &CrtConfig,
+    ) -> (Arc<SlicedMatrix>, bool) {
+        let key = SliceKey {
+            role,
+            scheme: SchemeKind::Crt,
+            slices: cfg.s_eq,
+            encoding: SliceEncoding::Unsigned,
+            moduli: cfg.moduli,
+            rows: m.rows,
+            cols: m.cols,
+            fingerprint: m.fingerprint(),
+        };
+        let (cell, hit) = self.cell_for(key);
+        let sl = cell
+            .0
+            .get_or_init(|| {
+                let basis = CrtBasis::for_config(cfg);
+                Arc::new(match role {
+                    OperandRole::A => crt_slice_a(m, cfg.s_eq, &basis),
+                    OperandRole::B => crt_slice_b(m, cfg.s_eq, &basis),
+                })
+            })
+            .clone();
+        self.count(hit);
         (sl, hit)
     }
 
@@ -180,11 +234,17 @@ impl Default for SliceCache {
 }
 
 /// One problem of a grouped GEMM. `cfg` may differ per problem (ESC sizes
-/// slices per request even inside one shape bucket).
+/// slices per request even inside one shape bucket), and so may the
+/// scheme family the coordinator picked for it.
 pub struct GroupedProblem<'a> {
     pub a: &'a Matrix,
     pub b: &'a Matrix,
     pub cfg: OzakiConfig,
+    /// Family to run this problem under. [`SchemeKind::Crt`] problems
+    /// use `cfg` only for its window (`cfg.slices`/`cfg.encoding` fix
+    /// the equivalent CRT config) and `cfg.k_chunk`; if the window does
+    /// not fit the modulus basis they fall back to slice pairs.
+    pub scheme: SchemeKind,
 }
 
 /// Slicing-amortization accounting of one [`gemm_grouped`] call.
@@ -197,6 +257,9 @@ pub struct GroupStats {
     /// Problems routed through the chunked large-k per-request path
     /// (per-chunk decompositions are not cacheable across requests).
     pub chunked_bypass: u64,
+    /// Problems executed by the Ozaki-II/CRT family (cached residues or
+    /// chunked bypass; the rest ran slice-pair rounds).
+    pub crt_routed: u64,
 }
 
 /// In-flight state of one problem between lockstep rounds. The level
@@ -234,6 +297,40 @@ pub fn gemm_grouped(
         if m == 0 || k == 0 || n == 0 {
             out[idx] = Some(Matrix::zeros(m, n));
             continue;
+        }
+        if p.scheme == SchemeKind::Crt {
+            // CRT problems don't join the lockstep level rounds — the
+            // family has no per-level structure to interleave (one GEMM
+            // per modulus, folded independently). They still amortize
+            // the expensive stage: residue decompositions go through
+            // the same cache, and the modulus loop runs on the
+            // backend's parallel tile engine. The config derivation
+            // mirrors the coordinator's standalone path (same window =>
+            // same basis), so results stay bitwise identical to
+            // `crt_gemm_on` per problem.
+            let s_eq = SliceEncoding::Unsigned
+                .slices_for_bits(p.cfg.encoding.effective_bits(p.cfg.slices));
+            if let Some(ccfg) =
+                CrtConfig::for_window(s_eq, k).map(|c| c.with_k_chunk(p.cfg.k_chunk()))
+            {
+                stats.crt_routed += 1;
+                if k > ccfg.k_chunk() {
+                    out[idx] = Some(crt_gemm_on(p.a, p.b, &ccfg, backend, workspaces));
+                    stats.chunked_bypass += 1;
+                } else {
+                    let (asl, hit_a) = cache.get_or_slice_crt(OperandRole::A, p.a, &ccfg);
+                    let (bsl, hit_b) = cache.get_or_slice_crt(OperandRole::B, p.b, &ccfg);
+                    stats.slice_cache_hits += hit_a as u64 + hit_b as u64;
+                    stats.slice_cache_misses += (!hit_a) as u64 + (!hit_b) as u64;
+                    let basis = CrtBasis::for_config(&ccfg);
+                    let mut c = Matrix::zeros(m, n);
+                    backend.crt_tile_gemm(asl.as_ref(), bsl.as_ref(), &basis, workspaces, &mut c);
+                    out[idx] = Some(c);
+                }
+                continue;
+            }
+            // Window exceeds the modulus basis: run the problem as
+            // slice pairs below (same accuracy, more launches).
         }
         if k > p.cfg.k_chunk() {
             // Rare large-k path: bitwise identical to the per-request
@@ -334,7 +431,9 @@ mod tests {
         let bs: Vec<Matrix> = (0..4).map(|_| Matrix::uniform(20, 9, -2.0, 2.0, &mut rng)).collect();
         let cfg = OzakiConfig::new(7);
         let probs: Vec<GroupedProblem<'_>> =
-            bs.iter().map(|b| GroupedProblem { a: &a, b, cfg }).collect();
+            bs.iter()
+                .map(|b| GroupedProblem { a: &a, b, cfg, scheme: SchemeKind::SlicePair })
+                .collect();
         let cache = SliceCache::new(32);
         let pool = WorkspacePool::new();
         let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend, &pool);
@@ -405,8 +504,8 @@ mod tests {
         let a2 = Matrix::zeros(2, 0);
         let b2 = Matrix::zeros(0, 2);
         let probs = vec![
-            GroupedProblem { a: &a, b: &b, cfg },
-            GroupedProblem { a: &a2, b: &b2, cfg },
+            GroupedProblem { a: &a, b: &b, cfg, scheme: SchemeKind::SlicePair },
+            GroupedProblem { a: &a2, b: &b2, cfg, scheme: SchemeKind::Crt },
         ];
         let pool = WorkspacePool::new();
         let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend, &pool);
@@ -416,6 +515,43 @@ mod tests {
         assert_eq!(st.slice_cache_misses, 0, "degenerate problems skip the cache");
         assert_eq!(pool.stats().checkouts, 0, "degenerate problems skip the pool");
         assert_eq!(gemm_grouped(&[], &cache, &SerialBackend, &pool).0.len(), 0);
+    }
+
+    #[test]
+    fn crt_grouped_amortizes_and_matches_the_standalone_path() {
+        let mut rng = Rng::new(703);
+        let a = Matrix::uniform(10, 18, -2.0, 2.0, &mut rng);
+        let bs: Vec<Matrix> =
+            (0..3).map(|_| Matrix::uniform(18, 8, -2.0, 2.0, &mut rng)).collect();
+        let cfg = OzakiConfig::new(7);
+        let probs: Vec<GroupedProblem<'_>> = bs
+            .iter()
+            .map(|b| GroupedProblem { a: &a, b, cfg, scheme: SchemeKind::Crt })
+            .collect();
+        let cache = SliceCache::new(32);
+        let pool = WorkspacePool::new();
+        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend, &pool);
+        // A's residues: 1 miss + 2 hits; B residues: 3 distinct misses.
+        assert_eq!(st.slice_cache_misses, 4, "{st:?}");
+        assert_eq!(st.slice_cache_hits, 2, "{st:?}");
+        assert_eq!(st.crt_routed, 3, "{st:?}");
+        assert_eq!(st.chunked_bypass, 0, "{st:?}");
+        let ccfg = CrtConfig::for_window(7, a.cols).unwrap();
+        for (c, b) in cs.iter().zip(&bs) {
+            assert_bitwise(c, &crate::ozaki::crt_gemm(&a, b, &ccfg), "grouped CRT");
+        }
+        // CRT and slice-pair entries of the same operand don't collide:
+        // re-running the group as slice pairs misses on every operand.
+        let probs_sp: Vec<GroupedProblem<'_>> = bs
+            .iter()
+            .map(|b| GroupedProblem { a: &a, b, cfg, scheme: SchemeKind::SlicePair })
+            .collect();
+        let (cs_sp, st_sp) = gemm_grouped(&probs_sp, &cache, &SerialBackend, &pool);
+        assert_eq!(st_sp.slice_cache_misses, 4, "{st_sp:?}");
+        assert_eq!(st_sp.crt_routed, 0, "{st_sp:?}");
+        for (c, b) in cs_sp.iter().zip(&bs) {
+            assert_bitwise(c, &emulated_gemm_on(&a, b, &cfg, &SerialBackend), "sp after crt");
+        }
     }
 
     #[test]
@@ -448,7 +584,14 @@ mod tests {
                 mats.push((a, b, cfg));
             }
             let probs: Vec<GroupedProblem<'_>> =
-                mats.iter().map(|(a, b, cfg)| GroupedProblem { a, b, cfg: *cfg }).collect();
+                mats.iter()
+                    .map(|(a, b, cfg)| GroupedProblem {
+                        a,
+                        b,
+                        cfg: *cfg,
+                        scheme: SchemeKind::SlicePair,
+                    })
+                    .collect();
             for backend in [&SerialBackend as &dyn ComputeBackend, &par] {
                 let (cs, _) = gemm_grouped(&probs, &cache, backend, &pool);
                 for ((a, b, cfg), c) in mats.iter().zip(&cs) {

@@ -1,0 +1,620 @@
+//! Ozaki-II / CRT modular decomposition — the second scheme family.
+//!
+//! The slice-pair scheme (`gemm.rs`) multiplies positional INT8 digits
+//! and pays one integer GEMM per retained digit pair: s(s+1)/2 launches
+//! for s slices. The CRT scheme trades positional digits for **residues**:
+//! each operand's fixed-point window integer (the same window the
+//! slice-pair path uses, see `slicing::window_value`) is reduced modulo a
+//! fixed basis of pairwise-coprime 8-bit moduli, one INT8 GEMM runs *per
+//! modulus* — exact, because centered residues and their k-length dot
+//! products stay inside the microkernels' proven range — and the Chinese
+//! Remainder Theorem reconstructs the full product from the per-modulus
+//! results. Kernel launches drop from quadratic to **linear**: `nm`
+//! moduli cover the product range `2*k*2^(2*beta)` with
+//! `nm ~= (2*beta + log2 k)/8`, versus `s*(s+1)/2` pairs for the same
+//! window (`beta = 8*s - 2`); at s = 7, k = 2^17 that is 17 GEMMs
+//! instead of 28, and the gap widens quadratically with s.
+//!
+//! Unlike the slice-pair schedule — which drops pair products below the
+//! target precision (levels q > s-1) — the CRT product is the *complete*
+//! window product: accuracy is never worse than slice-pair at the same
+//! window, and on inputs where no window truncation occurs the two
+//! schemes agree **bitwise** (the scheme-equivalence oracle in
+//! `tests/crt_scheme.rs`). Reconstruction is exact integer arithmetic up
+//! to the final double-double evaluation, so results are bitwise
+//! reproducible across backends and thread counts by construction.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::gemm::{FusedTally, FUSED_MC, FUSED_NC, FUSED_WS_ELEMS, K_CHUNK};
+use super::kernel::{self, SliceKernel};
+use super::recompose::descale_tile;
+use super::slicing::{crt_slice_a, crt_slice_b, SlicedMatrix};
+use crate::backend::{ComputeBackend, SerialBackend, Workspace, WorkspacePool};
+use crate::dd::Dd;
+use crate::linalg::Matrix;
+
+/// The modulus basis, largest first: 2^8, then the odd coprimes below it
+/// in descending order (255 = 3·5·17, 253 = 11·23, 247 = 13·19,
+/// 217 = 7·31; every other entry is prime). 34 entries totalling ~253.8
+/// bits of range — enough for windows up to s_eq = 14 at full k-chunk
+/// depth. Pairwise coprimality is asserted by unit test; descending order
+/// makes every prefix the densest basis of its length, minimizing `nm`.
+pub const CRT_MODULI: [i64; 34] = [
+    256, 255, 253, 251, 247, 241, 239, 233, 229, 227, 223, 217, 211, 199, 197, 193, 191, 181, 179,
+    173, 167, 163, 157, 151, 149, 139, 137, 131, 127, 113, 109, 107, 103, 101,
+];
+
+/// Centered (balanced) residue of `x` modulo `m`: the unique `r ≡ x
+/// (mod m)` with `-m/2 <= r < m/2` for even m, `|r| <= (m-1)/2` for odd
+/// m. For every basis modulus (<= 256) the result fits i8.
+#[inline]
+pub fn center(x: i64, m: i64) -> i64 {
+    let r = x.rem_euclid(m);
+    if 2 * r >= m {
+        r - m
+    } else {
+        r
+    }
+}
+
+/// `a^-1 mod m` by extended Euclid; panics if `gcd(a, m) != 1` (the basis
+/// is pairwise coprime, so this is unreachable from [`CrtBasis`]).
+fn mod_inverse(a: i64, m: i64) -> i64 {
+    let (mut old_r, mut r) = (a.rem_euclid(m), m);
+    let (mut old_s, mut s) = (1i64, 0i64);
+    while r != 0 {
+        let q = old_r / r;
+        (old_r, r) = (r, old_r - q * r);
+        (old_s, s) = (s, old_s - q * s);
+    }
+    assert_eq!(old_r, 1, "moduli must be pairwise coprime (gcd({a}, {m}) != 1)");
+    old_s.rem_euclid(m)
+}
+
+/// CRT scheme parameters: the shared fixed-point window (`s_eq` — the
+/// slice count the equivalent slice-pair configuration would use, so ESC
+/// sizing is identical across schemes) plus the modulus count covering
+/// that window's product range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrtConfig {
+    /// Window width in 8-bit digit positions (== the equivalent
+    /// unsigned slice count; window bound `|A_int| < 2^(8*s_eq - 2)`).
+    pub s_eq: usize,
+    /// Moduli used — one INT8 GEMM each (a `CRT_MODULI` prefix length).
+    pub moduli: usize,
+    /// Inner-dimension chunk bound (operands are split before slicing
+    /// when `k` exceeds it, exactly like `OzakiConfig::k_chunk`).
+    pub k_chunk: usize,
+}
+
+impl CrtConfig {
+    /// Smallest basis covering the window `s_eq` at inner dimension `k`:
+    /// the product magnitude is below `k_c * 2^(2*beta)` with
+    /// `beta = 8*s_eq - 2` and `k_c = min(k, K_CHUNK)`, and unique
+    /// centered reconstruction needs the basis range to exceed twice
+    /// that (one extra guard bit is kept on top). Returns `None` when the
+    /// window exceeds the basis (or the u128 digit-extraction gate):
+    /// callers fall back to the slice-pair scheme.
+    pub fn for_window(s_eq: usize, k: usize) -> Option<CrtConfig> {
+        if s_eq == 0 || 8 * (s_eq as i32 - 1) + 7 >= 128 {
+            return None;
+        }
+        let kc = k.clamp(1, K_CHUNK);
+        let beta = 8 * s_eq as i32 - 2;
+        let needed = 2.0 + (kc as f64).log2().ceil() + 2.0 * beta as f64;
+        let mut bits = 0.0f64;
+        let mut nm = 0usize;
+        while bits < needed {
+            if nm == CRT_MODULI.len() {
+                return None;
+            }
+            bits += (CRT_MODULI[nm] as f64).log2();
+            nm += 1;
+        }
+        Some(CrtConfig { s_eq, moduli: nm, k_chunk: K_CHUNK })
+    }
+
+    /// Window sized from a mantissa-bit requirement, mirroring
+    /// `SliceEncoding::Unsigned.slices_for_bits` so ESC-driven selection
+    /// produces the same window for both scheme families.
+    pub fn for_bits(bits: i32, k: usize) -> Option<CrtConfig> {
+        CrtConfig::for_window(super::SliceEncoding::Unsigned.slices_for_bits(bits), k)
+    }
+
+    /// Override the chunk bound (testing / experimentation). Clamped to
+    /// the kernels' exactness cap; note the basis is *not* re-shrunk for
+    /// smaller chunks — a conservative direction.
+    pub fn with_k_chunk(mut self, k_chunk: usize) -> CrtConfig {
+        self.k_chunk = k_chunk.clamp(1, K_CHUNK);
+        self
+    }
+
+    pub fn k_chunk(&self) -> usize {
+        self.k_chunk
+    }
+
+    /// Integer GEMMs per k-chunk (one per modulus) — the linear
+    /// kernel-launch count, vs [`CrtConfig::pair_gemm_count`] quadratic.
+    pub fn gemm_count(&self) -> usize {
+        self.moduli
+    }
+
+    /// What the slice-pair scheme would launch for the same window.
+    pub fn pair_gemm_count(&self) -> usize {
+        self.s_eq * (self.s_eq + 1) / 2
+    }
+}
+
+/// Precomputed reconstruction tables for a basis prefix: the Garner
+/// mixed-radix inverses and the double-double mixed-radix weights.
+/// Process-wide cached ([`CrtBasis::get`]) like `PairSchedule::get`.
+pub struct CrtBasis {
+    moduli: Vec<i64>,
+    /// Triangular: `inv[p*(p-1)/2 + q] = m_q^-1 mod m_p` for `q < p`.
+    inv: Vec<i64>,
+    /// `wd[p]` = double-double of `prod_{q<p} m_q` (wd[0] = 1). Exact up
+    /// to 106 bits (~13 moduli); beyond that relatively accurate to
+    /// ~2^-104, which only matters for values too large to be exact
+    /// anyway (see [`CrtBasis::reconstruct`]).
+    wd: Vec<Dd>,
+}
+
+static BASIS_CACHE: OnceLock<Mutex<HashMap<usize, Arc<CrtBasis>>>> = OnceLock::new();
+
+impl CrtBasis {
+    pub fn new(nm: usize) -> CrtBasis {
+        assert!((1..=CRT_MODULI.len()).contains(&nm), "basis length {nm} out of range");
+        let moduli: Vec<i64> = CRT_MODULI[..nm].to_vec();
+        let mut inv = Vec::with_capacity(nm * (nm - 1) / 2);
+        for p in 1..nm {
+            for q in 0..p {
+                inv.push(mod_inverse(moduli[q], moduli[p]));
+            }
+        }
+        let mut wd = Vec::with_capacity(nm);
+        let mut w = Dd::from(1.0);
+        for &m in &moduli {
+            wd.push(w);
+            w = w.mul(Dd::from(m as f64));
+        }
+        CrtBasis { moduli, inv, wd }
+    }
+
+    /// Shared basis for `nm` moduli (process-wide cache; reconstruction
+    /// tables are pure functions of the prefix length).
+    pub fn get(nm: usize) -> Arc<CrtBasis> {
+        let cache = BASIS_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut g = cache.lock().unwrap();
+        g.entry(nm).or_insert_with(|| Arc::new(CrtBasis::new(nm))).clone()
+    }
+
+    pub fn for_config(cfg: &CrtConfig) -> Arc<CrtBasis> {
+        CrtBasis::get(cfg.moduli)
+    }
+
+    pub fn moduli(&self) -> &[i64] {
+        &self.moduli
+    }
+
+    pub fn len(&self) -> usize {
+        self.moduli.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.moduli.is_empty()
+    }
+
+    #[inline]
+    fn inv_at(&self, p: usize, q: usize) -> i64 {
+        self.inv[p * (p - 1) / 2 + q]
+    }
+
+    /// Balanced-Garner reconstruction of one product element from its
+    /// centered residues `res[p] = center(x mod m_p)`. `scratch` holds
+    /// the mixed-radix digits (len >= basis length, caller-provided so
+    /// the per-element loop allocates nothing).
+    ///
+    /// Mixed radix with *centered* digits `v_p` (|v_p| <= m_p/2):
+    /// `x = sum_p v_p * prod_{q<p} m_q`. Centering makes the digit
+    /// sequence contract: once the running remainder fits one modulus,
+    /// every higher digit is exactly zero — so small products use few
+    /// terms and reconstruct **exactly** in double-double; large ones
+    /// (beyond ~106 bits) see only the dd representation error ~2^-104
+    /// relative, far below the (k+4)*eps accuracy target. All integer
+    /// steps are exact: `|u - v_q| <= 256`, times an inverse < 256 stays
+    /// under 2^16.
+    #[inline]
+    pub fn reconstruct(&self, res: &[i64], scratch: &mut [i64]) -> Dd {
+        let nm = self.moduli.len();
+        debug_assert_eq!(res.len(), nm);
+        debug_assert!(scratch.len() >= nm);
+        for p in 0..nm {
+            let m = self.moduli[p];
+            let mut u = res[p];
+            for q in 0..p {
+                u = center((u - scratch[q]) * self.inv_at(p, q), m);
+            }
+            scratch[p] = u;
+        }
+        let mut acc = Dd::ZERO;
+        for p in 0..nm {
+            let v = scratch[p];
+            if v != 0 {
+                acc = acc.add(self.wd[p].mul(Dd::from(v as f64)));
+            }
+        }
+        acc
+    }
+}
+
+/// One fused row band of the CRT scheme, the linear-launch counterpart of
+/// `gemm::fused_band`: per FUSED_NC column tile, run **one** integer GEMM
+/// per modulus on the packed residue panels, reduce each i64 tile to its
+/// centered residue plane, Garner-reconstruct every element into the
+/// compensated hi/lo pair, and apply the shared sigma descaling. Operand
+/// residues stay cache-resident across all moduli of a tile, same as the
+/// slice-pair engine's pair reuse.
+pub fn crt_band(
+    kern: &dyn SliceKernel,
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    basis: &CrtBasis,
+    row0: usize,
+    ws: &mut Workspace,
+    band: &mut [f64],
+) -> FusedTally {
+    let n = b.rows;
+    let k = a.cols;
+    let nm = basis.len();
+    debug_assert_eq!(a.s, nm, "A residue planes must match the basis");
+    debug_assert_eq!(b.s, nm, "B residue planes must match the basis");
+    debug_assert_eq!(a.cols, b.cols, "inner dimensions must agree");
+    assert!(k <= K_CHUNK, "k must be pre-chunked to the kernels' exact range");
+    if band.is_empty() || n == 0 {
+        return FusedTally::default();
+    }
+    let rows = band.len() / n;
+    let ab = kern.a_slice_bytes(rows, k);
+    let bb_max = kern.b_slice_bytes(FUSED_NC.min(n), k);
+    assert!(ws.capacity() >= rows * FUSED_NC.min(n), "workspace too small for tile");
+    let grew = ws.ensure_pack(nm * ab, nm * bb_max);
+    let grew_res = ws.ensure_res(nm * rows * FUSED_NC.min(n));
+    let Workspace { pbuf, hi, lo, apack, bpack, rbuf } = ws;
+    let mut tally =
+        FusedTally { pack_growths: (grew || grew_res) as u64, ..FusedTally::default() };
+    // Pack this band's A residue planes once; reused by every column tile
+    // and every modulus of the band.
+    for p in 0..nm {
+        kern.pack_a_slice(a, p, row0, rows, &mut apack[p * ab..(p + 1) * ab]);
+    }
+    tally.packs += 1;
+    let mut res = [0i64; CRT_MODULI.len()];
+    let mut digits = [0i64; CRT_MODULI.len()];
+    let mut first_tile = true;
+    let mut col0 = 0;
+    while col0 < n {
+        let cols = FUSED_NC.min(n - col0);
+        let bb = kern.b_slice_bytes(cols, k);
+        for p in 0..nm {
+            kern.pack_b_slice(b, p, col0, cols, &mut bpack[p * bb..(p + 1) * bb]);
+        }
+        tally.packs += 1;
+        let e = rows * cols;
+        let pb = &mut pbuf[..e];
+        // One exact integer GEMM per modulus (|residue| <= 128 keeps the
+        // kernels' k <= K_CHUNK exactness bound), each i64 tile folded to
+        // its centered residue plane.
+        for (p, &mp) in basis.moduli().iter().enumerate() {
+            pb.fill(0);
+            kern.pair_tile(&apack[p * ab..(p + 1) * ab], &bpack[p * bb..(p + 1) * bb], rows, cols, k, pb);
+            let plane = &mut rbuf[p * e..(p + 1) * e];
+            for (r, &v) in plane.iter_mut().zip(pb.iter()) {
+                *r = center(v, mp) as i32;
+            }
+        }
+        // Per-element Garner + dd into the compensated pair, then the
+        // shared sigma descaling — identical tail to the slice-pair tile.
+        let hi_t = &mut hi[..e];
+        let lo_t = &mut lo[..e];
+        for idx in 0..e {
+            for (p, r) in res[..nm].iter_mut().enumerate() {
+                *r = rbuf[p * e + idx] as i64;
+            }
+            let v = basis.reconstruct(&res[..nm], &mut digits);
+            hi_t[idx] = v.hi;
+            lo_t[idx] = v.lo;
+        }
+        descale_tile(hi_t, lo_t, &a.sigma, &b.sigma, row0, rows, col0, cols);
+        for i in 0..rows {
+            let src = i * cols;
+            let dst = i * n + col0;
+            for j in 0..cols {
+                band[dst + j] = hi_t[src + j] + lo_t[src + j];
+            }
+        }
+        tally.tiles += 1;
+        if !first_tile {
+            // A panels packed once per band serve every later tile.
+            tally.reuses += nm as u64;
+        }
+        first_tile = false;
+        col0 += cols;
+    }
+    tally
+}
+
+/// Serial CRT tile engine over pre-sliced residues — the reference order
+/// the backend trait's `crt_tile_gemm` defaults to.
+pub fn crt_tile_gemm_serial_on(
+    kern: &dyn SliceKernel,
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    basis: &CrtBasis,
+    workspaces: &WorkspacePool,
+    c: &mut Matrix,
+) {
+    let n = b.rows;
+    assert_eq!(c.rows, a.rows, "output rows mismatch");
+    assert_eq!(c.cols, n, "output cols mismatch");
+    if a.rows == 0 || n == 0 {
+        return;
+    }
+    let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+    let mut tally = FusedTally::default();
+    for (bi, band) in c.data.chunks_mut(FUSED_MC * n).enumerate() {
+        tally.merge(crt_band(kern, a, b, basis, bi * FUSED_MC, &mut ws, band));
+    }
+    workspaces.record_tiles(tally.tiles);
+    workspaces.record_panels(tally.packs, tally.reuses);
+    workspaces.record_pack_growth(tally.pack_growths);
+}
+
+/// Serial CRT tile engine, slicing included.
+pub fn crt_tile_gemm_serial(
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    basis: &CrtBasis,
+    workspaces: &WorkspacePool,
+    c: &mut Matrix,
+) {
+    crt_tile_gemm_serial_on(kernel::active(a.encoding), a, b, basis, workspaces, c)
+}
+
+/// CRT emulated GEMM on a backend, chunking the inner dimension before
+/// slicing when it exceeds `cfg.k_chunk` (exactly like `fused_gemm_on`;
+/// chunk results are summed in FP64).
+pub fn crt_gemm_on(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &CrtConfig,
+    backend: &dyn ComputeBackend,
+    workspaces: &WorkspacePool,
+) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if m == 0 || n == 0 || k == 0 {
+        return Matrix::zeros(m, n);
+    }
+    let kchunk = cfg.k_chunk();
+    if k <= kchunk {
+        return crt_gemm_chunk(a, b, cfg, backend, workspaces);
+    }
+    let mut c = Matrix::zeros(m, n);
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = kchunk.min(k - k0);
+        let ac = a.block(0, k0, m, kc);
+        let bc = b.block(k0, 0, kc, n);
+        let cc = crt_gemm_chunk(&ac, &bc, cfg, backend, workspaces);
+        c.add_assign(&cc);
+        k0 += kc;
+    }
+    c
+}
+
+fn crt_gemm_chunk(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &CrtConfig,
+    backend: &dyn ComputeBackend,
+    workspaces: &WorkspacePool,
+) -> Matrix {
+    let basis = CrtBasis::for_config(cfg);
+    let asl = crt_slice_a(a, cfg.s_eq, &basis);
+    let bsl = crt_slice_b(b, cfg.s_eq, &basis);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    backend.crt_tile_gemm(&asl, &bsl, &basis, workspaces, &mut c);
+    c
+}
+
+/// Serial convenience wrapper.
+pub fn crt_gemm(a: &Matrix, b: &Matrix, cfg: &CrtConfig) -> Matrix {
+    crt_gemm_on(a, b, cfg, &SerialBackend, &WorkspacePool::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grading::grade::{measure, passes_grade_a};
+    use crate::ozaki::gemm::emulated_gemm;
+    use crate::ozaki::OzakiConfig;
+    use crate::util::{prop, Rng};
+
+    fn gcd(a: i64, b: i64) -> i64 {
+        if b == 0 {
+            a
+        } else {
+            gcd(b, a % b)
+        }
+    }
+
+    #[test]
+    fn moduli_pairwise_coprime_descending_and_i8_rangeable() {
+        for (i, &m) in CRT_MODULI.iter().enumerate() {
+            assert!(m > 1 && m <= 256, "modulus {m} out of the 8-bit kernel range");
+            if i > 0 {
+                assert!(m < CRT_MODULI[i - 1], "basis must be strictly descending");
+            }
+            for &m2 in &CRT_MODULI[..i] {
+                assert_eq!(gcd(m2, m), 1, "moduli {m2} and {m} share a factor");
+            }
+        }
+        let total: f64 = CRT_MODULI.iter().map(|&m| (m as f64).log2()).sum();
+        assert!(total > 253.0, "basis range shrank: {total} bits");
+    }
+
+    #[test]
+    fn center_is_balanced_for_both_parities() {
+        for &m in &[256i64, 255, 101, 2, 3] {
+            for x in -600..=600 {
+                let r = center(x, m);
+                assert_eq!((r - x).rem_euclid(m), 0, "center must preserve the class");
+                if m % 2 == 0 {
+                    assert!((-m / 2..m / 2).contains(&r), "m={m} x={x} r={r}");
+                } else {
+                    assert!((-(m - 1) / 2..=(m - 1) / 2).contains(&r), "m={m} x={x} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mod_inverse_inverts() {
+        let mut rng = Rng::new(900);
+        for _ in 0..200 {
+            let m = CRT_MODULI[rng.int(0, CRT_MODULI.len() as i64 - 1) as usize];
+            let mut a = rng.int(1, m - 1);
+            while gcd(a, m) != 1 {
+                a = rng.int(1, m - 1);
+            }
+            let inv = mod_inverse(a, m);
+            assert_eq!((a * inv).rem_euclid(m), 1, "a={a} m={m} inv={inv}");
+        }
+    }
+
+    #[test]
+    fn basis_cache_shares_instances() {
+        let b1 = CrtBasis::get(9);
+        let b2 = CrtBasis::get(9);
+        assert!(Arc::ptr_eq(&b1, &b2));
+        assert_eq!(b1.len(), 9);
+        assert!(!b1.is_empty());
+        let b3 = CrtBasis::get(5);
+        assert!(!Arc::ptr_eq(&b1, &b3));
+    }
+
+    #[test]
+    fn for_window_is_linear_not_quadratic() {
+        // The launch-count claim: one GEMM per modulus beats the pair
+        // count for every window from s_eq = 5 up, at any k.
+        for s_eq in 5..=14 {
+            for k in [1usize, 256, K_CHUNK, 10 * K_CHUNK] {
+                let cfg = CrtConfig::for_window(s_eq, k)
+                    .unwrap_or_else(|| panic!("s_eq={s_eq} k={k} must be coverable"));
+                assert!(
+                    cfg.gemm_count() < cfg.pair_gemm_count(),
+                    "s_eq={s_eq} k={k}: {} moduli vs {} pairs",
+                    cfg.gemm_count(),
+                    cfg.pair_gemm_count()
+                );
+            }
+        }
+        // FP64 default window at full chunk depth: 17 GEMMs vs 28 pairs.
+        let cfg = CrtConfig::for_window(7, K_CHUNK).unwrap();
+        assert_eq!((cfg.gemm_count(), cfg.pair_gemm_count()), (17, 28));
+        // Beyond the basis: graceful None, never a panic.
+        assert!(CrtConfig::for_window(15, K_CHUNK).is_none());
+        assert!(CrtConfig::for_window(40, 16).is_none());
+        assert_eq!(CrtConfig::for_bits(54, K_CHUNK), CrtConfig::for_window(7, K_CHUNK));
+    }
+
+    #[test]
+    fn reconstruct_roundtrips_integers_exactly() {
+        // Any |x| < 2^88 reconstructs exactly from its residues on a
+        // 12-modulus basis (range ~95.8 bits > 89, weights exact in dd).
+        let basis = CrtBasis::new(12);
+        prop::check("balanced Garner roundtrip", 300, |rng| {
+            let mag = rng.int(0, 87) as u32;
+            let wide = ((rng.int(0, i64::MAX / 2) as i128) << 45) | rng.int(0, (1 << 45) - 1) as i128;
+            let x = wide.rem_euclid(1i128 << mag) * if rng.f64() < 0.5 { -1 } else { 1 };
+            let res: Vec<i64> =
+                basis.moduli().iter().map(|&m| center(x.rem_euclid(m as i128) as i64, m)).collect();
+            let mut scratch = [0i64; CRT_MODULI.len()];
+            let v = basis.reconstruct(&res, &mut scratch);
+            let got = v.hi as i128 + v.lo as i128;
+            prop::assert_that(got == x, format!("x={x} got={got} (hi={} lo={})", v.hi, v.lo))?;
+            // Balanced digits above the value's magnitude are exactly
+            // zero — the property that makes small products exact.
+            let used: usize = (0..12).rev().find(|&p| scratch[p] != 0).map_or(0, |p| p + 1);
+            let capacity: f64 =
+                basis.moduli()[..used.saturating_sub(1)].iter().map(|&m| (m as f64).log2()).sum();
+            prop::assert_that(
+                used == 0 || capacity < mag as f64 + 1.0,
+                format!("x={x}: {used} digits used but |x| < 2^{mag}"),
+            )
+        });
+    }
+
+    #[test]
+    fn crt_gemm_matches_fp64_grading_tolerance() {
+        let mut rng = Rng::new(901);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (13, 40, 9), (65, 130, 70)] {
+            let a = Matrix::uniform(m, k, -3.0, 3.0, &mut rng);
+            let b = Matrix::uniform(k, n, -3.0, 3.0, &mut rng);
+            let cfg = CrtConfig::for_window(7, k).unwrap();
+            let c = crt_gemm(&a, &b, &cfg);
+            let rep = measure(&a, &b, &c);
+            assert!(
+                passes_grade_a(&rep, k.max(4), 4.0),
+                "({m},{k},{n}): CRT broke the grading tolerance: {rep:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn crt_bitwise_equals_slice_pair_on_exact_integers() {
+        // On small-integer inputs the window digits occupy only the top
+        // positions: the slice-pair schedule's truncated levels are all
+        // zero and both schemes compute the exact product — so the final
+        // f64 results must agree bit for bit.
+        let mut rng = Rng::new(902);
+        for (m, k, n) in [(7usize, 11usize, 5usize), (40, 64, 33)] {
+            let a = Matrix::from_fn(m, k, |_, _| rng.int(-512, 512) as f64);
+            let b = Matrix::from_fn(k, n, |_, _| rng.int(-512, 512) as f64);
+            let crt_cfg = CrtConfig::for_window(7, k).unwrap();
+            let c_crt = crt_gemm(&a, &b, &crt_cfg);
+            let c_sp = emulated_gemm(&a, &b, &OzakiConfig::new(7));
+            for (x, y) in c_crt.data.iter().zip(&c_sp.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "CRT vs slice-pair diverged: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_k_stays_accurate() {
+        let mut rng = Rng::new(903);
+        let (m, k, n) = (9, 100, 8);
+        let a = Matrix::uniform(m, k, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(k, n, -2.0, 2.0, &mut rng);
+        let cfg = CrtConfig::for_window(7, k).unwrap().with_k_chunk(17);
+        assert_eq!(cfg.k_chunk(), 17);
+        let c = crt_gemm(&a, &b, &cfg);
+        let rep = measure(&a, &b, &c);
+        assert!(passes_grade_a(&rep, k, 4.0), "chunked CRT broke the tolerance: {rep:?}");
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let cfg = CrtConfig::for_window(7, 4).unwrap();
+        let c = crt_gemm(&Matrix::zeros(0, 4), &Matrix::zeros(4, 3), &cfg);
+        assert_eq!((c.rows, c.cols), (0, 3));
+        let c = crt_gemm(&Matrix::zeros(2, 0), &Matrix::zeros(0, 3), &cfg);
+        assert_eq!((c.rows, c.cols), (2, 3));
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        // All-zero operands: residues stay zero, result is exact zero.
+        let c = crt_gemm(&Matrix::zeros(3, 5), &Matrix::zeros(5, 2), &cfg);
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+}

@@ -553,7 +553,7 @@ pub fn fused_band(
     let bb_max = kern.b_slice_bytes(FUSED_NC.min(n), k);
     assert!(ws.capacity() >= rows * FUSED_NC.min(n), "workspace too small for a band tile");
     let grew = ws.ensure_pack(s * ab, s * bb_max);
-    let Workspace { pbuf, hi, lo, apack, bpack } = ws;
+    let Workspace { pbuf, hi, lo, apack, bpack, rbuf: _ } = ws;
     let mut tally = FusedTally { pack_growths: grew as u64, ..FusedTally::default() };
     // Pack the band's A rows once — every column tile and every slice
     // pair below reads these panels.

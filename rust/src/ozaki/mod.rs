@@ -17,6 +17,11 @@
 //! * [`schedule`] — the precomputed per-level slice-pair schedule shared
 //!   by both drivers and the grouped pipeline.
 //! * [`recompose`] — scaled recombination of slice products back to FP64.
+//! * [`crt`] — the Ozaki-II/CRT scheme family: per-modulus residue GEMMs
+//!   on the same microkernels (one launch per modulus — linear, not
+//!   quadratic) with balanced-Garner CRT reconstruction.
+//! * [`scheme`] — the [`DecompositionScheme`] seam the coordinator uses
+//!   to pick slice-pair vs CRT per request.
 //!
 //! This native-Rust pipeline mirrors `python/compile/ozaki.py` formula for
 //! formula; the integration tests assert **bitwise identical** results
@@ -24,13 +29,16 @@
 //! native path as interchangeable dispatch targets.
 
 pub mod batched;
+pub mod crt;
 pub mod gemm;
 pub mod kernel;
 pub mod recompose;
 pub mod schedule;
+pub mod scheme;
 pub mod slicing;
 
 pub use batched::{gemm_grouped, GroupStats, GroupedProblem, OperandRole, SliceCache};
+pub use crt::{crt_gemm, crt_gemm_on, CrtBasis, CrtConfig, CRT_MODULI};
 pub use gemm::{
     emulated_gemm, emulated_gemm_on, emulated_gemm_with_breakdown,
     emulated_gemm_with_breakdown_on, fused_gemm, fused_gemm_on, slice_pair_gemm,
@@ -38,7 +46,8 @@ pub use gemm::{
 };
 pub use kernel::{KernelId, SliceKernel};
 pub use schedule::PairSchedule;
-pub use slicing::{slice_a, slice_b, SlicedMatrix};
+pub use scheme::{CrtScheme, DecompositionScheme, SchemeKind, SlicePairScheme};
+pub use slicing::{crt_slice_a, crt_slice_b, slice_a, slice_b, SlicedMatrix};
 
 /// Which slice encoding to use (§3 of the paper).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -1,0 +1,187 @@
+//! The decomposition-scheme seam: one trait over the two Ozaki families.
+//!
+//! Both schemes share everything upstream (ESC sizing, exception
+//! fallbacks, the per-row window placement, the `ozaki::kernel`
+//! microkernels, the workspace pool) and differ only in *what* integer
+//! GEMMs run and *how* their results recombine:
+//!
+//! * [`SlicePairScheme`] — Ozaki-I positional digits, `s(s+1)/2` pair
+//!   GEMMs under triangular truncation (`gemm::fused_gemm_on`);
+//! * [`CrtScheme`] — Ozaki-II residues, one GEMM per modulus with CRT
+//!   reconstruction (`crt::crt_gemm_on`), linear launch count for the
+//!   same window.
+//!
+//! `AdpEngine` resolves a [`SchemeKind`] per request (ESC-sized for both
+//! families from the same coarse bound, cost-compared by the heuristic)
+//! and dispatches emulation through [`DecompositionScheme`], so adding a
+//! third family is one more implementor, not a coordinator rewrite.
+
+use super::crt::{crt_gemm_on, CrtConfig};
+use super::gemm::fused_gemm_on;
+use super::{OzakiConfig, SliceEncoding};
+use crate::backend::{ComputeBackend, WorkspacePool};
+use crate::linalg::Matrix;
+
+/// Declarative scheme selection (plain data for configs/metrics/keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// Ozaki-I positional slice pairs (quadratic launch count).
+    SlicePair,
+    /// Ozaki-II modular/CRT residues (linear launch count).
+    Crt,
+}
+
+impl SchemeKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SchemeKind::SlicePair => "slice-pair",
+            SchemeKind::Crt => "crt",
+        }
+    }
+}
+
+/// A concrete, fully-parameterized decomposition scheme: everything the
+/// engine needs to run (and account for) one emulated GEMM.
+pub trait DecompositionScheme {
+    fn kind(&self) -> SchemeKind;
+
+    fn label(&self) -> &'static str {
+        self.kind().label()
+    }
+
+    /// Integer GEMM launches per k-chunk (the cost-model unit).
+    fn integer_gemms(&self) -> usize;
+
+    /// Effective mantissa bits of the scheme's window.
+    fn effective_bits(&self) -> i32;
+
+    /// Run the emulated GEMM on `backend`, drawing scratch from
+    /// `workspaces`.
+    fn gemm_on(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        backend: &dyn ComputeBackend,
+        workspaces: &WorkspacePool,
+    ) -> Matrix;
+}
+
+/// Ozaki-I slice pairs — the default family, valid for every window.
+#[derive(Clone, Copy, Debug)]
+pub struct SlicePairScheme {
+    pub cfg: OzakiConfig,
+}
+
+impl SlicePairScheme {
+    pub fn new(cfg: OzakiConfig) -> SlicePairScheme {
+        SlicePairScheme { cfg }
+    }
+}
+
+impl DecompositionScheme for SlicePairScheme {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::SlicePair
+    }
+
+    fn integer_gemms(&self) -> usize {
+        self.cfg.pair_count()
+    }
+
+    fn effective_bits(&self) -> i32 {
+        self.cfg.encoding.effective_bits(self.cfg.slices)
+    }
+
+    fn gemm_on(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        backend: &dyn ComputeBackend,
+        workspaces: &WorkspacePool,
+    ) -> Matrix {
+        fused_gemm_on(a, b, &self.cfg, backend, workspaces)
+    }
+}
+
+/// Ozaki-II/CRT — selectable whenever the window fits the modulus basis
+/// ([`CrtConfig::for_window`] returned `Some`).
+#[derive(Clone, Copy, Debug)]
+pub struct CrtScheme {
+    pub cfg: CrtConfig,
+}
+
+impl CrtScheme {
+    pub fn new(cfg: CrtConfig) -> CrtScheme {
+        CrtScheme { cfg }
+    }
+}
+
+impl DecompositionScheme for CrtScheme {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Crt
+    }
+
+    fn integer_gemms(&self) -> usize {
+        self.cfg.gemm_count()
+    }
+
+    fn effective_bits(&self) -> i32 {
+        // Same window as `s_eq` unsigned slices.
+        SliceEncoding::Unsigned.effective_bits(self.cfg.s_eq)
+    }
+
+    fn gemm_on(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        backend: &dyn ComputeBackend,
+        workspaces: &WorkspacePool,
+    ) -> Matrix {
+        crt_gemm_on(a, b, &self.cfg, backend, workspaces)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SerialBackend;
+    use crate::ozaki::gemm::K_CHUNK;
+    use crate::util::Rng;
+
+    #[test]
+    fn labels_and_counts() {
+        let sp = SlicePairScheme::new(OzakiConfig::new(7));
+        assert_eq!(sp.kind(), SchemeKind::SlicePair);
+        assert_eq!(sp.label(), "slice-pair");
+        assert_eq!(sp.integer_gemms(), 28);
+        assert_eq!(sp.effective_bits(), 54);
+        let crt = CrtScheme::new(CrtConfig::for_window(7, K_CHUNK).unwrap());
+        assert_eq!(crt.kind(), SchemeKind::Crt);
+        assert_eq!(crt.label(), "crt");
+        assert_eq!(crt.integer_gemms(), 17);
+        assert_eq!(crt.effective_bits(), 54);
+        assert!(crt.integer_gemms() < sp.integer_gemms());
+    }
+
+    #[test]
+    fn both_schemes_run_through_the_trait() {
+        let mut rng = Rng::new(905);
+        let a = Matrix::uniform(9, 14, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(14, 7, -2.0, 2.0, &mut rng);
+        let pool = WorkspacePool::new();
+        let schemes: [&dyn DecompositionScheme; 2] = [
+            &SlicePairScheme::new(OzakiConfig::new(7)),
+            &CrtScheme::new(CrtConfig::for_window(7, 14).unwrap()),
+        ];
+        let reference = crate::linalg::gemm::gemm(&a, &b);
+        for sch in schemes {
+            let c = sch.gemm_on(&a, &b, &SerialBackend, &pool);
+            for (x, y) in c.data.iter().zip(&reference.data) {
+                assert!(
+                    (x - y).abs() <= 1e-12 * y.abs().max(1.0),
+                    "{}: {x} vs {y}",
+                    sch.label()
+                );
+            }
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! same remap order) so the native path and the AOT artifacts produce
 //! bitwise-identical results.
 
+use super::crt::{center, CrtBasis};
 use super::SliceEncoding;
 use crate::linalg::Matrix;
 use crate::util::bits::{frexp_exponent, ldexp, ZERO_EXP};
@@ -190,6 +191,96 @@ fn slice_rows_impl<S: SliceSource>(a: &S, s: usize, encoding: SliceEncoding) -> 
     SlicedMatrix { s, rows: m, cols: k, sigma, data, encoding }
 }
 
+/// CRT residue planes of A's rows: plane `p` holds the centered residue
+/// `A_int[i][l] mod m_p` of the same fixed-point window integer the
+/// slice-pair path would decompose at `s_eq` unsigned slices (same sigma,
+/// same truncation — see [`window_value`]). Result is a [`SlicedMatrix`]
+/// with `s = basis.len()` so all kernel packing machinery applies
+/// unchanged; planes are *not* positional digits and must only meet the
+/// matching plane of the other operand.
+pub fn crt_slice_a(a: &Matrix, s_eq: usize, basis: &CrtBasis) -> SlicedMatrix {
+    crt_slice_impl(&RowMajor(a), s_eq, basis)
+}
+
+/// CRT residue planes of B's columns (stored as B^T, like [`slice_b`]).
+pub fn crt_slice_b(b: &Matrix, s_eq: usize, basis: &CrtBasis) -> SlicedMatrix {
+    crt_slice_impl(&Transposed(b), s_eq, basis)
+}
+
+fn crt_slice_impl<S: SliceSource>(a: &S, s_eq: usize, basis: &CrtBasis) -> SlicedMatrix {
+    let (m, k) = (a.rows(), a.cols());
+    let rb = 8i32; // the CRT window rides the unsigned 8-bit radix
+    assert!(
+        s_eq >= 1 && rb * (s_eq as i32 - 1) + 7 < 128,
+        "CRT window must fit the u128 integer path (s_eq={s_eq})"
+    );
+    let nm = basis.len();
+    let moduli = basis.moduli();
+    let mut sigma = vec![0i32; m];
+    let mut data = vec![0i8; nm * m * k];
+    // Residue weight of digit position t in modulus p:
+    // wpow[t*nm + p] = centered(2^(8*(s_eq-1-t)) mod m_p), |.| <= 128.
+    let mut wpow = vec![0i64; s_eq * nm];
+    for (p, &mp) in moduli.iter().enumerate() {
+        let mut w = 1i64; // 2^0, the weight of the last digit t = s_eq-1
+        for t in (0..s_eq).rev() {
+            wpow[t * nm + p] = center(w, mp);
+            w = (w << rb) % mp;
+        }
+    }
+    let mk = m * k;
+    let mask = (1u128 << rb) - 1;
+    let mut fields = vec![0i64; s_eq];
+    for i in 0..m {
+        // Identical per-row window placement to `slice_rows_impl` at
+        // (s_eq, Unsigned): same emax scan, same sigma formula.
+        let mut emax = ZERO_EXP;
+        for l in 0..k {
+            let e = frexp_exponent(a.at(i, l));
+            if e > emax {
+                emax = e;
+            }
+        }
+        let emax_safe = if emax == ZERO_EXP { 0 } else { emax };
+        let sig = rb * (s_eq as i32 - 1) + 6 - emax_safe;
+        sigma[i] = sig;
+        for j in 0..k {
+            let x = a.at(i, j);
+            if x == 0.0 {
+                continue; // residues stay zero
+            }
+            let (wv, neg) = window_value(x, sig);
+            if wv == 0 {
+                continue;
+            }
+            // Unsigned 8-bit fields of the window integer; the top field
+            // takes the whole head (< 2^6 by the window bound).
+            for (t, f) in fields.iter_mut().enumerate() {
+                let lo = rb * (s_eq as i32 - 1 - t as i32);
+                *f = ((wv >> lo) & mask) as i64;
+            }
+            fields[0] = (wv >> (rb * (s_eq as i32 - 1))) as i64;
+            // Sign *before* centering: centering the magnitude and then
+            // negating could produce -(-128) for m_0 = 256.
+            let sgn = if neg { -1i64 } else { 1 };
+            for (p, &mp) in moduli.iter().enumerate() {
+                // |acc| <= s_eq * 255 * 128 < 2^20: i64-exact.
+                let mut acc = 0i64;
+                for (t, &f) in fields.iter().enumerate() {
+                    acc += f * wpow[t * nm + p];
+                }
+                let r = center(sgn * acc, mp);
+                debug_assert!((-128..=127).contains(&r));
+                data[p * mk + i * k + j] = r as i8;
+            }
+        }
+    }
+    // Unsigned: the kernels' contract is "digits as stored"; centered
+    // residues use the full i8 range either way, and every SIMD kernel is
+    // oracle-tested exact on that full range.
+    SlicedMatrix { s: nm, rows: m, cols: k, sigma, data, encoding: SliceEncoding::Unsigned }
+}
+
 /// MSB-first digit extraction on the **magnitude**, sign applied by
 /// negating the digit vector (value-preserving). Exact in f64: each step
 /// strips a *leading* bit field of |v|'s 53-bit significand — extracting
@@ -202,6 +293,31 @@ fn slice_rows_impl<S: SliceSource>(a: &S, s: usize, encoding: SliceEncoding) -> 
 /// window ulp, toward zero) — asserted equivalent by unit test below.
 #[inline]
 fn extract_digits_int(x: f64, sig: i32, radix_bits: i32, s: usize, digits: &mut [i32]) {
+    let (wv, neg) = window_value(x, sig);
+    let mask = (1u128 << radix_bits) - 1;
+    for (t, d) in digits.iter_mut().enumerate() {
+        let lo = radix_bits * (s as i32 - 1 - t as i32);
+        *d = ((wv >> lo) & mask) as i32;
+    }
+    // Leading digit: everything above level 1 (< 2^6 by the window bound,
+    // so the rb-bit mask above was already wide enough; kept explicit).
+    digits[0] = (wv >> (radix_bits * (s as i32 - 1))) as i32;
+    if neg {
+        for d in digits.iter_mut() {
+            *d = -*d;
+        }
+    }
+}
+
+/// The fixed-point window integer of `x` at scale `sig`: the magnitude of
+/// `|x| * 2^sig` truncated toward zero at the window ulp, plus the sign.
+/// Shared normalization of the slice-pair digit extraction and the CRT
+/// residue extraction — both schemes see the *identical* window integer,
+/// which is what makes them agree exactly whenever no low bits are
+/// truncated. Valid while the window's top bit position fits u128 (the
+/// caller's `rb*(s-1)+7 < 128` gate).
+#[inline]
+pub(crate) fn window_value(x: f64, sig: i32) -> (u128, bool) {
     let bits = x.to_bits();
     let raw = ((bits >> 52) & 0x7FF) as i32;
     let mant_raw = bits & ((1u64 << 52) - 1);
@@ -222,19 +338,7 @@ fn extract_digits_int(x: f64, sig: i32, radix_bits: i32, s: usize, digits: &mut 
     } else {
         0
     };
-    let mask = (1u128 << radix_bits) - 1;
-    for (t, d) in digits.iter_mut().enumerate() {
-        let lo = radix_bits * (s as i32 - 1 - t as i32);
-        *d = ((wv >> lo) & mask) as i32;
-    }
-    // Leading digit: everything above level 1 (< 2^6 by the window bound,
-    // so the rb-bit mask above was already wide enough; kept explicit).
-    digits[0] = (wv >> (radix_bits * (s as i32 - 1))) as i32;
-    if x < 0.0 {
-        for d in digits.iter_mut() {
-            *d = -*d;
-        }
-    }
+    (wv, x < 0.0)
 }
 
 #[inline]

@@ -1,0 +1,193 @@
+//! Integration suite for the Ozaki-II/CRT scheme family.
+//!
+//! Mirrors the guarantees the slice-pair family already pins down:
+//!
+//! * FP64-level grading (Grade A, componentwise) on the Test 1/2/3
+//!   generator regimes when the ESC-sized window fits the modulus basis;
+//! * bitwise identity across backends, thread counts and forced
+//!   k-chunking (the modulus loop is exact integer work, so scheduling
+//!   cannot change a bit);
+//! * scheme equivalence: on integer inputs both families compute the
+//!   exact product, so CRT and slice pairs agree bitwise through two
+//!   completely different reconstruction paths;
+//! * the launch-count claim: one GEMM per modulus grows linearly in the
+//!   window while slice pairs grow quadratically.
+
+use adp_dgemm::backend::{ParallelBackend, SerialBackend, WorkspacePool};
+use adp_dgemm::esc::coarse_esc_gemm;
+use adp_dgemm::grading::generators::{test2_workload, tiny_corner_pair, uniform_pair};
+use adp_dgemm::grading::grade::{measure, passes_grade_a};
+use adp_dgemm::linalg::Matrix;
+use adp_dgemm::ozaki::gemm::K_CHUNK;
+use adp_dgemm::ozaki::{
+    crt_gemm, crt_gemm_on, fused_gemm_on, CrtConfig, OzakiConfig, SliceEncoding,
+};
+use adp_dgemm::util::{prop, Rng};
+
+// ---------------------------------------------------------------------
+// FP64 grading on the generator regimes
+// ---------------------------------------------------------------------
+
+/// ESC-size the window exactly like the coordinator, run the CRT family,
+/// and demand the componentwise Grade A tolerance — the same budget the
+/// slice-pair regime suite uses (`grouped_pipeline.rs`).
+fn check_crt_regime(a: &Matrix, b: &Matrix, what: &str) {
+    let esc = coarse_esc_gemm(a, b, 64);
+    let s_eq = SliceEncoding::Unsigned.slices_for_bits(53 + esc + 1);
+    let Some(cfg) = CrtConfig::for_window(s_eq, a.cols) else {
+        // Window exceeds the modulus basis: the coordinator runs slice
+        // pairs for such requests (covered by the grouped_pipeline
+        // regime suite), so there is nothing to grade here.
+        return;
+    };
+    assert!(
+        cfg.gemm_count() <= cfg.pair_gemm_count(),
+        "{what}: CRT must never launch more than the pair schedule"
+    );
+    let c = crt_gemm(a, b, &cfg);
+    let rep = measure(a, b, &c);
+    assert!(
+        passes_grade_a(&rep, a.cols.max(4), 4.0),
+        "{what}: CRT emulation broke the grading tolerance: {rep:?} \
+         (esc {esc}, s_eq {s_eq}, moduli {})",
+        cfg.gemm_count()
+    );
+}
+
+#[test]
+fn crt_grade_a_on_test1_regime() {
+    // Test 1's magnitude staircase: a tiny leading row of A / column of B.
+    let mut rng = Rng::new(811);
+    for delta_exp in [-10i32, -30, -50] {
+        let (a, b) = tiny_corner_pair(12, 2f64.powi(delta_exp), &mut rng);
+        check_crt_regime(&a, &b, &format!("test1 delta=2^{delta_exp}"));
+    }
+}
+
+#[test]
+fn crt_grade_a_on_test2_regime() {
+    // Test 2's cyclic-shift diagonal scaling (the Fig 2 workload).
+    let mut rng = Rng::new(812);
+    for span_b in [4i32, 10, 20] {
+        let w = test2_workload(16, span_b, &mut rng);
+        check_crt_regime(&w.a, &w.b, &format!("test2 b={span_b}"));
+    }
+}
+
+#[test]
+fn crt_grade_a_on_test3_regime() {
+    // Test 3 reuses the Test 2 construction at escalating spans, plus the
+    // uniform baseline.
+    let mut rng = Rng::new(813);
+    for span_b in [8i32, 24] {
+        let w = test2_workload(12, span_b, &mut rng);
+        check_crt_regime(&w.a, &w.b, &format!("test3 b={span_b}"));
+    }
+    let (a, b) = uniform_pair(16, -1.0, 1.0, &mut rng);
+    check_crt_regime(&a, &b, "uniform");
+}
+
+// ---------------------------------------------------------------------
+// Bitwise identity across backends, thread counts and chunking
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_crt_bitwise_identical_across_backends() {
+    let pool = WorkspacePool::new();
+    prop::check("crt serial == parallel (bitwise)", 12, |rng| {
+        let m = rng.int(1, 40) as usize;
+        let k = rng.int(1, 48) as usize;
+        let n = rng.int(1, 40) as usize;
+        let a = Matrix::uniform(m, k, -3.0, 3.0, rng);
+        let b = Matrix::uniform(k, n, -3.0, 3.0, rng);
+        let s_eq = rng.int(2, 9) as usize;
+        let mut cfg = CrtConfig::for_window(s_eq, k).expect("small windows always fit");
+        if rng.f64() < 0.4 {
+            // forced chunking: the FP64 chunk summation order is fixed,
+            // so bitwise identity must survive it too
+            cfg = cfg.with_k_chunk(rng.int(1, k as i64) as usize);
+        }
+        let c_ref = crt_gemm_on(&a, &b, &cfg, &SerialBackend, &pool);
+        for threads in [1usize, 2, 4] {
+            let par = ParallelBackend::new(threads).with_cutoff_ops(0);
+            let c = crt_gemm_on(&a, &b, &cfg, &par, &pool);
+            for (x, y) in c.data.iter().zip(&c_ref.data) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{threads} threads: {x} vs {y} (cfg {cfg:?})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Scheme equivalence on integer inputs
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_crt_matches_slice_pairs_exactly_on_integer_inputs() {
+    // On integer inputs the exact product is representable, both
+    // families' accumulators are exact, and the shared descale pass is a
+    // power-of-two multiply — so Garner reconstruction and compensated
+    // pair recomposition must land on the *same bits*, and both on the
+    // exact integer product.
+    let pool = WorkspacePool::new();
+    prop::check("crt == slice-pair == exact (integer inputs)", 12, |rng| {
+        let m = rng.int(1, 24) as usize;
+        let k = rng.int(1, 48) as usize;
+        let n = rng.int(1, 24) as usize;
+        let mut a = Matrix::uniform(m, k, -512.0, 512.0, rng);
+        let mut b = Matrix::uniform(k, n, -512.0, 512.0, rng);
+        for x in a.data.iter_mut().chain(b.data.iter_mut()) {
+            *x = x.round();
+        }
+        let mut exact = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc: i64 = 0;
+                for l in 0..k {
+                    acc += (a.at(i, l) as i64) * (b.at(l, j) as i64);
+                }
+                *exact.at_mut(i, j) = acc as f64; // |acc| <= 48*2^18 << 2^53
+            }
+        }
+        let s = rng.int(3, 8) as usize;
+        let ccfg = CrtConfig::for_window(s, k).expect("small windows always fit");
+        let c_crt = crt_gemm_on(&a, &b, &ccfg, &SerialBackend, &pool);
+        let c_sp = fused_gemm_on(&a, &b, &OzakiConfig::new(s), &SerialBackend, &pool);
+        for idx in 0..exact.data.len() {
+            let (e, xc, xs) = (exact.data[idx], c_crt.data[idx], c_sp.data[idx]);
+            if xc.to_bits() != e.to_bits() {
+                return Err(format!("crt {xc} != exact {e} (s {s})"));
+            }
+            if xs.to_bits() != e.to_bits() {
+                return Err(format!("slice-pair {xs} != exact {e} (s {s})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Launch-count claim: linear in the window vs quadratic
+// ---------------------------------------------------------------------
+
+#[test]
+fn linear_launches_beat_quadratic_pairs() {
+    // The paper-level claim behind the scheme family: at the deployment
+    // chunk bound a 7-slice window costs 17 modular GEMMs against 28
+    // slice pairs, and the gap only widens with the window.
+    let cfg7 = CrtConfig::for_window(7, K_CHUNK).unwrap();
+    assert_eq!(cfg7.gemm_count(), 17);
+    assert_eq!(cfg7.pair_gemm_count(), 28);
+    for s_eq in 5..=12 {
+        let cfg = CrtConfig::for_window(s_eq, K_CHUNK).unwrap();
+        assert!(
+            cfg.gemm_count() < cfg.pair_gemm_count(),
+            "s_eq={s_eq}: {} moduli vs {} pairs",
+            cfg.gemm_count(),
+            cfg.pair_gemm_count()
+        );
+    }
+}

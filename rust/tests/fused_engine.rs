@@ -13,7 +13,7 @@ use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
 use adp_dgemm::linalg::Matrix;
 use adp_dgemm::ozaki::{
     emulated_gemm_on, fused_gemm_on, gemm_grouped, GroupedProblem, OzakiConfig, PairSchedule,
-    SliceCache, SliceEncoding, FUSED_MC, FUSED_NC,
+    SchemeKind, SliceCache, SliceEncoding, FUSED_MC, FUSED_NC,
 };
 use adp_dgemm::util::{prop, Rng};
 use adp_dgemm::{AdpConfig, AdpEngine};
@@ -125,8 +125,10 @@ fn prop_grouped_pipeline_matches_fused_oracle() {
                 cfg,
             ));
         }
-        let probs: Vec<GroupedProblem<'_>> =
-            mats.iter().map(|(a, b, cfg)| GroupedProblem { a, b, cfg: *cfg }).collect();
+        let probs: Vec<GroupedProblem<'_>> = mats
+            .iter()
+            .map(|(a, b, cfg)| GroupedProblem { a, b, cfg: *cfg, scheme: SchemeKind::SlicePair })
+            .collect();
         // The oracle is backend-independent: compute it once per problem.
         let oracles: Vec<Matrix> =
             mats.iter().map(|(a, b, cfg)| emulated_gemm_on(a, b, cfg, &SerialBackend)).collect();
