@@ -19,7 +19,8 @@ use adp_dgemm::ozaki::gemm::slice_pair_gemm_tile_on;
 use adp_dgemm::ozaki::kernel::{self, ScalarKernel};
 use adp_dgemm::ozaki::{
     emulated_gemm_on, emulated_gemm_with_breakdown, fused_gemm_on, gemm_grouped, slice_a,
-    slice_b, slice_pair_gemm, GroupedProblem, OzakiConfig, SchemeKind, SliceCache, SliceEncoding,
+    slice_b, slice_pair_gemm, tune, GroupedProblem, OzakiConfig, SchemeKind, SliceCache,
+    SliceEncoding,
 };
 use adp_dgemm::runtime::RuntimeHandle;
 use adp_dgemm::util::{benchkit, Rng};
@@ -33,6 +34,13 @@ fn main() {
 
     println!("# perf_hotpath n={n} s={s} (stage benches single-thread; backend ablation below)");
 
+    // Machine-readable twin of the report lines: per-arm ns/flop (or
+    // ns/MAC for the integer-kernel arms), written to BENCH_hotpath.json
+    // at the end so CI can archive and diff the numbers.
+    let mut json = benchkit::JsonReport::new();
+    let flops = 2.0 * (n * n * n) as f64;
+    let macs = (n * n * n) as f64;
+
     // --- L3 native fp64 GEMM baseline -------------------------------
     let st_fp64 = benchkit::bench_budget(1.0, || gemm(&a, &b));
     benchkit::report(
@@ -40,6 +48,7 @@ fn main() {
         st_fp64,
         &[("GFLOP/s", format!("{:.2}", st_fp64.per_sec(2.0 * (n * n * n) as f64) / 1e9))],
     );
+    json.arm("fp64_gemm", st_fp64, flops, &[("unit", "flop".to_string())]);
 
     // --- slicing ------------------------------------------------------
     let st = benchkit::bench_budget(1.0, || slice_a(&a, s, SliceEncoding::Unsigned));
@@ -85,6 +94,12 @@ fn main() {
             st,
             &[("GMAC/s", format!("{:.2}", st.per_sec((n * n * n) as f64) / 1e9))],
         );
+        json.arm(
+            &format!("pair_gemm[{}]", kern.id().label()),
+            st,
+            macs,
+            &[("unit", "mac".to_string()), ("kernel", kern.id().label().to_string())],
+        );
     }
     {
         // packed vs unpacked pair sweep: all pairs of the s=7 schedule.
@@ -101,6 +116,12 @@ fn main() {
             "pair_sweep[scalar unpacked]",
             st_unp,
             &[("GMAC/s", format!("{:.2}", st_unp.per_sec((npairs * n * n * n) as f64) / 1e9))],
+        );
+        json.arm(
+            "pair_sweep[scalar unpacked]",
+            st_unp,
+            (npairs * n * n * n) as f64,
+            &[("unit", "mac".to_string()), ("kernel", "scalar".to_string())],
         );
         for kern in kernel::available_kernels() {
             let mut apack = vec![0u8; s * kern.a_slice_bytes(n, n)];
@@ -126,6 +147,12 @@ fn main() {
                     ("vs scalar unpacked", format!("{:.2}x", st_unp.median_s / st.median_s)),
                 ],
             );
+            json.arm(
+                &format!("pair_sweep[{} packed]", kern.id().label()),
+                st,
+                (npairs * n * n * n) as f64,
+                &[("unit", "mac".to_string()), ("kernel", kern.id().label().to_string())],
+            );
         }
     }
 
@@ -146,8 +173,24 @@ fn main() {
     let threads = parallel.threads();
     let st_ser = benchkit::bench_budget(2.0, || emulated_gemm_on(&a, &b, &cfg, &SerialBackend));
     benchkit::report("emulated_gemm(serial)", st_ser, &[]);
+    json.arm(
+        "emulated_gemm(serial)",
+        st_ser,
+        flops,
+        &[("unit", "flop".to_string()), ("engine", "level-major".to_string())],
+    );
     let st_par = benchkit::bench_budget(2.0, || emulated_gemm_on(&a, &b, &cfg, &parallel));
     benchkit::report("emulated_gemm(parallel)", st_par, &[("threads", threads.to_string())]);
+    json.arm(
+        "emulated_gemm(parallel)",
+        st_par,
+        flops,
+        &[
+            ("unit", "flop".to_string()),
+            ("engine", "level-major".to_string()),
+            ("threads", threads.to_string()),
+        ],
+    );
     println!(
         "emulated_gemm backend speedup: {:.2}x over serial (n={n}, s={s}, {threads} threads)",
         st_ser.median_s / st_par.median_s
@@ -155,11 +198,23 @@ fn main() {
 
     // --- fused tile engine vs level-major, both backends ----------------
     let wpool = WorkspacePool::new();
+    let dispatched = kernel::active_id(SliceEncoding::Unsigned);
     let st_fser = benchkit::bench_budget(2.0, || fused_gemm_on(&a, &b, &cfg, &SerialBackend, &wpool));
     benchkit::report(
         "fused_gemm(serial)",
         st_fser,
         &[("vs level-major", format!("{:.2}x", st_ser.median_s / st_fser.median_s))],
+    );
+    json.arm(
+        "fused_gemm(serial)",
+        st_fser,
+        flops,
+        &[
+            ("unit", "flop".to_string()),
+            ("engine", "fused".to_string()),
+            ("kernel", dispatched.label().to_string()),
+            ("tile", tune::tile_shape_for(dispatched, n, n).label()),
+        ],
     );
     let st_fus_par = benchkit::bench_budget(2.0, || fused_gemm_on(&a, &b, &cfg, &parallel, &wpool));
     benchkit::report(
@@ -170,11 +225,53 @@ fn main() {
             ("vs level-major", format!("{:.2}x", st_par.median_s / st_fus_par.median_s)),
         ],
     );
+    json.arm(
+        "fused_gemm(parallel)",
+        st_fus_par,
+        flops,
+        &[
+            ("unit", "flop".to_string()),
+            ("engine", "fused".to_string()),
+            ("kernel", dispatched.label().to_string()),
+            ("tile", tune::tile_shape_for(dispatched, n, n).label()),
+            ("threads", threads.to_string()),
+        ],
+    );
     let ws = wpool.stats();
     println!(
         "fused engine: {} tiles, {} checkouts, {} fresh allocations (steady state reuses)",
         ws.fused_tiles, ws.checkouts, ws.fresh_allocs
     );
+
+    // --- tile-geometry ablation: every candidate shape, tuned marked ----
+    // The autotuner's acceptance bar lives here: the `tuned=true` arm
+    // must not be slower than the `64x64` baseline arm (same serial
+    // fused engine, same dispatched kernel, only the geometry pinned).
+    {
+        let tuned = tune::tile_shape_for(dispatched, n, n);
+        let spool = WorkspacePool::new();
+        let mut baseline_s = f64::NAN;
+        for shape in tune::CANDIDATES {
+            tune::force_shape(Some(shape));
+            let st =
+                benchkit::bench_budget(1.0, || fused_gemm_on(&a, &b, &cfg, &SerialBackend, &spool));
+            if shape == tune::TileShape::BASELINE {
+                baseline_s = st.median_s;
+            }
+            let extra = [
+                ("unit", "flop".to_string()),
+                ("engine", "fused".to_string()),
+                ("kernel", dispatched.label().to_string()),
+                ("tile", shape.label()),
+                ("tuned", (shape == tuned).to_string()),
+                ("vs baseline", format!("{:.2}x", baseline_s / st.median_s)),
+            ];
+            benchkit::report(&format!("fused_tile[{}]", shape.label()), st, &extra);
+            json.arm(&format!("fused_tile[{}]", shape.label()), st, flops, &extra);
+        }
+        tune::force_shape(None);
+        println!("# autotuned tile for {} at n={n}: {}", dispatched.label(), tuned.label());
+    }
     let st_fpar = benchkit::bench_budget(1.0, || parallel.fp64_gemm(&a, &b));
     benchkit::report(
         "fp64_gemm(parallel)",
@@ -246,5 +343,17 @@ fn main() {
         }
     } else {
         println!("artifact path: skipped (run `make artifacts`)");
+    }
+
+    // --- machine-readable artifact ---------------------------------------
+    let ctx = [
+        ("n", n.to_string()),
+        ("s", s.to_string()),
+        ("threads", threads.to_string()),
+        ("dispatched_kernel", kernel::active_id(SliceEncoding::Unsigned).label().to_string()),
+    ];
+    match json.write("BENCH_hotpath.json", "perf_hotpath", &ctx) {
+        Ok(()) => println!("# wrote BENCH_hotpath.json ({} arms)", json.len()),
+        Err(e) => eprintln!("# BENCH_hotpath.json not written: {e}"),
     }
 }

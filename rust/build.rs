@@ -1,0 +1,39 @@
+//! Toolchain probe for the AVX-512 kernel tier.
+//!
+//! The AVX-512 intrinsics (`_mm512_dpbusd_epi32`, `_mm512_madd_epi16`,
+//! the 512-bit loads/stores) stabilized in Rust 1.89. The crate supports
+//! older toolchains, so `ozaki::kernel::avx512` is compiled only when the
+//! building rustc is new enough, signalled through the custom
+//! `adp_avx512` cfg. On toolchains that understand `--check-cfg`
+//! (>= 1.80) the cfg is also declared, keeping
+//! `clippy -D warnings` (`unexpected_cfgs`) green whether or not the
+//! module is compiled in.
+
+use std::env;
+use std::process::Command;
+
+/// `(major, minor)` of the rustc driving this build, or `None` when the
+/// version string is unparseable (pre-release channels still match the
+/// leading `major.minor` digits).
+fn rustc_version() -> Option<(u32, u32)> {
+    let rustc = env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-07-01)" -> ["rustc", "1.89.0", ...]
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(['.', '-']);
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let ver = rustc_version();
+    if ver.is_some_and(|(maj, min)| (maj, min) >= (1, 80)) {
+        println!("cargo:rustc-check-cfg=cfg(adp_avx512)");
+    }
+    if ver.is_some_and(|(maj, min)| (maj, min) >= (1, 89)) {
+        println!("cargo:rustc-cfg=adp_avx512");
+    }
+}

@@ -11,8 +11,8 @@
 //!   independent of how many pairs the level has (even the single-pair
 //!   level q = 0 scales across rows).
 //! * **Fused tile bands** — the fused engine's row bands of output tiles
-//!   (FUSED_MC rows, shrunk for wide flat outputs so m <= FUSED_MC still
-//!   fans out) drain through one work-stealing queue: a single parallel
+//!   (the autotuned tile height, shrunk for wide flat outputs so short
+//!   matrices still fan out) drain through one work-stealing queue: a single parallel
 //!   region per emulated GEMM instead of one barrier per weight level,
 //!   each thread owning one pooled workspace (tile accumulators *and*
 //!   the `ozaki::kernel` packed-panel scratch) for its whole run, on the
@@ -38,9 +38,10 @@ use crate::linalg::Matrix;
 use crate::ozaki::crt::{crt_band, crt_tile_gemm_serial};
 use crate::ozaki::gemm::{
     fused_band, fused_tile_gemm_serial, slice_pair_gemm_rows, slice_pairs_rows_on_packed,
-    FusedTally, PackedBSlices, FUSED_MC, FUSED_WS_ELEMS,
+    FusedTally, PackedBSlices,
 };
 use crate::ozaki::kernel::{self, KernelId};
+use crate::ozaki::tune;
 use crate::ozaki::{CrtBasis, PairSchedule, SlicedMatrix};
 
 /// Row-chunks per pool thread when splitting a slice-pair batch: >1 so the
@@ -236,15 +237,18 @@ impl ComputeBackend for ParallelBackend {
         // per weight level): row bands of C — contiguous, disjoint `&mut`
         // slices — drain through a work-stealing queue, each band running
         // its column tiles left to right. Every thread owns one pooled
-        // workspace for its entire run. Band height is FUSED_MC, shrunk
-        // when the row count alone cannot feed the pool (wide, flat
-        // outputs: m <= FUSED_MC must still fan out). Tiles write
+        // workspace for its entire run. Band height is the autotuned
+        // tile height, shrunk when the row count alone cannot feed the
+        // pool (wide, flat outputs must still fan out). Tiles write
         // disjoint output elements and every element's arithmetic is
-        // independent of the tile partition, so any band height and any
-        // band-to-thread assignment is bitwise identical to
+        // independent of the tile partition, so any band height, tile
+        // geometry and band-to-thread assignment is bitwise identical to
         // `fused_tile_gemm_serial`.
         let kern = kernel::active(a.encoding);
-        let band_rows = m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).clamp(2, FUSED_MC);
+        let shape = tune::tile_shape_for(kern.id(), m, n);
+        workspaces.record_dispatch(kern.id(), Some(shape));
+        let band_rows =
+            m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).max(2).min(shape.mc).max(1);
         let mut bands: Vec<(usize, &mut [f64])> = Vec::new();
         for (bi, band) in c.data.chunks_mut(band_rows * n).enumerate() {
             bands.push((bi * band_rows, band));
@@ -253,12 +257,12 @@ impl ComputeBackend for ParallelBackend {
         let queue = Mutex::new(bands);
         let tally = Mutex::new(FusedTally::default());
         self.pool.run_n(max_helpers, || {
-            let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+            let mut ws = workspaces.checkout(shape.elems());
             let mut local = FusedTally::default();
             loop {
                 let next = queue.lock().unwrap().pop();
                 let Some((row0, band)) = next else { break };
-                local.merge(fused_band(kern, a, b, schedule, row0, &mut ws, band));
+                local.merge(fused_band(kern, a, b, schedule, row0, shape, &mut ws, band));
             }
             tally.lock().unwrap().merge(local);
         });
@@ -291,7 +295,10 @@ impl ComputeBackend for ParallelBackend {
         // per-element Garner/descale tail are all independent of the band
         // partition, so any assignment is bitwise identical to serial.
         let kern = kernel::active(a.encoding);
-        let band_rows = m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).clamp(2, FUSED_MC);
+        let shape = tune::tile_shape_for(kern.id(), m, n);
+        workspaces.record_dispatch(kern.id(), Some(shape));
+        let band_rows =
+            m.div_ceil(self.pool.threads() * CHUNKS_PER_THREAD).max(2).min(shape.mc).max(1);
         let mut bands: Vec<(usize, &mut [f64])> = Vec::new();
         for (bi, band) in c.data.chunks_mut(band_rows * n).enumerate() {
             bands.push((bi * band_rows, band));
@@ -300,12 +307,12 @@ impl ComputeBackend for ParallelBackend {
         let queue = Mutex::new(bands);
         let tally = Mutex::new(FusedTally::default());
         self.pool.run_n(max_helpers, || {
-            let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+            let mut ws = workspaces.checkout(shape.elems());
             let mut local = FusedTally::default();
             loop {
                 let next = queue.lock().unwrap().pop();
                 let Some((row0, band)) = next else { break };
-                local.merge(crt_band(kern, a, b, basis, row0, &mut ws, band));
+                local.merge(crt_band(kern, a, b, basis, row0, shape, &mut ws, band));
             }
             tally.lock().unwrap().merge(local);
         });

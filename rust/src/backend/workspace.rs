@@ -21,6 +21,9 @@ use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::ozaki::kernel::KernelId;
+use crate::ozaki::tune::TileShape;
+
 /// One reusable scratch set. Buffers are handed out **dirty** (whatever
 /// the previous user left); every consumer fully initializes the prefix
 /// it uses (`fill(0)` / full overwrite) before reading.
@@ -123,6 +126,15 @@ pub struct WorkspaceStats {
     /// `s(s+1)/2 - 1` pair calls after the first of every fused tile).
     /// Nonzero means the pack cost really is amortized across pairs.
     pub panel_reuses: u64,
+    /// `KernelId::label()` of the most recently dispatched slice-pair
+    /// kernel — what actually ran, on every path (fused, grouped, CRT),
+    /// not what a planner chose. `""` before the first dispatch.
+    pub kernel: &'static str,
+    /// Tile height of the most recent fused dispatch (0 = none yet, or a
+    /// level-major run with no tile geometry).
+    pub tile_mc: usize,
+    /// Tile width of the most recent fused dispatch (0 = see `tile_mc`).
+    pub tile_nc: usize,
 }
 
 /// Thread-safe pool of [`Workspace`]s; share one per service via `Arc`.
@@ -137,6 +149,9 @@ pub struct WorkspacePool {
     fused_tiles: AtomicU64,
     panel_packs: AtomicU64,
     panel_reuses: AtomicU64,
+    /// Last dispatched (kernel label, tile mc, tile nc); see
+    /// [`WorkspacePool::record_dispatch`].
+    dispatch: Mutex<(&'static str, usize, usize)>,
 }
 
 impl WorkspacePool {
@@ -148,6 +163,7 @@ impl WorkspacePool {
             fused_tiles: AtomicU64::new(0),
             panel_packs: AtomicU64::new(0),
             panel_reuses: AtomicU64::new(0),
+            dispatch: Mutex::new(("", 0, 0)),
         }
     }
 
@@ -220,14 +236,30 @@ impl WorkspacePool {
         self.fresh_allocs.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record what a GEMM dispatch actually ran: the dispatched kernel
+    /// and, for tile-engine paths, the (possibly autotuned) tile
+    /// geometry. Every driver calls this at dispatch time — serial and
+    /// parallel fused engines, the CRT planes, the grouped pipeline —
+    /// so `coordinator::Metrics` reports the kernel that executed, not
+    /// the one a planner intended. Level-major runs pass `None` (no
+    /// tile geometry).
+    pub fn record_dispatch(&self, kern: KernelId, shape: Option<TileShape>) {
+        let (mc, nc) = shape.map_or((0, 0), |s| (s.mc, s.nc));
+        *self.dispatch.lock().unwrap() = (kern.label(), mc, nc);
+    }
+
     /// Lifetime totals (see [`WorkspaceStats`]).
     pub fn stats(&self) -> WorkspaceStats {
+        let (kernel, tile_mc, tile_nc) = *self.dispatch.lock().unwrap();
         WorkspaceStats {
             checkouts: self.checkouts.load(Ordering::Relaxed),
             fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
             fused_tiles: self.fused_tiles.load(Ordering::Relaxed),
             panel_packs: self.panel_packs.load(Ordering::Relaxed),
             panel_reuses: self.panel_reuses.load(Ordering::Relaxed),
+            kernel,
+            tile_mc,
+            tile_nc,
         }
     }
 
@@ -377,6 +409,20 @@ mod tests {
         pool.record_panels(3, 27);
         let st = pool.stats();
         assert_eq!((st.panel_packs, st.panel_reuses), (5, 54));
+    }
+
+    #[test]
+    fn dispatch_gauge_surfaces_kernel_and_tile_shape() {
+        let pool = WorkspacePool::new();
+        let st = pool.stats();
+        assert_eq!((st.kernel, st.tile_mc, st.tile_nc), ("", 0, 0), "blank before any dispatch");
+        pool.record_dispatch(KernelId::Scalar, Some(TileShape { mc: 64, nc: 128 }));
+        let st = pool.stats();
+        assert_eq!((st.kernel, st.tile_mc, st.tile_nc), ("scalar", 64, 128));
+        // A level-major dispatch keeps the kernel but clears the geometry.
+        pool.record_dispatch(KernelId::Scalar, None);
+        let st = pool.stats();
+        assert_eq!((st.kernel, st.tile_mc, st.tile_nc), ("scalar", 0, 0));
     }
 
     #[test]

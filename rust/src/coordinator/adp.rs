@@ -475,20 +475,13 @@ impl AdpEngine {
         let outcome = AdpOutcome { decision, esc, slices_required, guardrail_s, exec_s };
         self.metrics.record(&outcome);
         // Refresh the workspace-pool gauges (pool lifetime totals) so
-        // snapshots expose checkout/fresh-allocation/fused-tile counts
-        // and the packed-panel amortization counters.
+        // snapshots expose checkout/fresh-allocation/fused-tile counts,
+        // the packed-panel amortization counters, and the dispatch gauge
+        // — the kernel and tile geometry the drivers actually executed
+        // (every tile-engine path stamps it, including grouped rounds
+        // and the CRT planes; artifact dispatch and FP64 fallbacks never
+        // touch the kernel layer and leave it unchanged).
         self.metrics.sync_workspace(self.cfg.workspace_pool.stats());
-        // Native emulation ran on the runtime-dispatched slice-pair
-        // kernel — the CRT family reuses the same microkernels; expose
-        // which one as a gauge (artifact dispatch and FP64 fallbacks
-        // never touch the kernel layer).
-        if matches!(
-            outcome.decision,
-            GemmDecision::EmulatedNative { .. } | GemmDecision::EmulatedCrt { .. }
-        ) {
-            self.metrics
-                .record_kernel(crate::ozaki::kernel::active_id(self.cfg.encoding).label());
-        }
         (c, outcome)
     }
 }
@@ -749,6 +742,10 @@ mod tests {
             snap.kernel,
             crate::ozaki::kernel::active_id(SliceEncoding::Unsigned).label(),
             "metrics must report the dispatched kernel id"
+        );
+        assert!(
+            snap.tile_mc > 0 && snap.tile_nc > 0,
+            "fused dispatch must report its tile geometry: {snap:?}"
         );
         assert!(snap.fused_tiles >= 2, "both requests run the fused engine: {snap:?}");
         // One B pack per tile plus at least one A-band pack per run.

@@ -183,7 +183,17 @@ impl CpuCalibration {
 
         let cfg = OzakiConfig::new(7);
         let (_, bd) = emulated_gemm_with_breakdown(&a, &b, &cfg);
-        let pair_ns = sane(bd.gemm_s * 1e9 / (cfg.pair_count() as f64 * ops), MIN_NS);
+        let mut pair_ns = sane(bd.gemm_s * 1e9 / (cfg.pair_count() as f64 * ops), MIN_NS);
+        // The emulated run above dispatched the tile autotuner, whose
+        // probe times the dispatched kernel's fused path at the tuned
+        // geometry (same ns-per-MAC unit). Prefer that figure when it
+        // exists: the decision layer then prices the kernel and tile
+        // shape that will actually run, not this one 96^3 sample.
+        if let Some(t) =
+            crate::ozaki::tune::measured_pair_ns(crate::ozaki::kernel::active_id(cfg.encoding))
+        {
+            pair_ns = sane(t, MIN_NS);
+        }
         let slice_ns = sane(bd.slice_s * 1e9 / (7.0 * 2.0 * (n * n) as f64), MIN_NS);
 
         // CRT arm: time the whole CRT GEMM at the same window and

@@ -36,6 +36,8 @@ struct Inner {
     panel_packs: u64,
     panel_reuses: u64,
     kernel: &'static str,
+    tile_mc: usize,
+    tile_nc: usize,
 }
 
 /// Immutable snapshot of the counters.
@@ -86,10 +88,19 @@ pub struct MetricsSnapshot {
     /// (`s(s+1)/2 - 1` per fused tile): the packed-panel amortization
     /// criterion, asserted by a counter test.
     pub panel_reuses: u64,
-    /// Label of the slice-pair kernel the runtime dispatch selected for
-    /// the last native emulated request (`""` until one ran) — e.g.
-    /// `"avx2-maddubs"`, or `"scalar"` under `ADP_FORCE_SCALAR=1`.
+    /// Label of the slice-pair kernel that **actually executed** the last
+    /// dispatch (`""` until one ran) — e.g. `"avx512-vnni"`, or
+    /// `"scalar"` under `ADP_FORCE_SCALAR=1`. Read from the workspace
+    /// pool's dispatch gauge, which every tile-engine driver (serial,
+    /// parallel, CRT planes, grouped rounds) stamps at dispatch time, so
+    /// it reflects what ran on every path — not what a planner chose.
     pub kernel: &'static str,
+    /// Tile height of the last fused dispatch — the (possibly autotuned)
+    /// geometry that actually ran. 0 until a tile-engine dispatch, or
+    /// when the last dispatch was level-major (no tile geometry).
+    pub tile_mc: usize,
+    /// Tile width of the last fused dispatch (0 = see `tile_mc`).
+    pub tile_nc: usize,
 }
 
 impl MetricsSnapshot {
@@ -167,12 +178,15 @@ impl Metrics {
         g.fused_tiles = g.fused_tiles.max(stats.fused_tiles);
         g.panel_packs = g.panel_packs.max(stats.panel_packs);
         g.panel_reuses = g.panel_reuses.max(stats.panel_reuses);
-    }
-
-    /// Record which slice-pair kernel the runtime dispatch selected (the
-    /// dispatched-kernel gauge; recorded per native emulated request).
-    pub fn record_kernel(&self, label: &'static str) {
-        self.inner.lock().unwrap().kernel = label;
+        // The pool's dispatch gauge is stamped by the driver that ran
+        // (fused serial/parallel, CRT planes, grouped rounds), so this
+        // reports the executed kernel and tile geometry on every path —
+        // not merely the engine's planned choice.
+        if !stats.kernel.is_empty() {
+            g.kernel = stats.kernel;
+            g.tile_mc = stats.tile_mc;
+            g.tile_nc = stats.tile_nc;
+        }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -200,6 +214,8 @@ impl Metrics {
             panel_packs: g.panel_packs,
             panel_reuses: g.panel_reuses,
             kernel: g.kernel,
+            tile_mc: g.tile_mc,
+            tile_nc: g.tile_nc,
         }
     }
 
@@ -265,6 +281,7 @@ mod tests {
             fused_tiles: 9,
             panel_packs: 18,
             panel_reuses: 243,
+            ..Default::default()
         });
         // A stale (smaller) sync from a racing worker must not regress.
         m.sync_workspace(WorkspaceStats {
@@ -273,6 +290,7 @@ mod tests {
             fused_tiles: 5,
             panel_packs: 10,
             panel_reuses: 100,
+            ..Default::default()
         });
         let s = m.snapshot();
         assert_eq!((s.workspace_checkouts, s.workspace_fresh, s.fused_tiles), (4, 2, 9));
@@ -283,6 +301,7 @@ mod tests {
             fused_tiles: 20,
             panel_packs: 40,
             panel_reuses: 540,
+            ..Default::default()
         });
         let s = m.snapshot();
         assert_eq!((s.workspace_checkouts, s.workspace_fresh, s.fused_tiles), (10, 2, 20));
@@ -290,13 +309,25 @@ mod tests {
     }
 
     #[test]
-    fn kernel_gauge_records_last_dispatch() {
+    fn kernel_gauge_reports_the_executed_dispatch() {
         let m = Metrics::default();
         assert_eq!(m.snapshot().kernel, "", "no kernel before the first emulated request");
-        m.record_kernel("avx2-maddubs");
-        assert_eq!(m.snapshot().kernel, "avx2-maddubs");
-        m.record_kernel("scalar");
-        assert_eq!(m.snapshot().kernel, "scalar");
+        // A sync with no dispatch stamped must not disturb the gauge.
+        m.sync_workspace(WorkspaceStats { checkouts: 1, ..Default::default() });
+        assert_eq!(m.snapshot().kernel, "");
+        // A fused dispatch carries kernel + tuned tile geometry.
+        m.sync_workspace(WorkspaceStats {
+            kernel: "avx512-vnni",
+            tile_mc: 64,
+            tile_nc: 128,
+            ..Default::default()
+        });
+        let s = m.snapshot();
+        assert_eq!((s.kernel, s.tile_mc, s.tile_nc), ("avx512-vnni", 64, 128));
+        // A level-major dispatch reports the kernel with no geometry.
+        m.sync_workspace(WorkspaceStats { kernel: "scalar", ..Default::default() });
+        let s = m.snapshot();
+        assert_eq!((s.kernel, s.tile_mc, s.tile_nc), ("scalar", 0, 0));
         m.reset();
         assert_eq!(m.snapshot().kernel, "");
     }

@@ -6,6 +6,8 @@
 //!   serve  --requests R [..]     batched service demo (latency/throughput)
 //!   grade  --impl I --n N        grading-test verdict for implementation I
 //!   qr     --n N [..]            ADP-backed blocked QR demo
+//!   kernels                      slice-pair kernel tiers on this host
+//!   tune-probe [--kernel K ..]   resolve the tile autotuner (probe/cache)
 //!
 //! `gemm`, `serve` and `qr` accept `--compute serial|parallel|parallel:N`
 //! to pick the compute backend (default: machine-sized parallel; results
@@ -25,7 +27,9 @@ use adp_dgemm::coordinator::heuristic::{AlwaysEmulate, CpuCalibration};
 use adp_dgemm::coordinator::{AdpConfig, AdpEngine, GemmService, ServiceConfig};
 use adp_dgemm::grading::{self, generators};
 use adp_dgemm::linalg::{blocked_qr, gemm, strassen, Matrix, NativeGemm};
-use adp_dgemm::ozaki::{emulated_gemm, OzakiConfig};
+use adp_dgemm::ozaki::{
+    emulated_gemm, kernel, tune, KernelId, OzakiConfig, ShapeBucket, SliceEncoding,
+};
 use adp_dgemm::perfmodel::{GB200, RTX_PRO_6000};
 use adp_dgemm::runtime::RuntimeHandle;
 use adp_dgemm::util::Rng;
@@ -90,9 +94,11 @@ fn main() {
         "serve" => cmd_serve(&args),
         "grade" => cmd_grade(&args),
         "qr" => cmd_qr(&args),
+        "kernels" => cmd_kernels(),
+        "tune-probe" => cmd_tune_probe(&args),
         _ => {
             println!(
-                "usage: adp <info|gemm|serve|grade|qr> [--key value ...]\n\
+                "usage: adp <info|gemm|serve|grade|qr|kernels|tune-probe> [--key value ...]\n\
                  see rust/src/main.rs header for options"
             );
         }
@@ -228,15 +234,73 @@ fn cmd_serve(args: &Args) {
         snap.coalesced_batches
     );
     println!(
-        "fused engine: {} tiles on kernel '{}' ({} panel packs, {} pair reuses) | workspaces: {} checkouts, {} fresh allocations",
+        "fused engine: {} tiles on kernel '{}' at tile {} ({} panel packs, {} pair reuses) | workspaces: {} checkouts, {} fresh allocations",
         snap.fused_tiles,
         if snap.kernel.is_empty() { "n/a" } else { snap.kernel },
+        if snap.tile_mc == 0 {
+            "n/a".to_string()
+        } else {
+            format!("{}x{}", snap.tile_mc, snap.tile_nc)
+        },
         snap.panel_packs,
         snap.panel_reuses,
         snap.workspace_checkouts,
         snap.workspace_fresh
     );
     svc.shutdown();
+}
+
+fn cmd_kernels() {
+    // One line per tier, machine-greppable (CI uses this to decide which
+    // ADP_KERNEL values the host can actually run):
+    //   kernel <label> available|unavailable [active]
+    let active = kernel::active_id(SliceEncoding::Unsigned);
+    for id in KernelId::ALL {
+        println!(
+            "kernel {} {}{}",
+            id.label(),
+            if kernel::kernel_by_id(id).is_some() { "available" } else { "unavailable" },
+            if id == active { " active" } else { "" }
+        );
+    }
+}
+
+fn cmd_tune_probe(args: &Args) {
+    // Force-resolve the autotuner for one (kernel, bucket) and report
+    // where the entry came from. With ADP_TUNE_CATALOG set, a first run
+    // prints `source=probed` and a second process prints `source=cached`
+    // — the CI persistence check.
+    let kern = match args.kv.get("kernel") {
+        Some(s) => match KernelId::parse(s) {
+            Some(k) => k,
+            None => {
+                eprintln!("unknown --kernel '{s}' (see `adp kernels`)");
+                std::process::exit(2);
+            }
+        },
+        None => kernel::active_id(SliceEncoding::Unsigned),
+    };
+    let bucket = match ShapeBucket::parse(args.str("bucket", "medium")) {
+        Some(b) => b,
+        None => {
+            eprintln!("unknown --bucket (want small|medium|large)");
+            std::process::exit(2);
+        }
+    };
+    if kernel::kernel_by_id(kern).is_none() {
+        println!("tune-probe kernel={} unavailable on this host", kern.label());
+        return;
+    }
+    let (shape, cached) = tune::tune_probe(kern, bucket);
+    let pair_ns = tune::measured_pair_ns(kern).unwrap_or(0.0);
+    println!(
+        "tune-probe kernel={} bucket={} tile={} source={} pair_ns={:.6}",
+        kern.label(),
+        bucket.label(),
+        shape.label(),
+        if cached { "cached" } else { "probed" },
+        pair_ns
+    );
 }
 
 fn cmd_grade(args: &Args) {

@@ -359,6 +359,13 @@ pub fn gemm_grouped(
         });
     }
 
+    // The round batches run level-major on the runtime-dispatched
+    // microkernel — stamp the dispatch gauge so metrics report grouped
+    // traffic's executed kernel too (no tile geometry on this path).
+    if let Some(act) = active.first() {
+        workspaces.record_dispatch(super::kernel::active_id(act.asl.encoding), None);
+    }
+
     // Lockstep rounds: round r runs weight level q = s-1-r of every
     // problem that still has one, as ONE backend schedule. Levels feed
     // each problem's compensated accumulator strictly in the per-request

@@ -27,10 +27,11 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use super::gemm::{FusedTally, FUSED_MC, FUSED_NC, FUSED_WS_ELEMS, K_CHUNK};
+use super::gemm::{FusedTally, K_CHUNK};
 use super::kernel::{self, SliceKernel};
 use super::recompose::descale_tile;
 use super::slicing::{crt_slice_a, crt_slice_b, SlicedMatrix};
+use super::tune::{self, TileShape};
 use crate::backend::{ComputeBackend, SerialBackend, Workspace, WorkspacePool};
 use crate::dd::Dd;
 use crate::linalg::Matrix;
@@ -250,18 +251,21 @@ impl CrtBasis {
 }
 
 /// One fused row band of the CRT scheme, the linear-launch counterpart of
-/// `gemm::fused_band`: per FUSED_NC column tile, run **one** integer GEMM
-/// per modulus on the packed residue panels, reduce each i64 tile to its
-/// centered residue plane, Garner-reconstruct every element into the
+/// `gemm::fused_band`: per `shape.nc` column tile, run **one** integer
+/// GEMM per modulus on the packed residue panels, reduce each i64 tile to
+/// its centered residue plane, Garner-reconstruct every element into the
 /// compensated hi/lo pair, and apply the shared sigma descaling. Operand
 /// residues stay cache-resident across all moduli of a tile, same as the
-/// slice-pair engine's pair reuse.
+/// slice-pair engine's pair reuse. Like the slice-pair band, every tile
+/// geometry yields the bitwise identical result.
+#[allow(clippy::too_many_arguments)]
 pub fn crt_band(
     kern: &dyn SliceKernel,
     a: &SlicedMatrix,
     b: &SlicedMatrix,
     basis: &CrtBasis,
     row0: usize,
+    shape: TileShape,
     ws: &mut Workspace,
     band: &mut [f64],
 ) -> FusedTally {
@@ -277,10 +281,10 @@ pub fn crt_band(
     }
     let rows = band.len() / n;
     let ab = kern.a_slice_bytes(rows, k);
-    let bb_max = kern.b_slice_bytes(FUSED_NC.min(n), k);
-    assert!(ws.capacity() >= rows * FUSED_NC.min(n), "workspace too small for tile");
+    let bb_max = kern.b_slice_bytes(shape.nc.min(n), k);
+    assert!(ws.capacity() >= rows * shape.nc.min(n), "workspace too small for tile");
     let grew = ws.ensure_pack(nm * ab, nm * bb_max);
-    let grew_res = ws.ensure_res(nm * rows * FUSED_NC.min(n));
+    let grew_res = ws.ensure_res(nm * rows * shape.nc.min(n));
     let Workspace { pbuf, hi, lo, apack, bpack, rbuf } = ws;
     let mut tally =
         FusedTally { pack_growths: (grew || grew_res) as u64, ..FusedTally::default() };
@@ -295,7 +299,7 @@ pub fn crt_band(
     let mut first_tile = true;
     let mut col0 = 0;
     while col0 < n {
-        let cols = FUSED_NC.min(n - col0);
+        let cols = shape.nc.min(n - col0);
         let bb = kern.b_slice_bytes(cols, k);
         for p in 0..nm {
             kern.pack_b_slice(b, p, col0, cols, &mut bpack[p * bb..(p + 1) * bb]);
@@ -361,10 +365,12 @@ pub fn crt_tile_gemm_serial_on(
     if a.rows == 0 || n == 0 {
         return;
     }
-    let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+    let shape = tune::tile_shape_for(kern.id(), a.rows, n);
+    workspaces.record_dispatch(kern.id(), Some(shape));
+    let mut ws = workspaces.checkout(shape.elems());
     let mut tally = FusedTally::default();
-    for (bi, band) in c.data.chunks_mut(FUSED_MC * n).enumerate() {
-        tally.merge(crt_band(kern, a, b, basis, bi * FUSED_MC, &mut ws, band));
+    for (bi, band) in c.data.chunks_mut(shape.mc * n).enumerate() {
+        tally.merge(crt_band(kern, a, b, basis, bi * shape.mc, shape, &mut ws, band));
     }
     workspaces.record_tiles(tally.tiles);
     workspaces.record_panels(tally.packs, tally.reuses);

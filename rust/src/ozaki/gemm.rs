@@ -380,15 +380,15 @@ fn emulated_gemm_chunk(
 // Fused tile engine (see module docs)
 // ---------------------------------------------------------------------
 
-/// Output-tile height of the fused engine: one row band of A slices plus
-/// the tile accumulators stay cache-resident while all `s(s+1)/2` pairs
-/// run.
+/// Baseline output-tile height of the fused engine: one row band of A
+/// slices plus the tile accumulators stay cache-resident while all
+/// `s(s+1)/2` pairs run. The geometry that actually runs is the
+/// per-(kernel, shape-bucket) [`TileShape`](super::tune::TileShape) from
+/// [`tune::tile_shape_for`](super::tune::tile_shape_for); this constant
+/// is its `TileShape::BASELINE` and the `ADP_TUNE=off` pin.
 pub const FUSED_MC: usize = 64;
-/// Output-tile width of the fused engine.
+/// Baseline output-tile width of the fused engine (see [`FUSED_MC`]).
 pub const FUSED_NC: usize = 64;
-/// Workspace elements a fused-engine thread checks out: one full tile of
-/// i64 + hi + lo scratch.
-pub const FUSED_WS_ELEMS: usize = FUSED_MC * FUSED_NC;
 
 /// Fused tile-major emulated DGEMM on the serial reference backend with a
 /// throwaway workspace pool — the convenience form of [`fused_gemm_on`].
@@ -476,12 +476,12 @@ impl FusedTally {
     }
 }
 
-/// The serial reference fused schedule: row bands of [`FUSED_MC`] output
+/// The serial reference fused schedule: row bands of `shape.mc` output
 /// rows in order, column tiles in order within each band, one workspace
-/// for the whole pass, on the runtime-dispatched kernel. The
-/// [`ComputeBackend::fused_tile_gemm`] default runs this; parallel
-/// backends also use it as their small-problem inline path (bitwise
-/// identical either way).
+/// for the whole pass, on the runtime-dispatched kernel and the
+/// autotuned tile geometry. The [`ComputeBackend::fused_tile_gemm`]
+/// default runs this; parallel backends also use it as their
+/// small-problem inline path (bitwise identical either way).
 pub fn fused_tile_gemm_serial(
     a: &SlicedMatrix,
     b: &SlicedMatrix,
@@ -493,7 +493,8 @@ pub fn fused_tile_gemm_serial(
 }
 
 /// [`fused_tile_gemm_serial`] on an explicit kernel (the ablation bench
-/// and the oracle tests compare kernels through this seam).
+/// and the oracle tests compare kernels through this seam), resolving
+/// the tile geometry through the autotuner.
 pub fn fused_tile_gemm_serial_on(
     kern: &dyn SliceKernel,
     a: &SlicedMatrix,
@@ -502,23 +503,41 @@ pub fn fused_tile_gemm_serial_on(
     workspaces: &WorkspacePool,
     c: &mut Matrix,
 ) {
+    let shape = super::tune::tile_shape_for(kern.id(), a.rows, b.rows);
+    fused_tile_gemm_serial_shaped(kern, a, b, schedule, workspaces, shape, c);
+}
+
+/// [`fused_tile_gemm_serial_on`] with an explicit tile geometry — the
+/// seam the autotuner probes through, and the one the tile-shape
+/// property tests drive directly. Every `shape` yields the bitwise
+/// identical result (see [`fused_band`]); only performance differs.
+pub fn fused_tile_gemm_serial_shaped(
+    kern: &dyn SliceKernel,
+    a: &SlicedMatrix,
+    b: &SlicedMatrix,
+    schedule: &PairSchedule,
+    workspaces: &WorkspacePool,
+    shape: super::tune::TileShape,
+    c: &mut Matrix,
+) {
     let n = b.rows;
     assert_eq!(c.rows, a.rows, "output rows mismatch");
     assert_eq!(c.cols, n, "output cols mismatch");
     if a.rows == 0 || n == 0 {
         return;
     }
-    let mut ws = workspaces.checkout(FUSED_WS_ELEMS);
+    workspaces.record_dispatch(kern.id(), Some(shape));
+    let mut ws = workspaces.checkout(shape.elems());
     let mut tally = FusedTally::default();
-    for (bi, band) in c.data.chunks_mut(FUSED_MC * n).enumerate() {
-        tally.merge(fused_band(kern, a, b, schedule, bi * FUSED_MC, &mut ws, band));
+    for (bi, band) in c.data.chunks_mut(shape.mc * n).enumerate() {
+        tally.merge(fused_band(kern, a, b, schedule, bi * shape.mc, shape, &mut ws, band));
     }
     workspaces.record_tiles(tally.tiles);
     workspaces.record_panels(tally.packs, tally.reuses);
     workspaces.record_pack_growth(tally.pack_growths);
 }
 
-/// One row band of the fused schedule: every [`FUSED_NC`]-wide column
+/// One row band of the fused schedule: every `shape.nc`-wide column
 /// tile of output rows `[row0, row0 + band.len()/n)`, left to right.
 /// `band` is the contiguous row-major sub-slice of C for exactly those
 /// rows. Disjoint bands may run concurrently — each tile's arithmetic
@@ -532,13 +551,16 @@ pub fn fused_tile_gemm_serial_on(
 /// reference one (every kernel computes the exact integer pair product;
 /// levels feed the compensated accumulator smallest weight first; the
 /// descale passes are per-element) — see the module docs for why that
-/// makes any tile partition and any kernel bitwise identical.
+/// makes any tile partition, any tile geometry and any kernel bitwise
+/// identical.
+#[allow(clippy::too_many_arguments)]
 pub fn fused_band(
     kern: &dyn SliceKernel,
     a: &SlicedMatrix,
     b: &SlicedMatrix,
     schedule: &PairSchedule,
     row0: usize,
+    shape: super::tune::TileShape,
     ws: &mut Workspace,
     band: &mut [f64],
 ) -> FusedTally {
@@ -550,8 +572,8 @@ pub fn fused_band(
     debug_assert_eq!(s, a.s, "schedule must match the decomposition");
     let rows = band.len() / n;
     let ab = kern.a_slice_bytes(rows, k);
-    let bb_max = kern.b_slice_bytes(FUSED_NC.min(n), k);
-    assert!(ws.capacity() >= rows * FUSED_NC.min(n), "workspace too small for a band tile");
+    let bb_max = kern.b_slice_bytes(shape.nc.min(n), k);
+    assert!(ws.capacity() >= rows * shape.nc.min(n), "workspace too small for a band tile");
     let grew = ws.ensure_pack(s * ab, s * bb_max);
     let Workspace { pbuf, hi, lo, apack, bpack, rbuf: _ } = ws;
     let mut tally = FusedTally { pack_growths: grew as u64, ..FusedTally::default() };
@@ -563,7 +585,7 @@ pub fn fused_band(
     tally.packs += 1;
     let mut col0 = 0;
     while col0 < n {
-        let cols = FUSED_NC.min(n - col0);
+        let cols = shape.nc.min(n - col0);
         let bb = kern.b_slice_bytes(cols, k);
         for u in 0..s {
             kern.pack_b_slice(b, u, col0, cols, &mut bpack[u * bb..(u + 1) * bb]);

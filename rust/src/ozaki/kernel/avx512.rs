@@ -1,0 +1,294 @@
+//! AVX-512 slice-pair microkernels — the widest CPU analog of the
+//! paper's INT8 tensor-core (IMMA) path: `vpdpbusd` (AVX-512 VNNI) is
+//! the same u8×s8 dot-product-accumulate primitive IMMA / `dp4a` expose,
+//! sixteen i32 lanes at a time.
+//!
+//! Both kernels compute the *exact* integer pair product `P_tu` for the
+//! digits as stored, so their results are bitwise identical to the
+//! scalar oracle by construction (exact integer arithmetic commutes with
+//! any evaluation order); the property suites assert it anyway.
+//!
+//! # Panel formats
+//!
+//! Same shape family as the AVX2 kernels, widened to [`NR`] = 16 output
+//! columns per 64-byte group:
+//!
+//! * **B panels** are k-interleaved and [`NR`]-wide:
+//!   `[ceil(cols/NR)][ceil(k/G)][NR][G]`, one 64-byte group per
+//!   (column-block, k-group) — a single zmm load feeds all `NR` output
+//!   columns. `G` is 4 bytes for `vpdpbusd`, 2 i16 (4 bytes) for
+//!   `vpmaddwd`.
+//! * **A panels** stay row-major (one k-group is broadcast to all lanes
+//!   per step). The VNNI kernel stores *two* u8 planes per slice — the
+//!   positive and negative parts of each digit — and the `vpmaddwd`
+//!   kernel stores sign-extended i16 rows.
+//!
+//! # No-overflow argument (the VNNI kernel)
+//!
+//! `vpdpbusd` multiplies four unsigned bytes `u` by four signed bytes
+//! `s`, sums the four products, and accumulates into an i32 lane. Unlike
+//! `vpmaddubsw` there is **no saturating i16 stage**: the four u8×s8
+//! products are summed as intermediates that always fit
+//! (`|u·s| <= 255·128 = 32640`, and the hardware forms the 4-term sum at
+//! i32 width before accumulating; `vpdpbusds` is the *saturating*
+//! variant, which this kernel deliberately does not use). Exactness
+//! therefore reduces to the i32 accumulator bound alone:
+//!
+//! * Stored digits: unsigned encoding — leading slice in `[-64, 64]`,
+//!   sub-leading in `[-128, 127]`; signed encoding — all slices in
+//!   `[-127, 127]`. Every digit `d` splits as `d = d⁺ - d⁻` with
+//!   `d⁺ = max(d, 0) ∈ [0, 127]` and `d⁻ = max(-d, 0) ∈ [0, 128]`, so
+//!   the split serves *both* encodings.
+//! * Per-lane plane totals: `|Σ d⁺·b| <= K_CHUNK·127·128` and
+//!   `|Σ d⁻·b| <= K_CHUNK·128·128 = 2^31 - 2^14 < 2^31` — the same
+//!   `K_CHUNK = 2^17 - 1` cap that already guarantees the scalar i32
+//!   accumulator, so the i32 lanes never wrap for `k <= K_CHUNK`.
+//! * The final lane-wise `acc⁺ - acc⁻` equals the true pair dot, which
+//!   obeys the same bound, so the wrapping `vpsubd` is exact.
+//!
+//! The `vpmaddwd` kernel (AVX-512BW, for parts without VNNI) needs no
+//! split: products of sign-extended i8 values are at most
+//! `128·128 = 2^14`, one `vpmaddwd` pair sum is at most `2^15`, and the
+//! per-lane totals obey the `K_CHUNK` bound above — the AVX2 `pmaddwd`
+//! argument verbatim, at twice the width.
+
+use std::arch::x86_64::*;
+
+use super::{KernelId, SliceKernel};
+use crate::ozaki::slicing::SlicedMatrix;
+
+/// Output columns per packed B group (i32 lanes of one zmm register).
+pub const NR: usize = 16;
+
+pub static VNNI: VnniKernel = VnniKernel;
+pub static PMADDWD512: Pmaddwd512Kernel = Pmaddwd512Kernel;
+
+#[inline]
+fn groups(k: usize, g: usize) -> usize {
+    k.div_ceil(g)
+}
+
+/// u8×s8 pair kernel on `vpdpbusd` (AVX-512 VNNI) over the pos/neg digit
+/// split (see the module docs for the no-overflow argument). Serves both
+/// encodings — the split is valid for any digit in `[-128, 127]`.
+pub struct VnniKernel;
+
+impl SliceKernel for VnniKernel {
+    fn id(&self) -> KernelId {
+        KernelId::Avx512Vnni
+    }
+
+    fn a_slice_bytes(&self, rows: usize, k: usize) -> usize {
+        2 * rows * groups(k, 4) * 4
+    }
+
+    fn b_slice_bytes(&self, cols: usize, k: usize) -> usize {
+        cols.div_ceil(NR) * groups(k, 4) * 64
+    }
+
+    fn pack_a_slice(&self, a: &SlicedMatrix, t: usize, row0: usize, rows: usize, dst: &mut [u8]) {
+        let k = a.cols;
+        let rb = groups(k, 4) * 4;
+        let plane = rows * rb;
+        debug_assert_eq!(dst.len(), 2 * plane);
+        dst.fill(0);
+        let src = a.slice_rows(t, row0, rows);
+        for i in 0..rows {
+            let row = &src[i * k..(i + 1) * k];
+            for (l, &dgt) in row.iter().enumerate() {
+                let d = dgt as i32;
+                dst[i * rb + l] = d.max(0) as u8;
+                dst[plane + i * rb + l] = (-d).max(0) as u8;
+            }
+        }
+    }
+
+    fn pack_b_slice(&self, b: &SlicedMatrix, u: usize, col0: usize, cols: usize, dst: &mut [u8]) {
+        let k = b.cols;
+        let kg = groups(k, 4);
+        let nb = cols.div_ceil(NR);
+        debug_assert_eq!(dst.len(), nb * kg * 64);
+        dst.fill(0);
+        let src = b.slice_rows(u, col0, cols);
+        for jb in 0..nb {
+            let base = jb * kg * 64;
+            for c in 0..NR {
+                let j = jb * NR + c;
+                if j >= cols {
+                    break;
+                }
+                let row = &src[j * k..(j + 1) * k];
+                for (l, &dgt) in row.iter().enumerate() {
+                    dst[base + (l / 4) * 64 + c * 4 + (l % 4)] = dgt as u8;
+                }
+            }
+        }
+    }
+
+    fn pair_tile(
+        &self,
+        apack: &[u8],
+        bpack: &[u8],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        out: &mut [i64],
+    ) {
+        debug_assert!(apack.len() >= self.a_slice_bytes(rows, k));
+        debug_assert!(bpack.len() >= self.b_slice_bytes(cols, k));
+        debug_assert_eq!(out.len(), rows * cols);
+        // SAFETY: the kernel is only reachable through the dispatch layer
+        // (or `available_kernels`), both of which gate on a cached
+        // `is_x86_feature_detected!` for avx512f/bw/vnni; panel sizes are
+        // checked above and every pointer stays inside the checked
+        // extents.
+        unsafe { vnni_tile(apack, bpack, rows, cols, k, out) }
+    }
+}
+
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn vnni_tile(
+    apack: &[u8],
+    bpack: &[u8],
+    rows: usize,
+    cols: usize,
+    k: usize,
+    out: &mut [i64],
+) {
+    let kg = k.div_ceil(4);
+    let rb = kg * 4;
+    let plane = rows * rb;
+    let nb = cols.div_ceil(NR);
+    for i in 0..rows {
+        let pos = apack.as_ptr().add(i * rb);
+        let neg = apack.as_ptr().add(plane + i * rb);
+        for jb in 0..nb {
+            let bb = bpack.as_ptr().add(jb * kg * 64);
+            let mut accp = _mm512_setzero_si512();
+            let mut accn = _mm512_setzero_si512();
+            for g in 0..kg {
+                let ap = _mm512_set1_epi32(pos.add(g * 4).cast::<i32>().read_unaligned());
+                let an = _mm512_set1_epi32(neg.add(g * 4).cast::<i32>().read_unaligned());
+                let bv = _mm512_loadu_si512(bb.add(g * 64).cast());
+                accp = _mm512_dpbusd_epi32(accp, ap, bv);
+                accn = _mm512_dpbusd_epi32(accn, an, bv);
+            }
+            let diff = _mm512_sub_epi32(accp, accn);
+            let mut lanes = [0i32; 16];
+            _mm512_storeu_si512(lanes.as_mut_ptr().cast(), diff);
+            let take = NR.min(cols - jb * NR);
+            for (c, &v) in lanes.iter().take(take).enumerate() {
+                out[i * cols + jb * NR + c] += v as i64;
+            }
+        }
+    }
+}
+
+/// Sign-extended i16 pair kernel on 512-bit `vpmaddwd` (AVX-512BW) —
+/// exact for any i8 digit range without a split pass. The fallback tier
+/// for AVX-512 parts without VNNI; serves both encodings.
+pub struct Pmaddwd512Kernel;
+
+impl SliceKernel for Pmaddwd512Kernel {
+    fn id(&self) -> KernelId {
+        KernelId::Avx512Pmaddwd
+    }
+
+    fn a_slice_bytes(&self, rows: usize, k: usize) -> usize {
+        rows * groups(k, 2) * 4
+    }
+
+    fn b_slice_bytes(&self, cols: usize, k: usize) -> usize {
+        cols.div_ceil(NR) * groups(k, 2) * 64
+    }
+
+    fn pack_a_slice(&self, a: &SlicedMatrix, t: usize, row0: usize, rows: usize, dst: &mut [u8]) {
+        let k = a.cols;
+        let rb = groups(k, 2) * 4;
+        debug_assert_eq!(dst.len(), rows * rb);
+        dst.fill(0);
+        let src = a.slice_rows(t, row0, rows);
+        for i in 0..rows {
+            let row = &src[i * k..(i + 1) * k];
+            for (l, &dgt) in row.iter().enumerate() {
+                let v = (dgt as i16).to_le_bytes();
+                dst[i * rb + 2 * l] = v[0];
+                dst[i * rb + 2 * l + 1] = v[1];
+            }
+        }
+    }
+
+    fn pack_b_slice(&self, b: &SlicedMatrix, u: usize, col0: usize, cols: usize, dst: &mut [u8]) {
+        let k = b.cols;
+        let kg = groups(k, 2);
+        let nb = cols.div_ceil(NR);
+        debug_assert_eq!(dst.len(), nb * kg * 64);
+        dst.fill(0);
+        let src = b.slice_rows(u, col0, cols);
+        for jb in 0..nb {
+            let base = jb * kg * 64;
+            for c in 0..NR {
+                let j = jb * NR + c;
+                if j >= cols {
+                    break;
+                }
+                let row = &src[j * k..(j + 1) * k];
+                for (l, &dgt) in row.iter().enumerate() {
+                    let v = (dgt as i16).to_le_bytes();
+                    let off = base + (l / 2) * 64 + c * 4 + (l % 2) * 2;
+                    dst[off] = v[0];
+                    dst[off + 1] = v[1];
+                }
+            }
+        }
+    }
+
+    fn pair_tile(
+        &self,
+        apack: &[u8],
+        bpack: &[u8],
+        rows: usize,
+        cols: usize,
+        k: usize,
+        out: &mut [i64],
+    ) {
+        debug_assert!(apack.len() >= self.a_slice_bytes(rows, k));
+        debug_assert!(bpack.len() >= self.b_slice_bytes(cols, k));
+        debug_assert_eq!(out.len(), rows * cols);
+        // SAFETY: as in `VnniKernel::pair_tile` — avx512f/bw presence is
+        // gated by the dispatch layer, extents are checked above.
+        unsafe { pmaddwd512_tile(apack, bpack, rows, cols, k, out) }
+    }
+}
+
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn pmaddwd512_tile(
+    apack: &[u8],
+    bpack: &[u8],
+    rows: usize,
+    cols: usize,
+    k: usize,
+    out: &mut [i64],
+) {
+    let kg = k.div_ceil(2);
+    let rb = kg * 4;
+    let nb = cols.div_ceil(NR);
+    for i in 0..rows {
+        let ar = apack.as_ptr().add(i * rb);
+        for jb in 0..nb {
+            let bb = bpack.as_ptr().add(jb * kg * 64);
+            let mut acc = _mm512_setzero_si512();
+            for g in 0..kg {
+                let av = _mm512_set1_epi32(ar.add(g * 4).cast::<i32>().read_unaligned());
+                let bv = _mm512_loadu_si512(bb.add(g * 64).cast());
+                acc = _mm512_add_epi32(acc, _mm512_madd_epi16(av, bv));
+            }
+            let mut lanes = [0i32; 16];
+            _mm512_storeu_si512(lanes.as_mut_ptr().cast(), acc);
+            let take = NR.min(cols - jb * NR);
+            for (c, &v) in lanes.iter().take(take).enumerate() {
+                out[i * cols + jb * NR + c] += v as i64;
+            }
+        }
+    }
+}

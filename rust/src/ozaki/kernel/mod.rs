@@ -7,8 +7,10 @@
 //! contributes to a native dot-product instruction (§3; ozIMMU and
 //! EmuGEMM in PAPERS.md show the win comes from feeding *packed* int8
 //! panels to those instructions rather than scalar loops). On x86 the
-//! analogous instructions are `vpmaddubsw` (u8×s8 pair dot) and
-//! `vpmaddwd` (i16 pair dot); this module puts them behind one seam:
+//! analogous instructions are `vpdpbusd` (the AVX-512 VNNI u8×s8
+//! dot-product-accumulate — the direct IMMA/`dp4a` counterpart),
+//! `vpmaddubsw` (u8×s8 pair dot) and `vpmaddwd` (i16 pair dot); this
+//! module puts them behind one seam:
 //!
 //! * [`SliceKernel`] — packed-panel slice-pair tile GEMM: a kernel owns
 //!   its panel layout (`a_slice_bytes`/`b_slice_bytes` +
@@ -17,7 +19,7 @@
 //!   `s(s+1)/2` slice pairs**, with scratch drawn from the pooled
 //!   [`Workspace`](crate::backend::Workspace) — the packing cost is
 //!   amortized quadratically while the kernel streams contiguous
-//!   32-byte groups.
+//!   32/64-byte groups.
 //! * [`ScalarKernel`] — the reference loop nest extracted from the
 //!   original `slice_pair_gemm_tile`, the oracle every other kernel must
 //!   match **bitwise** (trivial for exact integer arithmetic, asserted
@@ -25,23 +27,36 @@
 //! * [`avx2::MaddubsKernel`] / [`avx2::PmaddwdKernel`] — the AVX2
 //!   kernels (x86_64 only), with the i16 saturation-freedom proof in the
 //!   `avx2` module docs.
+//! * [`avx512::VnniKernel`] / [`avx512::Pmaddwd512Kernel`] — the
+//!   AVX-512 tier (x86_64 + a rustc new enough for the stabilized
+//!   AVX-512 intrinsics, signalled by the `adp_avx512` cfg from
+//!   build.rs), with the `vpdpbusd` no-overflow argument in the `avx512`
+//!   module docs.
 //!
 //! # Dispatch
 //!
-//! [`active`] picks the kernel at runtime: AVX2 detection is done once
-//! and cached (`OnceLock`), the unsigned encoding routes to the
-//! `maddubs` kernel and the signed encoding to `pmaddwd`, and setting
-//! `ADP_FORCE_SCALAR=1` (checked once, also cached) pins the scalar
-//! reference end to end — the knob the CI fallback job and A/B perf runs
-//! use. Every integer-GEMM path in the repo funnels through this
-//! dispatch: `slice_pair_gemm_tile` (hence the level-major reference,
-//! both backends' batch schedules and the grouped `ozaki::batched`
-//! rounds) and the fused tile engine (`fused_tile_gemm_*`).
+//! [`active`] picks the kernel at runtime: CPUID detection is done once
+//! and cached (`OnceLock`), preferring VNNI, then 512-bit `vpmaddwd`,
+//! then the AVX2 kernel matching the encoding (unsigned → `maddubs`,
+//! signed → `pmaddwd`), then scalar. Two env knobs override it (both
+//! read once and cached — dispatch sits on the per-pair hot path):
+//! `ADP_FORCE_SCALAR=1` pins the scalar reference end to end, and
+//! `ADP_KERNEL=<label>` forces a specific tier (falling back to the
+//! default dispatch with a stderr warning when the tier is unknown or
+//! not runnable here) — the knobs the CI fallback/matrix jobs and A/B
+//! perf runs use. Every integer-GEMM path in the repo funnels through
+//! this dispatch: `slice_pair_gemm_tile` (hence the level-major
+//! reference, both backends' batch schedules and the grouped
+//! `ozaki::batched` rounds) and the fused tile engine
+//! (`fused_tile_gemm_*`).
 
 pub mod scalar;
 
 #[cfg(target_arch = "x86_64")]
 pub mod avx2;
+
+#[cfg(all(target_arch = "x86_64", adp_avx512))]
+pub mod avx512;
 
 use std::sync::OnceLock;
 
@@ -59,15 +74,38 @@ pub enum KernelId {
     Avx2Maddubs,
     /// AVX2 sign-extended `vpmaddwd` (signed encoding).
     Avx2Pmaddwd,
+    /// AVX-512BW sign-extended `vpmaddwd` (both encodings; the non-VNNI
+    /// AVX-512 fallback tier).
+    Avx512Pmaddwd,
+    /// AVX-512 VNNI `vpdpbusd` over the pos/neg digit split (both
+    /// encodings; the IMMA analog).
+    Avx512Vnni,
 }
 
 impl KernelId {
+    /// Every kernel identity, whether or not runnable on this machine —
+    /// the `ADP_KERNEL` label namespace and the tuning-catalog key space.
+    pub const ALL: [KernelId; 5] = [
+        KernelId::Scalar,
+        KernelId::Avx2Maddubs,
+        KernelId::Avx2Pmaddwd,
+        KernelId::Avx512Pmaddwd,
+        KernelId::Avx512Vnni,
+    ];
+
     pub fn label(self) -> &'static str {
         match self {
             KernelId::Scalar => "scalar",
             KernelId::Avx2Maddubs => "avx2-maddubs",
             KernelId::Avx2Pmaddwd => "avx2-pmaddwd",
+            KernelId::Avx512Pmaddwd => "avx512-pmaddwd",
+            KernelId::Avx512Vnni => "avx512-vnni",
         }
+    }
+
+    /// Inverse of [`KernelId::label`] (the `ADP_KERNEL` parser).
+    pub fn parse(s: &str) -> Option<KernelId> {
+        KernelId::ALL.into_iter().find(|id| id.label() == s)
     }
 }
 
@@ -135,8 +173,33 @@ fn avx2_available() -> bool {
     *DETECTED.get_or_init(|| is_x86_feature_detected!("avx2"))
 }
 
+#[cfg(all(target_arch = "x86_64", adp_avx512))]
+fn avx512bw_available() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED
+        .get_or_init(|| is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw"))
+}
+
+#[cfg(all(target_arch = "x86_64", adp_avx512))]
+fn avx512_vnni_available() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| avx512bw_available() && is_x86_feature_detected!("avx512vnni"))
+}
+
 #[cfg(target_arch = "x86_64")]
 fn simd_kernel(encoding: SliceEncoding) -> Option<&'static dyn SliceKernel> {
+    #[cfg(adp_avx512)]
+    {
+        // The VNNI kernel's pos/neg split is valid for any digit in
+        // [-128, 127], so one kernel serves both encodings — as does the
+        // sign-extended 512-bit pmaddwd fallback.
+        if avx512_vnni_available() {
+            return Some(&avx512::VNNI);
+        }
+        if avx512bw_available() {
+            return Some(&avx512::PMADDWD512);
+        }
+    }
     if !avx2_available() {
         return None;
     }
@@ -151,12 +214,46 @@ fn simd_kernel(_encoding: SliceEncoding) -> Option<&'static dyn SliceKernel> {
     None
 }
 
+/// The `ADP_KERNEL=<label>` override, validated once: `Some(id)` only
+/// when the label parses *and* the tier is runnable on this machine
+/// (otherwise a one-shot stderr warning and default dispatch).
+fn kernel_override() -> Option<KernelId> {
+    static OVERRIDE: OnceLock<Option<KernelId>> = OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        let raw = std::env::var("ADP_KERNEL").ok()?;
+        match KernelId::parse(&raw) {
+            Some(id) if kernel_by_id(id).is_some() => Some(id),
+            Some(id) => {
+                eprintln!(
+                    "ADP_KERNEL={raw}: kernel '{}' not available on this machine; \
+                     using default dispatch",
+                    id.label()
+                );
+                None
+            }
+            None => {
+                eprintln!("ADP_KERNEL={raw}: unknown kernel label; using default dispatch");
+                None
+            }
+        }
+    })
+}
+
+/// The kernel for `id` when it is runnable on this machine.
+pub fn kernel_by_id(id: KernelId) -> Option<&'static dyn SliceKernel> {
+    available_kernels().iter().find(|k| k.id() == id).copied()
+}
+
 /// The kernel the runtime dispatch selects for `encoding` on this
-/// machine: the AVX2 kernel matching the encoding when the CPU has AVX2
-/// and `ADP_FORCE_SCALAR` is unset, the scalar reference otherwise.
+/// machine: the scalar reference under `ADP_FORCE_SCALAR`, the forced
+/// tier under a valid `ADP_KERNEL`, otherwise the widest available SIMD
+/// tier (VNNI → AVX-512BW → AVX2 by encoding → scalar).
 pub fn active(encoding: SliceEncoding) -> &'static dyn SliceKernel {
     if force_scalar() {
         return &SCALAR;
+    }
+    if let Some(kern) = kernel_override().and_then(kernel_by_id) {
+        return kern;
     }
     simd_kernel(encoding).unwrap_or(&SCALAR)
 }
@@ -166,8 +263,9 @@ pub fn active_id(encoding: SliceEncoding) -> KernelId {
     active(encoding).id()
 }
 
-/// Every kernel runnable on this machine (scalar first). Benches and the
-/// oracle test suite iterate this to compare all implementations.
+/// Every kernel runnable on this machine (scalar first). Benches, the
+/// oracle test suite and the `adp kernels` subcommand iterate this to
+/// compare / report all implementations.
 pub fn available_kernels() -> &'static [&'static dyn SliceKernel] {
     static ALL: OnceLock<Vec<&'static dyn SliceKernel>> = OnceLock::new();
     ALL.get_or_init(|| {
@@ -177,6 +275,15 @@ pub fn available_kernels() -> &'static [&'static dyn SliceKernel] {
             if avx2_available() {
                 v.push(&avx2::MADDUBS);
                 v.push(&avx2::PMADDWD);
+            }
+            #[cfg(adp_avx512)]
+            {
+                if avx512bw_available() {
+                    v.push(&avx512::PMADDWD512);
+                }
+                if avx512_vnni_available() {
+                    v.push(&avx512::VNNI);
+                }
             }
         }
         v
@@ -192,20 +299,26 @@ mod tests {
     use crate::util::Rng;
 
     #[test]
-    fn labels_are_distinct() {
-        let ids = [KernelId::Scalar, KernelId::Avx2Maddubs, KernelId::Avx2Pmaddwd];
-        for (i, a) in ids.iter().enumerate() {
-            for b in &ids[i + 1..] {
+    fn labels_are_distinct_and_parse_round_trips() {
+        for (i, a) in KernelId::ALL.iter().enumerate() {
+            for b in &KernelId::ALL[i + 1..] {
                 assert_ne!(a.label(), b.label());
             }
+            assert_eq!(KernelId::parse(a.label()), Some(*a));
         }
+        assert_eq!(KernelId::parse("avx1024-galactic"), None);
     }
 
     #[test]
     fn dispatch_is_consistent_with_availability() {
         // Whatever `active` picks must be in the advertised kernel set,
-        // and forcing scalar via the env (as the CI job does) must pin
-        // the scalar reference for both encodings.
+        // forcing scalar via the env (as the CI job does) must pin the
+        // scalar reference for both encodings, and a valid `ADP_KERNEL`
+        // must pin its tier (the CI matrix contract).
+        let forced = std::env::var("ADP_KERNEL")
+            .ok()
+            .and_then(|s| KernelId::parse(&s))
+            .filter(|&id| kernel_by_id(id).is_some());
         for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
             let id = active_id(enc);
             assert!(
@@ -214,6 +327,8 @@ mod tests {
             );
             if force_scalar() {
                 assert_eq!(id, KernelId::Scalar, "ADP_FORCE_SCALAR must pin the scalar kernel");
+            } else if let Some(want) = forced {
+                assert_eq!(id, want, "ADP_KERNEL must pin its tier");
             }
         }
         assert_eq!(available_kernels()[0].id(), KernelId::Scalar);

@@ -14,6 +14,10 @@
 //!   with the scalar reference and AVX2 `maddubs`/`pmaddwd`
 //!   implementations, all exact-integer and therefore bitwise
 //!   interchangeable; `ADP_FORCE_SCALAR=1` pins the reference.
+//! * [`tune`] — the one-shot runtime **tile-geometry autotuner**: a
+//!   per-(kernel, shape-bucket) [`TileShape`] picked by microbenchmark on
+//!   first use, cached process-wide and persisted through the runtime
+//!   catalog; safe because every geometry is bitwise identical.
 //! * [`schedule`] — the precomputed per-level slice-pair schedule shared
 //!   by both drivers and the grouped pipeline.
 //! * [`recompose`] — scaled recombination of slice products back to FP64.
@@ -36,6 +40,7 @@ pub mod recompose;
 pub mod schedule;
 pub mod scheme;
 pub mod slicing;
+pub mod tune;
 
 pub use batched::{gemm_grouped, GroupStats, GroupedProblem, OperandRole, SliceCache};
 pub use crt::{crt_gemm, crt_gemm_on, CrtBasis, CrtConfig, CRT_MODULI};
@@ -46,6 +51,7 @@ pub use gemm::{
 };
 pub use kernel::{KernelId, SliceKernel};
 pub use schedule::PairSchedule;
+pub use tune::{tile_shape_for, ShapeBucket, TileShape};
 pub use scheme::{CrtScheme, DecompositionScheme, SchemeKind, SlicePairScheme};
 pub use slicing::{crt_slice_a, crt_slice_b, slice_a, slice_b, SlicedMatrix};
 

@@ -1,0 +1,457 @@
+//! One-shot runtime autotuner for the fused-engine tile geometry.
+//!
+//! The fixed `FUSED_MC × FUSED_NC = 64×64` tile was chosen for one
+//! microarchitecture; the right shape depends on which microkernel is
+//! dispatched (register block width: 8 i32 lanes for AVX2, 16 for
+//! AVX-512) and on the output shape (a 64-row band of a 4096-wide output
+//! streams very different panel traffic than a square 128×128 problem).
+//! Because **every** tile shape is bitwise identical by the fused-engine
+//! argument (exact integer pair products + per-element level/descale
+//! order), the geometry is a pure performance knob — which makes it safe
+//! to pick at runtime, the ADP philosophy applied to the CPU substrate.
+//!
+//! Mechanics:
+//!
+//! * [`TileShape`] `{mc, nc}` — the output-tile geometry threaded through
+//!   `fused_tile_gemm_serial*`, `ParallelBackend::{fused,crt}_tile_gemm`
+//!   and the CRT serial driver. The k extent is **not** tunable: the
+//!   `K_CHUNK` cap is a correctness bound (i32 exactness) and changing
+//!   k-chunking changes the f64 chunk-sum sequence, which would break
+//!   bitwise identity.
+//! * [`tile_shape_for`] — per `(kernel, shape bucket)` lookup: first use
+//!   microbenchmarks the small [`CANDIDATES`] grid on synthetic digit
+//!   tensors (deterministic LCG digits, zero sigmas) and caches the
+//!   winner process-wide. The baseline 64×64 shape is in the grid, so
+//!   the tuned choice is never slower than the fixed geometry (up to
+//!   probe noise on the probe itself).
+//! * Persistence — when a tuning catalog path is configured
+//!   (`ADP_TUNE_CATALOG=<file>`, or a `tiletune` entry in the
+//!   `artifacts/` manifest via [`runtime::Catalog`]), probed winners are
+//!   written through `runtime::tuning` and reloaded on the next process
+//!   start, so warm services and future runs skip the probe entirely.
+//! * Knobs — `ADP_TUNE=off` pins the 64×64 baseline with zero probing;
+//!   `ADP_TILE=<mc>x<nc>` pins an explicit shape (A/B perf runs);
+//!   [`force_shape`] is the in-process test hook. All three are safe
+//!   precisely because shapes cannot change results.
+//!
+//! The probe also yields the winning kernel's measured ns-per-MAC
+//! ([`measured_pair_ns`]), which `CpuCalibration` feeds into the
+//! native-vs-emulate heuristic — the decision layer prices the kernel
+//! that will actually run, not a scalar-era constant.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::gemm::{fused_tile_gemm_serial_shaped, FUSED_MC, FUSED_NC};
+use super::kernel::{self, KernelId, SliceKernel};
+use super::schedule::PairSchedule;
+use super::slicing::SlicedMatrix;
+use super::SliceEncoding;
+use crate::backend::WorkspacePool;
+use crate::linalg::Matrix;
+use crate::runtime::tuning::{self, TuningEntry};
+
+/// Output-tile geometry of the fused engine (rows × cols of one tile).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileShape {
+    pub mc: usize,
+    pub nc: usize,
+}
+
+impl TileShape {
+    /// The fixed pre-autotuner geometry — always in the candidate grid,
+    /// and the shape every tuned choice is benchmarked against.
+    pub const BASELINE: TileShape = TileShape { mc: FUSED_MC, nc: FUSED_NC };
+
+    /// Workspace elements one tile needs (i64 + hi + lo scratch each).
+    pub fn elems(self) -> usize {
+        self.mc * self.nc
+    }
+
+    /// `"<mc>x<nc>"` — the `ADP_TILE` / catalog / metrics format.
+    pub fn label(self) -> String {
+        format!("{}x{}", self.mc, self.nc)
+    }
+
+    /// Inverse of [`TileShape::label`]; rejects degenerate or absurd
+    /// dims (a 0-wide tile would loop forever, a huge one defeats the
+    /// cache-residency point of the fused engine).
+    pub fn parse(s: &str) -> Option<TileShape> {
+        let (mc, nc) = s.split_once('x')?;
+        let (mc, nc) = (mc.parse().ok()?, nc.parse().ok()?);
+        if !(1..=4096).contains(&mc) || !(1..=4096).contains(&nc) {
+            return None;
+        }
+        Some(TileShape { mc, nc })
+    }
+}
+
+/// Output-shape size class of one fused GEMM — the autotuner's second
+/// cache key alongside the kernel. Coarse on purpose: per-exact-shape
+/// keys would re-probe constantly and overfit probe noise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShapeBucket {
+    /// `max(m, n) <= 64`: at most one baseline tile — nothing to tune.
+    Small,
+    /// `max(m, n) <= 256`.
+    Medium,
+    /// `max(m, n) > 256`.
+    Large,
+}
+
+impl ShapeBucket {
+    pub const ALL: [ShapeBucket; 3] = [ShapeBucket::Small, ShapeBucket::Medium, ShapeBucket::Large];
+
+    pub fn of(m: usize, n: usize) -> ShapeBucket {
+        match m.max(n) {
+            0..=64 => ShapeBucket::Small,
+            65..=256 => ShapeBucket::Medium,
+            _ => ShapeBucket::Large,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShapeBucket::Small => "small",
+            ShapeBucket::Medium => "medium",
+            ShapeBucket::Large => "large",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShapeBucket> {
+        ShapeBucket::ALL.into_iter().find(|b| b.label() == s)
+    }
+
+    /// Representative probe problem `(m, n, k, s)` for this bucket —
+    /// small enough that even the scalar kernel probes in tens of
+    /// milliseconds, large enough to exercise multi-band/multi-tile
+    /// traffic for every candidate.
+    fn probe_dims(self) -> (usize, usize, usize, usize) {
+        match self {
+            ShapeBucket::Small => (64, 64, 48, 2),
+            ShapeBucket::Medium => (160, 160, 48, 2),
+            ShapeBucket::Large => (288, 288, 48, 2),
+        }
+    }
+}
+
+/// The candidate grid. Small by design (first-use probe cost is
+/// 2 runs × grid per (kernel, bucket)); the baseline is element 0 so
+/// ties and degenerate probes fall back to the fixed geometry.
+pub const CANDIDATES: [TileShape; 6] = [
+    TileShape::BASELINE,
+    TileShape { mc: 32, nc: 64 },
+    TileShape { mc: 48, nc: 96 },
+    TileShape { mc: 64, nc: 128 },
+    TileShape { mc: 96, nc: 96 },
+    TileShape { mc: 128, nc: 64 },
+];
+
+struct TuneState {
+    /// Winner per (kernel, bucket) — probed, loaded, or both.
+    shapes: HashMap<(KernelId, ShapeBucket), TileShape>,
+    /// Keys that came from the persisted catalog (vs a live probe).
+    from_catalog: HashMap<(KernelId, ShapeBucket), bool>,
+    /// Measured ns per integer MAC of the winning shape, per kernel
+    /// (the freshest bucket wins; they agree to probe noise).
+    pair_ns: HashMap<KernelId, f64>,
+    loaded: bool,
+}
+
+fn state() -> &'static Mutex<TuneState> {
+    static STATE: OnceLock<Mutex<TuneState>> = OnceLock::new();
+    STATE.get_or_init(|| {
+        Mutex::new(TuneState {
+            shapes: HashMap::new(),
+            from_catalog: HashMap::new(),
+            pair_ns: HashMap::new(),
+            loaded: false,
+        })
+    })
+}
+
+/// In-process shape pin for tests and benches (takes precedence over
+/// everything but `ADP_FORCE`-style env pins are below it — the hook is
+/// for code that just proved all shapes identical). Pass `None` to
+/// restore normal dispatch. Safe under races: every shape is bitwise
+/// identical, so a concurrently-running GEMM picking either value is
+/// still correct.
+pub fn force_shape(shape: Option<TileShape>) {
+    *forced().lock().unwrap() = shape;
+}
+
+fn forced() -> &'static Mutex<Option<TileShape>> {
+    static FORCED: OnceLock<Mutex<Option<TileShape>>> = OnceLock::new();
+    FORCED.get_or_init(|| Mutex::new(None))
+}
+
+/// `ADP_TILE=<mc>x<nc>` pins one shape process-wide (cached; a malformed
+/// value warns once and is ignored).
+fn env_tile() -> Option<TileShape> {
+    static TILE: OnceLock<Option<TileShape>> = OnceLock::new();
+    *TILE.get_or_init(|| {
+        let raw = std::env::var("ADP_TILE").ok()?;
+        let parsed = TileShape::parse(&raw);
+        if parsed.is_none() {
+            eprintln!("ADP_TILE={raw}: expected <mc>x<nc> (e.g. 64x128); ignoring");
+        }
+        parsed
+    })
+}
+
+/// `ADP_TUNE=off` (or `0`/`false`) disables probing entirely — the fixed
+/// baseline geometry everywhere, zero startup cost.
+fn tune_off() -> bool {
+    static OFF: OnceLock<bool> = OnceLock::new();
+    *OFF.get_or_init(|| {
+        matches!(std::env::var("ADP_TUNE").ok().as_deref(), Some("off") | Some("0") | Some("false"))
+    })
+}
+
+/// Where the persisted tuning catalog lives, if anywhere:
+/// `ADP_TUNE_CATALOG=<file>` first, else the `tiletune` entry of the
+/// `artifacts/` manifest ([`ArtifactKind::TileTuning`]). `None` disables
+/// persistence (probing still works, per process).
+fn catalog_path() -> Option<&'static PathBuf> {
+    static PATH: OnceLock<Option<PathBuf>> = OnceLock::new();
+    PATH.get_or_init(|| {
+        if let Ok(p) = std::env::var("ADP_TUNE_CATALOG") {
+            if !p.is_empty() {
+                return Some(PathBuf::from(p));
+            }
+        }
+        crate::runtime::Catalog::load(std::path::Path::new("artifacts"))
+            .ok()
+            .and_then(|c| c.tuning_path())
+    })
+    .as_ref()
+}
+
+/// Load the persisted catalog into `st` (once per process; unknown
+/// kernels/buckets and malformed shapes are skipped, not errors — the
+/// catalog may come from another machine or an older binary).
+fn ensure_loaded(st: &mut TuneState) {
+    if st.loaded {
+        return;
+    }
+    st.loaded = true;
+    let Some(path) = catalog_path() else { return };
+    let Ok(entries) = tuning::load(path) else { return };
+    for e in entries {
+        let (Some(kern), Some(bucket)) = (KernelId::parse(&e.kernel), ShapeBucket::parse(&e.bucket))
+        else {
+            continue;
+        };
+        let shape = TileShape { mc: e.mc, nc: e.nc };
+        if !CANDIDATES.contains(&shape) {
+            continue; // stale grid: re-probe rather than trust it
+        }
+        st.shapes.insert((kern, bucket), shape);
+        st.from_catalog.insert((kern, bucket), true);
+        if e.pair_ns > 0.0 {
+            st.pair_ns.entry(kern).or_insert(e.pair_ns);
+        }
+    }
+}
+
+/// Persist every cached winner (best effort: persistence failing must
+/// never fail a GEMM).
+fn persist(st: &TuneState) {
+    let Some(path) = catalog_path() else { return };
+    let mut entries: Vec<TuningEntry> = st
+        .shapes
+        .iter()
+        .map(|(&(kern, bucket), &shape)| TuningEntry {
+            kernel: kern.label().to_string(),
+            bucket: bucket.label().to_string(),
+            mc: shape.mc,
+            nc: shape.nc,
+            pair_ns: st.pair_ns.get(&kern).copied().unwrap_or(0.0),
+        })
+        .collect();
+    entries.sort_by(|a, b| (&a.kernel, &a.bucket).cmp(&(&b.kernel, &b.bucket)));
+    let _ = tuning::save(path, &entries);
+}
+
+/// Deterministic synthetic slice tensor for probing: LCG digits over the
+/// full i8 range, zero sigmas (descaling cost is shape-independent
+/// anyway). Unsigned encoding — the probe kernel is fixed explicitly, so
+/// the encoding only labels the tensor.
+fn probe_operand(s: usize, rows: usize, k: usize, seed: u64) -> SlicedMatrix {
+    let mut data = vec![0i8; s * rows * k];
+    let mut x = seed;
+    for d in data.iter_mut() {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *d = (x >> 56) as i8;
+    }
+    SlicedMatrix { s, rows, cols: k, sigma: vec![0; rows], data, encoding: SliceEncoding::Unsigned }
+}
+
+/// Microbenchmark the candidate grid for `(kern, bucket)`: 1 warmup + 1
+/// timed run per candidate on the bucket's representative problem,
+/// minimum time wins. Returns the winner and its ns per integer MAC.
+fn probe_bucket(kern: &'static dyn SliceKernel, bucket: ShapeBucket) -> (TileShape, f64) {
+    let (m, n, k, s) = bucket.probe_dims();
+    let asl = probe_operand(s, m, k, 0x9e37_79b9_7f4a_7c15);
+    let bsl = probe_operand(s, n, k, 0xd1b5_4a32_d192_ed03);
+    let schedule = PairSchedule::get(s, SliceEncoding::Unsigned.radix_bits());
+    let pool = WorkspacePool::new();
+    let macs = (schedule.pair_count() * m * n * k) as f64;
+    let mut c = Matrix::zeros(m, n);
+    let mut best = (TileShape::BASELINE, f64::INFINITY);
+    for &shape in CANDIDATES.iter() {
+        fused_tile_gemm_serial_shaped(kern, &asl, &bsl, &schedule, &pool, shape, &mut c);
+        let t0 = Instant::now();
+        fused_tile_gemm_serial_shaped(kern, &asl, &bsl, &schedule, &pool, shape, &mut c);
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best.1 {
+            best = (shape, dt);
+        }
+    }
+    (best.0, best.1 * 1e9 / macs)
+}
+
+/// The tile geometry to run `kern` with for an `m x n` output — the seam
+/// every fused/CRT driver calls. Precedence: [`force_shape`] pin →
+/// `ADP_TILE` env pin → `ADP_TUNE=off` baseline → small-problem baseline
+/// → cached/persisted winner → live probe (cached + persisted).
+pub fn tile_shape_for(kern: KernelId, m: usize, n: usize) -> TileShape {
+    if let Some(shape) = *forced().lock().unwrap() {
+        return shape;
+    }
+    if let Some(shape) = env_tile() {
+        return shape;
+    }
+    if tune_off() {
+        return TileShape::BASELINE;
+    }
+    let bucket = ShapeBucket::of(m, n);
+    if bucket == ShapeBucket::Small {
+        return TileShape::BASELINE;
+    }
+    let Some(kernel) = kernel::kernel_by_id(kern) else {
+        return TileShape::BASELINE;
+    };
+    let mut st = state().lock().unwrap();
+    ensure_loaded(&mut st);
+    if let Some(&shape) = st.shapes.get(&(kern, bucket)) {
+        return shape;
+    }
+    // First use for this (kernel, bucket): probe under the lock so
+    // concurrent callers block on one probe instead of racing duplicates.
+    let (shape, pair_ns) = probe_bucket(kernel, bucket);
+    st.shapes.insert((kern, bucket), shape);
+    st.from_catalog.insert((kern, bucket), false);
+    st.pair_ns.insert(kern, pair_ns);
+    persist(&st);
+    shape
+}
+
+/// Measured ns per integer MAC of `kern`'s tuned fused path, from the
+/// most recent probe (or the persisted catalog). `None` until something
+/// probed this kernel — callers keep their own fallback measurement.
+pub fn measured_pair_ns(kern: KernelId) -> Option<f64> {
+    let mut st = state().lock().unwrap();
+    ensure_loaded(&mut st);
+    st.pair_ns.get(&kern).copied()
+}
+
+/// Force-resolve the tuning entry for `(kern, bucket)`, reporting where
+/// it came from: `(shape, true)` when the persisted catalog (or an
+/// earlier call) already had it, `(shape, false)` when this call probed.
+/// The `adp tune-probe` subcommand and the CI persistence check drive
+/// this.
+pub fn tune_probe(kern: KernelId, bucket: ShapeBucket) -> (TileShape, bool) {
+    let Some(kernel) = kernel::kernel_by_id(kern) else {
+        return (TileShape::BASELINE, false);
+    };
+    let mut st = state().lock().unwrap();
+    ensure_loaded(&mut st);
+    if let Some(&shape) = st.shapes.get(&(kern, bucket)) {
+        return (shape, true);
+    }
+    let (shape, pair_ns) = probe_bucket(kernel, bucket);
+    st.shapes.insert((kern, bucket), shape);
+    st.from_catalog.insert((kern, bucket), false);
+    st.pair_ns.insert(kern, pair_ns);
+    persist(&st);
+    (shape, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that read or write the process-wide
+    /// [`force_shape`] pin — concurrent test threads would otherwise
+    /// observe each other's pins.
+    fn pin_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn shape_label_parse_round_trips() {
+        for shape in CANDIDATES {
+            assert_eq!(TileShape::parse(&shape.label()), Some(shape));
+        }
+        assert_eq!(TileShape::parse("64x128"), Some(TileShape { mc: 64, nc: 128 }));
+        for bad in ["", "64", "x", "0x64", "64x0", "64x9999", "axb", "64x64x64"] {
+            assert_eq!(TileShape::parse(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn buckets_classify_and_round_trip() {
+        assert_eq!(ShapeBucket::of(1, 1), ShapeBucket::Small);
+        assert_eq!(ShapeBucket::of(64, 64), ShapeBucket::Small);
+        assert_eq!(ShapeBucket::of(65, 1), ShapeBucket::Medium);
+        assert_eq!(ShapeBucket::of(1, 256), ShapeBucket::Medium);
+        assert_eq!(ShapeBucket::of(257, 8), ShapeBucket::Large);
+        for b in ShapeBucket::ALL {
+            assert_eq!(ShapeBucket::parse(b.label()), Some(b));
+        }
+        assert_eq!(ShapeBucket::parse("galactic"), None);
+    }
+
+    #[test]
+    fn grid_contains_the_baseline_first() {
+        assert_eq!(CANDIDATES[0], TileShape::BASELINE);
+        assert_eq!(TileShape::BASELINE.elems(), FUSED_MC * FUSED_NC);
+    }
+
+    #[test]
+    fn small_problems_pin_the_baseline_without_probing() {
+        // Must not probe (Small is at most one baseline tile); also the
+        // cheapest smoke test that the dispatch path works at all.
+        let _g = pin_lock();
+        assert_eq!(tile_shape_for(KernelId::Scalar, 8, 8), TileShape::BASELINE);
+        assert_eq!(tile_shape_for(KernelId::Scalar, 64, 64), TileShape::BASELINE);
+    }
+
+    #[test]
+    fn forced_shape_wins_and_restores() {
+        let _g = pin_lock();
+        let pin = TileShape { mc: 32, nc: 64 };
+        force_shape(Some(pin));
+        assert_eq!(tile_shape_for(KernelId::Scalar, 500, 500), pin);
+        force_shape(None);
+        assert_eq!(tile_shape_for(KernelId::Scalar, 8, 8), TileShape::BASELINE);
+    }
+
+    #[test]
+    fn probe_returns_a_candidate_and_records_pair_ns() {
+        let _g = pin_lock();
+        let shape = tile_shape_for(KernelId::Scalar, 100, 100);
+        assert!(CANDIDATES.contains(&shape), "{shape:?} not in the grid");
+        // Second lookup is a cache hit returning the same winner.
+        assert_eq!(tile_shape_for(KernelId::Scalar, 100, 100), shape);
+        let (again, cached) = tune_probe(KernelId::Scalar, ShapeBucket::Medium);
+        assert_eq!(again, shape);
+        assert!(cached, "tune_probe must see the cached entry");
+        let ns = measured_pair_ns(KernelId::Scalar).expect("probe records pair ns");
+        assert!(ns.is_finite() && ns > 0.0, "pair ns {ns}");
+    }
+}

@@ -18,6 +18,9 @@ pub enum ArtifactKind {
     Scan,
     /// Native FP64 GEMM (fallback target).
     Dgemm,
+    /// Persisted tile-tuning catalog of the fused-engine autotuner
+    /// (`runtime::tuning` text format; `n`/`slices` are 0).
+    TileTuning,
 }
 
 impl ArtifactKind {
@@ -26,6 +29,7 @@ impl ArtifactKind {
             "gemm" => ArtifactKind::Gemm,
             "scan" => ArtifactKind::Scan,
             "dgemm" => ArtifactKind::Dgemm,
+            "tiletune" => ArtifactKind::TileTuning,
             other => bail!("unknown artifact kind '{other}'"),
         })
     }
@@ -110,6 +114,13 @@ impl Catalog {
     pub fn slice_count_at_least(&self, n: usize, want: usize) -> Option<usize> {
         self.slice_counts(n).into_iter().find(|&s| s >= want)
     }
+
+    /// Path of the persisted tile-tuning catalog, when the manifest
+    /// registers one (`tiletune 0 0 <file>`). The autotuner loads winners
+    /// from — and persists new probes to — this file.
+    pub fn tuning_path(&self) -> Option<PathBuf> {
+        self.entries.iter().find(|e| e.kind == ArtifactKind::TileTuning).map(|e| e.path.clone())
+    }
 }
 
 #[cfg(test)]
@@ -123,12 +134,13 @@ scan 64 0 scan_esc_n64.hlo.txt
 gemm 64 3 ozaki_gemm_n64_s3.hlo.txt
 gemm 64 7 ozaki_gemm_n64_s7.hlo.txt
 gemm 128 7 ozaki_gemm_n128_s7.hlo.txt
+tiletune 0 0 tile_tuning.txt
 ";
 
     #[test]
     fn parses_sample() {
         let c = Catalog::parse(SAMPLE, Path::new("/art")).unwrap();
-        assert_eq!(c.entries.len(), 5);
+        assert_eq!(c.entries.len(), 6);
         assert_eq!(c.sizes(ArtifactKind::Gemm), vec![64, 128]);
         assert_eq!(c.slice_counts(64), vec![3, 7]);
         assert!(c.find(ArtifactKind::Scan, 64, 0).is_some());
@@ -136,6 +148,13 @@ gemm 128 7 ozaki_gemm_n128_s7.hlo.txt
             c.find(ArtifactKind::Gemm, 64, 7).unwrap().path,
             Path::new("/art/ozaki_gemm_n64_s7.hlo.txt")
         );
+        assert_eq!(c.tuning_path().unwrap(), Path::new("/art/tile_tuning.txt"));
+    }
+
+    #[test]
+    fn tuning_path_absent_when_unregistered() {
+        let c = Catalog::parse("gemm 64 7 g.hlo.txt", Path::new("/a")).unwrap();
+        assert!(c.tuning_path().is_none());
     }
 
     #[test]

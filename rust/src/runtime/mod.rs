@@ -9,6 +9,8 @@
 
 pub mod catalog;
 pub mod handle;
+pub mod tuning;
 
 pub use catalog::{ArtifactKind, Catalog, CatalogEntry};
 pub use handle::{RuntimeHandle, ScanResult};
+pub use tuning::TuningEntry;

@@ -1,0 +1,179 @@
+//! Persisted tile-tuning catalog — the `ArtifactKind::TileTuning` file.
+//!
+//! Stores the fused-engine autotuner's probed winners so warm processes
+//! and future runs skip the first-use microbenchmark
+//! (`ozaki::tune::tile_shape_for`). Hand-rolled text format, one entry
+//! per line (serde is unavailable offline, same as the manifest):
+//!
+//! ```text
+//! # adp-dgemm tile-tuning catalog v1
+//! # kernel bucket mc nc pair_ns
+//! avx512-vnni medium 64 128 0.0312
+//! ```
+//!
+//! `kernel` is a `KernelId` label, `bucket` a `ShapeBucket` label, `mc`/
+//! `nc` the winning tile dims, `pair_ns` the measured ns per integer MAC
+//! (0 when unknown). Unknown kernels or buckets are the *reader's*
+//! concern — `ozaki::tune` skips entries it cannot resolve, so a catalog
+//! written by a newer binary (or another machine) degrades to a partial
+//! cache instead of an error. This module only enforces the line shape.
+//!
+//! Saves are atomic (write to `<path>.tmp`, then rename) so a crashed or
+//! raced writer can never leave a half-written catalog behind.
+
+use std::path::Path;
+
+/// One persisted tuning decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningEntry {
+    /// `KernelId::label()` of the kernel this entry tunes.
+    pub kernel: String,
+    /// `ShapeBucket::label()` of the output-shape class.
+    pub bucket: String,
+    /// Winning tile height.
+    pub mc: usize,
+    /// Winning tile width.
+    pub nc: usize,
+    /// Measured ns per integer MAC of the winner (0 = unknown).
+    pub pair_ns: f64,
+}
+
+/// Parse a catalog text. Blank lines and `#` comments are skipped;
+/// malformed lines are errors (a corrupted catalog should be noticed by
+/// the caller and rebuilt, not half-trusted).
+pub fn parse(text: &str) -> Result<Vec<TuningEntry>, String> {
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(kernel), Some(bucket), Some(mc), Some(nc), Some(pair_ns)) =
+            (it.next(), it.next(), it.next(), it.next(), it.next())
+        else {
+            return Err(format!("tuning catalog line {} malformed: '{line}'", lineno + 1));
+        };
+        if it.next().is_some() {
+            return Err(format!("tuning catalog line {} has trailing fields: '{line}'", lineno + 1));
+        }
+        let mc: usize =
+            mc.parse().map_err(|_| format!("line {}: bad mc '{mc}'", lineno + 1))?;
+        let nc: usize =
+            nc.parse().map_err(|_| format!("line {}: bad nc '{nc}'", lineno + 1))?;
+        let pair_ns: f64 =
+            pair_ns.parse().map_err(|_| format!("line {}: bad pair_ns '{pair_ns}'", lineno + 1))?;
+        if mc == 0 || nc == 0 || !pair_ns.is_finite() || pair_ns < 0.0 {
+            return Err(format!("tuning catalog line {} out of range: '{line}'", lineno + 1));
+        }
+        entries.push(TuningEntry {
+            kernel: kernel.to_string(),
+            bucket: bucket.to_string(),
+            mc,
+            nc,
+            pair_ns,
+        });
+    }
+    Ok(entries)
+}
+
+/// Serialize entries in the format [`parse`] reads.
+pub fn serialize(entries: &[TuningEntry]) -> String {
+    let mut out =
+        String::from("# adp-dgemm tile-tuning catalog v1\n# kernel bucket mc nc pair_ns\n");
+    for e in entries {
+        out.push_str(&format!("{} {} {} {} {:.6}\n", e.kernel, e.bucket, e.mc, e.nc, e.pair_ns));
+    }
+    out
+}
+
+/// Load a catalog file.
+pub fn load(path: &Path) -> Result<Vec<TuningEntry>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    parse(&text)
+}
+
+/// Save a catalog atomically: write `<path>.tmp`, then rename over the
+/// destination, so readers never observe a torn file.
+pub fn save(path: &Path, entries: &[TuningEntry]) -> Result<(), String> {
+    let text = serialize(entries);
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(&tmp, text).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("renaming {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_serialize_round_trips() {
+        let entries = vec![
+            TuningEntry {
+                kernel: "avx512-vnni".into(),
+                bucket: "medium".into(),
+                mc: 64,
+                nc: 128,
+                pair_ns: 0.031_25,
+            },
+            TuningEntry {
+                kernel: "scalar".into(),
+                bucket: "large".into(),
+                mc: 96,
+                nc: 96,
+                pair_ns: 0.0,
+            },
+        ];
+        let text = serialize(&entries);
+        assert_eq!(parse(&text).unwrap(), entries);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let got = parse("# header\n\n  \nscalar medium 64 64 1.5\n").unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].mc, got[0].nc), (64, 64));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for bad in [
+            "scalar medium 64",                // too few fields
+            "scalar medium 64 64 1.0 extra",   // too many fields
+            "scalar medium zero 64 1.0",       // non-numeric mc
+            "scalar medium 0 64 1.0",          // degenerate tile
+            "scalar medium 64 64 nope",        // non-numeric pair_ns
+            "scalar medium 64 64 -1.0",        // negative cost
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn save_and_load_round_trip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("adp_tune_test_{}", std::process::id()));
+        let path = dir.join("tile_tuning.txt");
+        let entries = vec![TuningEntry {
+            kernel: "avx2-maddubs".into(),
+            bucket: "large".into(),
+            mc: 128,
+            nc: 64,
+            pair_ns: 0.25,
+        }];
+        save(&path, &entries).unwrap();
+        assert_eq!(load(&path).unwrap(), entries);
+        // Overwrite must be atomic-rename clean, not append.
+        save(&path, &entries[..0].to_vec()).unwrap();
+        assert!(load(&path).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

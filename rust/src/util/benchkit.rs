@@ -51,6 +51,78 @@ pub fn bench_budget<T>(budget_s: f64, mut f: impl FnMut() -> T) -> Stats {
     bench(1, iters, f)
 }
 
+/// Machine-readable arm collector for the `BENCH_*.json` artifacts CI
+/// archives next to the human-readable report lines. Hand-rolled JSON
+/// (serde is unavailable offline, like everything else here): a flat
+/// `arms` array of objects with the timing stats, an `ns_per_unit`
+/// normalization (e.g. ns/flop or ns/MAC), and free-form string context
+/// (kernel id, tile shape, thread count).
+#[derive(Default)]
+pub struct JsonReport {
+    arms: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record one arm. `units` is the work one iteration performs (flops,
+    /// MACs, elements) — `ns_per_unit` is derived from the median time.
+    pub fn arm(&mut self, name: &str, stats: Stats, units: f64, extra: &[(&str, String)]) {
+        let mut obj = format!(
+            "{{\"name\":\"{}\",\"median_s\":{:.9},\"min_s\":{:.9},\"mean_s\":{:.9},\"iters\":{},\"ns_per_unit\":{:.6}",
+            name,
+            stats.median_s,
+            stats.min_s,
+            stats.mean_s,
+            stats.iters,
+            stats.median_s * 1e9 / units.max(1.0)
+        );
+        for (k, v) in extra {
+            obj.push_str(&format!(",\"{k}\":\"{v}\""));
+        }
+        obj.push('}');
+        self.arms.push(obj);
+    }
+
+    /// Arms recorded so far.
+    pub fn len(&self) -> usize {
+        self.arms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arms.is_empty()
+    }
+
+    /// Serialize `{"bench":..., <context...>, "arms":[...]}`.
+    pub fn to_json(&self, bench: &str, context: &[(&str, String)]) -> String {
+        let mut out = format!("{{\n  \"bench\": \"{bench}\"");
+        for (k, v) in context {
+            out.push_str(&format!(",\n  \"{k}\": \"{v}\""));
+        }
+        out.push_str(",\n  \"arms\": [\n");
+        for (i, arm) in self.arms.iter().enumerate() {
+            out.push_str("    ");
+            out.push_str(arm);
+            out.push_str(if i + 1 < self.arms.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the report to `path` (best effort is the *caller's* call —
+    /// this propagates IO errors).
+    pub fn write(
+        &self,
+        path: &str,
+        bench: &str,
+        context: &[(&str, String)],
+    ) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(bench, context))
+    }
+}
+
 /// Print one result row: `name, median_ms, min_ms, label=value ...`.
 pub fn report(name: &str, stats: Stats, extra: &[(&str, String)]) {
     let mut line = format!(
@@ -76,6 +148,24 @@ mod tests {
         assert_eq!(s.iters, 5);
         assert!(s.min_s <= s.median_s && s.median_s <= s.mean_s * 5.0);
         assert!(s.min_s >= 0.0);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut j = JsonReport::new();
+        let st = Stats { iters: 3, min_s: 1e-3, median_s: 2e-3, mean_s: 2e-3 };
+        j.arm("fused[scalar]", st, 1e6, &[("kernel", "scalar".to_string())]);
+        j.arm("fused[vnni]", st, 1e6, &[]);
+        let json = j.to_json("perf_hotpath", &[("n", "512".to_string())]);
+        assert!(json.contains("\"bench\": \"perf_hotpath\""));
+        assert!(json.contains("\"n\": \"512\""));
+        assert!(json.contains("\"name\":\"fused[scalar]\""));
+        assert!(json.contains("\"kernel\":\"scalar\""));
+        // ns_per_unit = 2e-3 s * 1e9 / 1e6 units = 2 ns/unit.
+        assert!(json.contains("\"ns_per_unit\":2.000000"));
+        // Exactly one trailing-comma-free arm list: valid JSON by hand.
+        assert_eq!(json.matches("},\n").count(), 1);
+        assert_eq!(json.matches("\"arms\"").count(), 1);
     }
 
     #[test]

@@ -12,8 +12,8 @@ use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend, Workspa
 use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
 use adp_dgemm::linalg::Matrix;
 use adp_dgemm::ozaki::{
-    emulated_gemm_on, fused_gemm_on, gemm_grouped, GroupedProblem, OzakiConfig, PairSchedule,
-    SchemeKind, SliceCache, SliceEncoding, FUSED_MC, FUSED_NC,
+    emulated_gemm_on, fused_gemm_on, gemm_grouped, tune, GroupedProblem, OzakiConfig,
+    PairSchedule, SchemeKind, SliceCache, SliceEncoding, TileShape, FUSED_MC, FUSED_NC,
 };
 use adp_dgemm::util::{prop, Rng};
 use adp_dgemm::{AdpConfig, AdpEngine};
@@ -71,6 +71,10 @@ fn fused_parallel_covers_multi_band_shapes() {
     let par_pool = WorkspacePool::new();
     let ser_pool = WorkspacePool::new();
     let mut rng = Rng::new(4100);
+    // The tile-count accounting below assumes the FUSED_MC x FUSED_NC
+    // grid, so pin the baseline geometry for the duration (the autotuner
+    // may otherwise pick a different — bitwise identical — shape).
+    tune::force_shape(Some(TileShape::BASELINE));
     let shapes = [
         (FUSED_MC + 1, 17, FUSED_NC - 1),
         (3 * FUSED_MC - 5, 8, FUSED_NC + 3),
@@ -99,6 +103,7 @@ fn fused_parallel_covers_multi_band_shapes() {
         par_pool.stats().fused_tiles >= expect_tiles,
         "parallel bands cover at least the serial grid"
     );
+    tune::force_shape(None);
 }
 
 #[test]

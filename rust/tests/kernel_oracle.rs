@@ -1,10 +1,13 @@
 //! Boundary-value and property oracle suite for the `ozaki::kernel`
 //! microkernel layer: every kernel runnable on this machine (scalar
-//! reference, AVX2 maddubs, AVX2 pmaddwd) must reproduce the naive i64
-//! digit dot product **exactly** — on digit extremes sitting right at
-//! the i16 pairwise and i32 accumulator bounds, on odd/tiny shapes that
-//! don't fill a register block, on both encodings, and through the
-//! fused engine end to end.
+//! reference, AVX2 maddubs, AVX2 pmaddwd, AVX-512 pmaddwd, AVX-512 VNNI)
+//! must reproduce the naive i64 digit dot product **exactly** — on digit
+//! extremes sitting right at the i16 pairwise and i32 accumulator
+//! bounds, on odd/tiny shapes that don't fill a register block (8-lane
+//! AVX2 and 16-lane AVX-512 alike), on both encodings, and through the
+//! fused engine end to end. Every `check_all_kernels` sweep iterates
+//! `available_kernels()`, so the AVX-512 tier is covered at the same
+//! boundary values on any host that can run it.
 
 use adp_dgemm::backend::WorkspacePool;
 use adp_dgemm::linalg::Matrix;
@@ -146,7 +149,9 @@ fn signed_encoding_extremes() {
 #[test]
 fn tiny_and_odd_shapes_all_kernels() {
     // 1xKx1, single-row / single-column, and row/col counts that are not
-    // multiples of the register blocks (2x4 scalar, 8-wide SIMD).
+    // multiples of the register blocks (2x4 scalar, 8-wide AVX2, 16-wide
+    // AVX-512) — the n = 15/16/17 and 31/32/33 entries straddle the
+    // 16-lane NR boundary of the AVX-512 tier on both sides.
     let mut rng = Rng::new(500);
     for (m, k, n) in [
         (1usize, 1usize, 1usize),
@@ -157,6 +162,10 @@ fn tiny_and_odd_shapes_all_kernels() {
         (9, 31, 7),
         (2, 33, 15),
         (13, 40, 17),
+        (5, 21, 16),
+        (4, 10, 31),
+        (6, 19, 32),
+        (3, 12, 33),
     ] {
         let a = Matrix::uniform(m, k, -3.0, 3.0, &mut rng);
         let b = Matrix::uniform(k, n, -3.0, 3.0, &mut rng);
@@ -312,6 +321,33 @@ fn dispatch_honors_force_scalar_and_stays_in_the_available_set() {
         assert!(
             kernel::available_kernels().iter().any(|k| k.id() == id),
             "dispatched {id:?} not runnable here"
+        );
+    }
+}
+
+#[test]
+fn dispatch_honors_a_valid_adp_kernel_override() {
+    // The CI kernel matrix runs the whole suite with ADP_KERNEL forced
+    // per tier: when the override names a kernel this host can run, the
+    // dispatch must select exactly it, for both encodings. (A missing or
+    // unavailable override falls back to normal dispatch — covered by
+    // the availability assert above.)
+    let forced_scalar = matches!(
+        std::env::var("ADP_FORCE_SCALAR").ok().as_deref(),
+        Some("1") | Some("true") | Some("on")
+    );
+    let Some(want) = std::env::var("ADP_KERNEL").ok().and_then(|v| KernelId::parse(&v)) else {
+        return;
+    };
+    if forced_scalar || kernel::kernel_by_id(want).is_none() {
+        return; // force-scalar outranks the override; unavailable tiers fall back
+    }
+    for enc in [SliceEncoding::Unsigned, SliceEncoding::Signed] {
+        assert_eq!(
+            kernel::active_id(enc),
+            want,
+            "ADP_KERNEL={} must pin the dispatch for {enc:?}",
+            want.label()
         );
     }
 }
