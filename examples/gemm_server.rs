@@ -75,7 +75,7 @@ fn main() {
     let mut lat = Vec::new();
     let mut verified = 0usize;
     for (kind, a, b, rx) in pending {
-        let resp = rx.recv().expect("worker died");
+        let resp = rx.recv().expect("service dropped reply").expect("request failed");
         lat.push(resp.total_s);
         // verify every finite response against the dd reference
         if kind != Kind::Nan && kind != Kind::Inf {

@@ -1,0 +1,267 @@
+//! SLO-grade load generator: drive the sharded `GemmService` with
+//! mixed-shape traffic on all three priority tiers at saturation, then
+//! report per-tier p50/p99 queue + total latency, throughput, and
+//! rejection rate — human-readable lines plus a machine-readable
+//! `BENCH_service.json` (archived from CI, like `BENCH_ablation.json` /
+//! `BENCH_hotpath.json`) so the service perf trajectory is recorded
+//! across PRs.
+//!
+//! Three open-loop submitter threads run until the deadline, one per
+//! tier, using the non-blocking APIs so backpressure shows up as
+//! *counted rejections* instead of submitter stalls:
+//!
+//! * `high`   — interactive-sized requests via `submit_async` tickets;
+//! * `normal` — medium requests via `try_submit`;
+//! * `batch`  — shared-A groups via `submit_batch` (the one blocking
+//!   path: bulk traffic is allowed to wait its turn).
+//!
+//! ```sh
+//! cargo run --release --offline --example load_gen          # ~2 s run
+//! LOADGEN_SECONDS=0.3 cargo run --release --example load_gen  # CI smoke
+//! ```
+//!
+//! Env knobs: `LOADGEN_SECONDS` (default 2.0), `LOADGEN_WORKERS`
+//! (default 4), `LOADGEN_SHARDS` (default 2), `LOADGEN_OUT` (default
+//! `BENCH_service.json`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
+use adp_dgemm::coordinator::{GemmResult, GemmService, Priority, ServiceConfig};
+use adp_dgemm::linalg::{gemm, Matrix};
+use adp_dgemm::util::Rng;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Pre-generated operand pool: generation is O(n^2) against the GEMMs'
+/// O(n^3), but keeping it off the submission loop makes the offered
+/// load steadier.
+fn pool(sizes: &[usize], per_size: usize, seed: u64) -> Vec<(Matrix, Matrix)> {
+    let mut rng = Rng::new(seed);
+    let mut pairs = Vec::new();
+    for &n in sizes {
+        for _ in 0..per_size {
+            pairs.push((
+                Matrix::uniform(n, n, -1.0, 1.0, &mut rng),
+                Matrix::uniform(n, n, -1.0, 1.0, &mut rng),
+            ));
+        }
+    }
+    pairs
+}
+
+/// Drain-or-keep pass over pending replies; returns completions seen.
+fn drain<T>(pending: &mut Vec<T>, mut poll: impl FnMut(&mut T) -> Option<GemmResult>) -> u64 {
+    let mut done = 0;
+    pending.retain_mut(|p| match poll(p) {
+        Some(r) => {
+            r.expect("load_gen submits only valid shapes");
+            done += 1;
+            false
+        }
+        None => true,
+    });
+    done
+}
+
+fn main() {
+    let seconds = env_f64("LOADGEN_SECONDS", 2.0).max(0.05);
+    let workers = env_usize("LOADGEN_WORKERS", 4);
+    let shards = env_usize("LOADGEN_SHARDS", 2);
+    let out_path = std::env::var("LOADGEN_OUT").unwrap_or_else(|| "BENCH_service.json".into());
+
+    // Tight queues so saturation actually sheds load (the rejection-rate
+    // column must measure something), coalescing on so the grouped
+    // pipeline carries the bulk tier.
+    let cfg = ServiceConfig {
+        workers,
+        shards,
+        queue_depth: 64,
+        tier_depths: [16, 32, 32],
+        coalesce: true,
+        coalesce_window: Duration::from_micros(200),
+        ..Default::default()
+    };
+    let svc = Arc::new(GemmService::start(cfg, None, || Box::new(AlwaysEmulate)));
+
+    // Sanity pin before opening the floodgates: the service result is
+    // the real GEMM.
+    {
+        let mut rng = Rng::new(0x10AD);
+        let a = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
+        let resp = svc.gemm_blocking(a.clone(), b.clone()).expect("warmup request");
+        assert!(resp.c.sub(&gemm(&a, &b)).max_abs() < 1e-12, "service result mismatch");
+    }
+    // Measure the load run only, not the warmup request.
+    svc.metrics.reset();
+
+    let completed = Arc::new([AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)]);
+    let deadline = Instant::now() + Duration::from_secs_f64(seconds);
+    let t0 = Instant::now();
+
+    // high tier: interactive-sized requests through submit_async tickets.
+    let high = {
+        let (svc, completed) = (svc.clone(), completed.clone());
+        std::thread::spawn(move || {
+            let ops = pool(&[16, 24, 32], 4, 1);
+            let mut tickets = Vec::new();
+            let mut i = 0usize;
+            while Instant::now() < deadline {
+                let (a, b) = ops[i % ops.len()].clone();
+                i += 1;
+                match svc.submit_async(a, b, Priority::High) {
+                    Ok(t) => tickets.push(t),
+                    Err(rej) => {
+                        assert!(rej.error.is_retryable(), "unexpected: {}", rej.error);
+                        std::thread::yield_now();
+                    }
+                }
+                let done = drain(&mut tickets, |t| t.poll());
+                completed[Priority::High.index()].fetch_add(done, Ordering::Relaxed);
+            }
+            let n = tickets.len() as u64;
+            for t in tickets {
+                t.wait().expect("load_gen submits only valid shapes");
+            }
+            completed[Priority::High.index()].fetch_add(n, Ordering::Relaxed);
+        })
+    };
+
+    // normal tier: medium requests through try_submit receivers.
+    let normal = {
+        let (svc, completed) = (svc.clone(), completed.clone());
+        std::thread::spawn(move || {
+            let ops = pool(&[48, 64], 4, 2);
+            let mut pending = Vec::new();
+            let mut i = 0usize;
+            while Instant::now() < deadline {
+                let (a, b) = ops[i % ops.len()].clone();
+                i += 1;
+                match svc.try_submit(a, b) {
+                    Ok(rx) => pending.push(rx),
+                    Err(rej) => {
+                        assert!(rej.error.is_retryable(), "unexpected: {}", rej.error);
+                        std::thread::yield_now();
+                    }
+                }
+                let done = drain(&mut pending, |rx| rx.try_recv().ok());
+                completed[Priority::Normal.index()].fetch_add(done, Ordering::Relaxed);
+            }
+            let n = pending.len() as u64;
+            for rx in pending {
+                rx.recv().expect("reply").expect("load_gen submits only valid shapes");
+            }
+            completed[Priority::Normal.index()].fetch_add(n, Ordering::Relaxed);
+        })
+    };
+
+    // batch tier: shared-A groups through submit_batch (blocking: bulk
+    // traffic waits for queue space instead of shedding).
+    let batch = {
+        let (svc, completed) = (svc.clone(), completed.clone());
+        std::thread::spawn(move || {
+            let ops = pool(&[32, 64, 96], 2, 3);
+            let mut pending = Vec::new();
+            let mut i = 0usize;
+            while Instant::now() < deadline {
+                let (a, _) = ops[i % ops.len()].clone();
+                let group: Vec<(Matrix, Matrix)> =
+                    (0..4).map(|j| (a.clone(), ops[(i + j) % ops.len()].1.clone())).collect();
+                i += 1;
+                match svc.submit_batch(group) {
+                    Ok(rxs) => pending.extend(rxs),
+                    Err(e) => panic!("blocking batch submit failed: {e}"),
+                }
+                let done = drain(&mut pending, |rx| rx.try_recv().ok());
+                completed[Priority::Batch.index()].fetch_add(done, Ordering::Relaxed);
+            }
+            let n = pending.len() as u64;
+            for rx in pending {
+                rx.recv().expect("reply").expect("load_gen submits only valid shapes");
+            }
+            completed[Priority::Batch.index()].fetch_add(n, Ordering::Relaxed);
+        })
+    };
+
+    high.join().expect("high submitter");
+    normal.join().expect("normal submitter");
+    batch.join().expect("batch submitter");
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(svc.inflight(), 0, "drained load run must leave nothing inflight");
+
+    let snap = svc.metrics.snapshot();
+    let mut total_rps = 0.0;
+    let mut tier_objs = Vec::new();
+    println!("# service load: {wall:.2}s wall, {workers} workers / {shards} shard(s), coalesce on");
+    for p in Priority::ALL {
+        let t = &snap.tiers[p.index()];
+        let done = completed[p.index()].load(Ordering::Relaxed);
+        assert_eq!(done, t.completed, "tier {}: client and service counts agree", t.tier);
+        let rps = t.completed as f64 / wall;
+        total_rps += rps;
+        println!(
+            "tier {:<6} enq={} done={} rejected={} ({:.1}%) | {:.1} req/s | queue p50/p99 {:.2}/{:.2} ms | total p50/p99 {:.2}/{:.2} ms",
+            t.tier,
+            t.enqueued,
+            t.completed,
+            t.rejected,
+            t.rejection_rate() * 100.0,
+            rps,
+            t.queue_p50_s * 1e3,
+            t.queue_p99_s * 1e3,
+            t.total_p50_s * 1e3,
+            t.total_p99_s * 1e3
+        );
+        tier_objs.push(format!(
+            "{{\"tier\":\"{}\",\"enqueued\":{},\"completed\":{},\"failed\":{},\"rejected\":{},\"rejection_rate\":{:.6},\"throughput_rps\":{:.3},\"queue_p50_s\":{:.9},\"queue_p99_s\":{:.9},\"total_p50_s\":{:.9},\"total_p99_s\":{:.9}}}",
+            t.tier,
+            t.enqueued,
+            t.completed,
+            t.failed,
+            t.rejected,
+            t.rejection_rate(),
+            rps,
+            t.queue_p50_s,
+            t.queue_p99_s,
+            t.total_p50_s,
+            t.total_p99_s
+        ));
+    }
+    println!(
+        "total: {:.1} req/s | emulated {} | coalesced {} reqs in {} buckets",
+        total_rps, snap.emulated, snap.coalesced_requests, snap.coalesced_batches
+    );
+
+    // Hand-rolled JSON (serde is unavailable offline), same shape family
+    // as util::benchkit::JsonReport: context fields + one array.
+    let mut json = String::from("{\n  \"bench\": \"service_load\"");
+    for (k, v) in [
+        ("seconds", format!("{wall:.3}")),
+        ("workers", workers.to_string()),
+        ("shards", shards.to_string()),
+        ("coalesce", "true".to_string()),
+        ("total_throughput_rps", format!("{total_rps:.3}")),
+        ("requests", snap.requests.to_string()),
+    ] {
+        json.push_str(&format!(",\n  \"{k}\": \"{v}\""));
+    }
+    json.push_str(",\n  \"tiers\": [\n");
+    for (i, obj) in tier_objs.iter().enumerate() {
+        json.push_str("    ");
+        json.push_str(obj);
+        json.push_str(if i + 1 < tier_objs.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, json).expect("write BENCH_service.json");
+    println!("wrote {out_path}");
+    svc.shutdown();
+}

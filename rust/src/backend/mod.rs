@@ -242,6 +242,30 @@ impl BackendSpec {
             BackendSpec::Parallel { .. } => "parallel",
         }
     }
+
+    /// Divide this spec's thread budget across `shards` service shards:
+    /// each shard builds its own pool slice, so one shard saturating its
+    /// backend cannot convoy another's. Serial stays serial; a
+    /// machine-sized spec (`threads = 0`) resolves to the machine size
+    /// first so the split is deterministic; every slice keeps at least
+    /// one thread.
+    pub fn shard_slice(self, shards: usize) -> BackendSpec {
+        let shards = shards.max(1);
+        if shards == 1 {
+            return self;
+        }
+        match self {
+            BackendSpec::Serial => BackendSpec::Serial,
+            BackendSpec::Parallel { threads } => {
+                let total = if threads == 0 {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+                } else {
+                    threads
+                };
+                BackendSpec::Parallel { threads: (total / shards).max(1) }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -269,6 +293,28 @@ mod tests {
         assert_eq!(BackendSpec::parse("gpu"), None);
         assert_eq!(BackendSpec::Serial.build().threads(), 1);
         assert_eq!(BackendSpec::Parallel { threads: 3 }.build().threads(), 3);
+    }
+
+    #[test]
+    fn shard_slice_divides_the_thread_budget() {
+        assert_eq!(BackendSpec::Serial.shard_slice(4), BackendSpec::Serial);
+        // One shard is the identity — including for machine-sized specs.
+        assert_eq!(BackendSpec::auto().shard_slice(1), BackendSpec::auto());
+        assert_eq!(
+            BackendSpec::Parallel { threads: 8 }.shard_slice(2),
+            BackendSpec::Parallel { threads: 4 }
+        );
+        // Slices never drop below one thread, however many shards.
+        assert_eq!(
+            BackendSpec::Parallel { threads: 2 }.shard_slice(16),
+            BackendSpec::Parallel { threads: 1 }
+        );
+        // A machine-sized spec resolves before splitting: the result is a
+        // concrete per-shard budget, never another machine-sized spec.
+        match BackendSpec::auto().shard_slice(2) {
+            BackendSpec::Parallel { threads } => assert!(threads >= 1),
+            other => panic!("auto().shard_slice(2) must stay parallel, got {other:?}"),
+        }
     }
 
     #[test]

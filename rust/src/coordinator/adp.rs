@@ -177,7 +177,11 @@ impl AdpConfig {
     }
 }
 
-/// The ADP engine. Cheap to construct; share one per worker thread.
+/// The ADP engine. Cheap to construct, and `Send + Sync` (every method
+/// takes `&self`; shared state lives behind `Arc`s and the heuristic is
+/// `Sync`): the sharded service shares one engine per shard across that
+/// shard's workers through an `Arc`, so the shard's plan/slice caches,
+/// workspace pool, and backend pool slice are one coherent unit.
 pub struct AdpEngine {
     pub cfg: AdpConfig,
     pub metrics: Arc<Metrics>,

@@ -70,7 +70,12 @@ impl EmulationChoice {
     }
 }
 
-pub trait SelectionHeuristic: Send {
+/// `Send + Sync`: the sharded [`crate::coordinator::GemmService`] shares
+/// one engine (and therefore one heuristic) across a shard's workers
+/// through an `Arc`. Heuristics are consulted concurrently, so interior
+/// state needs its own synchronization (all shipped policies are plain
+/// data).
+pub trait SelectionHeuristic: Send + Sync {
     /// true => dispatch emulation; false => native FP64.
     fn emulate(&self, inp: &HeuristicInput) -> bool;
 
@@ -124,6 +129,13 @@ impl SelectionHeuristic for PlatformHeuristic {
 const MIN_NS: f64 = 1e-3;
 /// Floor for the fixed decision overhead (1 us — below any real scan).
 const MIN_FIXED_NS: f64 = 1_000.0;
+
+/// Conservative `crt_ns` stand-in when the modulus basis cannot cover
+/// the calibration window: priced so high that [`CpuCalibration::choose`]
+/// never picks the CRT arm, instead of the old `.expect(...)` aborting
+/// calibration — and with it the first request of whichever service
+/// worker triggered it.
+pub const FALLBACK_CRT_NS: f64 = 1e9;
 
 /// Guard one measured constant against zero/denormal/NaN timings.
 fn sane(x: f64, floor: f64) -> f64 {
@@ -199,14 +211,21 @@ impl CpuCalibration {
         // CRT arm: time the whole CRT GEMM at the same window and
         // attribute what its per-modulus GEMMs (same microkernels, so
         // pair_ns applies) don't explain to the per-element-per-modulus
-        // extraction + reconstruction constant.
-        let crt_cfg = CrtConfig::for_window(7, n).expect("96-deep window fits the basis");
-        let nm = crt_cfg.gemm_count() as f64;
-        let t1 = std::time::Instant::now();
-        std::hint::black_box(crt_gemm(&a, &b, &crt_cfg));
-        let crt_total = t1.elapsed().as_secs_f64() * 1e9;
-        let crt_elems = nm * (3 * n * n) as f64; // A + B planes + output recon
-        let crt_ns = sane((crt_total - pair_ns * nm * ops) / crt_elems, MIN_NS);
+        // extraction + reconstruction constant. If the basis cannot
+        // cover the calibration window, degrade to a conservative
+        // constant (the CRT arm is simply never chosen) instead of
+        // panicking the calibration.
+        let crt_ns = match CrtConfig::for_window(7, n) {
+            Some(crt_cfg) => {
+                let nm = crt_cfg.gemm_count() as f64;
+                let t1 = std::time::Instant::now();
+                std::hint::black_box(crt_gemm(&a, &b, &crt_cfg));
+                let crt_total = t1.elapsed().as_secs_f64() * 1e9;
+                let crt_elems = nm * (3 * n * n) as f64; // A + B planes + output recon
+                sane((crt_total - pair_ns * nm * ops) / crt_elems, MIN_NS)
+            }
+            None => FALLBACK_CRT_NS,
+        };
 
         // The fixed overhead is the decision pre-pass itself — measure
         // the coarse-ESC reduction instead of hard-coding a guess (the
@@ -430,6 +449,23 @@ mod tests {
         assert_eq!(h.choose(&inp), EmulationChoice::SlicePair, "no basis => slice pairs");
         assert_eq!(h.choose(&inp.with_crt(Some(17))), EmulationChoice::Crt);
         assert_eq!(h.name(), "force-crt");
+    }
+
+    #[test]
+    fn fallback_crt_constant_disables_the_crt_arm() {
+        // The calibration's no-basis degradation path: a calibration
+        // carrying FALLBACK_CRT_NS still works, it just never routes to
+        // the CRT family — even when the input advertises one.
+        let c = CpuCalibration {
+            fp64_ns: 1.0,
+            pair_ns: 0.03,
+            slice_ns: 0.0,
+            crt_ns: FALLBACK_CRT_NS,
+            fixed_ns: 0.0,
+        };
+        let inp = HeuristicInput::single(256, 256, 256, 7).with_crt(Some(17));
+        assert_eq!(c.choose(&inp), EmulationChoice::SlicePair, "CRT arm priced out");
+        assert!(c.emulate(&inp), "the boolean projection is unaffected");
     }
 
     #[test]

@@ -1,11 +1,116 @@
 //! Dispatch metrics: outcome histogram, slice-count histogram (Fig 7
-//! right), guardrail-vs-exec time split (Fig 5 / §7.1's <10% claim).
+//! right), guardrail-vs-exec time split (Fig 5 / §7.1's <10% claim),
+//! plus per-[`Priority`]-tier service accounting (admissions, typed
+//! failures, retryable rejections, and queue/total latency quantiles
+//! from lock-cheap log2 histograms).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use super::adp::{AdpOutcome, GemmDecision};
+use super::service::Priority;
 use crate::backend::WorkspaceStats;
+
+/// Number of [`Priority`] tiers ([`Priority::ALL`]'s length).
+pub const TIER_COUNT: usize = 3;
+
+/// log2-microsecond latency histogram: bucket 0 holds sub-microsecond
+/// samples, bucket `i` covers `[2^(i-1), 2^i)` us — 47 doublings reach
+/// ~2.2 years, so saturation is theoretical. Fixed-size and allocation-
+/// free: recording a latency under the metrics lock is two increments.
+#[derive(Clone)]
+struct LatencyHistogram {
+    buckets: [u64; 48],
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; 48], count: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    fn record(&mut self, seconds: f64) {
+        let us = (seconds.max(0.0) * 1e6) as u64;
+        let bucket = if us == 0 { 0 } else { (64 - us.leading_zeros() as usize).min(47) };
+        self.buckets[bucket] += 1;
+        self.count += 1;
+    }
+
+    /// Quantile estimate (`q` in [0, 1]) as seconds: the geometric
+    /// midpoint `2^(i-1)·sqrt(2)` us of the bucket holding the q-th
+    /// sample. 0.0 with no samples.
+    fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let mid_us = if i == 0 {
+                    0.5
+                } else {
+                    (1u64 << (i - 1)) as f64 * std::f64::consts::SQRT_2
+                };
+                return mid_us * 1e-6;
+            }
+        }
+        0.0
+    }
+}
+
+/// Mutable per-tier counters under the metrics lock.
+#[derive(Default, Clone)]
+struct TierInner {
+    enqueued: u64,
+    completed: u64,
+    failed: u64,
+    rejected: u64,
+    queue: LatencyHistogram,
+    total: LatencyHistogram,
+}
+
+/// Per-[`Priority`]-tier service accounting, reported inside
+/// [`MetricsSnapshot::tiers`] (indexed by [`Priority::index`]).
+#[derive(Clone, Debug, Default)]
+pub struct TierSnapshot {
+    /// Tier label ([`Priority::label`]); `""` on a default snapshot.
+    pub tier: &'static str,
+    /// Requests admitted past admission control into a shard queue.
+    pub enqueued: u64,
+    /// Requests that completed with a successful response.
+    pub completed: u64,
+    /// Requests that completed with a typed error (shape mismatch,
+    /// engine panic) after admission.
+    pub failed: u64,
+    /// Retryable admission rejections (`QueueFull`/`TierFull`) on the
+    /// non-blocking submission paths. Shutdown rejections are not
+    /// load-shedding and are not counted here.
+    pub rejected: u64,
+    /// Median submission-to-execution-start latency, seconds.
+    pub queue_p50_s: f64,
+    /// p99 submission-to-execution-start latency, seconds.
+    pub queue_p99_s: f64,
+    /// Median end-to-end latency, seconds.
+    pub total_p50_s: f64,
+    /// p99 end-to-end latency, seconds.
+    pub total_p99_s: f64,
+}
+
+impl TierSnapshot {
+    /// Fraction of admission attempts shed by backpressure.
+    pub fn rejection_rate(&self) -> f64 {
+        let attempts = self.enqueued + self.rejected;
+        if attempts == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / attempts as f64
+        }
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -38,6 +143,7 @@ struct Inner {
     kernel: &'static str,
     tile_mc: usize,
     tile_nc: usize,
+    tiers: [TierInner; TIER_COUNT],
 }
 
 /// Immutable snapshot of the counters.
@@ -101,6 +207,10 @@ pub struct MetricsSnapshot {
     pub tile_mc: usize,
     /// Tile width of the last fused dispatch (0 = see `tile_mc`).
     pub tile_nc: usize,
+    /// Per-priority-tier service accounting (admissions, completions,
+    /// typed failures, rejections, latency quantiles), indexed by
+    /// [`Priority::index`].
+    pub tiers: [TierSnapshot; TIER_COUNT],
 }
 
 impl MetricsSnapshot {
@@ -167,6 +277,32 @@ impl Metrics {
         g.coalesced_requests += n;
     }
 
+    /// `n` requests admitted into a shard queue at `tier`.
+    pub fn record_enqueued(&self, tier: Priority, n: u64) {
+        self.inner.lock().unwrap().tiers[tier.index()].enqueued += n;
+    }
+
+    /// `n` requests shed by admission control at `tier` (retryable
+    /// `QueueFull`/`TierFull` verdicts on the non-blocking paths).
+    pub fn record_rejected(&self, tier: Priority, n: u64) {
+        self.inner.lock().unwrap().tiers[tier.index()].rejected += n;
+    }
+
+    /// One request completed successfully with the given latency split.
+    pub fn record_latency(&self, tier: Priority, queue_s: f64, total_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let t = &mut g.tiers[tier.index()];
+        t.completed += 1;
+        t.queue.record(queue_s);
+        t.total.record(total_s);
+    }
+
+    /// One admitted request completed with a typed error (shape
+    /// mismatch, engine panic).
+    pub fn record_failure(&self, tier: Priority) {
+        self.inner.lock().unwrap().tiers[tier.index()].failed += 1;
+    }
+
     /// Refresh the workspace gauges from a pool's lifetime totals. The
     /// pool is shared service-wide, so totals (not per-request deltas)
     /// are the meaningful series; `max` keeps the gauges monotone even
@@ -216,6 +352,24 @@ impl Metrics {
             kernel: g.kernel,
             tile_mc: g.tile_mc,
             tile_nc: g.tile_nc,
+            tiers: {
+                let mut tiers: [TierSnapshot; TIER_COUNT] = Default::default();
+                for p in Priority::ALL {
+                    let t = &g.tiers[p.index()];
+                    tiers[p.index()] = TierSnapshot {
+                        tier: p.label(),
+                        enqueued: t.enqueued,
+                        completed: t.completed,
+                        failed: t.failed,
+                        rejected: t.rejected,
+                        queue_p50_s: t.queue.quantile(0.50),
+                        queue_p99_s: t.queue.quantile(0.99),
+                        total_p50_s: t.total.quantile(0.50),
+                        total_p99_s: t.total.quantile(0.99),
+                    };
+                }
+                tiers
+            },
         }
     }
 
@@ -330,6 +484,54 @@ mod tests {
         assert_eq!((s.kernel, s.tile_mc, s.tile_nc), ("scalar", 0, 0));
         m.reset();
         assert_eq!(m.snapshot().kernel, "");
+    }
+
+    #[test]
+    fn tier_counters_and_quantiles() {
+        let m = Metrics::default();
+        m.record_enqueued(Priority::High, 3);
+        m.record_rejected(Priority::High, 1);
+        // Two fast requests and one slow one: p50 lands in the fast
+        // buckets, p99 in the slow one.
+        m.record_latency(Priority::High, 10e-6, 100e-6);
+        m.record_latency(Priority::High, 12e-6, 110e-6);
+        m.record_latency(Priority::High, 5e-3, 80e-3);
+        m.record_failure(Priority::High);
+        m.record_enqueued(Priority::Batch, 7);
+        let s = m.snapshot();
+        let high = &s.tiers[Priority::High.index()];
+        assert_eq!(high.tier, "high");
+        assert_eq!((high.enqueued, high.completed, high.failed, high.rejected), (3, 3, 1, 1));
+        assert!((high.rejection_rate() - 0.25).abs() < 1e-12);
+        // p50 ~= 11 us (log2 bucket midpoints): well under 1 ms.
+        assert!(high.total_p50_s > 10e-6 && high.total_p50_s < 1e-3, "{}", high.total_p50_s);
+        // p99 lands in the slow request's bucket: tens of milliseconds.
+        assert!(high.total_p99_s > 10e-3 && high.total_p99_s < 1.0, "{}", high.total_p99_s);
+        assert!(high.queue_p50_s < high.total_p50_s);
+        assert_eq!(s.tiers[Priority::Batch.index()].enqueued, 7);
+        assert_eq!(s.tiers[Priority::Normal.index()].tier, "normal");
+        assert_eq!(s.tiers[Priority::Normal.index()].completed, 0);
+        assert_eq!(s.tiers[Priority::Normal.index()].rejection_rate(), 0.0, "0/0 is 0");
+        m.reset();
+        assert_eq!(m.snapshot().tiers[Priority::High.index()].completed, 0);
+    }
+
+    #[test]
+    fn latency_histogram_quantile_edges() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram reports 0");
+        h.record(0.0); // sub-microsecond bucket
+        assert!(h.quantile(0.5) > 0.0 && h.quantile(0.5) < 1e-6);
+        let mut h = LatencyHistogram::default();
+        for _ in 0..99 {
+            h.record(1e-6);
+        }
+        h.record(1.0);
+        assert!(h.quantile(0.5) < 1e-5);
+        assert!(h.quantile(0.99) < 1e-5, "99th of 100 is still the fast bucket");
+        assert!(h.quantile(1.0) > 0.5, "max lands in the 1 s bucket");
+        // Monotone in q.
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
     }
 
     #[test]

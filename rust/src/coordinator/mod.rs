@@ -21,11 +21,14 @@
 //!   grouped entry point feeding the slice-cached batched pipeline.
 //! * [`plan`] — the ESC plan cache: skips redundant coarse-ESC reductions
 //!   for repeat (shape, exponent-summary) keys, guarantee-preserving.
-//! * [`service`] — multi-worker batched GEMM service (the "cuBLAS behind a
-//!   queue" deployment shape; std threads — tokio unavailable offline),
-//!   with shape-bucketed request coalescing and `submit_batch`.
+//! * [`service`] — sharded multi-worker batched GEMM service (the
+//!   "cuBLAS behind a queue" deployment shape; std threads — tokio
+//!   unavailable offline): shape-hash shard routing, priority-tier
+//!   admission control, non-blocking `submit_async`/`submit_callback`,
+//!   shape-bucketed request coalescing and `submit_batch` — with typed
+//!   error responses (no service path panics the submitter).
 //! * [`metrics`] — dispatch/outcome/latency accounting (Fig 7/8 inputs)
-//!   plus slice-/plan-cache and coalescing counters.
+//!   plus slice-/plan-cache, coalescing, and per-tier service counters.
 
 pub mod adp;
 pub mod heuristic;
@@ -35,6 +38,9 @@ pub mod scan;
 pub mod service;
 
 pub use adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot, TierSnapshot};
 pub use plan::EscPlanCache;
-pub use service::{GemmService, RejectedSubmit, ServiceConfig, SubmitError};
+pub use service::{
+    GemmError, GemmResponse, GemmResult, GemmService, GemmTicket, Priority, RejectedSubmit,
+    ServiceConfig, SubmitError,
+};

@@ -1,34 +1,71 @@
-//! Batched GEMM service: the deployment shape of ADP.
+//! Sharded batched GEMM service: the deployment shape of ADP.
 //!
-//! A bounded request queue feeds N worker threads, each running an
-//! [`AdpEngine`] against shared [`Metrics`] and (optionally) the shared
-//! PJRT runtime handle. This is the "cuBLAS behind a production queue"
-//! integration the paper targets (§5.4/§8.2), adapted to std threads
-//! (tokio is unavailable offline; the request path is CPU-bound anyway).
+//! N **shard queues** feed per-shard worker pools, each shard running one
+//! shared [`AdpEngine`] against service-wide [`Metrics`] and (optionally)
+//! the shared PJRT runtime handle. This is the "cuBLAS behind a
+//! production queue" integration the paper targets (§5.4/§8.2), adapted
+//! to std threads (tokio is unavailable offline; the request path is
+//! CPU-bound anyway).
 //!
-//! All workers share **one** compute backend (and therefore one thread
-//! pool, see `backend::pool`): a lone request can fan its slice pairs and
-//! tiles across the whole machine, while a saturated queue degrades each
-//! worker to inline execution instead of oversubscribing cores with
-//! N workers × T oblivious threads.
+//! ## Sharding
+//!
+//! Requests are routed to a shard by a hash of their (m, k, n) shape
+//! bucket, so repeat shapes land on the same shard and its slice-/plan-
+//! cache locality survives the split (the caches themselves stay
+//! service-wide — a shard is a *scheduling* domain, not a cache domain).
+//! Each shard owns a slice of the compute budget
+//! ([`BackendSpec::shard_slice`]): one worker-pool slice per shard, so a
+//! saturated shard degrades itself instead of convoying its neighbors.
+//!
+//! ## Priority tiers and admission control
+//!
+//! Every submission carries a [`Priority`] (`High`/`Normal`/`Batch`).
+//! Workers always drain higher tiers first, and each tier has its own
+//! per-shard queue-depth cap ([`ServiceConfig::tier_depths`]) under the
+//! shard-total cap ([`ServiceConfig::queue_depth`]): bulk `Batch` traffic
+//! cannot starve interactive `High` admissions. Non-blocking submission
+//! reports a full tier as the retryable [`SubmitError::TierFull`] and a
+//! full shard as [`SubmitError::QueueFull`]; the blocking paths wait for
+//! space. Per-tier latency/outcome accounting lands in
+//! [`Metrics::snapshot`]'s `tiers`.
+//!
+//! ## Async submission
+//!
+//! [`GemmService::submit_async`] returns a pollable [`GemmTicket`];
+//! [`GemmService::submit_callback`] invokes a completion callback from
+//! the worker instead. Neither blocks the submitter.
+//!
+//! ## Error semantics
+//!
+//! No service path panics the submitting thread. Workers pre-validate
+//! shapes and wrap the engine in `catch_unwind`, so a shape-mismatched
+//! request or a panicking engine produces a typed [`GemmError`] response
+//! on the reply channel — the worker survives and keeps serving. A reply
+//! sender is *never* dropped silently: [`ReplySlot`]'s drop guard turns
+//! any lost reply into [`GemmError::ReplyLost`].
 //!
 //! ## Coalescing dispatcher
 //!
-//! With [`ServiceConfig::coalesce`] enabled (or via [`GemmService::submit_batch`],
-//! which always groups), workers batch requests before execution: a worker
-//! that dequeues a request keeps draining the queue for a small
-//! micro-batching window (`coalesce_window`, up to `max_batch` requests),
-//! buckets what it collected by (m, k, n) shape, and runs each bucket
-//! through [`AdpEngine::gemm_grouped`] — one fused backend schedule per
-//! bucket, with operand decompositions shared through the service-wide
-//! [`SliceCache`] and ESC reductions through the [`EscPlanCache`].
-//! Grouped results are bitwise identical to the per-request path.
+//! With [`ServiceConfig::coalesce`] enabled (or via
+//! [`GemmService::submit_batch`], which always groups), workers batch
+//! requests before execution: a worker that dequeues a request keeps
+//! draining its shard for a micro-batching window (`coalesce_window`, up
+//! to `max_batch` requests), buckets what it collected by (m, k, n)
+//! shape, and runs each bucket through [`AdpEngine::gemm_grouped`] — one
+//! fused backend schedule per bucket, with operand decompositions shared
+//! through the service-wide [`SliceCache`] and ESC reductions through
+//! the [`EscPlanCache`]. The window wait is a condvar timed wait that
+//! **releases the shard lock**, so sibling workers (and submitters) keep
+//! moving while one worker coalesces — the window can no longer convoy
+//! the shard, let alone the service. Grouped results are bitwise
+//! identical to the per-request path.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::adp::{AdpConfig, AdpEngine, AdpOutcome};
@@ -41,46 +78,224 @@ use crate::ozaki::batched::SliceCache;
 use crate::ozaki::SliceEncoding;
 use crate::runtime::RuntimeHandle;
 
+/// Admission-control priority tier of a submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Interactive / latency-sensitive: drained first, smallest backlog.
+    High,
+    /// Default tier for `submit`/`try_submit`.
+    Normal,
+    /// Bulk / throughput traffic (`submit_batch` groups land here):
+    /// drained last, so it can never starve the tiers above it.
+    Batch,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Batch];
+
+    /// Dense index (drain order: 0 drains first).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse `"high"` / `"normal"` / `"batch"` (CLI flags, load gens).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// One GEMM request.
 pub struct GemmRequest {
     pub a: Matrix,
     pub b: Matrix,
-    reply: Sender<GemmResponse>,
+    reply: ReplySlot,
     submitted: Instant,
+    tier: Priority,
 }
 
-/// Completed response with queueing/processing latency.
+/// Completed response with queueing/processing latency. The reported
+/// components are exact by construction: `total_s` is stored as the sum
+/// `queue_s + proc_s` (grouped requests report the whole bucket's wall
+/// time as `proc_s` — the bucket completes as one schedule, so that *is*
+/// the time the request spent in processing).
 pub struct GemmResponse {
     pub c: Matrix,
     pub outcome: AdpOutcome,
+    /// Submission-to-execution-start latency, seconds.
     pub queue_s: f64,
+    /// Execution latency (for grouped requests: the bucket's), seconds.
+    pub proc_s: f64,
+    /// End-to-end latency; always exactly `queue_s + proc_s`.
     pub total_s: f64,
 }
 
-/// What travels through the bounded queue: a single request, or an
-/// explicit group from [`GemmService::submit_batch`] (always coalesced,
-/// regardless of the `coalesce` flag).
+/// Why a request failed after it was admitted. Delivered *on the reply
+/// channel* — the submitting thread never panics, the worker survives.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GemmError {
+    /// `a.cols != b.rows`; rejected by the worker's pre-validation.
+    ShapeMismatch { m: usize, k_a: usize, k_b: usize, n: usize },
+    /// The engine panicked on this request (payload message preserved).
+    /// The worker caught the unwind and keeps serving.
+    EnginePanic(String),
+    /// The reply slot was dropped without a response — the terminal
+    /// "never silently lost" guarantee (e.g. a worker died mid-request).
+    ReplyLost,
+    /// Submission-time rejection folded into [`GemmService::gemm_blocking`].
+    Rejected(SubmitError),
+}
+
+impl fmt::Display for GemmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GemmError::ShapeMismatch { m, k_a, k_b, n } => {
+                write!(f, "gemm shape mismatch: ({m}x{k_a}) x ({k_b}x{n})")
+            }
+            GemmError::EnginePanic(msg) => write!(f, "gemm engine panicked: {msg}"),
+            GemmError::ReplyLost => write!(f, "gemm reply lost (worker died)"),
+            GemmError::Rejected(e) => write!(f, "gemm submission rejected: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for GemmError {}
+
+/// What a reply channel carries: the response, or a typed failure.
+pub type GemmResult = Result<GemmResponse, GemmError>;
+
+/// Completion route of a request: a channel the submitter polls/awaits,
+/// or a callback invoked from the worker thread.
+enum Completion {
+    Channel(Sender<GemmResult>),
+    Callback(Box<dyn FnOnce(GemmResult) + Send>),
+}
+
+/// Reply sender with a drop guard: if the slot is dropped before a
+/// response was sent (worker death, future refactoring bugs), the
+/// submitter receives [`GemmError::ReplyLost`] instead of a hang or a
+/// `recv` panic. `disarm` is for requests that were never admitted (the
+/// rejection itself is the signal).
+struct ReplySlot(Option<Completion>);
+
+impl ReplySlot {
+    fn channel() -> (ReplySlot, Receiver<GemmResult>) {
+        let (tx, rx) = channel();
+        (ReplySlot(Some(Completion::Channel(tx))), rx)
+    }
+
+    fn callback(f: impl FnOnce(GemmResult) + Send + 'static) -> ReplySlot {
+        ReplySlot(Some(Completion::Callback(Box::new(f))))
+    }
+
+    fn send(&mut self, result: GemmResult) {
+        match self.0.take() {
+            Some(Completion::Channel(tx)) => {
+                let _ = tx.send(result); // receiver gone: caller lost interest
+            }
+            Some(Completion::Callback(f)) => f(result),
+            None => {}
+        }
+    }
+
+    fn disarm(&mut self) {
+        self.0 = None;
+    }
+}
+
+impl Drop for ReplySlot {
+    fn drop(&mut self) {
+        self.send(Err(GemmError::ReplyLost));
+    }
+}
+
+/// Pollable completion handle returned by [`GemmService::submit_async`].
+pub struct GemmTicket {
+    rx: Receiver<GemmResult>,
+}
+
+impl GemmTicket {
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn poll(&mut self) -> Option<GemmResult> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(GemmError::ReplyLost)),
+        }
+    }
+
+    /// Block until the result arrives. Never panics: a vanished worker
+    /// surfaces as [`GemmError::ReplyLost`].
+    pub fn wait(self) -> GemmResult {
+        self.rx.recv().unwrap_or(Err(GemmError::ReplyLost))
+    }
+
+    /// Block with a deadline; `None` on timeout (ticket stays usable).
+    pub fn wait_timeout(&mut self, d: Duration) -> Option<GemmResult> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => Some(r),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(GemmError::ReplyLost))
+            }
+        }
+    }
+}
+
+/// What travels through a shard queue: a single request, or an explicit
+/// group from [`GemmService::submit_batch`] (always coalesced, regardless
+/// of the `coalesce` flag).
 enum QueueItem {
     One(GemmRequest),
     Batch(Vec<GemmRequest>),
 }
 
+impl QueueItem {
+    /// Requests inside (admission control counts requests, not items).
+    fn len(&self) -> usize {
+        match self {
+            QueueItem::One(_) => 1,
+            QueueItem::Batch(v) => v.len(),
+        }
+    }
+}
+
 /// Why a submission was rejected.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// The service was shut down (or every worker died); the request
-    /// queue is closed. Permanent — retrying cannot succeed.
+    /// The service was shut down; the request queues are closed.
+    /// Permanent — retrying cannot succeed.
     ServiceStopped,
-    /// The bounded queue is full right now. Transient backpressure:
-    /// retry later, shed load, or use the blocking [`GemmService::submit`].
-    /// Only [`GemmService::try_submit`] reports this.
+    /// The target shard is at its total queue-depth cap right now.
+    /// Transient backpressure: retry later, shed load, or use the
+    /// blocking [`GemmService::submit`]. Only the non-blocking paths
+    /// report this.
     QueueFull,
+    /// The submission's priority tier is at its per-shard depth cap
+    /// (other tiers may still have room). Transient, like `QueueFull`.
+    TierFull,
 }
 
 impl SubmitError {
     /// Whether a later retry can succeed.
     pub fn is_retryable(&self) -> bool {
-        matches!(self, SubmitError::QueueFull)
+        matches!(self, SubmitError::QueueFull | SubmitError::TierFull)
     }
 }
 
@@ -89,6 +304,7 @@ impl fmt::Display for SubmitError {
         match self {
             SubmitError::ServiceStopped => write!(f, "gemm service stopped"),
             SubmitError::QueueFull => write!(f, "gemm service queue full"),
+            SubmitError::TierFull => write!(f, "gemm service priority tier full"),
         }
     }
 }
@@ -105,22 +321,34 @@ pub struct RejectedSubmit {
 }
 
 /// Service configuration. The heuristic/encoding mirror [`AdpConfig`];
-/// each worker constructs its own engine from a factory closure because
+/// each shard constructs its engine from a factory closure because
 /// `SelectionHeuristic` boxes are not `Clone`.
 pub struct ServiceConfig {
+    /// Total worker threads across all shards (each shard gets at least
+    /// one; the remainder is distributed round-robin).
     pub workers: usize,
+    /// Per-shard total queued-request cap (admission control).
     pub queue_depth: usize,
     pub target_mantissa: i32,
     pub max_slices: usize,
     pub encoding: SliceEncoding,
     pub esc_block: usize,
     pub use_artifacts: bool,
-    /// Compute backend shared by all workers (one pool for the whole
-    /// service). Bitwise identical across variants; default is the
-    /// machine-sized parallel backend.
+    /// Compute budget of the whole service; each shard builds its own
+    /// pool from a [`BackendSpec::shard_slice`] of this. Bitwise
+    /// identical across variants; default is the machine-sized parallel
+    /// backend.
     pub backend: BackendSpec,
-    /// Coalesce individually-submitted requests: a worker drains the
-    /// queue for `coalesce_window` (up to `max_batch` requests), buckets
+    /// Shard count. Requests route by shape-bucket hash; `1` preserves
+    /// the single-queue behavior (and its deterministic cache counters).
+    pub shards: usize,
+    /// Per-shard queued-request cap of each [`Priority`] tier, indexed by
+    /// [`Priority::index`]. A tier whose backlog is empty always admits
+    /// one submission (so an oversized batch can make progress); caps
+    /// bind from the second queued request on.
+    pub tier_depths: [usize; 3],
+    /// Coalesce individually-submitted requests: a worker drains its
+    /// shard for `coalesce_window` (up to `max_batch` requests), buckets
     /// by shape and executes each bucket as one grouped schedule.
     /// `submit_batch` groups are coalesced regardless of this flag.
     pub coalesce: bool,
@@ -145,6 +373,10 @@ impl Default for ServiceConfig {
             esc_block: crate::esc::coarse::DEFAULT_BLOCK,
             use_artifacts: true,
             backend: BackendSpec::auto(),
+            shards: 1,
+            // High/Normal bound only by the shard total; bulk Batch
+            // traffic can fill at most half a shard.
+            tier_depths: [256, 256, 128],
             coalesce: false,
             coalesce_window: Duration::from_micros(200),
             max_batch: 16,
@@ -154,40 +386,222 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Per-shard queue state under the shard mutex: one FIFO per priority
+/// tier plus queued-request depth counts.
+struct ShardState {
+    queues: [VecDeque<QueueItem>; 3],
+    depth: [usize; 3],
+    closed: bool,
+}
+
+/// A shard's bounded multi-tier queue. One `Condvar` serves both "item
+/// available" (workers) and "space available" (blocking submitters) —
+/// every transition notifies, correctness comes from re-checking under
+/// the lock. Crucially, **no path holds the mutex across a timed wait**:
+/// the coalescing drain waits on the condvar, which releases the lock.
+struct ShardQueue {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+    tier_depths: [usize; 3],
+    total_depth: usize,
+}
+
+impl ShardQueue {
+    fn new(total_depth: usize, tier_depths: [usize; 3]) -> ShardQueue {
+        ShardQueue {
+            state: Mutex::new(ShardState {
+                queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                depth: [0; 3],
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            tier_depths,
+            total_depth: total_depth.max(1),
+        }
+    }
+
+    /// Admission check for `n` more queued requests in `tier`. An empty
+    /// tier (or empty shard) always admits one item — oversized batches
+    /// must be able to make progress — so caps bind from the second
+    /// queued request on. Tier verdicts are more specific than shard
+    /// verdicts, so `TierFull` is reported first.
+    fn admissible(&self, g: &ShardState, tier: usize, n: usize) -> Result<(), SubmitError> {
+        if g.depth[tier] > 0 && g.depth[tier] + n > self.tier_depths[tier].max(1) {
+            return Err(SubmitError::TierFull);
+        }
+        let total: usize = g.depth.iter().sum();
+        if total > 0 && total + n > self.total_depth {
+            return Err(SubmitError::QueueFull);
+        }
+        Ok(())
+    }
+
+    /// Enqueue under admission control. `block` waits for space (woken by
+    /// dequeues); non-blocking failure hands the item back for operand
+    /// recovery.
+    fn push(
+        &self,
+        item: QueueItem,
+        tier: Priority,
+        block: bool,
+    ) -> Result<(), (SubmitError, QueueItem)> {
+        let n = item.len();
+        let t = tier.index();
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err((SubmitError::ServiceStopped, item));
+            }
+            match self.admissible(&g, t, n) {
+                Ok(()) => {
+                    g.depth[t] += n;
+                    g.queues[t].push_back(item);
+                    self.cv.notify_all();
+                    return Ok(());
+                }
+                Err(e) if !block => return Err((e, item)),
+                Err(_) => g = self.cv.wait(g).unwrap(),
+            }
+        }
+    }
+
+    /// Highest-priority available item, if any (caller holds the lock).
+    fn take_next(g: &mut ShardState) -> Option<QueueItem> {
+        for t in 0..3 {
+            if let Some(item) = g.queues[t].pop_front() {
+                g.depth[t] -= item.len();
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Blocking dequeue; `None` once the queue is closed *and* drained
+    /// (shutdown serves everything that was admitted).
+    fn pop(&self) -> Option<QueueItem> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = Self::take_next(&mut g) {
+                drop(g);
+                self.cv.notify_all(); // space freed: wake blocked submitters
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Coalescing drain: extend `batch` up to `max` requests, waiting out
+    /// `deadline` for stragglers. The waits are condvar timed waits — the
+    /// shard lock is **released** while waiting, so sibling workers keep
+    /// dequeuing and submitters keep enqueuing during the window (the
+    /// old implementation held the receiver mutex here and convoyed every
+    /// other worker). An explicit `submit_batch` group ends the window
+    /// early, mirroring the pre-shard dispatcher: the group asked for
+    /// grouped execution *now*.
+    fn drain_into(&self, batch: &mut Vec<GemmRequest>, max: usize, deadline: Instant) {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            let mut took = false;
+            let mut batch_item = false;
+            while batch.len() < max {
+                match Self::take_next(&mut g) {
+                    Some(QueueItem::One(r)) => {
+                        batch.push(r);
+                        took = true;
+                    }
+                    Some(QueueItem::Batch(rs)) => {
+                        batch.extend(rs);
+                        took = true;
+                        batch_item = true;
+                        break;
+                    }
+                    None => break,
+                }
+            }
+            if took {
+                // Space freed: wake blocked submitters before (possibly)
+                // waiting out the rest of the window.
+                self.cv.notify_all();
+            }
+            if batch.len() >= max || batch_item || g.closed {
+                return;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// FNV-1a over the shape bucket: repeat shapes go to the same shard, so
+/// per-shard locality of the (service-wide) caches survives sharding.
+fn shape_shard(m: usize, k: usize, n: usize, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in [m as u64, k as u64, n as u64] {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
+
 /// Handle to the running service; submission and shutdown are
 /// thread-safe through `&self`, so the handle can be shared (e.g. in an
 /// `Arc`) between submitters and a controller racing them.
 pub struct GemmService {
-    tx: Mutex<Option<SyncSender<QueueItem>>>,
+    shards: Vec<Arc<ShardQueue>>,
     pub metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl GemmService {
-    /// Start the service. `heuristic_factory` is invoked once per worker.
+    /// Start the service. `heuristic_factory` is invoked once per shard
+    /// (the shard's workers share one engine through an `Arc`, which is
+    /// why [`SelectionHeuristic`] is `Sync`).
     pub fn start(
         cfg: ServiceConfig,
         runtime: Option<RuntimeHandle>,
         heuristic_factory: impl Fn() -> Box<dyn SelectionHeuristic>,
     ) -> GemmService {
         let metrics = Arc::new(Metrics::default());
-        let (tx, rx) = mpsc::sync_channel::<QueueItem>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
         let inflight = Arc::new(AtomicU64::new(0));
-        // One backend (=> one thread pool), one cache pair and one
-        // workspace pool shared by every worker: the whole service
-        // amortizes together, and steady-state traffic recycles the same
-        // scratch buffers instead of allocating per request.
-        let backend = cfg.backend.build();
+        let nshards = cfg.shards.max(1);
+        let workers_total = cfg.workers.max(1);
+        // Caches and the workspace pool stay service-wide: the whole
+        // deployment amortizes together, and steady-state traffic
+        // recycles the same scratch buffers instead of allocating per
+        // request. Only the *scheduling* (queues + backend pools) shards.
         let plan_cache = Arc::new(EscPlanCache::new(cfg.plan_cache_entries));
         let slice_cache = Arc::new(SliceCache::new(cfg.slice_cache_entries));
         let workspace_pool = Arc::new(WorkspacePool::new());
+        let knobs = CoalesceKnobs {
+            coalesce: cfg.coalesce,
+            window: cfg.coalesce_window,
+            max_batch: cfg.max_batch.max(1),
+        };
+        let mut shards = Vec::with_capacity(nshards);
         let mut workers = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
-            let rx = rx.clone();
-            let metrics = metrics.clone();
-            let inflight = inflight.clone();
+        for sid in 0..nshards {
+            let queue = Arc::new(ShardQueue::new(cfg.queue_depth, cfg.tier_depths));
+            // One engine per shard, shared by the shard's workers; one
+            // backend pool slice per shard, so shards cannot convoy each
+            // other through a common thread pool.
             let engine_cfg = AdpConfig {
                 target_mantissa: cfg.target_mantissa,
                 max_slices: cfg.max_slices,
@@ -196,136 +610,216 @@ impl GemmService {
                 heuristic: heuristic_factory(),
                 runtime: runtime.clone(),
                 use_artifacts: cfg.use_artifacts,
-                backend: backend.clone(),
+                backend: cfg.backend.shard_slice(nshards).build(),
                 plan_cache: Some(plan_cache.clone()),
                 slice_cache: Some(slice_cache.clone()),
                 workspace_pool: workspace_pool.clone(),
             };
-            let knobs = CoalesceKnobs {
-                coalesce: cfg.coalesce,
-                window: cfg.coalesce_window,
-                max_batch: cfg.max_batch.max(1),
-            };
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("adp-worker-{wid}"))
-                    .spawn(move || worker_main(rx, engine_cfg, metrics, inflight, knobs))
-                    .expect("spawn worker"),
-            );
+            let engine = Arc::new(AdpEngine::with_metrics(engine_cfg, metrics.clone()));
+            let base = workers_total / nshards;
+            let shard_workers = (base + usize::from(sid < workers_total % nshards)).max(1);
+            for wid in 0..shard_workers {
+                let queue = queue.clone();
+                let engine = engine.clone();
+                let metrics = metrics.clone();
+                let inflight = inflight.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("adp-s{sid}-w{wid}"))
+                        .spawn(move || worker_main(queue, engine, metrics, inflight, knobs))
+                        .expect("spawn worker"),
+                );
+            }
+            shards.push(queue);
         }
-        GemmService {
-            tx: Mutex::new(Some(tx)),
-            metrics,
-            inflight,
-            workers: Mutex::new(workers),
-        }
+        GemmService { shards, metrics, inflight, workers: Mutex::new(workers) }
     }
 
-    /// Clone the live sender, or fail if the service was shut down.
-    fn sender(&self) -> Result<SyncSender<QueueItem>, SubmitError> {
-        self.tx.lock().unwrap().clone().ok_or(SubmitError::ServiceStopped)
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Submit a request; returns the receiver for its response, or
-    /// [`SubmitError::ServiceStopped`] when the queue is closed.
-    /// Blocks when the queue is full (backpressure).
-    pub fn submit(&self, a: Matrix, b: Matrix) -> Result<Receiver<GemmResponse>, SubmitError> {
-        let tx = self.sender()?;
-        let (rtx, rrx) = channel();
+    /// Which shard serves shape `(m, k, n)` (i.e. `a: m x k`, `b: k x n`).
+    /// Exposed so load generators and tests can steer traffic per shard.
+    pub fn shard_for(&self, m: usize, k: usize, n: usize) -> usize {
+        shape_shard(m, k, n, self.shards.len())
+    }
+
+    /// Route + enqueue one request. On rejection the request is handed
+    /// back (with its reply slot still armed) for operand recovery.
+    fn enqueue_one(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        tier: Priority,
+        reply: ReplySlot,
+        block: bool,
+    ) -> Result<(), (SubmitError, GemmRequest)> {
+        let shard = &self.shards[shape_shard(a.rows, a.cols, b.cols, self.shards.len())];
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        match tx.send(QueueItem::One(GemmRequest {
-            a,
-            b,
-            reply: rtx,
-            submitted: Instant::now(),
-        })) {
-            Ok(()) => Ok(rrx),
-            Err(_) => {
+        let req = GemmRequest { a, b, reply, submitted: Instant::now(), tier };
+        match shard.push(QueueItem::One(req), tier, block) {
+            Ok(()) => {
+                self.metrics.record_enqueued(tier, 1);
+                Ok(())
+            }
+            Err((error, QueueItem::One(req))) => {
                 self.inflight.fetch_sub(1, Ordering::SeqCst);
-                Err(SubmitError::ServiceStopped)
+                if error.is_retryable() {
+                    self.metrics.record_rejected(tier, 1);
+                }
+                Err((error, req))
+            }
+            Err(_) => unreachable!("pushed a One"),
+        }
+    }
+
+    /// Submit a Normal-tier request; returns the receiver for its
+    /// [`GemmResult`], or [`SubmitError::ServiceStopped`] when the queues
+    /// are closed. Blocks while the shard is full (backpressure).
+    pub fn submit(&self, a: Matrix, b: Matrix) -> Result<Receiver<GemmResult>, SubmitError> {
+        let (reply, rx) = ReplySlot::channel();
+        match self.enqueue_one(a, b, Priority::Normal, reply, true) {
+            Ok(()) => Ok(rx),
+            Err((error, mut req)) => {
+                req.reply.disarm(); // the Err return is the signal
+                Err(error)
             }
         }
     }
 
-    /// Non-blocking submit. A full queue is reported as the *retryable*
-    /// [`SubmitError::QueueFull`] with the operands handed back, instead
-    /// of blocking the caller or conflating backpressure with shutdown.
-    pub fn try_submit(
+    /// Non-blocking Normal-tier submit. A full shard/tier is reported as
+    /// the *retryable* [`SubmitError::QueueFull`]/[`SubmitError::TierFull`]
+    /// with the operands handed back, instead of blocking the caller or
+    /// conflating backpressure with shutdown.
+    pub fn try_submit(&self, a: Matrix, b: Matrix) -> Result<Receiver<GemmResult>, RejectedSubmit> {
+        let (reply, rx) = ReplySlot::channel();
+        match self.enqueue_one(a, b, Priority::Normal, reply, false) {
+            Ok(()) => Ok(rx),
+            Err((error, mut req)) => {
+                req.reply.disarm();
+                let GemmRequest { a, b, .. } = req;
+                Err(RejectedSubmit { error, a, b })
+            }
+        }
+    }
+
+    /// Non-blocking async submit at an explicit [`Priority`]: returns a
+    /// pollable [`GemmTicket`] — the submitter never blocks, neither on
+    /// admission (full ⇒ retryable rejection with operands back) nor on
+    /// completion (poll, or `wait` when it chooses to).
+    pub fn submit_async(
         &self,
         a: Matrix,
         b: Matrix,
-    ) -> Result<Receiver<GemmResponse>, RejectedSubmit> {
-        let tx = match self.sender() {
-            Ok(tx) => tx,
-            Err(error) => return Err(RejectedSubmit { error, a, b }),
-        };
-        let (rtx, rrx) = channel();
-        self.inflight.fetch_add(1, Ordering::SeqCst);
-        let item = QueueItem::One(GemmRequest { a, b, reply: rtx, submitted: Instant::now() });
-        match tx.try_send(item) {
-            Ok(()) => Ok(rrx),
-            Err(e) => {
-                self.inflight.fetch_sub(1, Ordering::SeqCst);
-                let (error, item) = match e {
-                    TrySendError::Full(item) => (SubmitError::QueueFull, item),
-                    TrySendError::Disconnected(item) => (SubmitError::ServiceStopped, item),
-                };
-                let QueueItem::One(req) = item else { unreachable!("sent a One") };
-                Err(RejectedSubmit { error, a: req.a, b: req.b })
+        priority: Priority,
+    ) -> Result<GemmTicket, RejectedSubmit> {
+        let (reply, rx) = ReplySlot::channel();
+        match self.enqueue_one(a, b, priority, reply, false) {
+            Ok(()) => Ok(GemmTicket { rx }),
+            Err((error, mut req)) => {
+                req.reply.disarm();
+                let GemmRequest { a, b, .. } = req;
+                Err(RejectedSubmit { error, a, b })
+            }
+        }
+    }
+
+    /// Non-blocking submit with a completion callback invoked from the
+    /// worker thread (keep it cheap — it runs on the service's time). On
+    /// rejection the callback is dropped uninvoked: the `Err` return *is*
+    /// the completion. Once admitted, the callback is guaranteed exactly
+    /// one invocation — a response, a typed [`GemmError`], or
+    /// [`GemmError::ReplyLost`] if the worker dies.
+    pub fn submit_callback(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        priority: Priority,
+        on_done: impl FnOnce(GemmResult) + Send + 'static,
+    ) -> Result<(), RejectedSubmit> {
+        let reply = ReplySlot::callback(on_done);
+        match self.enqueue_one(a, b, priority, reply, false) {
+            Ok(()) => Ok(()),
+            Err((error, mut req)) => {
+                req.reply.disarm();
+                let GemmRequest { a, b, .. } = req;
+                Err(RejectedSubmit { error, a, b })
             }
         }
     }
 
     /// Submit a group of requests that should be executed together: the
-    /// group travels the queue as one item and is shape-bucketed and run
-    /// through the grouped pipeline by a single worker, sharing operand
-    /// decompositions via the service slice cache. Blocks when the queue
-    /// is full. Receivers are returned in submission order.
+    /// group travels one shard queue as one Batch-tier item and is
+    /// shape-bucketed and run through the grouped pipeline by a single
+    /// worker, sharing operand decompositions via the service slice
+    /// cache. The whole group routes by its first problem's shape —
+    /// groups share operands by construction, so keeping them on one
+    /// shard preserves cache locality. Blocks while the shard is full.
+    /// Receivers are returned in submission order.
     pub fn submit_batch(
         &self,
         pairs: Vec<(Matrix, Matrix)>,
-    ) -> Result<Vec<Receiver<GemmResponse>>, SubmitError> {
+    ) -> Result<Vec<Receiver<GemmResult>>, SubmitError> {
         if pairs.is_empty() {
             return Ok(Vec::new());
         }
-        let tx = self.sender()?;
+        let shard_idx = {
+            let (a, b) = &pairs[0];
+            shape_shard(a.rows, a.cols, b.cols, self.shards.len())
+        };
         let n = pairs.len() as u64;
         let submitted = Instant::now();
         let mut reqs = Vec::with_capacity(pairs.len());
         let mut rxs = Vec::with_capacity(pairs.len());
         for (a, b) in pairs {
-            let (rtx, rrx) = channel();
-            reqs.push(GemmRequest { a, b, reply: rtx, submitted });
-            rxs.push(rrx);
+            let (reply, rx) = ReplySlot::channel();
+            reqs.push(GemmRequest { a, b, reply, submitted, tier: Priority::Batch });
+            rxs.push(rx);
         }
         self.inflight.fetch_add(n, Ordering::SeqCst);
-        match tx.send(QueueItem::Batch(reqs)) {
-            Ok(()) => Ok(rxs),
-            Err(_) => {
+        match self.shards[shard_idx].push(QueueItem::Batch(reqs), Priority::Batch, true) {
+            Ok(()) => {
+                self.metrics.record_enqueued(Priority::Batch, n);
+                Ok(rxs)
+            }
+            Err((error, item)) => {
                 self.inflight.fetch_sub(n, Ordering::SeqCst);
-                Err(SubmitError::ServiceStopped)
+                if error.is_retryable() {
+                    self.metrics.record_rejected(Priority::Batch, n);
+                }
+                if let QueueItem::Batch(reqs) = item {
+                    for mut req in reqs {
+                        req.reply.disarm(); // no ReplyLost into rxs we drop
+                    }
+                }
+                Err(error)
             }
         }
     }
 
-    /// Convenience: submit and wait.
-    pub fn gemm_blocking(&self, a: Matrix, b: Matrix) -> GemmResponse {
-        self.submit(a, b).expect("service stopped").recv().expect("worker died")
+    /// Convenience: submit and wait. Every failure mode — shutdown,
+    /// shape mismatch, engine panic, worker death — comes back as a
+    /// typed `Err`; this can no longer panic the submitting thread.
+    pub fn gemm_blocking(&self, a: Matrix, b: Matrix) -> GemmResult {
+        match self.submit(a, b) {
+            Ok(rx) => rx.recv().unwrap_or(Err(GemmError::ReplyLost)),
+            Err(e) => Err(GemmError::Rejected(e)),
+        }
     }
 
     pub fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::SeqCst)
     }
 
-    /// Stop accepting work, drain the queue and join the workers.
+    /// Stop accepting work, drain the queues and join the workers.
     /// Idempotent, and safe to race against concurrent `submit*` calls:
     /// a submission either lands before the close (and is served) or
     /// gets [`SubmitError::ServiceStopped`].
     pub fn shutdown(&self) {
-        // Closing the queue: drop our sender; in-flight `submit` calls
-        // holding a clone finish their send, then the channel disconnects
-        // and workers drain what remains before exiting.
-        self.tx.lock().unwrap().take();
+        for s in &self.shards {
+            s.close();
+        }
         let workers: Vec<_> = {
             let mut g = self.workers.lock().unwrap();
             g.drain(..).collect()
@@ -336,9 +830,8 @@ impl GemmService {
     }
 }
 
-/// Decrements the inflight counter on drop, so a request that panics its
-/// worker still leaves the counter accurate (it is no longer in flight —
-/// it is dead).
+/// Decrements the inflight counter on drop, so a request whose engine
+/// call panics still leaves the counter accurate during unwind.
 struct InflightGuard<'a>(&'a AtomicU64);
 
 impl Drop for InflightGuard<'_> {
@@ -354,52 +847,41 @@ struct CoalesceKnobs {
     max_batch: usize,
 }
 
+/// Best-effort panic payload message (worker-side; the payload itself
+/// cannot cross the reply channel, only a `String` rendering).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "engine panicked".to_string()
+    }
+}
+
 fn worker_main(
-    rx: Arc<Mutex<Receiver<QueueItem>>>,
-    cfg: AdpConfig,
+    queue: Arc<ShardQueue>,
+    engine: Arc<AdpEngine>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
     knobs: CoalesceKnobs,
 ) {
-    let engine = AdpEngine::with_metrics(cfg, metrics.clone());
     loop {
-        // Hold the lock only while dequeuing so workers pull concurrently.
-        let item = match rx.lock().unwrap().recv() {
-            Ok(r) => r,
-            Err(_) => break, // service dropped
+        let item = match queue.pop() {
+            Some(item) => item,
+            None => break, // closed and drained
         };
         match item {
             QueueItem::Batch(reqs) => process_group(&engine, reqs, &metrics, &inflight),
             QueueItem::One(req) => {
                 if !knobs.coalesce {
-                    process_single(&engine, req, &inflight);
+                    process_single(&engine, req, &metrics, &inflight);
                     continue;
                 }
-                // Micro-batching: keep draining for the window. Holding
-                // the queue lock here is deliberate — this worker is the
-                // coalescer for the window; an empty drain just means it
-                // processes its one request.
                 let mut batch = vec![req];
-                let deadline = Instant::now() + knobs.window;
-                {
-                    let g = rx.lock().unwrap();
-                    while batch.len() < knobs.max_batch {
-                        let now = Instant::now();
-                        if now >= deadline {
-                            break;
-                        }
-                        match g.recv_timeout(deadline - now) {
-                            Ok(QueueItem::One(r)) => batch.push(r),
-                            Ok(QueueItem::Batch(rs)) => {
-                                batch.extend(rs);
-                                break;
-                            }
-                            Err(_) => break, // timeout or disconnect
-                        }
-                    }
-                }
+                queue.drain_into(&mut batch, knobs.max_batch, Instant::now() + knobs.window);
                 if batch.len() == 1 {
-                    process_single(&engine, batch.pop().expect("len checked"), &inflight);
+                    process_single(&engine, batch.pop().expect("len checked"), &metrics, &inflight);
                 } else {
                     process_group(&engine, batch, &metrics, &inflight);
                 }
@@ -408,18 +890,52 @@ fn worker_main(
     }
 }
 
-fn process_single(engine: &AdpEngine, req: GemmRequest, inflight: &AtomicU64) {
-    let queue_s = req.submitted.elapsed().as_secs_f64();
+fn process_single(
+    engine: &AdpEngine,
+    mut req: GemmRequest,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+) {
+    // Pre-validate: an invalid shape is a per-request error response,
+    // never a worker-killing assert.
+    if req.a.cols != req.b.rows {
+        {
+            let _guard = InflightGuard(inflight);
+        }
+        metrics.record_failure(req.tier);
+        let err = GemmError::ShapeMismatch {
+            m: req.a.rows,
+            k_a: req.a.cols,
+            k_b: req.b.rows,
+            n: req.b.cols,
+        };
+        req.reply.send(Err(err));
+        return;
+    }
     let t0 = Instant::now();
-    let (c, outcome) = {
+    let queue_s = t0.saturating_duration_since(req.submitted).as_secs_f64();
+    let outcome = {
         // Scope the guard so the decrement lands before the reply is
         // sent (a caller seeing its response must see inflight drop),
         // while a panic in the engine still decrements during unwind.
+        // The engine holds no locks where user-influenced code runs
+        // (guardrails, heuristic, kernels), so catching the unwind
+        // cannot strand a poisoned mutex.
         let _guard = InflightGuard(inflight);
-        engine.gemm(&req.a, &req.b)
+        catch_unwind(AssertUnwindSafe(|| engine.gemm(&req.a, &req.b)))
     };
-    let total_s = queue_s + t0.elapsed().as_secs_f64();
-    let _ = req.reply.send(GemmResponse { c, outcome, queue_s, total_s });
+    match outcome {
+        Ok((c, outcome)) => {
+            let proc_s = t0.elapsed().as_secs_f64();
+            let total_s = queue_s + proc_s;
+            metrics.record_latency(req.tier, queue_s, total_s);
+            req.reply.send(Ok(GemmResponse { c, outcome, queue_s, proc_s, total_s }));
+        }
+        Err(payload) => {
+            metrics.record_failure(req.tier);
+            req.reply.send(Err(GemmError::EnginePanic(panic_msg(payload.as_ref()))));
+        }
+    }
 }
 
 fn process_group(
@@ -428,15 +944,24 @@ fn process_group(
     metrics: &Metrics,
     inflight: &AtomicU64,
 ) {
-    // Shape-mismatched requests cannot enter a grouped schedule; drop
-    // their reply senders (the caller's recv fails, mirroring the
-    // per-request poison behavior) without killing the worker or the
-    // rest of the group.
+    // Shape-mismatched requests cannot enter a grouped schedule; they
+    // get an explicit typed error response — a reply sender is never
+    // dropped silently — without killing the worker or the rest of the
+    // group.
     let (valid, invalid): (Vec<GemmRequest>, Vec<GemmRequest>) =
         reqs.into_iter().partition(|r| r.a.cols == r.b.rows);
-    for req in invalid {
-        let _guard = InflightGuard(inflight);
-        drop(req);
+    for mut req in invalid {
+        {
+            let _guard = InflightGuard(inflight);
+        }
+        metrics.record_failure(req.tier);
+        let err = GemmError::ShapeMismatch {
+            m: req.a.rows,
+            k_a: req.a.cols,
+            k_b: req.b.rows,
+            n: req.b.cols,
+        };
+        req.reply.send(Err(err));
     }
     if valid.is_empty() {
         return;
@@ -452,20 +977,42 @@ fn process_group(
     buckets.sort_by_key(|reqs| (reqs[0].a.rows, reqs[0].a.cols, reqs[0].b.cols));
     for bucket in buckets {
         metrics.record_coalesced_batch(bucket.len() as u64);
-        // One guard per request, held across the grouped call: a panic
-        // inside the engine unwinds through them, so the bucket cannot
-        // leak inflight counts (mirrors process_single's guard scope).
-        let mut guards: Vec<InflightGuard<'_>> =
-            bucket.iter().map(|_| InflightGuard(inflight)).collect();
         let t0 = Instant::now();
-        let probs: Vec<(&Matrix, &Matrix)> = bucket.iter().map(|r| (&r.a, &r.b)).collect();
-        let results = engine.gemm_grouped(&probs);
+        let results = {
+            // One guard per request, held across the grouped call: a
+            // panic inside the engine unwinds through them, so the
+            // bucket cannot leak inflight counts — and the decrements
+            // land before any reply is sent either way (guards drop when
+            // this block exits, replies go out below).
+            let _guards: Vec<InflightGuard<'_>> =
+                bucket.iter().map(|_| InflightGuard(inflight)).collect();
+            let probs: Vec<(&Matrix, &Matrix)> = bucket.iter().map(|r| (&r.a, &r.b)).collect();
+            catch_unwind(AssertUnwindSafe(|| engine.gemm_grouped(&probs)))
+        };
         let proc_s = t0.elapsed().as_secs_f64();
-        for (req, (c, outcome)) in bucket.iter().zip(results) {
-            drop(guards.pop()); // decrement lands before the reply is sent
-            let queue_s = req.submitted.elapsed().as_secs_f64() - proc_s;
-            let total_s = queue_s + proc_s;
-            let _ = req.reply.send(GemmResponse { c, outcome, queue_s: queue_s.max(0.0), total_s });
+        match results {
+            Ok(results) => {
+                for (mut req, (c, outcome)) in bucket.into_iter().zip(results) {
+                    // The bucket completes as one schedule, so every
+                    // member's processing latency is the bucket wall
+                    // time; queueing is everything before execution
+                    // began. `total_s` is the exact sum of the two
+                    // reported components (the old path mixed a clamped
+                    // and an unclamped queue_s, so totals disagreed
+                    // with their parts).
+                    let queue_s = t0.saturating_duration_since(req.submitted).as_secs_f64();
+                    let total_s = queue_s + proc_s;
+                    metrics.record_latency(req.tier, queue_s, total_s);
+                    req.reply.send(Ok(GemmResponse { c, outcome, queue_s, proc_s, total_s }));
+                }
+            }
+            Err(payload) => {
+                let msg = panic_msg(payload.as_ref());
+                for mut req in bucket {
+                    metrics.record_failure(req.tier);
+                    req.reply.send(Err(GemmError::EnginePanic(msg.clone())));
+                }
+            }
         }
     }
 }
@@ -477,7 +1024,6 @@ mod tests {
     use crate::linalg::gemm;
     use crate::util::{prop, Rng};
     use std::sync::atomic::AtomicBool;
-    use std::sync::Condvar;
 
     fn small_service(workers: usize) -> GemmService {
         let cfg = ServiceConfig { workers, use_artifacts: false, ..Default::default() };
@@ -490,7 +1036,7 @@ mod tests {
         let mut rng = Rng::new(90);
         let a = Matrix::uniform(16, 16, -1.0, 1.0, &mut rng);
         let b = Matrix::uniform(16, 16, -1.0, 1.0, &mut rng);
-        let resp = svc.gemm_blocking(a.clone(), b.clone());
+        let resp = svc.gemm_blocking(a.clone(), b.clone()).expect("request served");
         let err = resp.c.sub(&gemm(&a, &b)).max_abs();
         assert!(err < 1e-12, "err={err}");
         assert!(resp.outcome.decision.is_emulated());
@@ -511,7 +1057,7 @@ mod tests {
             pending.push(svc.submit(a, b).expect("service running"));
         }
         for (rx, expect) in pending.into_iter().zip(expects) {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().expect("request served");
             assert!(resp.c.sub(&expect).max_abs() < 1e-12);
         }
         assert_eq!(svc.metrics.snapshot().requests, 24);
@@ -533,13 +1079,67 @@ mod tests {
         let mut rng = Rng::new(93);
         let a = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
         let b = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
-        let c_ser = svc_ser.gemm_blocking(a.clone(), b.clone()).c;
-        let c_par = svc_par.gemm_blocking(a, b).c;
+        let c_ser = svc_ser.gemm_blocking(a.clone(), b.clone()).expect("served").c;
+        let c_par = svc_par.gemm_blocking(a, b).expect("served").c;
         for (x, y) in c_ser.data.iter().zip(&c_par.data) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         svc_ser.shutdown();
         svc_par.shutdown();
+    }
+
+    #[test]
+    fn sharded_service_agrees_bitwise_with_single_queue() {
+        // Sharding is a scheduling decision only: N shards with sliced
+        // pools produce bit-identical results to the single queue.
+        let mk = |shards| {
+            let cfg = ServiceConfig {
+                workers: 4,
+                shards,
+                use_artifacts: false,
+                ..Default::default()
+            };
+            GemmService::start(cfg, None, || Box::new(AlwaysEmulate))
+        };
+        let svc_1 = mk(1);
+        let svc_4 = mk(4);
+        assert_eq!(svc_1.shard_count(), 1);
+        assert_eq!(svc_4.shard_count(), 4);
+        let mut rng = Rng::new(101);
+        for i in 0..8 {
+            let n = 8 + 4 * (i % 3);
+            let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let c1 = svc_1.gemm_blocking(a.clone(), b.clone()).expect("served").c;
+            let c4 = svc_4.gemm_blocking(a, b).expect("served").c;
+            for (x, y) in c1.data.iter().zip(&c4.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(svc_4.metrics.snapshot().requests, 8);
+        assert_eq!(svc_4.inflight(), 0);
+        svc_1.shutdown();
+        svc_4.shutdown();
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_in_range() {
+        let svc = GemmService::start(
+            ServiceConfig { workers: 3, shards: 3, use_artifacts: false, ..Default::default() },
+            None,
+            || Box::new(AlwaysEmulate),
+        );
+        for (m, k, n) in [(8, 8, 8), (16, 8, 4), (64, 64, 64), (1, 1000, 1)] {
+            let s = svc.shard_for(m, k, n);
+            assert!(s < 3);
+            assert_eq!(s, svc.shard_for(m, k, n), "routing must be deterministic");
+        }
+        // The hash actually spreads: 64 distinct shapes cannot all land
+        // on one of three shards.
+        let hit: std::collections::HashSet<usize> =
+            (1..=64).map(|n| svc.shard_for(n, n, n)).collect();
+        assert!(hit.len() > 1, "shape hash must use more than one shard");
+        svc.shutdown();
     }
 
     #[test]
@@ -555,7 +1155,7 @@ mod tests {
         };
         for _ in 0..4 {
             let (a, b) = mk(&mut rng);
-            let resp = svc.gemm_blocking(a, b);
+            let resp = svc.gemm_blocking(a, b).expect("request served");
             assert!(resp.outcome.decision.is_emulated());
         }
         let warm = svc.metrics.snapshot();
@@ -564,7 +1164,7 @@ mod tests {
         assert!(warm.workspace_fresh >= 1, "cold pool must have allocated once");
         for _ in 0..6 {
             let (a, b) = mk(&mut rng);
-            svc.gemm_blocking(a, b);
+            svc.gemm_blocking(a, b).expect("request served");
         }
         let after = svc.metrics.snapshot();
         assert!(after.workspace_checkouts >= warm.workspace_checkouts + 6);
@@ -577,28 +1177,77 @@ mod tests {
     }
 
     #[test]
-    fn submit_reports_stopped_service() {
-        // Poison pill: a shape-mismatched request panics the only worker;
-        // once it is gone the queue closes and submit must return Err
-        // instead of panicking the caller.
+    fn shape_mismatch_is_a_typed_error_and_the_worker_survives() {
+        // The old behavior let a mismatched request assert inside the
+        // engine, killing the worker and eventually the service; now the
+        // submitter gets a typed error and the worker keeps serving.
         let svc = small_service(1);
-        let bad = svc.submit(Matrix::zeros(2, 3), Matrix::zeros(4, 2)).expect("queue open");
-        assert!(bad.recv().is_err(), "poisoned request must get no reply");
-        // The panicked request is no longer in flight (guard decrements
-        // during unwind); only later race-window submissions may linger.
-        assert_eq!(svc.inflight(), 0, "dead request must not leak the inflight counter");
-        let mut stopped = false;
-        for _ in 0..400 {
-            match svc.submit(Matrix::identity(2), Matrix::identity(2)) {
-                Err(SubmitError::ServiceStopped) => {
-                    stopped = true;
-                    break;
-                }
-                Err(e) => panic!("unexpected submit error {e}"),
-                Ok(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
-            }
+        let resp = svc.gemm_blocking(Matrix::zeros(2, 3), Matrix::zeros(4, 2));
+        assert_eq!(
+            resp.err(),
+            Some(GemmError::ShapeMismatch { m: 2, k_a: 3, k_b: 4, n: 2 })
+        );
+        assert_eq!(svc.inflight(), 0, "failed request must not leak the inflight counter");
+        // Same worker, next request: served normally.
+        let ok = svc.gemm_blocking(Matrix::identity(4), Matrix::identity(4)).expect("served");
+        assert_eq!(ok.c.at(0, 0), 1.0);
+        let tiers = svc.metrics.snapshot().tiers;
+        assert_eq!(tiers[Priority::Normal.index()].failed, 1);
+        assert_eq!(tiers[Priority::Normal.index()].completed, 1);
+        svc.shutdown();
+    }
+
+    /// Heuristic that panics on 5x5 problems (and only those) — drives
+    /// an engine panic from inside a worker deterministically.
+    struct PanicOnFive;
+
+    impl SelectionHeuristic for PanicOnFive {
+        fn emulate(&self, inp: &HeuristicInput) -> bool {
+            assert!(inp.m != 5, "panic-on-five heuristic tripped");
+            true
         }
-        assert!(stopped, "submit must fail once the last worker is gone");
+        fn name(&self) -> &'static str {
+            "panic-on-five"
+        }
+    }
+
+    #[test]
+    fn engine_panic_is_a_typed_error_and_the_worker_survives() {
+        let cfg = ServiceConfig { workers: 1, use_artifacts: false, ..Default::default() };
+        let svc = GemmService::start(cfg, None, || Box::new(PanicOnFive));
+        let resp = svc.gemm_blocking(Matrix::identity(5), Matrix::identity(5));
+        match resp {
+            Err(GemmError::EnginePanic(msg)) => {
+                assert!(msg.contains("panic-on-five"), "payload preserved: {msg}")
+            }
+            other => panic!("expected EnginePanic, got {:?}", other.err()),
+        }
+        assert_eq!(svc.inflight(), 0, "panicked request must not leak the inflight counter");
+        // The same (sole) worker keeps serving.
+        let ok = svc.gemm_blocking(Matrix::identity(4), Matrix::identity(4)).expect("served");
+        assert_eq!(ok.c.at(1, 1), 1.0);
+        assert_eq!(svc.metrics.snapshot().tiers[Priority::Normal.index()].failed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn engine_panic_in_grouped_path_fails_the_bucket_not_the_group() {
+        // A panicking bucket produces typed errors for its members; the
+        // other shape buckets of the same group still complete.
+        let cfg = ServiceConfig { workers: 1, use_artifacts: false, ..Default::default() };
+        let svc = GemmService::start(cfg, None, || Box::new(PanicOnFive));
+        let rxs = svc
+            .submit_batch(vec![
+                (Matrix::identity(4), Matrix::identity(4)),
+                (Matrix::identity(5), Matrix::identity(5)), // panics its bucket
+                (Matrix::identity(4), Matrix::identity(4)),
+            ])
+            .expect("service running");
+        assert!(rxs[0].recv().unwrap().is_ok());
+        assert!(matches!(rxs[1].recv().unwrap(), Err(GemmError::EnginePanic(_))));
+        assert!(rxs[2].recv().unwrap().is_ok());
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
     }
 
     #[test]
@@ -618,12 +1267,19 @@ mod tests {
             svc.submit_batch(vec![(Matrix::identity(2), Matrix::identity(2))]).err(),
             Some(SubmitError::ServiceStopped)
         );
+        let rej = svc.submit_async(Matrix::identity(2), Matrix::identity(2), Priority::High);
+        assert_eq!(rej.unwrap_err().error, SubmitError::ServiceStopped);
+        // gemm_blocking folds the rejection instead of panicking.
+        assert_eq!(
+            svc.gemm_blocking(Matrix::identity(2), Matrix::identity(2)).err(),
+            Some(GemmError::Rejected(SubmitError::ServiceStopped))
+        );
         svc.shutdown(); // idempotent
         assert_eq!(svc.inflight(), 0);
     }
 
-    /// Heuristic that parks its worker until the gate opens — makes the
-    /// queue-full condition deterministic.
+    /// Heuristic that parks its worker until the gate opens — makes
+    /// queue-depth conditions deterministic.
     struct GatedHeuristic {
         entered: Arc<AtomicBool>,
         gate: Arc<(Mutex<bool>, Condvar)>,
@@ -644,22 +1300,35 @@ mod tests {
         }
     }
 
-    #[test]
-    fn try_submit_reports_queue_full_and_recovers() {
+    type Gate = Arc<(Mutex<bool>, Condvar)>;
+
+    fn gated_service(cfg: ServiceConfig) -> (GemmService, Arc<AtomicBool>, Gate) {
         let entered = Arc::new(AtomicBool::new(false));
         let gate = Arc::new((Mutex::new(false), Condvar::new()));
-        let cfg = ServiceConfig {
-            workers: 1,
-            queue_depth: 1,
-            use_artifacts: false,
-            ..Default::default()
-        };
         let svc = {
             let (entered, gate) = (entered.clone(), gate.clone());
             GemmService::start(cfg, None, move || {
                 Box::new(GatedHeuristic { entered: entered.clone(), gate: gate.clone() })
             })
         };
+        (svc, entered, gate)
+    }
+
+    fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+        let (m, cv) = &**gate;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    #[test]
+    fn try_submit_reports_queue_full_and_recovers() {
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            use_artifacts: false,
+            ..Default::default()
+        };
+        let (svc, entered, gate) = gated_service(cfg);
         let mk = || (Matrix::identity(4), Matrix::identity(4));
         // First request: picked up by the worker, parked in the heuristic.
         let (a, b) = mk();
@@ -667,28 +1336,194 @@ mod tests {
         while !entered.load(Ordering::SeqCst) {
             std::thread::sleep(Duration::from_millis(1));
         }
-        // Second request: fills the queue slot.
+        // Second request: fills the shard's only queue slot.
         let (a, b) = mk();
         let rx2 = svc.submit(a, b).expect("queue open");
-        // Third: the queue is full — retryable backpressure, not fatal.
+        // Third: the shard is full — retryable backpressure, not fatal.
         let (a, b) = mk();
         let rej = svc.try_submit(a, b).unwrap_err();
         assert_eq!(rej.error, SubmitError::QueueFull);
         assert!(rej.error.is_retryable());
         // Open the gate; the backlog drains and the retry succeeds.
-        {
-            let (m, cv) = &*gate;
-            *m.lock().unwrap() = true;
-            cv.notify_all();
-        }
-        assert!(rx1.recv().is_ok());
-        assert!(rx2.recv().is_ok());
+        open_gate(&gate);
+        assert!(rx1.recv().unwrap().is_ok());
+        assert!(rx2.recv().unwrap().is_ok());
         let rx3 = svc
             .try_submit(rej.a, rej.b)
             .map_err(|r| r.error)
             .expect("retry after drain succeeds");
-        assert!(rx3.recv().is_ok());
+        assert!(rx3.recv().unwrap().is_ok());
         assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tier_caps_reject_independently_and_retryably() {
+        // tier cap 1 on High and Normal, roomy shard total: the *tier*
+        // verdict fires while other tiers still admit.
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 16,
+            tier_depths: [1, 1, 16],
+            use_artifacts: false,
+            ..Default::default()
+        };
+        let (svc, entered, gate) = gated_service(cfg);
+        let mk = || (Matrix::identity(4), Matrix::identity(4));
+        // Park the worker on a first (Normal) request.
+        let (a, b) = mk();
+        let rx0 = svc.submit(a, b).expect("queue open");
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // One queued High admits (empty tier), a second hits the cap.
+        let (a, b) = mk();
+        let mut t1 = svc.submit_async(a, b, Priority::High).expect("first high admits");
+        let (a, b) = mk();
+        let rej = svc.submit_async(a, b, Priority::High).unwrap_err();
+        assert_eq!(rej.error, SubmitError::TierFull);
+        assert!(rej.error.is_retryable());
+        // Normal still admits its own first queued request...
+        let (a, b) = mk();
+        let rx2 = svc.submit(a, b).expect("normal tier independent of high");
+        // ...and then hits its own cap, while Batch remains open.
+        let (a, b) = mk();
+        assert_eq!(svc.try_submit(a, b).unwrap_err().error, SubmitError::TierFull);
+        let rxb = svc.submit_batch(vec![mk()]).expect("batch tier still open");
+        // Tier rejections are visible per tier in the metrics.
+        let tiers = svc.metrics.snapshot().tiers;
+        assert_eq!(tiers[Priority::High.index()].rejected, 1);
+        assert_eq!(tiers[Priority::Normal.index()].rejected, 1);
+        assert_eq!(tiers[Priority::Batch.index()].rejected, 0);
+        open_gate(&gate);
+        assert!(rx0.recv().unwrap().is_ok());
+        assert!(t1.wait().is_ok());
+        assert!(rx2.recv().unwrap().is_ok());
+        assert!(rxb[0].recv().unwrap().is_ok());
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn high_tier_drains_before_batch_tier() {
+        let cfg = ServiceConfig {
+            workers: 1,
+            use_artifacts: false,
+            ..Default::default()
+        };
+        let (svc, entered, gate) = gated_service(cfg);
+        // Park the worker, then queue Batch *before* High.
+        let rx0 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let (o1, o2) = (order.clone(), order.clone());
+        svc.submit_callback(Matrix::identity(6), Matrix::identity(6), Priority::Batch, move |r| {
+            assert!(r.is_ok());
+            o1.lock().unwrap().push("batch");
+        })
+        .expect("admitted");
+        svc.submit_callback(Matrix::identity(8), Matrix::identity(8), Priority::High, move |r| {
+            assert!(r.is_ok());
+            o2.lock().unwrap().push("high");
+        })
+        .expect("admitted");
+        open_gate(&gate);
+        // Wait for the queue to drain through the sole worker.
+        while svc.inflight() != 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(
+            *order.lock().unwrap(),
+            vec!["high", "batch"],
+            "High must be dequeued before Batch even when enqueued later"
+        );
+        assert!(rx0.recv().unwrap().is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn ticket_polls_to_completion_and_callback_fires() {
+        let svc = small_service(2);
+        let mut t = svc
+            .submit_async(Matrix::identity(6), Matrix::identity(6), Priority::High)
+            .expect("admitted");
+        let resp = loop {
+            match t.poll() {
+                Some(r) => break r.expect("served"),
+                None => std::thread::sleep(Duration::from_millis(1)),
+            }
+        };
+        assert_eq!(resp.c.at(2, 2), 1.0);
+        assert_eq!(resp.total_s.to_bits(), (resp.queue_s + resp.proc_s).to_bits());
+        let (done_tx, done_rx) = channel();
+        svc.submit_callback(Matrix::identity(3), Matrix::identity(3), Priority::Normal, move |r| {
+            done_tx.send(r.map(|resp| resp.c.at(0, 0))).unwrap();
+        })
+        .expect("admitted");
+        assert_eq!(done_rx.recv().unwrap().expect("served"), 1.0);
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn latency_components_sum_exactly_on_both_paths() {
+        // The grouped-latency satellite's pin: total_s == queue_s +
+        // proc_s bit-for-bit, on the single path and the grouped path.
+        let svc = small_service(2);
+        let mut rng = Rng::new(103);
+        let mk = |rng: &mut Rng| {
+            (Matrix::uniform(12, 12, -1.0, 1.0, rng), Matrix::uniform(12, 12, -1.0, 1.0, rng))
+        };
+        for _ in 0..3 {
+            let (a, b) = mk(&mut rng);
+            let r = svc.gemm_blocking(a, b).expect("served");
+            assert!(r.queue_s >= 0.0 && r.proc_s > 0.0);
+            assert_eq!(r.total_s.to_bits(), (r.queue_s + r.proc_s).to_bits());
+        }
+        let pairs: Vec<_> = (0..5).map(|_| mk(&mut rng)).collect();
+        let rxs = svc.submit_batch(pairs).expect("service running");
+        let resps: Vec<GemmResponse> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().expect("served")).collect();
+        for r in &resps {
+            assert!(r.queue_s >= 0.0 && r.proc_s > 0.0);
+            assert_eq!(
+                r.total_s.to_bits(),
+                (r.queue_s + r.proc_s).to_bits(),
+                "reported total must equal the sum of its reported components"
+            );
+        }
+        // Same shape bucket => every member reports the same bucket wall
+        // time as proc_s.
+        for r in &resps[1..] {
+            assert_eq!(r.proc_s.to_bits(), resps[0].proc_s.to_bits());
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn per_tier_latency_metrics_populate() {
+        let svc = small_service(2);
+        for _ in 0..4 {
+            svc.gemm_blocking(Matrix::identity(8), Matrix::identity(8)).expect("served");
+        }
+        let t = svc
+            .submit_async(Matrix::identity(8), Matrix::identity(8), Priority::High)
+            .expect("admitted");
+        t.wait().expect("served");
+        let tiers = svc.metrics.snapshot().tiers;
+        let normal = &tiers[Priority::Normal.index()];
+        assert_eq!(normal.tier, "normal");
+        assert_eq!(normal.enqueued, 4);
+        assert_eq!(normal.completed, 4);
+        assert_eq!(normal.failed, 0);
+        assert!(normal.total_p50_s > 0.0, "p50 must be measured: {normal:?}");
+        assert!(normal.total_p99_s >= normal.total_p50_s);
+        assert!(normal.queue_p50_s <= normal.total_p50_s);
+        let high = &tiers[Priority::High.index()];
+        assert_eq!((high.enqueued, high.completed), (1, 1));
+        assert_eq!(tiers[Priority::Batch.index()].completed, 0);
         svc.shutdown();
     }
 
@@ -708,7 +1543,8 @@ mod tests {
         let pairs: Vec<(Matrix, Matrix)> =
             bs.iter().map(|b| (a.clone(), b.clone())).collect();
         let rxs = svc.submit_batch(pairs).expect("service running");
-        let grouped: Vec<Matrix> = rxs.into_iter().map(|rx| rx.recv().unwrap().c).collect();
+        let grouped: Vec<Matrix> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().expect("served").c).collect();
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.slice_cache_misses, n_reqs as u64 + 1, "A once + N Bs");
         assert_eq!(snap.slice_cache_hits, n_reqs as u64 - 1, "A reused N-1 times");
@@ -719,7 +1555,7 @@ mod tests {
         // Bitwise identity against the per-request service path.
         let svc_ref = small_service(1);
         for (b, c) in bs.iter().zip(&grouped) {
-            let c_ref = svc_ref.gemm_blocking(a.clone(), b.clone()).c;
+            let c_ref = svc_ref.gemm_blocking(a.clone(), b.clone()).expect("served").c;
             for (x, y) in c.data.iter().zip(&c_ref.data) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
@@ -743,7 +1579,7 @@ mod tests {
         }
         let rxs = svc.submit_batch(pairs).expect("service running");
         for (rx, expect) in rxs.into_iter().zip(expects) {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().expect("served");
             assert!(resp.c.sub(&expect).max_abs() < 1e-12);
             assert!(resp.outcome.decision.is_emulated());
         }
@@ -755,7 +1591,7 @@ mod tests {
     }
 
     #[test]
-    fn batched_shape_mismatch_drops_reply_not_worker() {
+    fn batched_shape_mismatch_is_typed_error_not_dead_worker() {
         let svc = small_service(1);
         let mut rng = Rng::new(96);
         let a = Matrix::uniform(6, 6, -1.0, 1.0, &mut rng);
@@ -767,9 +1603,13 @@ mod tests {
                 (a.clone(), b.clone()),
             ])
             .expect("service running");
-        assert!(rxs[0].recv().is_ok());
-        assert!(rxs[1].recv().is_err(), "mismatched request gets no reply");
-        assert!(rxs[2].recv().is_ok());
+        assert!(rxs[0].recv().unwrap().is_ok());
+        assert_eq!(
+            rxs[1].recv().unwrap().err(),
+            Some(GemmError::ShapeMismatch { m: 2, k_a: 3, k_b: 4, n: 2 }),
+            "mismatched request gets a typed error, not a dropped reply"
+        );
+        assert!(rxs[2].recv().unwrap().is_ok());
         assert_eq!(svc.inflight(), 0);
         // The worker survived: new submissions still work.
         assert!(svc.submit(a, b).is_ok());
@@ -799,7 +1639,8 @@ mod tests {
         let pend_u: Vec<_> =
             bs.iter().map(|b| svc_u.submit(a.clone(), b.clone()).unwrap()).collect();
         for (rc, ru) in pend_c.into_iter().zip(pend_u) {
-            let (cc, cu) = (rc.recv().unwrap().c, ru.recv().unwrap().c);
+            let cc = rc.recv().unwrap().expect("served").c;
+            let cu = ru.recv().unwrap().expect("served").c;
             for (x, y) in cc.data.iter().zip(&cu.data) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
@@ -837,7 +1678,7 @@ mod tests {
             let rxs = svc.submit_batch(pairs).expect("service running");
             pending.extend(scales.into_iter().zip(rxs));
             for (scale, rx) in pending {
-                let resp = rx.recv().unwrap();
+                let resp = rx.recv().unwrap().expect("served");
                 if (resp.c.at(0, 0) - scale).abs() > 1e-12 {
                     return Err(format!("response mismatch: {} vs {scale}", resp.c.at(0, 0)));
                 }
@@ -869,7 +1710,7 @@ mod tests {
             pending.push(svc.submit(a, b).expect("service running"));
         }
         for rx in pending {
-            rx.recv().unwrap();
+            rx.recv().unwrap().expect("served");
         }
         let s = svc.metrics.snapshot();
         assert_eq!(s.requests, 12);
@@ -897,7 +1738,7 @@ mod tests {
         }
         let rxs = svc.submit_batch(pairs).expect("service running");
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().expect("served");
         }
         let s = svc.metrics.snapshot();
         assert_eq!(s.requests, 8);

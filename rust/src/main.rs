@@ -12,9 +12,12 @@
 //! `gemm`, `serve` and `qr` accept `--compute serial|parallel|parallel:N`
 //! to pick the compute backend (default: machine-sized parallel; results
 //! are bitwise identical either way). `serve` additionally accepts
-//! `--coalesce true` to enable the grouped pipeline (micro-batching
-//! window + shape buckets + slice cache) and `--batch B` to size the
-//! shared-A request groups it submits (default 8).
+//! `--shards S` to split the queue into S shape-routed shards (each with
+//! its own worker-pool slice), `--coalesce true` to enable the grouped
+//! pipeline (micro-batching window + shape buckets + slice cache) and
+//! `--batch B` to size the shared-A request groups it submits (default
+//! 8). For sustained mixed-shape saturation with per-tier SLO reporting
+//! see `examples/load_gen.rs` (`BENCH_service.json`).
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs); clap is
 //! unavailable in the offline environment.
@@ -167,9 +170,15 @@ fn cmd_serve(args: &Args) {
     let seed = args.u64("seed", 7);
     let coalesce = args.str("coalesce", "false") == "true";
     let batch = args.usize("batch", 8).max(1);
+    let shards = args.usize("shards", 1).max(1);
     let rt = runtime(args);
-    let cfg =
-        ServiceConfig { workers, backend: compute_spec(args), coalesce, ..Default::default() };
+    let cfg = ServiceConfig {
+        workers,
+        shards,
+        backend: compute_spec(args),
+        coalesce,
+        ..Default::default()
+    };
     let svc = GemmService::start(cfg, rt, || Box::new(AlwaysEmulate));
     let mut rng = Rng::new(seed);
     let t0 = std::time::Instant::now();
@@ -203,18 +212,37 @@ fn cmd_serve(args: &Args) {
     }
     let mut lat = Vec::new();
     for rx in pending {
-        lat.push(rx.recv().unwrap().total_s);
+        let resp = rx.recv().expect("service dropped reply").expect("request failed");
+        lat.push(resp.total_s);
     }
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let snap = svc.metrics.snapshot();
     println!(
-        "{requests} reqs x n={n}, {workers} workers{}: {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        "{requests} reqs x n={n}, {workers} workers / {shards} shard(s){}: {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
         if coalesce { " [coalesced]" } else { "" },
         requests as f64 / wall,
         lat[lat.len() / 2] * 1e3,
         lat[(lat.len() * 99) / 100] * 1e3
     );
+    for t in &snap.tiers {
+        if t.enqueued + t.rejected == 0 {
+            continue;
+        }
+        println!(
+            "tier {:<6} enq={} done={} failed={} rejected={} ({:.1}%) | queue p50/p99 {:.2}/{:.2} ms, total p50/p99 {:.2}/{:.2} ms",
+            t.tier,
+            t.enqueued,
+            t.completed,
+            t.failed,
+            t.rejected,
+            t.rejection_rate() * 100.0,
+            t.queue_p50_s * 1e3,
+            t.queue_p99_s * 1e3,
+            t.total_p50_s * 1e3,
+            t.total_p99_s * 1e3
+        );
+    }
     println!(
         "outcomes: emulated={} nan={} inf={} esc={} heuristic={} | guardrail {:.2}%",
         snap.emulated,

@@ -132,7 +132,9 @@ fn stress_body(coalesce: bool, seed: u64) {
                         Ok(rxs) => {
                             accepted.fetch_add(rxs.len() as u64, Ordering::SeqCst);
                             for rx in rxs {
-                                rx.recv().expect("accepted batch request lost its reply");
+                                rx.recv()
+                                    .expect("accepted batch request lost its reply")
+                                    .expect("valid accepted request must succeed");
                                 replied.fetch_add(1, Ordering::SeqCst);
                             }
                         }
@@ -143,7 +145,9 @@ fn stress_body(coalesce: bool, seed: u64) {
                     match svc.submit(a, b) {
                         Ok(rx) => {
                             accepted.fetch_add(1, Ordering::SeqCst);
-                            rx.recv().expect("accepted request lost its reply");
+                            rx.recv()
+                                .expect("accepted request lost its reply")
+                                .expect("valid accepted request must succeed");
                             replied.fetch_add(1, Ordering::SeqCst);
                         }
                         Err(SubmitError::ServiceStopped) => return,
@@ -243,7 +247,7 @@ fn coalesced_service_bitwise_identical_to_per_request_engine() {
     let pairs: Vec<(Matrix, Matrix)> = bs.iter().map(|b| (a.clone(), b.clone())).collect();
     let rxs = svc.submit_batch(pairs).expect("service running");
     for (rx, b) in rxs.into_iter().zip(&bs) {
-        let resp = rx.recv().expect("reply");
+        let resp = rx.recv().expect("reply").expect("request served");
         assert!(resp.outcome.decision.is_emulated());
         let (c_ref, _) = engine.gemm(&a, b);
         for (x, y) in resp.c.data.iter().zip(&c_ref.data) {

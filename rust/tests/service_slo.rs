@@ -1,0 +1,260 @@
+//! SLO-grade service behavior, end to end: the sharded/async front end's
+//! operational guarantees under real thread fleets.
+//!
+//! * **No convoy through the coalescing window** (regression for the
+//!   old lock-held `recv_timeout` drain): while one shard's worker sits
+//!   in a long micro-batching window, the *other* shard keeps serving at
+//!   full speed.
+//! * **No service path panics the submitter**: shape mismatches and
+//!   engine panics surface as typed `GemmError`s on every submission API
+//!   (blocking, ticket, callback), workers survive, and the inflight
+//!   gauge drains to zero.
+//! * **Latency accounting is exact**: every response reports
+//!   `total_s == queue_s + proc_s` bit-for-bit, on the singleton and the
+//!   grouped path, under concurrency.
+//!
+//! Each test runs under a watchdog so a deadlock regression fails fast
+//! instead of hanging the suite.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adp_dgemm::coordinator::heuristic::{AlwaysEmulate, HeuristicInput, SelectionHeuristic};
+use adp_dgemm::coordinator::{GemmError, GemmService, Priority, ServiceConfig};
+use adp_dgemm::linalg::Matrix;
+use adp_dgemm::util::Rng;
+
+/// Run `f` on a helper thread and fail if it does not finish in `limit`.
+fn with_watchdog(limit: Duration, f: impl FnOnce() + Send + 'static) {
+    let body = std::thread::spawn(f);
+    let deadline = Instant::now() + limit;
+    while !body.is_finished() {
+        assert!(Instant::now() < deadline, "test exceeded the {limit:?} watchdog (deadlock?)");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    if let Err(e) = body.join() {
+        std::panic::resume_unwind(e);
+    }
+}
+
+#[test]
+fn other_shard_keeps_serving_during_a_coalescing_window() {
+    // The convoy regression: the old dispatcher held the shared queue
+    // mutex across its `coalesce_window` wait, so one coalescing worker
+    // stalled every dequeue in the service. Sharded + condvar-timed
+    // drains, a window on shard X must cost shard Y nothing.
+    with_watchdog(Duration::from_secs(60), || {
+        let window = Duration::from_millis(1500);
+        let cfg = ServiceConfig {
+            workers: 2, // one worker per shard
+            shards: 2,
+            use_artifacts: false,
+            coalesce: true,
+            coalesce_window: window,
+            max_batch: 64, // never filled: the window runs its course
+            ..Default::default()
+        };
+        let svc = GemmService::start(cfg, None, || Box::new(AlwaysEmulate));
+        assert_eq!(svc.shard_count(), 2);
+        // Find two small square shapes routed to different shards.
+        let n_x = 8;
+        let shard_x = svc.shard_for(n_x, n_x, n_x);
+        let n_y = (9..40)
+            .find(|&n| svc.shard_for(n, n, n) != shard_x)
+            .expect("some shape must land on the other shard");
+        let mut rng = Rng::new(710);
+        let mk = |n: usize, rng: &mut Rng| {
+            (Matrix::uniform(n, n, -1.0, 1.0, rng), Matrix::uniform(n, n, -1.0, 1.0, rng))
+        };
+        // Park shard X's worker in its coalescing window (a lone single
+        // submission waits out the whole window for stragglers).
+        let (a, b) = mk(n_x, &mut rng);
+        let rx_x = svc.submit(a, b).expect("service running");
+        std::thread::sleep(Duration::from_millis(50)); // let the window open
+        // Shard Y must serve a stream of requests while X's window runs.
+        // Explicit groups execute immediately (a `submit_batch` item ends
+        // any window early), so each round trip measures shard Y's
+        // responsiveness, not its own coalescing window.
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            let (a, b) = mk(n_y, &mut rng);
+            let rxs = svc.submit_batch(vec![(a, b)]).expect("service running");
+            for rx in rxs {
+                let resp = rx.recv().expect("reply").expect("served");
+                assert!(resp.outcome.decision.is_emulated());
+            }
+        }
+        let y_elapsed = t0.elapsed();
+        assert!(
+            y_elapsed < window / 2,
+            "shard Y took {y_elapsed:?} while shard X coalesced — the window convoyed the service"
+        );
+        // Shard X's request completes once its window closes.
+        let resp = rx_x.recv().expect("reply").expect("served");
+        assert!(resp.proc_s > 0.0);
+        assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    });
+}
+
+/// Panics inside the engine whenever m == 5 (heuristics run on the
+/// workers, so this drives a worker-side engine panic on demand).
+struct PanicOnFive;
+
+impl SelectionHeuristic for PanicOnFive {
+    fn emulate(&self, inp: &HeuristicInput) -> bool {
+        assert!(inp.m != 5, "slo-suite heuristic bomb");
+        true
+    }
+    fn name(&self) -> &'static str {
+        "panic-on-five"
+    }
+}
+
+#[test]
+fn failure_modes_surface_as_typed_errors_on_every_api() {
+    with_watchdog(Duration::from_secs(60), || {
+        let cfg = ServiceConfig { workers: 2, use_artifacts: false, ..Default::default() };
+        let svc = GemmService::start(cfg, None, || Box::new(PanicOnFive));
+        // Blocking path: mismatch and panic, both typed.
+        assert!(matches!(
+            svc.gemm_blocking(Matrix::zeros(3, 4), Matrix::zeros(5, 3)),
+            Err(GemmError::ShapeMismatch { m: 3, k_a: 4, k_b: 5, n: 3 })
+        ));
+        assert!(matches!(
+            svc.gemm_blocking(Matrix::identity(5), Matrix::identity(5)),
+            Err(GemmError::EnginePanic(_))
+        ));
+        // Ticket path.
+        let t = svc
+            .submit_async(Matrix::identity(5), Matrix::identity(5), Priority::High)
+            .expect("admitted");
+        assert!(matches!(t.wait(), Err(GemmError::EnginePanic(_))));
+        // Callback path: invoked exactly once, with the typed error.
+        let (tx, rx) = std::sync::mpsc::channel();
+        svc.submit_callback(
+            Matrix::zeros(2, 2),
+            Matrix::zeros(3, 2),
+            Priority::Batch,
+            move |r| tx.send(r).unwrap(),
+        )
+        .expect("admitted");
+        assert!(matches!(rx.recv().unwrap(), Err(GemmError::ShapeMismatch { .. })));
+        // Grouped path: only the poisoned bucket fails.
+        let rxs = svc
+            .submit_batch(vec![
+                (Matrix::identity(4), Matrix::identity(4)),
+                (Matrix::identity(5), Matrix::identity(5)),
+            ])
+            .expect("service running");
+        assert!(rxs[0].recv().unwrap().is_ok());
+        assert!(matches!(rxs[1].recv().unwrap(), Err(GemmError::EnginePanic(_))));
+        // The fleet survived all of it and still serves.
+        let ok = svc.gemm_blocking(Matrix::identity(6), Matrix::identity(6)).expect("served");
+        assert_eq!(ok.c.at(0, 0), 1.0);
+        assert_eq!(svc.inflight(), 0, "failed requests must not leak inflight counts");
+        let tiers = svc.metrics.snapshot().tiers;
+        let failed: u64 = tiers.iter().map(|t| t.failed).sum();
+        assert_eq!(failed, 5, "every typed error is accounted to its tier");
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn latency_components_stay_exact_under_concurrent_mixed_traffic() {
+    with_watchdog(Duration::from_secs(120), || {
+        let cfg = ServiceConfig {
+            workers: 3,
+            shards: 2,
+            use_artifacts: false,
+            coalesce: true,
+            coalesce_window: Duration::from_micros(300),
+            ..Default::default()
+        };
+        let svc = Arc::new(GemmService::start(cfg, None, || Box::new(AlwaysEmulate)));
+        let checked = Arc::new(AtomicU64::new(0));
+        let mut fleet = Vec::new();
+        for t in 0..4u64 {
+            let svc = svc.clone();
+            let checked = checked.clone();
+            fleet.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0x510 + t);
+                for i in 0..12usize {
+                    let n = 6 + (i % 4) * 2;
+                    let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+                    let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+                    let resp = if i % 3 == 0 {
+                        let rxs = svc.submit_batch(vec![(a, b)]).expect("running");
+                        rxs.into_iter().next().unwrap().recv().unwrap().expect("served")
+                    } else {
+                        svc.gemm_blocking(a, b).expect("served")
+                    };
+                    assert!(resp.queue_s >= 0.0 && resp.proc_s > 0.0);
+                    assert_eq!(
+                        resp.total_s.to_bits(),
+                        (resp.queue_s + resp.proc_s).to_bits(),
+                        "reported total_s must be the exact sum of its components"
+                    );
+                    checked.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for f in fleet {
+            f.join().expect("submitter panicked");
+        }
+        assert_eq!(checked.load(Ordering::SeqCst), 48);
+        assert_eq!(svc.inflight(), 0);
+        // The per-tier histograms saw every completion.
+        let tiers = svc.metrics.snapshot().tiers;
+        let completed: u64 = tiers.iter().map(|t| t.completed).sum();
+        assert_eq!(completed, 48);
+        assert!(tiers[Priority::Normal.index()].total_p50_s > 0.0);
+        assert!(tiers[Priority::Batch.index()].total_p50_s > 0.0);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn async_tickets_and_callbacks_complete_a_mixed_stream() {
+    with_watchdog(Duration::from_secs(60), || {
+        let cfg = ServiceConfig {
+            workers: 2,
+            shards: 2,
+            use_artifacts: false,
+            ..Default::default()
+        };
+        let svc = GemmService::start(cfg, None, || Box::new(AlwaysEmulate));
+        let done = Arc::new(AtomicU64::new(0));
+        let mut rng = Rng::new(0xA57);
+        let mut tickets = Vec::new();
+        for i in 0..10usize {
+            let n = 5 + i % 3;
+            let a = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            let b = Matrix::uniform(n, n, -1.0, 1.0, &mut rng);
+            if i % 2 == 0 {
+                tickets.push(
+                    svc.submit_async(a, b, Priority::High).expect("admitted (queues are roomy)"),
+                );
+            } else {
+                let done = done.clone();
+                svc.submit_callback(a, b, Priority::Normal, move |r| {
+                    r.expect("served");
+                    done.fetch_add(1, Ordering::SeqCst);
+                })
+                .expect("admitted (queues are roomy)");
+            }
+        }
+        for t in tickets {
+            t.wait().expect("served");
+        }
+        while done.load(Ordering::SeqCst) < 5 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(svc.inflight(), 0);
+        let tiers = svc.metrics.snapshot().tiers;
+        assert_eq!(tiers[Priority::High.index()].completed, 5);
+        assert_eq!(tiers[Priority::Normal.index()].completed, 5);
+        svc.shutdown();
+    });
+}

@@ -86,7 +86,7 @@ fn service_survives_adversarial_stream() {
         pending.push((ac, bc, expect_finite, rx));
     }
     for (a, b, expect_finite, rx) in pending {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().expect("request served");
         assert_eq!((resp.c.rows, resp.c.cols), (a.rows, b.cols));
         if expect_finite {
             assert!(!resp.c.has_non_finite());
