@@ -8,9 +8,12 @@
 //!   (d) grouped pipeline slice-cache amortization (the --coalesce path);
 //!   (f) scheme families at a matched window: native FP64 vs Ozaki-I
 //!       slice pairs vs Ozaki-II/CRT — launches, time, accuracy.
+//!   (g) accuracy tiers (§tiers): per-tier pair-truncated schedules —
+//!       pair count, time, and measured componentwise error.
 //!
 //! Section (f) also emits `BENCH_ablation.json` (machine-readable arms)
-//! next to the working directory so CI can archive the comparison.
+//! next to the working directory so CI can archive the comparison;
+//! `perf_hotpath` emits the per-tier twin `BENCH_tiers.json`.
 
 use adp_dgemm::backend::{SerialBackend, WorkspacePool};
 use adp_dgemm::esc::{coarse_esc_gemm, exact_esc_gemm};
@@ -19,8 +22,8 @@ use adp_dgemm::linalg::Matrix;
 use adp_dgemm::ozaki::gemm::fused_tile_gemm_serial_on;
 use adp_dgemm::ozaki::kernel;
 use adp_dgemm::ozaki::{
-    crt_gemm_on, emulated_gemm, fused_gemm_on, gemm_grouped, slice_a, slice_b, CrtConfig,
-    GroupedProblem, OzakiConfig, PairSchedule, SchemeKind, SliceCache, SliceEncoding,
+    crt_gemm_on, emulated_gemm, fused_gemm_on, gemm_grouped, slice_a, slice_b, AccuracyTier,
+    CrtConfig, GroupedProblem, OzakiConfig, PairSchedule, SchemeKind, SliceCache, SliceEncoding,
 };
 use adp_dgemm::util::{benchkit, Rng};
 
@@ -202,6 +205,33 @@ fn main() {
         ccfg.gemm_count(),
         cfg7.pair_count()
     );
+
+    println!("\n# (g) accuracy tiers: pair-truncated schedules (n={n}, s=7, serial fused)");
+    println!(
+        "{:>12} {:>8} {:>8} {:>12} {:>12} {:>14}",
+        "tier", "pairs", "skipped", "time_ms", "vs full", "maxerr_eps"
+    );
+    let mut guaranteed_ms = f64::NAN;
+    for tier in AccuracyTier::ALL {
+        let tcfg = OzakiConfig::new(7).with_tier(tier);
+        let st = benchkit::bench(1, 3, || fused_gemm_on(&a, &b, &tcfg, &SerialBackend, &wpool));
+        let ms = st.median_s * 1e3;
+        if tier == AccuracyTier::GuaranteedFp64 {
+            guaranteed_ms = ms;
+        }
+        let eps = measure(&a, &b, &fused_gemm_on(&a, &b, &tcfg, &SerialBackend, &wpool))
+            .max_comp_eps;
+        println!(
+            "{:>12} {:>8} {:>8} {:>12.1} {:>12} {:>14.3}",
+            tier.label(),
+            tcfg.pair_count(),
+            tcfg.skipped_pair_count(),
+            ms,
+            format!("{:.2}x", guaranteed_ms / ms),
+            eps
+        );
+    }
+    println!("# fast tiers keep the largest-weight pair levels only: quadratically fewer GEMMs");
 
     // Machine-readable copy for CI artifacts. The repo is dependency-free,
     // so the JSON is assembled by hand.

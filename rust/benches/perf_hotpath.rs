@@ -8,6 +8,7 @@
 //!   recompose        — level accumulation + descaling bandwidth
 //!   coarse ESC       — guardrail pass throughput
 //!   serial/parallel  — backend ablation of the emulated + FP64 hot paths
+//!   accuracy tiers   — pair-truncated schedules (emits BENCH_tiers.json)
 //!   artifact gemm    — PJRT end-to-end (when artifacts/ exists)
 
 use std::path::Path;
@@ -19,8 +20,8 @@ use adp_dgemm::ozaki::gemm::slice_pair_gemm_tile_on;
 use adp_dgemm::ozaki::kernel::{self, ScalarKernel};
 use adp_dgemm::ozaki::{
     emulated_gemm_on, emulated_gemm_with_breakdown, fused_gemm_on, gemm_grouped, slice_a,
-    slice_b, slice_pair_gemm, tune, GroupedProblem, OzakiConfig, SchemeKind, SliceCache,
-    SliceEncoding,
+    slice_b, slice_pair_gemm, tune, AccuracyTier, GroupedProblem, OzakiConfig, SchemeKind,
+    SliceCache, SliceEncoding,
 };
 use adp_dgemm::runtime::RuntimeHandle;
 use adp_dgemm::util::{benchkit, Rng};
@@ -242,6 +243,42 @@ fn main() {
         "fused engine: {} tiles, {} checkouts, {} fresh allocations (steady state reuses)",
         ws.fused_tiles, ws.checkouts, ws.fresh_allocs
     );
+
+    // --- accuracy tiers: pair-truncated schedules -----------------------
+    // One arm per tier on the serial fused engine; the fast tiers drop the
+    // lowest-weight pair levels, so time should fall roughly with the pair
+    // count. Written to BENCH_tiers.json so CI archives per-tier ns/flop.
+    {
+        let mut tjson = benchkit::JsonReport::new();
+        let mut guaranteed_s = f64::NAN;
+        for tier in AccuracyTier::ALL {
+            let cfg_t = OzakiConfig::new(s).with_tier(tier);
+            let st =
+                benchkit::bench_budget(1.0, || fused_gemm_on(&a, &b, &cfg_t, &SerialBackend, &wpool));
+            if tier == AccuracyTier::GuaranteedFp64 {
+                guaranteed_s = st.median_s;
+            }
+            let extra = [
+                ("unit", "flop".to_string()),
+                ("engine", "fused".to_string()),
+                ("tier", tier.label().to_string()),
+                ("pairs", cfg_t.pair_count().to_string()),
+                ("pairs_skipped", cfg_t.skipped_pair_count().to_string()),
+                ("vs guaranteed", format!("{:.2}x", guaranteed_s / st.median_s)),
+            ];
+            benchkit::report(&format!("fused_tier[{}]", tier.label()), st, &extra);
+            tjson.arm(&format!("fused_tier[{}]", tier.label()), st, flops, &extra);
+        }
+        let tctx = [
+            ("n", n.to_string()),
+            ("s", s.to_string()),
+            ("kernel", dispatched.label().to_string()),
+        ];
+        match tjson.write("BENCH_tiers.json", "perf_hotpath_tiers", &tctx) {
+            Ok(()) => println!("# wrote BENCH_tiers.json ({} arms)", tjson.len()),
+            Err(e) => eprintln!("# BENCH_tiers.json not written: {e}"),
+        }
+    }
 
     // --- tile-geometry ablation: every candidate shape, tuned marked ----
     // The autotuner's acceptance bar lives here: the `tuned=true` arm

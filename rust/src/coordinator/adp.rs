@@ -8,6 +8,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::costmodel::{CostModel, LearnedHeuristic};
 use super::heuristic::{EmulationChoice, HeuristicInput, SelectionHeuristic};
 use super::metrics::Metrics;
 use super::plan::EscPlanCache;
@@ -17,8 +18,8 @@ use crate::esc::coarse::{coarse_esc_gemm, DEFAULT_BLOCK};
 use crate::linalg::Matrix;
 use crate::ozaki::batched::{gemm_grouped, GroupedProblem, SliceCache};
 use crate::ozaki::{
-    fused_gemm_on, CrtConfig, CrtScheme, DecompositionScheme, OzakiConfig, SchemeKind,
-    SliceEncoding,
+    fused_gemm_on, AccuracyTier, CrtConfig, CrtScheme, DecompositionScheme, OzakiConfig,
+    SchemeKind, SliceEncoding,
 };
 use crate::runtime::{ArtifactKind, RuntimeHandle};
 
@@ -120,24 +121,44 @@ pub struct AdpConfig {
     /// request. Share one `Arc` across engines (the service does) so the
     /// whole deployment reaches zero steady-state scratch allocation.
     pub workspace_pool: Arc<WorkspacePool>,
+    /// Default accuracy tier for [`AdpEngine::gemm`] /
+    /// [`AdpEngine::gemm_grouped`]; per-request overrides go through the
+    /// `*_tiered` entry points. Seeded from the `ADP_TIER` environment
+    /// override by [`AdpConfig::fp64`].
+    pub tier: AccuracyTier,
+    /// Online-learned ns/MAC table, fed by every request this engine
+    /// dispatches (all three families, all tiers) and consulted by
+    /// [`LearnedHeuristic`] when it is the configured policy. Share one
+    /// `Arc` across engines so a whole service learns together.
+    pub cost_model: Arc<CostModel>,
 }
 
 impl AdpConfig {
     /// Defaults matching the paper: FP64 target, 200-bit ceiling (~26
     /// slices, the Fig 3 configuration), unsigned encoding.
     pub fn fp64() -> AdpConfig {
+        // The default policy layers the learned cost model over the
+        // seed's AlwaysEmulate: while the table is cold every decision
+        // is exactly the fallback's, so a fresh engine behaves like the
+        // pre-learned coordinator until real measurements accumulate.
+        let cost_model = Arc::new(CostModel::from_env());
         AdpConfig {
             target_mantissa: 53,
             max_slices: 26,
             encoding: SliceEncoding::Unsigned,
             esc_block: DEFAULT_BLOCK,
-            heuristic: Box::new(super::heuristic::AlwaysEmulate),
+            heuristic: Box::new(LearnedHeuristic::new(
+                Arc::clone(&cost_model),
+                Box::new(super::heuristic::AlwaysEmulate),
+            )),
             runtime: None,
             use_artifacts: true,
             backend: BackendSpec::Serial.build(),
             plan_cache: None,
             slice_cache: None,
             workspace_pool: Arc::new(WorkspacePool::new()),
+            tier: AccuracyTier::env_default(),
+            cost_model,
         }
     }
 
@@ -175,6 +196,21 @@ impl AdpConfig {
         self.workspace_pool = pool;
         self
     }
+
+    /// Override the engine's default accuracy tier (requests without an
+    /// explicit per-request tier run here).
+    pub fn with_tier(mut self, tier: AccuracyTier) -> AdpConfig {
+        self.tier = tier;
+        self
+    }
+
+    /// Share a learned cost model (observations flow into it; pair it
+    /// with a [`LearnedHeuristic`] over the same `Arc` to also consult
+    /// it for decisions).
+    pub fn with_cost_model(mut self, model: Arc<CostModel>) -> AdpConfig {
+        self.cost_model = model;
+        self
+    }
 }
 
 /// The ADP engine. Cheap to construct, and `Send + Sync` (every method
@@ -196,9 +232,27 @@ impl AdpEngine {
         AdpEngine { cfg, metrics }
     }
 
-    /// The guaranteed-accuracy GEMM entry point.
+    /// The guaranteed-accuracy GEMM entry point, at the engine's
+    /// configured default tier.
     pub fn gemm(&self, a: &Matrix, b: &Matrix) -> (Matrix, AdpOutcome) {
+        self.gemm_tiered(a, b, self.cfg.tier)
+    }
+
+    /// [`AdpEngine::gemm`] with a per-request accuracy tier. At
+    /// [`AccuracyTier::GuaranteedFp64`] this is the seed's bitwise
+    /// semantics; the fast tiers run the tier-truncated pair schedule
+    /// (and a correspondingly smaller CRT basis) — unless ESC already
+    /// sized the window at or below the tier's kept bits, in which case
+    /// the full schedule runs and the escalation is counted (no silent
+    /// accuracy loss from truncating an already-minimal schedule).
+    pub fn gemm_tiered(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        tier: AccuracyTier,
+    ) -> (Matrix, AdpOutcome) {
         assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let shape = (a.rows, a.cols, b.cols);
         let t0 = Instant::now();
 
         // ---- Guardrail 1: safety scan (§5.1) -------------------------
@@ -208,7 +262,7 @@ impl AdpEngine {
                 if flags.has_nan { GemmDecision::FallbackNan } else { GemmDecision::FallbackInf };
             let guardrail_s = t0.elapsed().as_secs_f64();
             let (c, exec_s) = self.native(a, b);
-            return self.finish(c, decision, 0, 0, guardrail_s, exec_s);
+            return self.finish(c, decision, 0, 0, guardrail_s, exec_s, tier, shape, (0, 0), false);
         }
 
         // ---- Guardrail 2: coarsened ESC (§5.2) -----------------------
@@ -218,25 +272,58 @@ impl AdpEngine {
         if slices > self.cfg.max_slices {
             let guardrail_s = t0.elapsed().as_secs_f64();
             let (c, exec_s) = self.native(a, b);
-            return self.finish(c, GemmDecision::FallbackEsc { esc }, esc, slices, guardrail_s, exec_s);
+            return self.finish(
+                c,
+                GemmDecision::FallbackEsc { esc },
+                esc,
+                slices,
+                guardrail_s,
+                exec_s,
+                tier,
+                shape,
+                (0, 0),
+                false,
+            );
         }
+
+        // The tier-aware schedule config: pair truncation depth and the
+        // CRT-side window reduction both derive from it. When ESC left
+        // no room to truncate (depth 0 at a fast tier) the dispatch
+        // below runs the full schedule and reports an escalation.
+        let ozcfg = OzakiConfig::with_encoding(slices, self.cfg.encoding).with_tier(tier);
+        let escalated = tier != AccuracyTier::GuaranteedFp64 && ozcfg.truncation_depth() == 0;
 
         // ---- Guardrail 3: profitability heuristic (§5.3) -------------
         // Both scheme families are sized from the same coarse ESC: slice
-        // pairs at `slices`, CRT at the unsigned-equivalent window when
-        // the modulus basis covers it. The heuristic picks the cheapest
-        // of native / slice-pair / CRT (boolean policies keep their
-        // pre-CRT slice-pair behavior via the default `choose`).
-        let crt_cfg = CrtConfig::for_bits(bits, a.cols);
+        // pairs at `slices` (tier-truncated pair count), CRT at the
+        // tier-capped unsigned-equivalent window when the modulus basis
+        // covers it. The heuristic picks the cheapest of native /
+        // slice-pair / CRT (boolean policies keep their pre-CRT
+        // slice-pair behavior via the default `choose`).
+        let crt_cfg = CrtConfig::for_window(ozcfg.crt_window(), a.cols);
         let hin = HeuristicInput::single(a.rows, a.cols, b.cols, slices)
+            .with_pairs(ozcfg.pair_count())
+            .with_tier(tier)
             .with_crt(crt_cfg.map(|c| c.gemm_count()));
         let choice = self.cfg.heuristic.choose(&hin);
         if choice == EmulationChoice::Native {
             let guardrail_s = t0.elapsed().as_secs_f64();
             let (c, exec_s) = self.native(a, b);
-            return self.finish(c, GemmDecision::FallbackHeuristic, esc, slices, guardrail_s, exec_s);
+            return self.finish(
+                c,
+                GemmDecision::FallbackHeuristic,
+                esc,
+                slices,
+                guardrail_s,
+                exec_s,
+                tier,
+                shape,
+                (0, 0),
+                false,
+            );
         }
         let guardrail_s = t0.elapsed().as_secs_f64();
+        let pairs = (ozcfg.pair_count() as u64, ozcfg.skipped_pair_count() as u64);
 
         // ---- Dispatch emulation (§5.4) -------------------------------
         // CRT dispatch always runs the native pipeline (AOT artifacts
@@ -252,18 +339,35 @@ impl AdpEngine {
             );
             let exec_s = te.elapsed().as_secs_f64();
             let d = GemmDecision::EmulatedCrt { slices: ccfg.s_eq, moduli: ccfg.gemm_count() };
-            return self.finish(c, d, esc, slices, guardrail_s, exec_s);
+            // CRT runs modulus GEMMs, not slice pairs: the pair counters
+            // stay at 0; the tier's saving shows up as the smaller basis.
+            return self.finish(c, d, esc, slices, guardrail_s, exec_s, tier, shape, (0, 0), escalated);
         }
         // Subnormal inputs are exact on the native pipeline but flushed by
         // the XLA-CPU artifact substrate (DAZ/FTZ): steer them native.
-        if self.cfg.use_artifacts && !flags.has_subnormal {
+        // Artifacts encode the *full* triangular schedule, so they only
+        // serve requests whose tier keeps the full schedule anyway
+        // (guaranteed, or a fast tier that escalated to depth 0).
+        if self.cfg.use_artifacts && !flags.has_subnormal && ozcfg.truncation_depth() == 0 {
             if let Some(rt) = &self.cfg.runtime {
                 if let Some(nreg) = rt.catalog().fitting_size(a.rows, a.cols, b.cols) {
                     if let Some(sreg) = rt.catalog().slice_count_at_least(nreg, slices) {
                         if let Ok(c) = rt.emulated_gemm(nreg, sreg, a, b) {
                             let exec_s = te.elapsed().as_secs_f64();
                             let d = GemmDecision::EmulatedArtifact { n: nreg, slices: sreg };
-                            return self.finish(c, d, esc, slices, guardrail_s, exec_s);
+                            let apairs = (sreg * (sreg + 1) / 2) as u64;
+                            return self.finish(
+                                c,
+                                d,
+                                esc,
+                                slices,
+                                guardrail_s,
+                                exec_s,
+                                tier,
+                                shape,
+                                (apairs, 0),
+                                escalated,
+                            );
                         }
                         // artifact failure => continue to native pipeline
                     }
@@ -272,16 +376,26 @@ impl AdpEngine {
         }
         // Native emulation runs the fused tile engine (bitwise identical
         // to the level-major reference; scratch from the shared pool).
-        let cfg = OzakiConfig::with_encoding(slices, self.cfg.encoding);
         let c = fused_gemm_on(
             a,
             b,
-            &cfg,
+            &ozcfg,
             self.cfg.backend.as_ref(),
             self.cfg.workspace_pool.as_ref(),
         );
         let exec_s = te.elapsed().as_secs_f64();
-        self.finish(c, GemmDecision::EmulatedNative { slices }, esc, slices, guardrail_s, exec_s)
+        self.finish(
+            c,
+            GemmDecision::EmulatedNative { slices },
+            esc,
+            slices,
+            guardrail_s,
+            exec_s,
+            tier,
+            shape,
+            pairs,
+            escalated,
+        )
     }
 
     /// Coarse ESC through the plan cache when configured (recording the
@@ -319,6 +433,19 @@ impl AdpEngine {
     /// may legitimately differ from the standalone path — the emulated
     /// numerics never do.
     pub fn gemm_grouped(&self, problems: &[(&Matrix, &Matrix)]) -> Vec<(Matrix, AdpOutcome)> {
+        self.gemm_grouped_tiered(problems, self.cfg.tier)
+    }
+
+    /// [`AdpEngine::gemm_grouped`] with an explicit accuracy tier for
+    /// the whole group. Mixed-tier batches are dispatched as separate
+    /// groups by the service (the tier is part of its bucket key), but
+    /// the shared slice cache still amortizes across them — slicing is
+    /// tier-independent, only the schedule depth differs.
+    pub fn gemm_grouped_tiered(
+        &self,
+        problems: &[(&Matrix, &Matrix)],
+        tier: AccuracyTier,
+    ) -> Vec<(Matrix, AdpOutcome)> {
         struct Pending {
             idx: usize,
             slices: usize,
@@ -352,6 +479,7 @@ impl AdpEngine {
         }
         for (idx, &(a, b)) in problems.iter().enumerate() {
             assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+            let shape = (a.rows, a.cols, b.cols);
             let t0 = Instant::now();
             let flags = scan_pair(a, b);
             if !flags.clean() {
@@ -362,7 +490,18 @@ impl AdpEngine {
                 };
                 let guardrail_s = t0.elapsed().as_secs_f64();
                 let (c, exec_s) = self.native(a, b);
-                results[idx] = Some(self.finish(c, decision, 0, 0, guardrail_s, exec_s));
+                results[idx] = Some(self.finish(
+                    c,
+                    decision,
+                    0,
+                    0,
+                    guardrail_s,
+                    exec_s,
+                    tier,
+                    shape,
+                    (0, 0),
+                    false,
+                ));
                 continue;
             }
             let esc = self.coarse_esc(a, b);
@@ -378,18 +517,28 @@ impl AdpEngine {
                     slices,
                     guardrail_s,
                     exec_s,
+                    tier,
+                    shape,
+                    (0, 0),
+                    false,
                 ));
                 continue;
             }
             let batch = multiplicity[&fps[idx][0]].max(multiplicity[&fps[idx][1]]);
-            let crt_cfg = CrtConfig::for_bits(bits, a.cols);
+            // Same tier-aware derivation as the standalone path: the
+            // grouped pipeline must take the same decision and build the
+            // same configs so results stay bitwise interchangeable.
+            let ozcfg = OzakiConfig::with_encoding(slices, self.cfg.encoding).with_tier(tier);
+            let crt_cfg = CrtConfig::for_window(ozcfg.crt_window(), a.cols);
             let hin = HeuristicInput {
                 m: a.rows,
                 k: a.cols,
                 n: b.cols,
                 slices,
+                pairs: ozcfg.pair_count(),
                 batch,
                 crt_moduli: crt_cfg.map(|c| c.gemm_count()),
+                tier,
             };
             let choice = self.cfg.heuristic.choose(&hin);
             if choice == EmulationChoice::Native {
@@ -402,6 +551,10 @@ impl AdpEngine {
                     slices,
                     guardrail_s,
                     exec_s,
+                    tier,
+                    shape,
+                    (0, 0),
+                    false,
                 ));
                 continue;
             }
@@ -425,7 +578,7 @@ impl AdpEngine {
                 .map(|p| GroupedProblem {
                     a: problems[p.idx].0,
                     b: problems[p.idx].1,
-                    cfg: OzakiConfig::with_encoding(p.slices, self.cfg.encoding),
+                    cfg: OzakiConfig::with_encoding(p.slices, self.cfg.encoding).with_tier(tier),
                     scheme: if p.crt.is_some() { SchemeKind::Crt } else { SchemeKind::SlicePair },
                 })
                 .collect();
@@ -434,15 +587,37 @@ impl AdpEngine {
             self.metrics.record_group(&gstats);
             let exec_each = te.elapsed().as_secs_f64() / pending.len() as f64;
             for (p, c) in pending.into_iter().zip(cs) {
-                let decision = match p.crt {
-                    Some(ccfg) => GemmDecision::EmulatedCrt {
-                        slices: ccfg.s_eq,
-                        moduli: ccfg.gemm_count(),
-                    },
-                    None => GemmDecision::EmulatedNative { slices: p.slices },
+                let ozcfg =
+                    OzakiConfig::with_encoding(p.slices, self.cfg.encoding).with_tier(tier);
+                let escalated =
+                    tier != AccuracyTier::GuaranteedFp64 && ozcfg.truncation_depth() == 0;
+                let shape =
+                    (problems[p.idx].0.rows, problems[p.idx].0.cols, problems[p.idx].1.cols);
+                let (decision, pairs) = match p.crt {
+                    Some(ccfg) => (
+                        GemmDecision::EmulatedCrt {
+                            slices: ccfg.s_eq,
+                            moduli: ccfg.gemm_count(),
+                        },
+                        (0, 0),
+                    ),
+                    None => (
+                        GemmDecision::EmulatedNative { slices: p.slices },
+                        (ozcfg.pair_count() as u64, ozcfg.skipped_pair_count() as u64),
+                    ),
                 };
-                results[p.idx] =
-                    Some(self.finish(c, decision, p.esc, p.slices, p.guardrail_s, exec_each));
+                results[p.idx] = Some(self.finish(
+                    c,
+                    decision,
+                    p.esc,
+                    p.slices,
+                    p.guardrail_s,
+                    exec_each,
+                    tier,
+                    shape,
+                    pairs,
+                    escalated,
+                ));
             }
         }
         results.into_iter().map(|r| r.expect("every problem resolved")).collect()
@@ -467,6 +642,7 @@ impl AdpEngine {
         (c, t.elapsed().as_secs_f64())
     }
 
+    #[allow(clippy::too_many_arguments)] // internal seam; every site is a tail call
     fn finish(
         &self,
         c: Matrix,
@@ -475,9 +651,27 @@ impl AdpEngine {
         slices_required: usize,
         guardrail_s: f64,
         exec_s: f64,
+        tier: AccuracyTier,
+        shape: (usize, usize, usize),
+        pairs: (u64, u64),
+        escalated: bool,
     ) -> (Matrix, AdpOutcome) {
         let outcome = AdpOutcome { decision, esc, slices_required, guardrail_s, exec_s };
         self.metrics.record(&outcome);
+        self.metrics.record_tier(tier, pairs.0, pairs.1, escalated);
+        // Feed the learned cost model with what actually ran: the
+        // dispatched family's wall time, normalized per logical MAC and
+        // keyed by shape bucket + family + tier. Fallback paths observe
+        // the native arm — guardrail fallbacks are real native timings,
+        // which is exactly the evidence the three-way comparison needs.
+        let arm = match decision {
+            GemmDecision::EmulatedArtifact { .. } | GemmDecision::EmulatedNative { .. } => {
+                EmulationChoice::SlicePair
+            }
+            GemmDecision::EmulatedCrt { .. } => EmulationChoice::Crt,
+            _ => EmulationChoice::Native,
+        };
+        self.cfg.cost_model.observe(shape.0, shape.1, shape.2, arm, tier, exec_s);
         // Refresh the workspace-pool gauges (pool lifetime totals) so
         // snapshots expose checkout/fresh-allocation/fused-tile counts,
         // the packed-panel amortization counters, and the dispatch gauge
@@ -507,8 +701,15 @@ mod tests {
     use crate::linalg::gemm as native_gemm;
     use crate::util::Rng;
 
+    /// Guaranteed-tier engine: these tests pin full-schedule facts
+    /// (pair counts, CRT windows, bitwise references), so they must not
+    /// float with the `ADP_TIER` environment default.
     fn engine() -> AdpEngine {
-        AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(AlwaysEmulate)))
+        AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(AlwaysEmulate))
+                .with_tier(AccuracyTier::GuaranteedFp64),
+        )
     }
 
     #[test]
@@ -521,6 +722,7 @@ mod tests {
         let par = AdpEngine::new(
             AdpConfig::fp64()
                 .with_heuristic(Box::new(AlwaysEmulate))
+                .with_tier(AccuracyTier::GuaranteedFp64)
                 .with_backend(BackendSpec::Parallel { threads: 4 }.build()),
         );
         let (c_ser, o_ser) = engine().gemm(&a, &b);
@@ -530,10 +732,15 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         // native fallback path
-        let nat_ser = AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(NeverEmulate)));
+        let nat_ser = AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(NeverEmulate))
+                .with_tier(AccuracyTier::GuaranteedFp64),
+        );
         let nat_par = AdpEngine::new(
             AdpConfig::fp64()
                 .with_heuristic(Box::new(NeverEmulate))
+                .with_tier(AccuracyTier::GuaranteedFp64)
                 .with_backend(BackendSpec::Parallel { threads: 4 }.build()),
         );
         let (c_ser, _) = nat_ser.gemm(&a, &b);
@@ -611,6 +818,92 @@ mod tests {
     }
 
     #[test]
+    fn fast_tier_executes_exactly_the_truncated_pair_count() {
+        // The satellite counter test: a fast-tier request runs exactly
+        // `pair_count()` slice-pair GEMMs and skips the rest — pinned
+        // through the pairs_executed/pairs_skipped counters — and on an
+        // FP64-sized window that is no more than half the full schedule
+        // (the PR's headline saving).
+        let eng = engine();
+        let mut rng = Rng::new(93);
+        let a = Matrix::uniform(24, 24, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(24, 24, 1.0, 2.0, &mut rng);
+        let (c, out) = eng.gemm_tiered(&a, &b, AccuracyTier::Fp64FaithfulFast);
+        assert!(matches!(out.decision, GemmDecision::EmulatedNative { .. }), "{:?}", out.decision);
+        let s = out.decision.slices().unwrap();
+        let cfg = OzakiConfig::new(s).with_tier(AccuracyTier::Fp64FaithfulFast);
+        assert!(cfg.truncation_depth() > 0, "FP64-sized window must truncate (s = {s})");
+        assert!(
+            cfg.pair_count() * 2 <= cfg.full_pair_count(),
+            "fast tier must run at most half the pair GEMMs: {}/{}",
+            cfg.pair_count(),
+            cfg.full_pair_count()
+        );
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.tier_requests, [0, 1, 0]);
+        assert_eq!(snap.pairs_executed, cfg.pair_count() as u64);
+        assert_eq!(snap.pairs_skipped, cfg.skipped_pair_count() as u64);
+        assert_eq!(snap.tier_escalations, 0);
+        // The kept ~30 bits hold on benign inputs (documented tier bound,
+        // with slack for the k-fold accumulation).
+        let c_ref = a.matmul_dd(&b);
+        let denom = a.abs().matmul_dd(&b.abs());
+        for idx in 0..c.data.len() {
+            let e = (c.data[idx] - c_ref.data[idx]).abs() / denom.data[idx];
+            assert!(e < 1e-6, "err {e}");
+        }
+    }
+
+    #[test]
+    fn tiny_windows_escalate_to_the_full_schedule() {
+        // When ESC sizes the window at or below the tier's kept bits,
+        // truncation cannot meet the tier's bound any cheaper: the full
+        // schedule runs and the escalation counter increments.
+        let mut cfg = AdpConfig::fp64()
+            .with_heuristic(Box::new(AlwaysEmulate))
+            .with_tier(AccuracyTier::GuaranteedFp64);
+        cfg.target_mantissa = 8; // far below the fast tier's 30 kept bits
+        let eng = AdpEngine::new(cfg);
+        let mut rng = Rng::new(94);
+        let a = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(8, 8, 1.0, 2.0, &mut rng);
+        let (_, out) = eng.gemm_tiered(&a, &b, AccuracyTier::Fp64FaithfulFast);
+        let s = out.decision.slices().expect("emulated");
+        assert_eq!(
+            OzakiConfig::new(s).with_tier(AccuracyTier::Fp64FaithfulFast).truncation_depth(),
+            0,
+            "window already minimal at s = {s}"
+        );
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.tier_escalations, 1, "ESC-rejected truncation must escalate");
+        assert_eq!(snap.pairs_skipped, 0, "escalated request ran the full schedule");
+        assert_eq!(snap.pairs_executed, (s * (s + 1) / 2) as u64);
+        assert_eq!(snap.tier_requests, [0, 1, 0]);
+    }
+
+    #[test]
+    fn guaranteed_tier_is_bitwise_identical_across_entry_points() {
+        // gemm() at the guaranteed default and an explicit guaranteed
+        // gemm_tiered() are the same code path bit for bit; the fast
+        // tier genuinely changes the result on generic inputs.
+        let mut rng = Rng::new(95);
+        let a = Matrix::uniform(32, 32, -1.0, 1.0, &mut rng);
+        let b = Matrix::uniform(32, 32, -1.0, 1.0, &mut rng);
+        let (c0, o0) = engine().gemm(&a, &b);
+        let (c1, o1) = engine().gemm_tiered(&a, &b, AccuracyTier::GuaranteedFp64);
+        assert_eq!(o0.decision, o1.decision);
+        for (x, y) in c0.data.iter().zip(&c1.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let (c2, o2) = engine().gemm_tiered(&a, &b, AccuracyTier::Fp64FaithfulFast);
+        assert!(o2.decision.is_emulated());
+        assert!(
+            c2.data.iter().zip(&c0.data).any(|(x, y)| x.to_bits() != y.to_bits()),
+            "truncated schedule must differ on wide-mantissa inputs"
+        );
+    }
+
+    #[test]
     fn esc_sizes_slices_on_spanned_input() {
         let mut rng = Rng::new(85);
         let mut a = Matrix::uniform(16, 16, 1.0, 2.0, &mut rng);
@@ -637,6 +930,7 @@ mod tests {
         let eng = AdpEngine::new(
             AdpConfig::fp64()
                 .with_heuristic(Box::new(AlwaysEmulate))
+                .with_tier(AccuracyTier::GuaranteedFp64)
                 .with_plan_cache(Arc::new(EscPlanCache::default()))
                 .with_slice_cache(Arc::new(SliceCache::default())),
         );
@@ -706,6 +1000,7 @@ mod tests {
         let eng = AdpEngine::new(
             AdpConfig::fp64()
                 .with_heuristic(Box::new(AlwaysEmulate))
+                .with_tier(AccuracyTier::GuaranteedFp64)
                 .with_plan_cache(Arc::new(EscPlanCache::default())),
         );
         let a = Matrix::uniform(12, 12, 1.0, 2.0, &mut rng);
@@ -731,6 +1026,7 @@ mod tests {
         let eng = AdpEngine::new(
             AdpConfig::fp64()
                 .with_heuristic(Box::new(AlwaysEmulate))
+                .with_tier(AccuracyTier::GuaranteedFp64)
                 .with_workspace_pool(pool.clone()),
         );
         let mut rng = Rng::new(91);
@@ -766,7 +1062,11 @@ mod tests {
 
     #[test]
     fn force_crt_routes_the_crt_family_end_to_end() {
-        let eng = AdpEngine::new(AdpConfig::fp64().with_heuristic(Box::new(ForceCrt)));
+        let eng = AdpEngine::new(
+            AdpConfig::fp64()
+                .with_heuristic(Box::new(ForceCrt))
+                .with_tier(AccuracyTier::GuaranteedFp64),
+        );
         let mut rng = Rng::new(92);
         let a = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);
         let b = Matrix::uniform(24, 24, -1.0, 1.0, &mut rng);

@@ -1,0 +1,530 @@
+//! Online-learned emulation cost model (ROADMAP "dynamic accuracy
+//! tiers" tentpole): an EWMA ns/MAC table keyed by
+//! `(shape bucket, execution family, accuracy tier)`, fed by the
+//! timings [`crate::coordinator::AdpEngine`] already measures on every
+//! request it dispatches.
+//!
+//! The static [`crate::perfmodel::Platform`] coefficients and the
+//! one-shot [`super::heuristic::CpuCalibration`] price an *idealized*
+//! substrate; the learned table prices the substrate the process is
+//! actually running on, per tier (truncated schedules have genuinely
+//! different measured throughput per arm). [`LearnedHeuristic`] layers
+//! the table over any fallback [`SelectionHeuristic`]: while a cell is
+//! cold (fewer than [`MIN_SAMPLES`] observations) decisions come from
+//! the fallback unchanged, so a fresh process behaves exactly like the
+//! pre-learned coordinator until enough evidence accumulates.
+//!
+//! Persistence mirrors the tile autotuner's catalog: a small text file
+//! with one `bucket arm tier ns_per_mac samples` line per warmed cell,
+//! written atomically (tmp + rename). The `ADP_COSTMODEL` knob selects
+//! the file (`ADP_COSTMODEL=<path>`), disables learning entirely
+//! (`ADP_COSTMODEL=off`), or — when unset — keeps the model in-memory
+//! only, which keeps test runs hermetic.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use super::heuristic::{EmulationChoice, HeuristicInput, SelectionHeuristic};
+use crate::ozaki::{AccuracyTier, ShapeBucket};
+
+/// Observations a cell needs before its prediction participates in
+/// decisions. Below this the heuristic defers to its fallback — which
+/// also bounds how much a few noisy early timings can sway routing.
+pub const MIN_SAMPLES: u64 = 8;
+
+/// EWMA smoothing factor: each new observation moves the cell a quarter
+/// of the way to the measured value (recent behavior dominates after
+/// ~a dozen requests without thrashing on one outlier).
+const ALPHA: f64 = 0.25;
+
+/// Persist at most every this many observations (plus on drop) so a
+/// busy service does not pay a write per request.
+const SAVE_EVERY: u64 = 32;
+
+const CATALOG_HEADER: &str = "# adp-dgemm cost-model catalog v1";
+
+const BUCKETS: usize = 3;
+const CHOICES: usize = 3;
+const TIERS: usize = 3;
+
+fn bucket_index(b: ShapeBucket) -> usize {
+    ShapeBucket::ALL.iter().position(|x| *x == b).unwrap_or(0)
+}
+
+fn choice_index(c: EmulationChoice) -> usize {
+    match c {
+        EmulationChoice::Native => 0,
+        EmulationChoice::SlicePair => 1,
+        EmulationChoice::Crt => 2,
+    }
+}
+
+const CHOICE_ORDER: [EmulationChoice; CHOICES] =
+    [EmulationChoice::Native, EmulationChoice::SlicePair, EmulationChoice::Crt];
+
+fn parse_choice(s: &str) -> Option<EmulationChoice> {
+    CHOICE_ORDER.into_iter().find(|c| c.label() == s)
+}
+
+/// One EWMA cell: smoothed ns per logical MAC (`m*k*n` multiply-adds of
+/// the *request*, regardless of how many physical pair/residue GEMMs
+/// the family ran — the family's multiplier is thus baked into the
+/// cell, which is exactly why the tier belongs in the key).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Cell {
+    ns_per_mac: f64,
+    samples: u64,
+}
+
+struct Inner {
+    cells: [[[Option<Cell>; TIERS]; CHOICES]; BUCKETS],
+    /// Observations since the last save (persistence cadence).
+    unsaved: u64,
+    dirty: bool,
+}
+
+/// The learned table plus its persistence policy. Share one instance
+/// per engine (or across engines) through an `Arc`; all methods take
+/// `&self`.
+pub struct CostModel {
+    inner: Mutex<Inner>,
+    path: Option<PathBuf>,
+    enabled: bool,
+}
+
+impl CostModel {
+    fn empty(path: Option<PathBuf>, enabled: bool) -> CostModel {
+        CostModel {
+            inner: Mutex::new(Inner {
+                cells: [[[None; TIERS]; CHOICES]; BUCKETS],
+                unsaved: 0,
+                dirty: false,
+            }),
+            path,
+            enabled,
+        }
+    }
+
+    /// In-memory model: learns within this process, never touches disk.
+    pub fn in_memory() -> CostModel {
+        CostModel::empty(None, true)
+    }
+
+    /// Inert model: `observe` is a no-op and `predict` always `None`
+    /// (every decision stays with the fallback heuristic).
+    pub fn disabled() -> CostModel {
+        CostModel::empty(None, false)
+    }
+
+    /// Model persisted at `path` (loaded now if the file exists, saved
+    /// atomically every [`SAVE_EVERY`] observations and on drop).
+    pub fn with_path(path: PathBuf) -> CostModel {
+        let model = CostModel::empty(Some(path), true);
+        model.load();
+        model
+    }
+
+    /// Honor the `ADP_COSTMODEL` knob: `off`/`0`/`false` disables
+    /// learning, a path persists the catalog there, unset keeps the
+    /// model in-memory for this process only.
+    pub fn from_env() -> CostModel {
+        match std::env::var("ADP_COSTMODEL").ok().as_deref() {
+            Some("off") | Some("0") | Some("false") => CostModel::disabled(),
+            Some(p) if !p.trim().is_empty() => CostModel::with_path(PathBuf::from(p)),
+            _ => CostModel::in_memory(),
+        }
+    }
+
+    /// Whether learning is active (the `off` knob reports `false`).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Fold one measured request into the table. `seconds` is the
+    /// execution time of the dispatched family for an `m x k x n`
+    /// problem; the cell stores it normalized to ns per logical MAC.
+    pub fn observe(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        choice: EmulationChoice,
+        tier: AccuracyTier,
+        seconds: f64,
+    ) {
+        let macs = m as f64 * k as f64 * n as f64;
+        if macs <= 0.0 {
+            return;
+        }
+        self.observe_ns_per_mac(ShapeBucket::of(m, n), choice, tier, seconds * 1e9 / macs);
+    }
+
+    /// [`CostModel::observe`] with a pre-normalized ns/MAC figure
+    /// (tests and calibration replays).
+    pub fn observe_ns_per_mac(
+        &self,
+        bucket: ShapeBucket,
+        choice: EmulationChoice,
+        tier: AccuracyTier,
+        ns_per_mac: f64,
+    ) {
+        if !self.enabled || !ns_per_mac.is_finite() || ns_per_mac <= 0.0 {
+            return;
+        }
+        let should_save = {
+            let mut inner = self.inner.lock().unwrap();
+            let cell = &mut inner.cells[bucket_index(bucket)][choice_index(choice)][tier.index()];
+            *cell = Some(match *cell {
+                None => Cell { ns_per_mac, samples: 1 },
+                Some(c) => Cell {
+                    ns_per_mac: c.ns_per_mac + ALPHA * (ns_per_mac - c.ns_per_mac),
+                    samples: c.samples.saturating_add(1),
+                },
+            });
+            inner.dirty = true;
+            inner.unsaved += 1;
+            if self.path.is_some() && inner.unsaved >= SAVE_EVERY {
+                inner.unsaved = 0;
+                true
+            } else {
+                false
+            }
+        };
+        if should_save {
+            self.save();
+        }
+    }
+
+    /// Smoothed ns/MAC for a warmed cell; `None` while cold (fewer than
+    /// [`MIN_SAMPLES`] observations) so callers fall back instead of
+    /// trusting noise.
+    pub fn predict(
+        &self,
+        bucket: ShapeBucket,
+        choice: EmulationChoice,
+        tier: AccuracyTier,
+    ) -> Option<f64> {
+        if !self.enabled {
+            return None;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner.cells[bucket_index(bucket)][choice_index(choice)][tier.index()]
+            .filter(|c| c.samples >= MIN_SAMPLES)
+            .map(|c| c.ns_per_mac)
+    }
+
+    /// Raw sample count of a cell (0 when empty) — the counters the
+    /// warm/cold tests pin.
+    pub fn samples(&self, bucket: ShapeBucket, choice: EmulationChoice, tier: AccuracyTier) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.cells[bucket_index(bucket)][choice_index(choice)][tier.index()]
+            .map_or(0, |c| c.samples)
+    }
+
+    fn serialize(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        out.push_str(CATALOG_HEADER);
+        out.push('\n');
+        out.push_str("# bucket arm tier ns_per_mac samples\n");
+        for (bi, bucket) in ShapeBucket::ALL.iter().enumerate() {
+            for (ci, choice) in CHOICE_ORDER.iter().enumerate() {
+                for tier in AccuracyTier::ALL {
+                    if let Some(c) = inner.cells[bi][ci][tier.index()] {
+                        out.push_str(&format!(
+                            "{} {} {} {:.6} {}\n",
+                            bucket.label(),
+                            choice.label(),
+                            tier.label(),
+                            c.ns_per_mac,
+                            c.samples
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge a serialized catalog into the table (bad lines are skipped
+    /// — same tolerance as the tile autotuner's parser: a stale or
+    /// hand-edited catalog degrades to "cold", never to a crash).
+    fn absorb(&self, text: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 5 {
+                continue;
+            }
+            let (Some(bucket), Some(choice), Some(tier)) = (
+                ShapeBucket::parse(fields[0]),
+                parse_choice(fields[1]),
+                AccuracyTier::parse(fields[2]),
+            ) else {
+                continue;
+            };
+            let (Ok(ns), Ok(samples)) = (fields[3].parse::<f64>(), fields[4].parse::<u64>())
+            else {
+                continue;
+            };
+            if !ns.is_finite() || ns <= 0.0 {
+                continue;
+            }
+            inner.cells[bucket_index(bucket)][choice_index(choice)][tier.index()] =
+                Some(Cell { ns_per_mac: ns, samples });
+        }
+    }
+
+    fn load(&self) {
+        let Some(path) = &self.path else { return };
+        if let Ok(text) = std::fs::read_to_string(path) {
+            self.absorb(&text);
+        }
+    }
+
+    /// Persist the table atomically (tmp + rename, the same idiom as
+    /// the runtime tuning catalog). No-op without a configured path.
+    pub fn save(&self) {
+        let Some(path) = &self.path else { return };
+        let text = self.serialize();
+        let tmp = path.with_extension("tmp");
+        if std::fs::write(&tmp, text).is_ok() {
+            let _ = std::fs::rename(&tmp, path);
+        }
+        self.inner.lock().unwrap().dirty = false;
+    }
+}
+
+impl Drop for CostModel {
+    fn drop(&mut self) {
+        if self.path.is_some() && self.inner.lock().unwrap().dirty {
+            self.save();
+        }
+    }
+}
+
+/// [`SelectionHeuristic`] backed by the learned table. A decision uses
+/// the table only when both the native and slice-pair cells for the
+/// request's `(bucket, tier)` are warm; the CRT arm additionally joins
+/// the comparison when the input advertises a basis *and* its cell is
+/// warm. Everything else defers to the wrapped fallback — cold behavior
+/// is bitwise-identical to running the fallback alone.
+pub struct LearnedHeuristic {
+    model: Arc<CostModel>,
+    fallback: Box<dyn SelectionHeuristic>,
+}
+
+impl LearnedHeuristic {
+    pub fn new(model: Arc<CostModel>, fallback: Box<dyn SelectionHeuristic>) -> LearnedHeuristic {
+        LearnedHeuristic { model, fallback }
+    }
+
+    pub fn model(&self) -> &Arc<CostModel> {
+        &self.model
+    }
+}
+
+impl SelectionHeuristic for LearnedHeuristic {
+    fn emulate(&self, inp: &HeuristicInput) -> bool {
+        self.choose(inp).is_emulated()
+    }
+
+    fn choose(&self, inp: &HeuristicInput) -> EmulationChoice {
+        let bucket = ShapeBucket::of(inp.m, inp.n);
+        let nat = self.model.predict(bucket, EmulationChoice::Native, inp.tier);
+        let sp = self.model.predict(bucket, EmulationChoice::SlicePair, inp.tier);
+        // All cells share the same logical-MAC denominator, so ns/MAC
+        // comparisons are time comparisons.
+        match (nat, sp) {
+            (Some(t_nat), Some(t_sp)) => {
+                let t_crt = inp
+                    .crt_moduli
+                    .and_then(|_| self.model.predict(bucket, EmulationChoice::Crt, inp.tier));
+                match t_crt {
+                    Some(tc) if tc < t_sp && tc < t_nat => EmulationChoice::Crt,
+                    _ if t_sp < t_nat => EmulationChoice::SlicePair,
+                    _ => EmulationChoice::Native,
+                }
+            }
+            _ => self.fallback.choose(inp),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::heuristic::AlwaysEmulate;
+
+    fn warm(model: &CostModel, choice: EmulationChoice, tier: AccuracyTier, ns: f64) {
+        for _ in 0..MIN_SAMPLES {
+            model.observe_ns_per_mac(ShapeBucket::Medium, choice, tier, ns);
+        }
+    }
+
+    #[test]
+    fn cells_stay_cold_until_min_samples() {
+        let m = CostModel::in_memory();
+        let (b, c, t) =
+            (ShapeBucket::Medium, EmulationChoice::Native, AccuracyTier::GuaranteedFp64);
+        for i in 0..MIN_SAMPLES - 1 {
+            m.observe_ns_per_mac(b, c, t, 2.0);
+            assert_eq!(m.samples(b, c, t), i + 1);
+            assert_eq!(m.predict(b, c, t), None, "cold after {} samples", i + 1);
+        }
+        m.observe_ns_per_mac(b, c, t, 2.0);
+        let v = m.predict(b, c, t).expect("warm at MIN_SAMPLES");
+        assert!((v - 2.0).abs() < 1e-12, "constant stream converges exactly: {v}");
+        // Cells are independent across every key axis.
+        assert_eq!(m.predict(b, c, AccuracyTier::Fp64FaithfulFast), None);
+        assert_eq!(m.predict(b, EmulationChoice::SlicePair, t), None);
+        assert_eq!(m.predict(ShapeBucket::Large, c, t), None);
+    }
+
+    #[test]
+    fn ewma_tracks_drift_and_rejects_garbage() {
+        let m = CostModel::in_memory();
+        let (b, c, t) =
+            (ShapeBucket::Small, EmulationChoice::SlicePair, AccuracyTier::Fp32Grade);
+        warm(&m, c, t, 1.0);
+        for _ in 0..64 {
+            m.observe_ns_per_mac(b, c, t, 3.0);
+        }
+        let v = m.predict(b, c, t).unwrap();
+        assert!((v - 3.0).abs() < 0.01, "EWMA converged to the drifted rate: {v}");
+        // Non-finite and non-positive observations are dropped, not folded.
+        m.observe_ns_per_mac(b, c, t, f64::NAN);
+        m.observe_ns_per_mac(b, c, t, -1.0);
+        m.observe_ns_per_mac(b, c, t, 0.0);
+        assert!((m.predict(b, c, t).unwrap() - v).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observe_normalizes_to_ns_per_mac_and_buckets_shape() {
+        let m = CostModel::in_memory();
+        let t = AccuracyTier::GuaranteedFp64;
+        // 128^3 MACs in 2.097152 ms = exactly 1 ns/MAC, Medium bucket.
+        for _ in 0..MIN_SAMPLES {
+            m.observe(128, 128, 128, EmulationChoice::Native, t, 128.0 * 128.0 * 128.0 * 1e-9);
+        }
+        let v = m.predict(ShapeBucket::Medium, EmulationChoice::Native, t).unwrap();
+        assert!((v - 1.0).abs() < 1e-9, "{v}");
+        assert_eq!(m.predict(ShapeBucket::Small, EmulationChoice::Native, t), None);
+    }
+
+    #[test]
+    fn catalog_round_trips_and_skips_bad_lines() {
+        let m = CostModel::in_memory();
+        warm(&m, EmulationChoice::Native, AccuracyTier::GuaranteedFp64, 0.5);
+        warm(&m, EmulationChoice::SlicePair, AccuracyTier::Fp64FaithfulFast, 0.125);
+        let text = m.serialize();
+        assert!(text.starts_with(CATALOG_HEADER));
+
+        let m2 = CostModel::in_memory();
+        m2.absorb(&text);
+        for (c, t, want) in [
+            (EmulationChoice::Native, AccuracyTier::GuaranteedFp64, 0.5),
+            (EmulationChoice::SlicePair, AccuracyTier::Fp64FaithfulFast, 0.125),
+        ] {
+            let got = m2.predict(ShapeBucket::Medium, c, t).unwrap();
+            assert!((got - want).abs() < 1e-5, "{c:?}/{t:?}: {got} vs {want}");
+            assert_eq!(m2.samples(ShapeBucket::Medium, c, t), MIN_SAMPLES);
+        }
+
+        // Malformed lines (wrong arity, unknown labels, bad numbers,
+        // non-positive rates) are skipped without poisoning good ones.
+        let m3 = CostModel::in_memory();
+        m3.absorb(
+            "# header\n\
+             medium native guaranteed 0.5 8\n\
+             medium native guaranteed 0.5\n\
+             medium native guaranteed 0.5 8 extra\n\
+             huge native guaranteed 0.5 8\n\
+             medium warp guaranteed 0.5 8\n\
+             medium native turbo 0.5 8\n\
+             medium crt fast nan 8\n\
+             medium crt fast -1.0 8\n\
+             medium crt fast 0.5 eight\n",
+        );
+        assert_eq!(
+            m3.predict(ShapeBucket::Medium, EmulationChoice::Native, AccuracyTier::GuaranteedFp64),
+            Some(0.5)
+        );
+        assert_eq!(
+            m3.samples(ShapeBucket::Medium, EmulationChoice::Crt, AccuracyTier::Fp64FaithfulFast),
+            0
+        );
+    }
+
+    #[test]
+    fn save_and_reload_through_a_file() {
+        let path = std::env::temp_dir()
+            .join(format!("adp-costmodel-test-{}.txt", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let m = CostModel::with_path(path.clone());
+            warm(&m, EmulationChoice::Crt, AccuracyTier::Fp32Grade, 0.25);
+            m.save();
+        }
+        let m2 = CostModel::with_path(path.clone());
+        assert_eq!(
+            m2.predict(ShapeBucket::Medium, EmulationChoice::Crt, AccuracyTier::Fp32Grade),
+            Some(0.25)
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn disabled_model_never_learns() {
+        let m = CostModel::disabled();
+        assert!(!m.is_enabled());
+        warm(&m, EmulationChoice::Native, AccuracyTier::GuaranteedFp64, 1.0);
+        assert_eq!(
+            m.predict(ShapeBucket::Medium, EmulationChoice::Native, AccuracyTier::GuaranteedFp64),
+            None
+        );
+    }
+
+    #[test]
+    fn learned_heuristic_cold_falls_back_warm_overrides() {
+        let model = Arc::new(CostModel::in_memory());
+        let h = LearnedHeuristic::new(Arc::clone(&model), Box::new(AlwaysEmulate));
+        assert_eq!(h.name(), "learned");
+        let inp = HeuristicInput::single(128, 128, 128, 7); // Medium bucket
+        let tier = AccuracyTier::GuaranteedFp64;
+
+        // Cold: the fallback decides (AlwaysEmulate => slice pairs).
+        assert_eq!(h.choose(&inp), EmulationChoice::SlicePair);
+        assert!(h.emulate(&inp));
+
+        // Only one warm arm is still "cold" for decision purposes.
+        warm(&model, EmulationChoice::Native, tier, 1.0);
+        assert_eq!(h.choose(&inp), EmulationChoice::SlicePair, "needs both base arms");
+
+        // Warm native+slice-pair with native cheaper: overrides fallback.
+        warm(&model, EmulationChoice::SlicePair, tier, 4.0);
+        assert_eq!(h.choose(&inp), EmulationChoice::Native);
+        assert!(!h.emulate(&inp));
+
+        // A warm, cheapest CRT cell joins only when a basis is advertised.
+        warm(&model, EmulationChoice::Crt, tier, 0.5);
+        assert_eq!(h.choose(&inp.with_crt(None)), EmulationChoice::Native);
+        assert_eq!(h.choose(&inp.with_crt(Some(17))), EmulationChoice::Crt);
+
+        // Tiers have independent tables: the fast tier is still cold.
+        assert_eq!(
+            h.choose(&inp.with_tier(AccuracyTier::Fp64FaithfulFast)),
+            EmulationChoice::SlicePair,
+            "cold tier defers to the fallback"
+        );
+    }
+}

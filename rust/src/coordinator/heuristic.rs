@@ -15,6 +15,7 @@
 //! [`SelectionHeuristic::emulate`] is its pre-CRT projection and keeps
 //! every existing policy working unchanged.
 
+use crate::ozaki::{AccuracyTier, CrtConfig};
 use crate::perfmodel::Platform;
 
 /// Decision inputs the ADP engine feeds the heuristic.
@@ -24,6 +25,10 @@ pub struct HeuristicInput {
     pub k: usize,
     pub n: usize,
     pub slices: usize,
+    /// Pair GEMMs the schedule will actually run: `s(s+1)/2` at the
+    /// guaranteed tier, fewer under tier truncation. Cost models must
+    /// price what executes, not the full triangle.
+    pub pairs: usize,
     /// Requests amortizing the same operand decompositions (1 for a
     /// standalone GEMM). The coalescing dispatcher reports its shape
     /// bucket size here so cost models can spread the slicing cost.
@@ -33,17 +38,47 @@ pub struct HeuristicInput {
     /// `None` disables the CRT arm. Linear counterpart of `slices`'
     /// quadratic `s(s+1)/2` pair-GEMM count.
     pub crt_moduli: Option<usize>,
+    /// Accuracy tier of the request — the learned cost model keys its
+    /// ns/MAC table on it (truncated schedules have different measured
+    /// throughput per arm).
+    pub tier: AccuracyTier,
 }
 
 impl HeuristicInput {
-    /// Standalone (unbatched) request, slice-pair vs native only.
+    /// Standalone (unbatched) request at the guaranteed tier. The CRT
+    /// arm is advertised whenever the modulus basis covers the unsigned
+    /// window equivalent to `slices` — callers no longer need
+    /// `.with_crt(..)` to let cost models consider all three families
+    /// (pass `.with_crt(None)` to explicitly disable the arm).
     pub fn single(m: usize, k: usize, n: usize, slices: usize) -> HeuristicInput {
-        HeuristicInput { m, k, n, slices, batch: 1, crt_moduli: None }
+        let crt_moduli = CrtConfig::for_window(slices, k).map(|c| c.gemm_count());
+        HeuristicInput {
+            m,
+            k,
+            n,
+            slices,
+            pairs: slices * (slices + 1) / 2,
+            batch: 1,
+            crt_moduli,
+            tier: AccuracyTier::GuaranteedFp64,
+        }
     }
 
     /// Advertise the CRT family (its modulus count) to the cost models.
     pub fn with_crt(mut self, moduli: Option<usize>) -> HeuristicInput {
         self.crt_moduli = moduli;
+        self
+    }
+
+    /// Override the pair-GEMM count (tier-truncated schedules).
+    pub fn with_pairs(mut self, pairs: usize) -> HeuristicInput {
+        self.pairs = pairs;
+        self
+    }
+
+    /// Tag the request's accuracy tier.
+    pub fn with_tier(mut self, tier: AccuracyTier) -> HeuristicInput {
+        self.tier = tier;
         self
     }
 }
@@ -107,7 +142,10 @@ impl SelectionHeuristic for PlatformHeuristic {
 
     fn choose(&self, inp: &HeuristicInput) -> EmulationChoice {
         let t_nat = self.platform.dgemm_time(inp.m, inp.k, inp.n);
-        let t_sp = self.platform.emulated_time(inp.m, inp.k, inp.n, inp.slices, true);
+        let t_sp = self
+            .platform
+            .emulated_breakdown_pairs(inp.m, inp.k, inp.n, inp.slices, inp.pairs, true)
+            .total();
         let t_crt = inp
             .crt_moduli
             .map(|nm| self.platform.crt_emulated_time(inp.m, inp.k, inp.n, nm, true));
@@ -249,7 +287,9 @@ impl CpuCalibration {
         let ops = inp.m as f64 * inp.k as f64 * inp.n as f64;
         let elems = (inp.m * inp.k + inp.k * inp.n) as f64;
         let s = inp.slices as f64;
-        let pairs = s * (s + 1.0) / 2.0;
+        // Tier-truncated schedules run fewer than s(s+1)/2 pair GEMMs;
+        // price what the request will actually execute.
+        let pairs = inp.pairs as f64;
         // Slicing amortizes across a coalesced bucket (the slice cache
         // decomposes a shared operand once); the pair GEMMs do not.
         let amort = inp.batch.max(1) as f64;
@@ -369,7 +409,7 @@ mod tests {
         assert_eq!(r.choose(&big), EmulationChoice::Crt);
         // Without a CRT arm the same problem stays on slice pairs.
         assert_eq!(
-            r.choose(&HeuristicInput::single(4096, 4096, 4096, 7)),
+            r.choose(&HeuristicInput::single(4096, 4096, 4096, 7).with_crt(None)),
             EmulationChoice::SlicePair
         );
         // Tiny GEMM on GB200: launch overheads dominate both families.
@@ -406,7 +446,7 @@ mod tests {
             crt_ns: 0.0,
             fixed_ns: 0.0,
         };
-        let sp_only = HeuristicInput::single(256, 256, 256, 7);
+        let sp_only = HeuristicInput::single(256, 256, 256, 7).with_crt(None);
         assert_eq!(c.choose(&sp_only), EmulationChoice::SlicePair);
         assert_eq!(c.choose(&sp_only.with_crt(Some(17))), EmulationChoice::Crt);
         // A reconstruction-heavy substrate flips back to slice pairs.
@@ -444,11 +484,80 @@ mod tests {
     #[test]
     fn force_crt_policy() {
         let h = ForceCrt;
-        let inp = HeuristicInput::single(64, 64, 64, 7);
+        let inp = HeuristicInput::single(64, 64, 64, 7).with_crt(None);
         assert!(h.emulate(&inp));
         assert_eq!(h.choose(&inp), EmulationChoice::SlicePair, "no basis => slice pairs");
         assert_eq!(h.choose(&inp.with_crt(Some(17))), EmulationChoice::Crt);
         assert_eq!(h.name(), "force-crt");
+    }
+
+    #[test]
+    fn single_advertises_all_three_arms() {
+        // The satellite fix: `single()` used to hardcode `crt_moduli:
+        // None`, so every call site that forgot `.with_crt(..)` silently
+        // collapsed the three-way decision to two arms. It now derives
+        // the modulus count from the window itself.
+        let inp = HeuristicInput::single(256, 256, 256, 7);
+        assert_eq!(
+            inp.crt_moduli,
+            CrtConfig::for_window(7, 256).map(|c| c.gemm_count()),
+            "CRT arm must mirror the basis for the same window"
+        );
+        assert!(inp.crt_moduli.is_some(), "the shipped basis covers the FP64 window");
+        assert_eq!(inp.pairs, 28, "guaranteed tier defaults to the full triangle");
+        assert_eq!(inp.tier, AccuracyTier::GuaranteedFp64);
+
+        // Three-way decision surface of a GEMM-dominated model on that
+        // one input: cheap CRT wins; pricing CRT out falls back to slice
+        // pairs; pricing the pair GEMMs out too falls back to native.
+        let mut c = CpuCalibration {
+            fp64_ns: 1.0,
+            pair_ns: 0.03,
+            slice_ns: 0.0,
+            crt_ns: 0.0,
+            fixed_ns: 0.0,
+        };
+        assert_eq!(c.choose(&inp), EmulationChoice::Crt);
+        c.crt_ns = 1e6;
+        assert_eq!(c.choose(&inp), EmulationChoice::SlicePair);
+        c.pair_ns = 1.0;
+        assert_eq!(c.choose(&inp), EmulationChoice::Native);
+    }
+
+    #[test]
+    fn truncated_pairs_flip_the_slice_pair_arm() {
+        // 28 full pairs at 0.04x native each cost 1.12x native — stay
+        // native. The fast tier's 10 kept pairs cost 0.4x — emulate.
+        // Both cost models must price `pairs`, not s(s+1)/2.
+        let c = CpuCalibration {
+            fp64_ns: 1.0,
+            pair_ns: 0.04,
+            slice_ns: 0.0,
+            crt_ns: FALLBACK_CRT_NS,
+            fixed_ns: 0.0,
+        };
+        let full = HeuristicInput::single(256, 256, 256, 7).with_crt(None);
+        assert_eq!(c.choose(&full), EmulationChoice::Native);
+        let fast = full.with_pairs(10).with_tier(AccuracyTier::Fp64FaithfulFast);
+        assert_eq!(c.choose(&fast), EmulationChoice::SlicePair);
+
+        // The platform model scales its int-GEMM phase the same way.
+        let p = PlatformHeuristic { platform: GB200 };
+        let n = 2048;
+        let marginal = HeuristicInput::single(n, n, n, 26).with_crt(None);
+        let truncated = marginal.with_pairs(10);
+        let t_full = p
+            .platform
+            .emulated_breakdown_pairs(n, n, n, 26, marginal.pairs, true)
+            .total();
+        let t_trunc =
+            p.platform.emulated_breakdown_pairs(n, n, n, 26, 10, true).total();
+        assert!(t_trunc < t_full);
+        // And the choice honors it: if the full schedule loses to native
+        // the truncated one can only do better or equal.
+        if p.choose(&marginal) == EmulationChoice::SlicePair {
+            assert_eq!(p.choose(&truncated), EmulationChoice::SlicePair);
+        }
     }
 
     #[test]

@@ -10,9 +10,15 @@ use std::sync::Mutex;
 use super::adp::{AdpOutcome, GemmDecision};
 use super::service::Priority;
 use crate::backend::WorkspaceStats;
+use crate::ozaki::AccuracyTier;
 
 /// Number of [`Priority`] tiers ([`Priority::ALL`]'s length).
 pub const TIER_COUNT: usize = 3;
+
+/// Number of [`AccuracyTier`]s ([`AccuracyTier::ALL`]'s length) — a
+/// *request accuracy* axis, orthogonal to the [`Priority`] service tiers
+/// above.
+pub const ACCURACY_TIER_COUNT: usize = 3;
 
 /// log2-microsecond latency histogram: bucket 0 holds sub-microsecond
 /// samples, bucket `i` covers `[2^(i-1), 2^i)` us — 47 doublings reach
@@ -144,6 +150,10 @@ struct Inner {
     tile_mc: usize,
     tile_nc: usize,
     tiers: [TierInner; TIER_COUNT],
+    tier_requests: [u64; ACCURACY_TIER_COUNT],
+    pairs_executed: u64,
+    pairs_skipped: u64,
+    tier_escalations: u64,
 }
 
 /// Immutable snapshot of the counters.
@@ -211,6 +221,20 @@ pub struct MetricsSnapshot {
     /// typed failures, rejections, latency quantiles), indexed by
     /// [`Priority::index`].
     pub tiers: [TierSnapshot; TIER_COUNT],
+    /// Requests dispatched per **accuracy** tier, indexed by
+    /// [`AccuracyTier::index`] (orthogonal to the `tiers` priority axis).
+    pub tier_requests: [u64; ACCURACY_TIER_COUNT],
+    /// Slice-pair GEMMs the dispatched schedules actually ran (kept
+    /// pairs only; native and CRT requests contribute 0).
+    pub pairs_executed: u64,
+    /// Pair GEMMs skipped by tier truncation relative to the full
+    /// `s(s+1)/2` schedules — the fast tiers' compute saving, pinned by
+    /// a counter test.
+    pub pairs_skipped: u64,
+    /// Fast-tier requests the engine escalated to the full schedule
+    /// because ESC left no truncation room (the tier's bound could not
+    /// be met any cheaper) — never a silent accuracy loss.
+    pub tier_escalations: u64,
 }
 
 impl MetricsSnapshot {
@@ -267,6 +291,26 @@ impl Metrics {
             g.esc_cache_hits += 1;
         } else {
             g.esc_cache_misses += 1;
+        }
+    }
+
+    /// Record one request's accuracy-tier accounting: which tier it ran
+    /// at, how many slice-pair GEMMs its schedule executed and skipped
+    /// (both 0 for native/CRT dispatches), and whether a fast tier had
+    /// to escalate to the full schedule.
+    pub fn record_tier(
+        &self,
+        tier: AccuracyTier,
+        pairs_executed: u64,
+        pairs_skipped: u64,
+        escalated: bool,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.tier_requests[tier.index()] += 1;
+        g.pairs_executed += pairs_executed;
+        g.pairs_skipped += pairs_skipped;
+        if escalated {
+            g.tier_escalations += 1;
         }
     }
 
@@ -370,6 +414,10 @@ impl Metrics {
                 }
                 tiers
             },
+            tier_requests: g.tier_requests,
+            pairs_executed: g.pairs_executed,
+            pairs_skipped: g.pairs_skipped,
+            tier_escalations: g.tier_escalations,
         }
     }
 
@@ -532,6 +580,30 @@ mod tests {
         assert!(h.quantile(1.0) > 0.5, "max lands in the 1 s bucket");
         // Monotone in q.
         assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn accuracy_tier_counters() {
+        let m = Metrics::default();
+        // A guaranteed request runs its full 28-pair schedule.
+        m.record_tier(AccuracyTier::GuaranteedFp64, 28, 0, false);
+        // A fast request runs the 10 kept pairs and skips 18.
+        m.record_tier(AccuracyTier::Fp64FaithfulFast, 10, 18, false);
+        // A fast request at a tiny window escalates: full schedule, no
+        // skips, escalation counted.
+        m.record_tier(AccuracyTier::Fp64FaithfulFast, 6, 0, true);
+        // A native fallback at the fp32 tier executes no pairs at all.
+        m.record_tier(AccuracyTier::Fp32Grade, 0, 0, false);
+        let s = m.snapshot();
+        assert_eq!(s.tier_requests, [1, 2, 1]);
+        assert_eq!(s.pairs_executed, 44);
+        assert_eq!(s.pairs_skipped, 18);
+        assert_eq!(s.tier_escalations, 1);
+        // Orthogonal to the priority axis: no service tier was touched.
+        assert_eq!(s.tiers[Priority::Normal.index()].enqueued, 0);
+        m.reset();
+        assert_eq!(m.snapshot().tier_requests, [0, 0, 0]);
+        assert_eq!(m.snapshot().tier_escalations, 0);
     }
 
     #[test]

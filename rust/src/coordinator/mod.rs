@@ -16,7 +16,13 @@
 //! ```
 //!
 //! * [`scan`] — NaN/Inf safety scan (§5.1).
-//! * [`heuristic`] — emulate-vs-native selection (§5.3), batch-aware.
+//! * [`heuristic`] — emulate-vs-native selection (§5.3), batch- and
+//!   accuracy-tier-aware (truncated schedules are priced at the pair
+//!   count they actually run).
+//! * [`costmodel`] — the online-learned ns/MAC table (EWMA per shape
+//!   bucket × family × accuracy tier, fed from measured request
+//!   timings, persisted via `ADP_COSTMODEL`) and [`LearnedHeuristic`],
+//!   which layers it over any fallback policy.
 //! * [`adp`] — the decision engine (§5.4) and its outcome record, with a
 //!   grouped entry point feeding the slice-cached batched pipeline.
 //! * [`plan`] — the ESC plan cache: skips redundant coarse-ESC reductions
@@ -31,6 +37,7 @@
 //!   plus slice-/plan-cache, coalescing, and per-tier service counters.
 
 pub mod adp;
+pub mod costmodel;
 pub mod heuristic;
 pub mod metrics;
 pub mod plan;
@@ -38,6 +45,7 @@ pub mod scan;
 pub mod service;
 
 pub use adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
+pub use costmodel::{CostModel, LearnedHeuristic};
 pub use metrics::{Metrics, MetricsSnapshot, TierSnapshot};
 pub use plan::EscPlanCache;
 pub use service::{

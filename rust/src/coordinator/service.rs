@@ -29,6 +29,17 @@
 //! space. Per-tier latency/outcome accounting lands in
 //! [`Metrics::snapshot`]'s `tiers`.
 //!
+//! ## Accuracy tiers
+//!
+//! Orthogonally to the scheduling priority, every request carries an
+//! [`AccuracyTier`] — the accuracy/speed trade-off the engine runs it
+//! at. The plain `submit*` paths use [`ServiceConfig::default_tier`]
+//! (seeded from `ADP_TIER`); the `*_tiered` variants set it per
+//! request. The tier is part of the coalescing bucket key, so a
+//! mixed-tier group splits into one grouped schedule per (shape, tier)
+//! and `GuaranteedFp64` members keep their bitwise guarantee regardless
+//! of what they were batched with.
+//!
 //! ## Async submission
 //!
 //! [`GemmService::submit_async`] returns a pollable [`GemmTicket`];
@@ -50,8 +61,8 @@
 //! [`GemmService::submit_batch`], which always groups), workers batch
 //! requests before execution: a worker that dequeues a request keeps
 //! draining its shard for a micro-batching window (`coalesce_window`, up
-//! to `max_batch` requests), buckets what it collected by (m, k, n)
-//! shape, and runs each bucket through [`AdpEngine::gemm_grouped`] — one
+//! to `max_batch` requests), buckets what it collected by (m, k, n,
+//! accuracy-tier), and runs each bucket through the grouped engine — one
 //! fused backend schedule per bucket, with operand decompositions shared
 //! through the service-wide [`SliceCache`] and ESC reductions through
 //! the [`EscPlanCache`]. The window wait is a condvar timed wait that
@@ -69,13 +80,14 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::adp::{AdpConfig, AdpEngine, AdpOutcome};
+use super::costmodel::CostModel;
 use super::heuristic::SelectionHeuristic;
 use super::metrics::Metrics;
 use super::plan::EscPlanCache;
 use crate::backend::{BackendSpec, WorkspacePool};
 use crate::linalg::Matrix;
 use crate::ozaki::batched::SliceCache;
-use crate::ozaki::SliceEncoding;
+use crate::ozaki::{AccuracyTier, SliceEncoding};
 use crate::runtime::RuntimeHandle;
 
 /// Admission-control priority tier of a submission.
@@ -128,6 +140,11 @@ pub struct GemmRequest {
     reply: ReplySlot,
     submitted: Instant,
     tier: Priority,
+    /// Accuracy/speed trade-off of *this* request (orthogonal to the
+    /// scheduling `tier`): threaded into the engine per request, and
+    /// part of the coalescing bucket key so mixed-tier groups stay
+    /// isolated.
+    accuracy: AccuracyTier,
 }
 
 /// Completed response with queueing/processing latency. The reported
@@ -334,6 +351,11 @@ pub struct ServiceConfig {
     pub encoding: SliceEncoding,
     pub esc_block: usize,
     pub use_artifacts: bool,
+    /// [`AccuracyTier`] applied to submissions that don't carry one (the
+    /// plain `submit`/`try_submit`/`submit_async`/`submit_callback`/
+    /// `submit_batch` paths). Seeded from `ADP_TIER`; per-request
+    /// `*_tiered` submissions override it.
+    pub default_tier: AccuracyTier,
     /// Compute budget of the whole service; each shard builds its own
     /// pool from a [`BackendSpec::shard_slice`] of this. Bitwise
     /// identical across variants; default is the machine-sized parallel
@@ -372,6 +394,7 @@ impl Default for ServiceConfig {
             encoding: SliceEncoding::Unsigned,
             esc_block: crate::esc::coarse::DEFAULT_BLOCK,
             use_artifacts: true,
+            default_tier: AccuracyTier::env_default(),
             backend: BackendSpec::auto(),
             shards: 1,
             // High/Normal bound only by the shard total; bulk Batch
@@ -568,6 +591,7 @@ pub struct GemmService {
     pub metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    default_tier: AccuracyTier,
 }
 
 impl GemmService {
@@ -590,6 +614,10 @@ impl GemmService {
         let plan_cache = Arc::new(EscPlanCache::new(cfg.plan_cache_entries));
         let slice_cache = Arc::new(SliceCache::new(cfg.slice_cache_entries));
         let workspace_pool = Arc::new(WorkspacePool::new());
+        // The learned cost model is service-wide too: every shard's
+        // measured timings feed one table, so a shape bucket warms from
+        // the whole deployment's traffic, not one shard's slice of it.
+        let cost_model = Arc::new(CostModel::from_env());
         let knobs = CoalesceKnobs {
             coalesce: cfg.coalesce,
             window: cfg.coalesce_window,
@@ -610,6 +638,8 @@ impl GemmService {
                 heuristic: heuristic_factory(),
                 runtime: runtime.clone(),
                 use_artifacts: cfg.use_artifacts,
+                tier: cfg.default_tier,
+                cost_model: cost_model.clone(),
                 backend: cfg.backend.shard_slice(nshards).build(),
                 plan_cache: Some(plan_cache.clone()),
                 slice_cache: Some(slice_cache.clone()),
@@ -632,7 +662,13 @@ impl GemmService {
             }
             shards.push(queue);
         }
-        GemmService { shards, metrics, inflight, workers: Mutex::new(workers) }
+        GemmService {
+            shards,
+            metrics,
+            inflight,
+            workers: Mutex::new(workers),
+            default_tier: cfg.default_tier,
+        }
     }
 
     pub fn shard_count(&self) -> usize {
@@ -652,12 +688,13 @@ impl GemmService {
         a: Matrix,
         b: Matrix,
         tier: Priority,
+        accuracy: AccuracyTier,
         reply: ReplySlot,
         block: bool,
     ) -> Result<(), (SubmitError, GemmRequest)> {
         let shard = &self.shards[shape_shard(a.rows, a.cols, b.cols, self.shards.len())];
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        let req = GemmRequest { a, b, reply, submitted: Instant::now(), tier };
+        let req = GemmRequest { a, b, reply, submitted: Instant::now(), tier, accuracy };
         match shard.push(QueueItem::One(req), tier, block) {
             Ok(()) => {
                 self.metrics.record_enqueued(tier, 1);
@@ -678,8 +715,19 @@ impl GemmService {
     /// [`GemmResult`], or [`SubmitError::ServiceStopped`] when the queues
     /// are closed. Blocks while the shard is full (backpressure).
     pub fn submit(&self, a: Matrix, b: Matrix) -> Result<Receiver<GemmResult>, SubmitError> {
+        self.submit_tiered(a, b, self.default_tier)
+    }
+
+    /// [`GemmService::submit`] with an explicit per-request
+    /// [`AccuracyTier`] (the plain path uses the service default).
+    pub fn submit_tiered(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        accuracy: AccuracyTier,
+    ) -> Result<Receiver<GemmResult>, SubmitError> {
         let (reply, rx) = ReplySlot::channel();
-        match self.enqueue_one(a, b, Priority::Normal, reply, true) {
+        match self.enqueue_one(a, b, Priority::Normal, accuracy, reply, true) {
             Ok(()) => Ok(rx),
             Err((error, mut req)) => {
                 req.reply.disarm(); // the Err return is the signal
@@ -693,8 +741,19 @@ impl GemmService {
     /// with the operands handed back, instead of blocking the caller or
     /// conflating backpressure with shutdown.
     pub fn try_submit(&self, a: Matrix, b: Matrix) -> Result<Receiver<GemmResult>, RejectedSubmit> {
+        self.try_submit_tiered(a, b, self.default_tier)
+    }
+
+    /// [`GemmService::try_submit`] with an explicit per-request
+    /// [`AccuracyTier`].
+    pub fn try_submit_tiered(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        accuracy: AccuracyTier,
+    ) -> Result<Receiver<GemmResult>, RejectedSubmit> {
         let (reply, rx) = ReplySlot::channel();
-        match self.enqueue_one(a, b, Priority::Normal, reply, false) {
+        match self.enqueue_one(a, b, Priority::Normal, accuracy, reply, false) {
             Ok(()) => Ok(rx),
             Err((error, mut req)) => {
                 req.reply.disarm();
@@ -714,8 +773,20 @@ impl GemmService {
         b: Matrix,
         priority: Priority,
     ) -> Result<GemmTicket, RejectedSubmit> {
+        self.submit_async_tiered(a, b, priority, self.default_tier)
+    }
+
+    /// [`GemmService::submit_async`] with an explicit per-request
+    /// [`AccuracyTier`].
+    pub fn submit_async_tiered(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        priority: Priority,
+        accuracy: AccuracyTier,
+    ) -> Result<GemmTicket, RejectedSubmit> {
         let (reply, rx) = ReplySlot::channel();
-        match self.enqueue_one(a, b, priority, reply, false) {
+        match self.enqueue_one(a, b, priority, accuracy, reply, false) {
             Ok(()) => Ok(GemmTicket { rx }),
             Err((error, mut req)) => {
                 req.reply.disarm();
@@ -738,8 +809,21 @@ impl GemmService {
         priority: Priority,
         on_done: impl FnOnce(GemmResult) + Send + 'static,
     ) -> Result<(), RejectedSubmit> {
+        self.submit_callback_tiered(a, b, priority, self.default_tier, on_done)
+    }
+
+    /// [`GemmService::submit_callback`] with an explicit per-request
+    /// [`AccuracyTier`].
+    pub fn submit_callback_tiered(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        priority: Priority,
+        accuracy: AccuracyTier,
+        on_done: impl FnOnce(GemmResult) + Send + 'static,
+    ) -> Result<(), RejectedSubmit> {
         let reply = ReplySlot::callback(on_done);
-        match self.enqueue_one(a, b, priority, reply, false) {
+        match self.enqueue_one(a, b, priority, accuracy, reply, false) {
             Ok(()) => Ok(()),
             Err((error, mut req)) => {
                 req.reply.disarm();
@@ -761,20 +845,33 @@ impl GemmService {
         &self,
         pairs: Vec<(Matrix, Matrix)>,
     ) -> Result<Vec<Receiver<GemmResult>>, SubmitError> {
+        let tier = self.default_tier;
+        self.submit_batch_tiered(pairs.into_iter().map(|(a, b)| (a, b, tier)).collect())
+    }
+
+    /// [`GemmService::submit_batch`] with an explicit [`AccuracyTier`]
+    /// per member. Mixed tiers are fine: the accuracy tier is part of
+    /// the coalescing bucket key, so a group splits into one grouped
+    /// schedule per (shape, tier) — a fast sibling can never perturb a
+    /// guaranteed member's bits.
+    pub fn submit_batch_tiered(
+        &self,
+        pairs: Vec<(Matrix, Matrix, AccuracyTier)>,
+    ) -> Result<Vec<Receiver<GemmResult>>, SubmitError> {
         if pairs.is_empty() {
             return Ok(Vec::new());
         }
         let shard_idx = {
-            let (a, b) = &pairs[0];
+            let (a, b, _) = &pairs[0];
             shape_shard(a.rows, a.cols, b.cols, self.shards.len())
         };
         let n = pairs.len() as u64;
         let submitted = Instant::now();
         let mut reqs = Vec::with_capacity(pairs.len());
         let mut rxs = Vec::with_capacity(pairs.len());
-        for (a, b) in pairs {
+        for (a, b, accuracy) in pairs {
             let (reply, rx) = ReplySlot::channel();
-            reqs.push(GemmRequest { a, b, reply, submitted, tier: Priority::Batch });
+            reqs.push(GemmRequest { a, b, reply, submitted, tier: Priority::Batch, accuracy });
             rxs.push(rx);
         }
         self.inflight.fetch_add(n, Ordering::SeqCst);
@@ -922,7 +1019,7 @@ fn process_single(
         // (guardrails, heuristic, kernels), so catching the unwind
         // cannot strand a poisoned mutex.
         let _guard = InflightGuard(inflight);
-        catch_unwind(AssertUnwindSafe(|| engine.gemm(&req.a, &req.b)))
+        catch_unwind(AssertUnwindSafe(|| engine.gemm_tiered(&req.a, &req.b, req.accuracy)))
     };
     match outcome {
         Ok((c, outcome)) => {
@@ -966,16 +1063,23 @@ fn process_group(
     if valid.is_empty() {
         return;
     }
-    // Bucket by shape: plan-cache keys repeat within a bucket and the
-    // grouped schedule stays load-balanced.
-    let mut buckets: HashMap<(usize, usize, usize), Vec<GemmRequest>> = HashMap::new();
+    // Bucket by (shape, accuracy tier): plan-cache keys repeat within a
+    // bucket, the grouped schedule stays load-balanced, and mixed-tier
+    // groups run as separate schedules — a fast member can never change
+    // a guaranteed member's truncation depth (or its bits).
+    let mut buckets: HashMap<(usize, usize, usize, AccuracyTier), Vec<GemmRequest>> =
+        HashMap::new();
     for req in valid {
-        buckets.entry((req.a.rows, req.a.cols, req.b.cols)).or_default().push(req);
+        buckets
+            .entry((req.a.rows, req.a.cols, req.b.cols, req.accuracy))
+            .or_default()
+            .push(req);
     }
     // Deterministic bucket order (HashMap iteration order is arbitrary).
     let mut buckets: Vec<_> = buckets.into_values().collect();
-    buckets.sort_by_key(|reqs| (reqs[0].a.rows, reqs[0].a.cols, reqs[0].b.cols));
+    buckets.sort_by_key(|reqs| (reqs[0].a.rows, reqs[0].a.cols, reqs[0].b.cols, reqs[0].accuracy));
     for bucket in buckets {
+        let accuracy = bucket[0].accuracy;
         metrics.record_coalesced_batch(bucket.len() as u64);
         let t0 = Instant::now();
         let results = {
@@ -987,7 +1091,7 @@ fn process_group(
             let _guards: Vec<InflightGuard<'_>> =
                 bucket.iter().map(|_| InflightGuard(inflight)).collect();
             let probs: Vec<(&Matrix, &Matrix)> = bucket.iter().map(|r| (&r.a, &r.b)).collect();
-            catch_unwind(AssertUnwindSafe(|| engine.gemm_grouped(&probs)))
+            catch_unwind(AssertUnwindSafe(|| engine.gemm_grouped_tiered(&probs, accuracy)))
         };
         let proc_s = t0.elapsed().as_secs_f64();
         match results {
@@ -1026,7 +1130,15 @@ mod tests {
     use std::sync::atomic::AtomicBool;
 
     fn small_service(workers: usize) -> GemmService {
-        let cfg = ServiceConfig { workers, use_artifacts: false, ..Default::default() };
+        // Pin the guaranteed tier: these tests assert FP64-grade accuracy
+        // and exact cache/latency accounting, which must hold regardless
+        // of any ADP_TIER the test environment exports.
+        let cfg = ServiceConfig {
+            workers,
+            use_artifacts: false,
+            default_tier: AccuracyTier::GuaranteedFp64,
+            ..Default::default()
+        };
         GemmService::start(cfg, None, || Box::new(AlwaysEmulate))
     }
 
@@ -1745,6 +1857,75 @@ mod tests {
         assert_eq!(s.fallback_nan, 2);
         assert_eq!(s.emulated, 6);
         assert_eq!(svc.inflight(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn per_request_accuracy_tiers_flow_through_the_service() {
+        let svc = small_service(2);
+        let mut rng = Rng::new(104);
+        let a = Matrix::uniform(24, 24, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(24, 24, 1.0, 2.0, &mut rng);
+        let c_full = svc
+            .submit_tiered(a.clone(), b.clone(), AccuracyTier::GuaranteedFp64)
+            .expect("service running")
+            .recv()
+            .unwrap()
+            .expect("served")
+            .c;
+        let c_fast = svc
+            .submit_tiered(a.clone(), b.clone(), AccuracyTier::Fp64FaithfulFast)
+            .expect("service running")
+            .recv()
+            .unwrap()
+            .expect("served")
+            .c;
+        let reference = gemm(&a, &b);
+        let full_err = c_full.sub(&reference).max_abs();
+        let fast_err = c_fast.sub(&reference).max_abs();
+        assert!(full_err < 1e-12, "guaranteed tier: full_err={full_err}");
+        assert!(fast_err < 1e-4, "fast tier must stay near-FP64: fast_err={fast_err}");
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.tier_requests[AccuracyTier::GuaranteedFp64.index()], 1);
+        assert_eq!(snap.tier_requests[AccuracyTier::Fp64FaithfulFast.index()], 1);
+        assert!(snap.pairs_skipped > 0, "the fast request must skip pairs: {snap:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_tier_batches_bucket_separately_and_guaranteed_stays_bitwise() {
+        let svc = small_service(2);
+        let mut rng = Rng::new(105);
+        let a = Matrix::uniform(16, 16, 1.0, 2.0, &mut rng);
+        let b = Matrix::uniform(16, 16, 1.0, 2.0, &mut rng);
+        let rxs = svc
+            .submit_batch_tiered(vec![
+                (a.clone(), b.clone(), AccuracyTier::GuaranteedFp64),
+                (a.clone(), b.clone(), AccuracyTier::Fp64FaithfulFast),
+                (a.clone(), b.clone(), AccuracyTier::GuaranteedFp64),
+            ])
+            .expect("service running");
+        let got: Vec<Matrix> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().expect("served").c).collect();
+        // Same shape, two tiers: the coalescer must split the group into
+        // two buckets — the accuracy tier is part of the bucket key.
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.coalesced_batches, 2, "one bucket per (shape, tier): {snap:?}");
+        assert_eq!(snap.coalesced_requests, 3);
+        // The guaranteed members match the per-request guaranteed path
+        // bitwise, untouched by the fast sibling they were batched with.
+        let c_ref = svc
+            .submit_tiered(a, b, AccuracyTier::GuaranteedFp64)
+            .expect("service running")
+            .recv()
+            .unwrap()
+            .expect("served")
+            .c;
+        for idx in [0usize, 2] {
+            for (x, y) in got[idx].data.iter().zip(&c_ref.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
         svc.shutdown();
     }
 }

@@ -58,8 +58,9 @@ pub use backend::{
     WorkspacePool, WorkspaceStats,
 };
 pub use coordinator::adp::{AdpConfig, AdpEngine, AdpOutcome, GemmDecision};
+pub use coordinator::costmodel::{CostModel, LearnedHeuristic};
 pub use coordinator::plan::EscPlanCache;
 pub use esc::{coarse_esc_gemm, exact_esc_dot, exact_esc_gemm, EscReport};
 pub use linalg::matrix::Matrix;
 pub use ozaki::batched::SliceCache;
-pub use ozaki::{KernelId, OzakiConfig, PairSchedule, SliceEncoding, SliceKernel};
+pub use ozaki::{AccuracyTier, KernelId, OzakiConfig, PairSchedule, SliceEncoding, SliceKernel};

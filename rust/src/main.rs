@@ -11,7 +11,11 @@
 //!
 //! `gemm`, `serve` and `qr` accept `--compute serial|parallel|parallel:N`
 //! to pick the compute backend (default: machine-sized parallel; results
-//! are bitwise identical either way). `serve` additionally accepts
+//! are bitwise identical either way). `gemm` and `serve` accept
+//! `--tier guaranteed|fast|fp32` to pick the accuracy tier (default:
+//! the `ADP_TIER` env var, else guaranteed); `ADP_COSTMODEL=<path>`
+//! persists the learned ns/MAC cost model across runs. `serve`
+//! additionally accepts
 //! `--shards S` to split the queue into S shape-routed shards (each with
 //! its own worker-pool slice), `--coalesce true` to enable the grouped
 //! pipeline (micro-batching window + shape buckets + slice cache) and
@@ -31,7 +35,7 @@ use adp_dgemm::coordinator::{AdpConfig, AdpEngine, GemmService, ServiceConfig};
 use adp_dgemm::grading::{self, generators};
 use adp_dgemm::linalg::{blocked_qr, gemm, strassen, Matrix, NativeGemm};
 use adp_dgemm::ozaki::{
-    emulated_gemm, kernel, tune, KernelId, OzakiConfig, ShapeBucket, SliceEncoding,
+    emulated_gemm, kernel, tune, AccuracyTier, KernelId, OzakiConfig, ShapeBucket, SliceEncoding,
 };
 use adp_dgemm::perfmodel::{GB200, RTX_PRO_6000};
 use adp_dgemm::runtime::RuntimeHandle;
@@ -76,6 +80,16 @@ fn compute_spec(args: &Args) -> BackendSpec {
         eprintln!("note: unknown --compute '{s}' — using the serial backend");
         BackendSpec::Serial
     })
+}
+
+fn accuracy_tier(args: &Args) -> AccuracyTier {
+    match args.kv.get("tier") {
+        Some(s) => AccuracyTier::parse(s).unwrap_or_else(|| {
+            eprintln!("note: unknown --tier '{s}' (want guaranteed|fast|fp32) — using guaranteed");
+            AccuracyTier::GuaranteedFp64
+        }),
+        None => AccuracyTier::env_default(),
+    }
 }
 
 fn runtime(args: &Args) -> Option<RuntimeHandle> {
@@ -139,21 +153,28 @@ fn cmd_gemm(args: &Args) {
     } else {
         generators::uniform_pair(n, -1.0, 1.0, &mut rng)
     };
+    let tier = accuracy_tier(args);
     let engine = AdpEngine::new(
         AdpConfig::fp64()
             .with_heuristic(Box::new(AlwaysEmulate))
             .with_runtime(runtime(args))
-            .with_backend(compute_spec(args).build()),
+            .with_backend(compute_spec(args).build())
+            .with_tier(tier),
     );
     let (c, out) = engine.gemm(&a, &b);
     let rep = grading::grade::measure(&a, &b, &c);
+    let snap = engine.metrics.snapshot();
     println!(
-        "n={n} span={span}: decision={} esc={} slices={} guardrail={:.3}ms exec={:.3}ms",
+        "n={n} span={span} tier={}: decision={} esc={} slices={} guardrail={:.3}ms exec={:.3}ms pairs={}+{} skipped (escalations {})",
+        tier.label(),
         out.decision.label(),
         out.esc,
         out.slices_required,
         out.guardrail_s * 1e3,
-        out.exec_s * 1e3
+        out.exec_s * 1e3,
+        snap.pairs_executed,
+        snap.pairs_skipped,
+        snap.tier_escalations
     );
     println!(
         "accuracy: max {:.2} eps, avg {:.3} eps (grade A at slope 2: {})",
@@ -172,11 +193,13 @@ fn cmd_serve(args: &Args) {
     let batch = args.usize("batch", 8).max(1);
     let shards = args.usize("shards", 1).max(1);
     let rt = runtime(args);
+    let tier = accuracy_tier(args);
     let cfg = ServiceConfig {
         workers,
         shards,
         backend: compute_spec(args),
         coalesce,
+        default_tier: tier,
         ..Default::default()
     };
     let svc = GemmService::start(cfg, rt, || Box::new(AlwaysEmulate));
@@ -219,7 +242,8 @@ fn cmd_serve(args: &Args) {
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let snap = svc.metrics.snapshot();
     println!(
-        "{requests} reqs x n={n}, {workers} workers / {shards} shard(s){}: {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        "{requests} reqs x n={n}, {workers} workers / {shards} shard(s), tier {}{}: {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        tier.label(),
         if coalesce { " [coalesced]" } else { "" },
         requests as f64 / wall,
         lat[lat.len() / 2] * 1e3,
@@ -251,6 +275,10 @@ fn cmd_serve(args: &Args) {
         snap.fallback_esc,
         snap.fallback_heuristic,
         snap.guardrail_fraction() * 100.0
+    );
+    println!(
+        "accuracy tiers: requests {:?} | pairs executed/skipped {}/{} | escalations {}",
+        snap.tier_requests, snap.pairs_executed, snap.pairs_skipped, snap.tier_escalations
     );
     println!(
         "caches: slice hits/misses {}/{} esc hits/misses {}/{} | {} reqs in {} buckets",

@@ -270,7 +270,8 @@ struct Active<'p> {
     idx: usize,
     asl: Arc<SlicedMatrix>,
     bsl: Arc<SlicedMatrix>,
-    s: usize,
+    /// Kept levels of this problem's (possibly tier-truncated) schedule.
+    levels: usize,
     schedule: Arc<PairSchedule>,
     ws: WorkspaceGuard<'p>,
     m: usize,
@@ -308,8 +309,7 @@ pub fn gemm_grouped(
             // mirrors the coordinator's standalone path (same window =>
             // same basis), so results stay bitwise identical to
             // `crt_gemm_on` per problem.
-            let s_eq = SliceEncoding::Unsigned
-                .slices_for_bits(p.cfg.encoding.effective_bits(p.cfg.slices));
+            let s_eq = p.cfg.crt_window();
             if let Some(ccfg) =
                 CrtConfig::for_window(s_eq, k).map(|c| c.with_k_chunk(p.cfg.k_chunk()))
             {
@@ -347,16 +347,8 @@ pub fn gemm_grouped(
         let mut ws = workspaces.checkout(m * n);
         ws.hi[..m * n].fill(0.0);
         ws.lo[..m * n].fill(0.0);
-        active.push(Active {
-            idx,
-            asl,
-            bsl,
-            s: p.cfg.slices,
-            schedule: PairSchedule::for_config(&p.cfg),
-            ws,
-            m,
-            n,
-        });
+        let schedule = PairSchedule::for_config(&p.cfg);
+        active.push(Active { idx, asl, bsl, levels: schedule.level_count(), schedule, ws, m, n });
     }
 
     // The round batches run level-major on the runtime-dispatched
@@ -366,17 +358,18 @@ pub fn gemm_grouped(
         workspaces.record_dispatch(super::kernel::active_id(act.asl.encoding), None);
     }
 
-    // Lockstep rounds: round r runs weight level q = s-1-r of every
-    // problem that still has one, as ONE backend schedule. Levels feed
-    // each problem's compensated accumulator strictly in the per-request
-    // order (q = s-1 down to 0, i.e. schedule order); the i64 level
+    // Lockstep rounds: round r runs weight level q = s-1-depth-r of
+    // every problem that still has one, as ONE backend schedule (tier-
+    // truncated problems simply have fewer levels and drop out of the
+    // rounds early). Levels feed each problem's compensated accumulator
+    // strictly in the per-request order (schedule order); the i64 level
     // products are exact, so the cross-problem schedule cannot change a
     // bit.
-    let rounds = active.iter().map(|a| a.s).max().unwrap_or(0);
+    let rounds = active.iter().map(|a| a.levels).max().unwrap_or(0);
     for r in 0..rounds {
         let mut batches: Vec<SliceBatch<'_>> = Vec::new();
         for act in active.iter_mut() {
-            if r < act.s {
+            if r < act.levels {
                 let e = act.m * act.n;
                 let ws = &mut *act.ws;
                 ws.pbuf[..e].fill(0);
@@ -391,7 +384,7 @@ pub fn gemm_grouped(
         backend.slice_pair_gemm_batches(&mut batches);
         drop(batches);
         for act in active.iter_mut() {
-            if r < act.s {
+            if r < act.levels {
                 let e = act.m * act.n;
                 let (_, w) = act.schedule.level(r);
                 let ws = &mut *act.ws;
@@ -559,6 +552,39 @@ mod tests {
         for (c, b) in cs_sp.iter().zip(&bs) {
             assert_bitwise(c, &emulated_gemm_on(&a, b, &cfg, &SerialBackend), "sp after crt");
         }
+    }
+
+    #[test]
+    fn mixed_tier_groups_stay_isolated() {
+        // Problems at different accuracy tiers share one group (and the
+        // tier-independent slice cache) without contaminating each
+        // other: every result is bitwise the per-request result at its
+        // own tier.
+        use crate::ozaki::AccuracyTier;
+        let mut rng = Rng::new(704);
+        let a = Matrix::uniform(9, 14, -2.0, 2.0, &mut rng);
+        let b = Matrix::uniform(14, 7, -2.0, 2.0, &mut rng);
+        let cfgs = [
+            OzakiConfig::new(7),
+            OzakiConfig::new(7).with_tier(AccuracyTier::Fp64FaithfulFast),
+            OzakiConfig::new(7).with_tier(AccuracyTier::Fp32Grade),
+        ];
+        let probs: Vec<GroupedProblem<'_>> = cfgs
+            .iter()
+            .map(|cfg| GroupedProblem { a: &a, b: &b, cfg: *cfg, scheme: SchemeKind::SlicePair })
+            .collect();
+        let cache = SliceCache::new(8);
+        let pool = WorkspacePool::new();
+        let (cs, st) = gemm_grouped(&probs, &cache, &SerialBackend, &pool);
+        // Slicing is tier-independent: one A + one B decomposition
+        // serves all three tiers.
+        assert_eq!(st.slice_cache_misses, 2, "{st:?}");
+        assert_eq!(st.slice_cache_hits, 4, "{st:?}");
+        for (cfg, c) in cfgs.iter().zip(&cs) {
+            assert_bitwise(c, &emulated_gemm_on(&a, &b, cfg, &SerialBackend), "mixed-tier group");
+        }
+        // And the tiers really differ: truncation must change low bits.
+        assert!(cs[0].data.iter().zip(&cs[1].data).any(|(x, y)| x.to_bits() != y.to_bits()));
     }
 
     #[test]

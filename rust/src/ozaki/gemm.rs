@@ -571,15 +571,19 @@ pub fn fused_band(
     debug_assert!(n > 0 && band.len() % n == 0, "band must be whole output rows");
     debug_assert_eq!(s, a.s, "schedule must match the decomposition");
     let rows = band.len() / n;
+    // A truncated schedule keeps only pairs with t + u <= s-1-depth, so
+    // slice panels beyond index s-1-depth are never read: skip packing
+    // them entirely.
+    let s_used = s - schedule.truncation_depth();
     let ab = kern.a_slice_bytes(rows, k);
     let bb_max = kern.b_slice_bytes(shape.nc.min(n), k);
     assert!(ws.capacity() >= rows * shape.nc.min(n), "workspace too small for a band tile");
-    let grew = ws.ensure_pack(s * ab, s * bb_max);
+    let grew = ws.ensure_pack(s_used * ab, s_used * bb_max);
     let Workspace { pbuf, hi, lo, apack, bpack, rbuf: _ } = ws;
     let mut tally = FusedTally { pack_growths: grew as u64, ..FusedTally::default() };
     // Pack the band's A rows once — every column tile and every slice
     // pair below reads these panels.
-    for t in 0..s {
+    for t in 0..s_used {
         kern.pack_a_slice(a, t, row0, rows, &mut apack[t * ab..(t + 1) * ab]);
     }
     tally.packs += 1;
@@ -587,7 +591,7 @@ pub fn fused_band(
     while col0 < n {
         let cols = shape.nc.min(n - col0);
         let bb = kern.b_slice_bytes(cols, k);
-        for u in 0..s {
+        for u in 0..s_used {
             kern.pack_b_slice(b, u, col0, cols, &mut bpack[u * bb..(u + 1) * bb]);
         }
         tally.packs += 1;

@@ -96,6 +96,106 @@ impl SliceEncoding {
     }
 }
 
+/// User-selectable accuracy/speed trade-off (ROADMAP "dynamic accuracy
+/// tiers"). A tier maps to a pair-truncation depth in [`PairSchedule`]:
+/// the fast tiers drop the smallest-weight levels of the triangular
+/// schedule (pairs `(t, u)` with `t + u >= s - depth`, the fast-mode
+/// lever of arXiv 2409.13313), trading guaranteed mantissa bits for
+/// quadratically fewer pair GEMMs. [`AccuracyTier::GuaranteedFp64`]
+/// never truncates and stays bitwise identical to the seed semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AccuracyTier {
+    /// Full triangular schedule; ESC-guaranteed FP64 accuracy (Grade A).
+    GuaranteedFp64,
+    /// Keep the cross terms covering ~30 mantissa bits; FP64-faithful on
+    /// well-conditioned inputs at roughly a third of the pair GEMMs.
+    Fp64FaithfulFast,
+    /// Keep ~22 mantissa bits — error comparable to an FP32-arithmetic
+    /// GEMM — at the steepest truncation.
+    Fp32Grade,
+}
+
+impl Default for AccuracyTier {
+    fn default() -> Self {
+        AccuracyTier::GuaranteedFp64
+    }
+}
+
+impl AccuracyTier {
+    pub const ALL: [AccuracyTier; 3] =
+        [AccuracyTier::GuaranteedFp64, AccuracyTier::Fp64FaithfulFast, AccuracyTier::Fp32Grade];
+
+    /// Dense index for per-tier counter arrays.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            AccuracyTier::GuaranteedFp64 => 0,
+            AccuracyTier::Fp64FaithfulFast => 1,
+            AccuracyTier::Fp32Grade => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AccuracyTier::GuaranteedFp64 => "guaranteed",
+            AccuracyTier::Fp64FaithfulFast => "fast",
+            AccuracyTier::Fp32Grade => "fp32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AccuracyTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "guaranteed" | "guaranteed-fp64" | "fp64" | "full" => {
+                Some(AccuracyTier::GuaranteedFp64)
+            }
+            "fast" | "fp64-fast" | "faithful" => Some(AccuracyTier::Fp64FaithfulFast),
+            "fp32" | "fp32-grade" => Some(AccuracyTier::Fp32Grade),
+            _ => None,
+        }
+    }
+
+    /// Mantissa bits the kept cross terms must still cover, or `None`
+    /// for the full (never-truncated) schedule. These are the tiers'
+    /// documented error levels; the grading suite enforces them.
+    #[inline]
+    pub fn kept_bits(self) -> Option<i32> {
+        match self {
+            AccuracyTier::GuaranteedFp64 => None,
+            AccuracyTier::Fp64FaithfulFast => Some(30),
+            AccuracyTier::Fp32Grade => Some(22),
+        }
+    }
+
+    /// Pair-truncation depth for a decomposition of `s` slices: drop
+    /// levels until the kept cross terms still cover
+    /// [`AccuracyTier::kept_bits`]. Returns 0 (no truncation) for the
+    /// guaranteed tier, and 0 whenever `s` is already at or below the
+    /// tier's kept slice count — the case the coordinator reports as a
+    /// tier escalation (the full schedule is the only way to meet the
+    /// tier's bound, so nothing can be skipped).
+    pub fn truncation_depth(self, s: usize, encoding: SliceEncoding) -> usize {
+        match self.kept_bits() {
+            None => 0,
+            Some(bits) => s.saturating_sub(encoding.slices_for_bits(bits)),
+        }
+    }
+
+    /// Session default: the `ADP_TIER` environment override if set and
+    /// valid, else [`AccuracyTier::GuaranteedFp64`]. Read once per
+    /// process (the coordinator consults this; the raw `ozaki` layer
+    /// never does, so explicitly-configured decompositions stay
+    /// deterministic under any environment).
+    pub fn env_default() -> AccuracyTier {
+        static CACHE: std::sync::OnceLock<AccuracyTier> = std::sync::OnceLock::new();
+        *CACHE.get_or_init(|| {
+            std::env::var("ADP_TIER")
+                .ok()
+                .and_then(|v| AccuracyTier::parse(&v))
+                .unwrap_or(AccuracyTier::GuaranteedFp64)
+        })
+    }
+}
+
 /// Configuration of the emulated GEMM.
 #[derive(Clone, Copy, Debug)]
 pub struct OzakiConfig {
@@ -105,20 +205,28 @@ pub struct OzakiConfig {
     /// exactness cap [`gemm::K_CHUNK`] and is clamped to it; tests inject
     /// smaller values to exercise the chunked large-k path at small k.
     pub k_chunk: usize,
+    /// Accuracy tier → pair-truncation depth of the schedule both
+    /// drivers walk. Defaults to the guaranteed (full-schedule) tier.
+    pub tier: AccuracyTier,
 }
 
 impl OzakiConfig {
     pub fn new(slices: usize) -> Self {
-        OzakiConfig { slices, encoding: SliceEncoding::Unsigned, k_chunk: gemm::K_CHUNK }
+        OzakiConfig {
+            slices,
+            encoding: SliceEncoding::Unsigned,
+            k_chunk: gemm::K_CHUNK,
+            tier: AccuracyTier::GuaranteedFp64,
+        }
     }
 
     pub fn with_encoding(slices: usize, encoding: SliceEncoding) -> Self {
-        OzakiConfig { slices, encoding, k_chunk: gemm::K_CHUNK }
+        OzakiConfig { encoding, ..OzakiConfig::new(slices) }
     }
 
     /// Config reaching at least `bits` effective mantissa bits.
     pub fn for_bits(bits: i32, encoding: SliceEncoding) -> Self {
-        OzakiConfig { slices: encoding.slices_for_bits(bits), encoding, k_chunk: gemm::K_CHUNK }
+        OzakiConfig::with_encoding(encoding.slices_for_bits(bits), encoding)
     }
 
     /// Override the accumulation chunk size (clamped to `[1, K_CHUNK]`).
@@ -127,14 +235,49 @@ impl OzakiConfig {
         self
     }
 
+    /// Override the accuracy tier.
+    pub fn with_tier(mut self, tier: AccuracyTier) -> Self {
+        self.tier = tier;
+        self
+    }
+
     /// Effective chunk size: never beyond the i32 exactness cap.
     pub fn k_chunk(&self) -> usize {
         self.k_chunk.clamp(1, gemm::K_CHUNK)
     }
 
-    /// Slice-pair GEMMs executed under Ozaki-I triangular truncation.
+    /// Pair-truncation depth the tier induces at this slice count.
+    pub fn truncation_depth(&self) -> usize {
+        self.tier.truncation_depth(self.slices, self.encoding)
+    }
+
+    /// Slice-pair GEMMs executed under Ozaki-I triangular truncation at
+    /// this config's tier (kept pairs only).
     pub fn pair_count(&self) -> usize {
+        let keep = self.slices - self.truncation_depth();
+        keep * (keep + 1) / 2
+    }
+
+    /// Pairs the guaranteed (full) schedule would execute: `s(s+1)/2`.
+    pub fn full_pair_count(&self) -> usize {
         self.slices * (self.slices + 1) / 2
+    }
+
+    /// Pair GEMMs the tier skips relative to the full schedule.
+    pub fn skipped_pair_count(&self) -> usize {
+        self.full_pair_count() - self.pair_count()
+    }
+
+    /// Equivalent Ozaki-II/CRT window (`s_eq`): the unsigned 8-bit slice
+    /// count covering this config's effective bits, capped at the tier's
+    /// kept bits — the CRT-side analogue of pair truncation (a smaller
+    /// window selects a smaller modulus basis, i.e. fewer residue GEMMs).
+    pub fn crt_window(&self) -> usize {
+        let mut bits = self.encoding.effective_bits(self.slices);
+        if let Some(kept) = self.tier.kept_bits() {
+            bits = bits.min(kept);
+        }
+        SliceEncoding::Unsigned.slices_for_bits(bits)
     }
 }
 
@@ -165,5 +308,48 @@ mod tests {
         assert_eq!(OzakiConfig::new(8).pair_count(), 36);
         // the 22% compute reduction claim of §3: 28/36 ~ 0.78
         assert!((28.0f64 / 36.0 - 0.78).abs() < 0.01);
+    }
+
+    #[test]
+    fn tier_truncation_depths_at_fp64_slicing() {
+        // At the canonical s=7 unsigned decomposition the fast tier keeps
+        // slices_for_bits(30) = 4 levels (10 of 28 pairs — well under
+        // half) and the fp32 tier keeps 3 (6 of 28).
+        let full = OzakiConfig::new(7);
+        assert_eq!(full.truncation_depth(), 0);
+        assert_eq!(full.skipped_pair_count(), 0);
+
+        let fast = OzakiConfig::new(7).with_tier(AccuracyTier::Fp64FaithfulFast);
+        assert_eq!(fast.truncation_depth(), 3);
+        assert_eq!(fast.pair_count(), 10);
+        assert_eq!(fast.skipped_pair_count(), 18);
+        assert!(fast.pair_count() * 2 <= full.pair_count());
+
+        let fp32 = OzakiConfig::new(7).with_tier(AccuracyTier::Fp32Grade);
+        assert_eq!(fp32.truncation_depth(), 4);
+        assert_eq!(fp32.pair_count(), 6);
+
+        // Small decompositions already meet the tier bound with the full
+        // schedule: depth saturates to 0 (the escalation case).
+        let tiny = OzakiConfig::new(3).with_tier(AccuracyTier::Fp64FaithfulFast);
+        assert_eq!(tiny.truncation_depth(), 0);
+        assert_eq!(tiny.pair_count(), tiny.full_pair_count());
+    }
+
+    #[test]
+    fn tier_labels_round_trip() {
+        for t in AccuracyTier::ALL {
+            assert_eq!(AccuracyTier::parse(t.label()), Some(t));
+        }
+        assert_eq!(AccuracyTier::parse("FAST"), Some(AccuracyTier::Fp64FaithfulFast));
+        assert_eq!(AccuracyTier::parse("guaranteed-fp64"), Some(AccuracyTier::GuaranteedFp64));
+        assert_eq!(AccuracyTier::parse("fp32-grade"), Some(AccuracyTier::Fp32Grade));
+        assert_eq!(AccuracyTier::parse("bogus"), None);
+        assert_eq!(AccuracyTier::default(), AccuracyTier::GuaranteedFp64);
+        assert_eq!(
+            AccuracyTier::ALL.map(AccuracyTier::index),
+            [0, 1, 2],
+            "indices must be dense for counter arrays"
+        );
     }
 }

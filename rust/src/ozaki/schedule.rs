@@ -33,57 +33,111 @@ struct Level {
 pub struct PairSchedule {
     s: usize,
     rb: i32,
+    depth: usize,
     pairs: Vec<(usize, usize)>,
     levels: Vec<Level>,
 }
 
-static SCHEDULE_CACHE: OnceLock<Mutex<HashMap<(usize, i32), Arc<PairSchedule>>>> = OnceLock::new();
+static SCHEDULE_CACHE: OnceLock<Mutex<HashMap<(usize, i32, usize), Arc<PairSchedule>>>> =
+    OnceLock::new();
 
 impl PairSchedule {
-    /// Build the schedule for `s` slices at `rb` radix bits.
+    /// Build the full triangular schedule for `s` slices at `rb` radix
+    /// bits (truncation depth 0).
     pub fn new(s: usize, rb: i32) -> PairSchedule {
+        PairSchedule::new_truncated(s, rb, 0)
+    }
+
+    /// Build the schedule for `s` slices at `rb` radix bits with the
+    /// `depth` smallest-weight levels dropped: fast-mode truncation skips
+    /// every pair `(t, u)` with `t + u >= s - depth` (arXiv 2409.13313).
+    /// The kept levels retain exactly the weights and pair order of the
+    /// full schedule, so the compensated accumulation of what remains is
+    /// bitwise identical to the full path's prefix; `depth = 0` is the
+    /// full Ozaki-I triangular schedule.
+    pub fn new_truncated(s: usize, rb: i32, depth: usize) -> PairSchedule {
         assert!(s >= 1, "slice count must be >= 1");
-        let mut pairs = Vec::with_capacity(s * (s + 1) / 2);
-        let mut levels = Vec::with_capacity(s);
-        for q in (0..s).rev() {
+        assert!(depth < s, "truncation must keep at least one level");
+        let keep = s - depth;
+        let mut pairs = Vec::with_capacity(keep * (keep + 1) / 2);
+        let mut levels = Vec::with_capacity(keep);
+        for q in (0..keep).rev() {
             let start = pairs.len();
             pairs.extend((0..=q).map(|t| (t, q - t)));
             let weight = 2 * rb * (s as i32 - 1) - rb * q as i32;
             levels.push(Level { start, end: pairs.len(), weight });
         }
-        PairSchedule { s, rb, pairs, levels }
+        PairSchedule { s, rb, depth, pairs, levels }
     }
 
-    /// The process-wide shared schedule for `(s, rb)`; computed once per
-    /// configuration (the key space is tiny: `s <= max_slices`, `rb` in
-    /// {7, 8}), then served allocation-free.
+    /// The process-wide shared full schedule for `(s, rb)`; computed once
+    /// per configuration (the key space is tiny: `s <= max_slices`, `rb`
+    /// in {7, 8}), then served allocation-free.
     pub fn get(s: usize, rb: i32) -> Arc<PairSchedule> {
+        PairSchedule::get_truncated(s, rb, 0)
+    }
+
+    /// The process-wide shared schedule for `(s, rb)` truncated by
+    /// `depth` levels; `depth = 0` resolves to the same `Arc` as
+    /// [`PairSchedule::get`], so guaranteed-tier traffic keeps sharing
+    /// today's entries.
+    pub fn get_truncated(s: usize, rb: i32, depth: usize) -> Arc<PairSchedule> {
         let cache = SCHEDULE_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
         let mut g = cache.lock().unwrap();
-        g.entry((s, rb)).or_insert_with(|| Arc::new(PairSchedule::new(s, rb))).clone()
+        g.entry((s, rb, depth))
+            .or_insert_with(|| Arc::new(PairSchedule::new_truncated(s, rb, depth)))
+            .clone()
     }
 
-    /// Shared schedule of an [`OzakiConfig`].
+    /// Shared schedule of an [`OzakiConfig`], honoring its accuracy
+    /// tier's truncation depth.
     pub fn for_config(cfg: &OzakiConfig) -> Arc<PairSchedule> {
-        PairSchedule::get(cfg.slices, cfg.encoding.radix_bits())
+        PairSchedule::get_truncated(
+            cfg.slices,
+            cfg.encoding.radix_bits(),
+            cfg.truncation_depth(),
+        )
     }
 
-    /// Slice count `s` (also the number of levels).
+    /// Slice count `s` of the decomposition this schedule walks (the
+    /// number of levels only when untruncated; see
+    /// [`PairSchedule::level_count`]).
     pub fn slices(&self) -> usize {
         self.s
+    }
+
+    /// How many smallest-weight levels were dropped (0 = full schedule).
+    pub fn truncation_depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of kept levels: `s - depth`.
+    pub fn level_count(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Pairs the full (untruncated) schedule would run: `s(s+1)/2`.
+    pub fn full_pair_count(&self) -> usize {
+        self.s * (self.s + 1) / 2
+    }
+
+    /// Pairs skipped by truncation relative to the full schedule.
+    pub fn skipped_pair_count(&self) -> usize {
+        self.full_pair_count() - self.pairs.len()
     }
 
     pub fn radix_bits(&self) -> i32 {
         self.rb
     }
 
-    /// Total `(t, u)` pairs: `s(s+1)/2`.
+    /// Kept `(t, u)` pairs: `(s-depth)(s-depth+1)/2` (`s(s+1)/2` when
+    /// untruncated).
     pub fn pair_count(&self) -> usize {
         self.pairs.len()
     }
 
-    /// Level `r` in accumulation order (`r = 0` is `q = s-1`, the
-    /// smallest weight): its pairs and weight exponent.
+    /// Level `r` in accumulation order (`r = 0` is `q = s-1-depth`, the
+    /// smallest kept weight): its pairs and weight exponent.
     pub fn level(&self, r: usize) -> (&[(usize, usize)], i32) {
         let l = &self.levels[r];
         (&self.pairs[l.start..l.end], l.weight)
@@ -142,5 +196,50 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &c), "different radix is a different schedule");
         let d = PairSchedule::for_config(&OzakiConfig::new(5));
         assert!(Arc::ptr_eq(&a, &d), "for_config resolves through the same cache");
+    }
+
+    #[test]
+    fn truncated_schedule_is_the_full_schedules_weighted_tail() {
+        // Dropping `depth` levels removes exactly the first `depth`
+        // stored (smallest-weight) levels; every kept level must match
+        // the full schedule's corresponding level bit for bit.
+        for (s, rb) in [(4usize, 8i32), (7, 8), (8, 7)] {
+            let full = PairSchedule::new(s, rb);
+            for depth in 0..s {
+                let t = PairSchedule::new_truncated(s, rb, depth);
+                assert_eq!(t.slices(), s);
+                assert_eq!(t.truncation_depth(), depth);
+                assert_eq!(t.level_count(), s - depth);
+                let keep = s - depth;
+                assert_eq!(t.pair_count(), keep * (keep + 1) / 2);
+                assert_eq!(t.full_pair_count(), s * (s + 1) / 2);
+                assert_eq!(t.skipped_pair_count(), t.full_pair_count() - t.pair_count());
+                for r in 0..t.level_count() {
+                    // kept level r of the truncated schedule is level
+                    // depth + r of the full one
+                    let (tp, tw) = t.level(r);
+                    let (fp, fw) = full.level(depth + r);
+                    assert_eq!(tp, fp, "s={s} depth={depth} r={r}");
+                    assert_eq!(tw, fw, "s={s} depth={depth} r={r}");
+                }
+                // no kept pair references a slice index beyond s-1-depth
+                for (r, (pairs, _)) in t.levels().enumerate() {
+                    for &(a, b) in pairs {
+                        assert!(a + b <= s - 1 - depth, "r={r} pair=({a},{b})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_depth_zero_shares_the_untruncated_arc() {
+        let a = PairSchedule::get(6, 8);
+        let b = PairSchedule::get_truncated(6, 8, 0);
+        assert!(Arc::ptr_eq(&a, &b), "depth 0 must resolve to the full schedule's entry");
+        let c = PairSchedule::get_truncated(6, 8, 2);
+        assert!(!Arc::ptr_eq(&a, &c), "each depth is its own cache entry");
+        let d = PairSchedule::get_truncated(6, 8, 2);
+        assert!(Arc::ptr_eq(&c, &d), "same depth shares one schedule");
     }
 }

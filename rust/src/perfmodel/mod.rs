@@ -85,14 +85,29 @@ impl Platform {
         compute.max(bytes / (self.mem_bw_gbs * 1e9)) + 3e-6
     }
 
-    /// Emulated DGEMM time with `slices` slices, including or excluding the
-    /// ADP guardrail pre-pass.
+    /// Emulated DGEMM time with `slices` slices at the full triangular
+    /// schedule, including or excluding the ADP guardrail pre-pass.
     pub fn emulated_breakdown(
         &self,
         m: usize,
         k: usize,
         n: usize,
         slices: usize,
+        with_adp: bool,
+    ) -> ModelBreakdown {
+        self.emulated_breakdown_pairs(m, k, n, slices, slices * (slices + 1) / 2, with_adp)
+    }
+
+    /// [`Platform::emulated_breakdown`] with an explicit pair-GEMM count —
+    /// the tier-truncated schedules run fewer than `s(s+1)/2` pairs, and
+    /// the projected int-GEMM phase must scale with what actually runs.
+    pub fn emulated_breakdown_pairs(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        slices: usize,
+        pair_count: usize,
         with_adp: bool,
     ) -> ModelBreakdown {
         let (mf, kf, nf) = (m as f64, k as f64, n as f64);
@@ -121,8 +136,9 @@ impl Platform {
         let slice_bytes = (8.0 + slices as f64) * (mf * kf + kf * nf);
         let slice_s = slice_bytes / bw + LAUNCH;
 
-        // s(s+1)/2 INT8 pair-GEMMs (Ozaki-I triangular truncation).
-        let pairs = (slices * (slices + 1) / 2) as f64;
+        // The schedule's INT8 pair-GEMMs: s(s+1)/2 under full Ozaki-I
+        // triangular truncation, fewer under tier truncation.
+        let pairs = pair_count as f64;
         let int_ops = 2.0 * mf * kf * nf * pairs;
         let int_gemm_s = int_ops / (self.int8_tops * 1e12 * self.int8_eff) + LAUNCH;
 
@@ -264,6 +280,19 @@ mod tests {
         let t8 = GB200.emulated_time(8192, 8192, 8192, 8, false);
         let saving = 1.0 - t7 / t8;
         assert!((0.15..0.26).contains(&saving), "saving {saving}");
+    }
+
+    #[test]
+    fn truncated_pairs_project_proportionally_cheaper() {
+        // The fast tier at s=7 runs 10 of 28 pairs; the projected
+        // int-GEMM phase must shrink by exactly that ratio while the
+        // bandwidth-bound phases stay put.
+        let full = GB200.emulated_breakdown(4096, 4096, 4096, S55, false);
+        let trunc = GB200.emulated_breakdown_pairs(4096, 4096, 4096, S55, 10, false);
+        let ratio = trunc.int_gemm_s / full.int_gemm_s;
+        assert!((ratio - 10.0 / 28.0).abs() < 0.05, "ratio {ratio}");
+        assert_eq!(trunc.slice_s.to_bits(), full.slice_s.to_bits());
+        assert!(trunc.total() < full.total());
     }
 
     #[test]

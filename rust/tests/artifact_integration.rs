@@ -13,7 +13,7 @@ use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
 use adp_dgemm::coordinator::{AdpConfig, AdpEngine};
 use adp_dgemm::esc::coarse_esc_gemm;
 use adp_dgemm::linalg::{gemm, Matrix};
-use adp_dgemm::ozaki::{emulated_gemm, OzakiConfig};
+use adp_dgemm::ozaki::{emulated_gemm, AccuracyTier, OzakiConfig};
 use adp_dgemm::runtime::{ArtifactKind, RuntimeHandle};
 use adp_dgemm::util::Rng;
 
@@ -133,10 +133,14 @@ fn artifact_padding_crops_correctly() {
 #[test]
 fn adp_engine_uses_artifacts_when_available() {
     let Some(rt) = runtime() else { return };
+    // Guaranteed tier pinned: artifacts encode the full pair schedule, so
+    // a fast-tier engine (e.g. under ADP_TIER=fast) would legitimately
+    // bypass them — this test asserts the artifact dispatch itself.
     let engine = AdpEngine::new(
         AdpConfig::fp64()
             .with_heuristic(Box::new(AlwaysEmulate))
-            .with_runtime(Some(rt.clone())),
+            .with_runtime(Some(rt.clone()))
+            .with_tier(AccuracyTier::GuaranteedFp64),
     );
     let sizes = rt.catalog().sizes(ArtifactKind::Gemm);
     let n = sizes[0];

@@ -12,8 +12,9 @@ use adp_dgemm::backend::{ComputeBackend, ParallelBackend, SerialBackend, Workspa
 use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
 use adp_dgemm::linalg::Matrix;
 use adp_dgemm::ozaki::{
-    emulated_gemm_on, fused_gemm_on, gemm_grouped, tune, GroupedProblem, OzakiConfig,
-    PairSchedule, SchemeKind, SliceCache, SliceEncoding, TileShape, FUSED_MC, FUSED_NC,
+    emulated_gemm_on, fused_gemm_on, gemm_grouped, tune, AccuracyTier, GroupedProblem,
+    OzakiConfig, PairSchedule, SchemeKind, SliceCache, SliceEncoding, TileShape, FUSED_MC,
+    FUSED_NC,
 };
 use adp_dgemm::util::{prop, Rng};
 use adp_dgemm::{AdpConfig, AdpEngine};
@@ -156,10 +157,13 @@ fn adp_engine_routes_through_fused_and_reuses_workspaces() {
     // results equal the level-major oracle bitwise, and repeat shapes
     // stop allocating scratch once the pool is warm.
     let pool = Arc::new(WorkspacePool::new());
+    // Guaranteed tier pinned: the oracle below runs the full (untruncated)
+    // schedule, so the engine must too, whatever ADP_TIER says.
     let eng = AdpEngine::new(
         AdpConfig::fp64()
             .with_heuristic(Box::new(AlwaysEmulate))
-            .with_workspace_pool(pool.clone()),
+            .with_workspace_pool(pool.clone())
+            .with_tier(AccuracyTier::GuaranteedFp64),
     );
     let mut rng = Rng::new(4200);
     let a = Matrix::uniform(40, 40, -1.0, 1.0, &mut rng);

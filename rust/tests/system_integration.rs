@@ -5,14 +5,18 @@ use adp_dgemm::coordinator::heuristic::{AlwaysEmulate, HeuristicInput, Selection
 use adp_dgemm::coordinator::{AdpConfig, AdpEngine, GemmService, ServiceConfig};
 use adp_dgemm::grading::{self, generators, AlgorithmClass};
 use adp_dgemm::linalg::{blocked_qr, strassen, Matrix, NativeGemm};
-use adp_dgemm::ozaki::{emulated_gemm, OzakiConfig};
+use adp_dgemm::ozaki::{emulated_gemm, AccuracyTier, OzakiConfig};
 use adp_dgemm::util::Rng;
 
 fn emulating_engine() -> AdpEngine {
+    // Pinned to the guaranteed tier: these tests assert the paper's
+    // FP64-accuracy claims, which must hold regardless of any ADP_TIER
+    // the test environment exports.
     AdpEngine::new(
         AdpConfig::fp64()
             .with_heuristic(Box::new(AlwaysEmulate))
-            .with_runtime(None),
+            .with_runtime(None)
+            .with_tier(AccuracyTier::GuaranteedFp64),
     )
 }
 
@@ -70,7 +74,12 @@ fn qr_with_adp_backend_matches_native_accuracy() {
 fn service_survives_adversarial_stream() {
     // End-to-end: mixed benign/adversarial stream through the service;
     // every response correct, metrics consistent, no deadlock.
-    let cfg = ServiceConfig { workers: 3, use_artifacts: false, ..Default::default() };
+    let cfg = ServiceConfig {
+        workers: 3,
+        use_artifacts: false,
+        default_tier: AccuracyTier::GuaranteedFp64, // asserts 100-eps accuracy below
+        ..Default::default()
+    };
     let svc = GemmService::start(cfg, None, || Box::new(AlwaysEmulate));
     let mut rng = Rng::new(201);
     let mut pending = Vec::new();
