@@ -23,8 +23,9 @@ use adp_dgemm::ozaki::{
     slice_b, slice_pair_gemm, tune, AccuracyTier, GroupedProblem, OzakiConfig, SchemeKind,
     SliceCache, SliceEncoding,
 };
+use adp_dgemm::coordinator::scan::{scan_matrix, scan_pair};
 use adp_dgemm::runtime::RuntimeHandle;
-use adp_dgemm::util::{benchkit, Rng};
+use adp_dgemm::util::{benchkit, faultinject, Rng};
 
 fn main() {
     let n = std::env::var("N").ok().and_then(|s| s.parse().ok()).unwrap_or(512usize);
@@ -359,6 +360,59 @@ fn main() {
         st,
         &[("Mdot/s", format!("{:.1}", st.per_sec((n * n) as f64) / 1e6))],
     );
+
+    // --- safety scan: clean sweep vs adversarial early exit --------------
+    {
+        let elems = (n * n) as f64;
+        let st_clean = benchkit::bench_budget(0.5, || scan_matrix(&a));
+        benchkit::report(
+            "scan_clean",
+            st_clean,
+            &[("Melem/s", format!("{:.1}", st_clean.per_sec(elems) / 1e6))],
+        );
+        json.arm("scan_clean", st_clean, elems, &[("unit", "elem".to_string())]);
+        // NaN/Inf/subnormal in the first elements: the scan saturates
+        // immediately, so the verdict is O(1) instead of a full O(n^2)
+        // sweep — the worst adversarial input becomes the cheapest.
+        let mut adv = a.clone();
+        adv.data[0] = f64::NAN;
+        adv.data[1] = f64::INFINITY;
+        adv.data[2] = f64::from_bits(1);
+        let st_adv = benchkit::bench_budget(0.5, || scan_matrix(&adv));
+        benchkit::report(
+            "scan_adversarial",
+            st_adv,
+            &[("vs clean", format!("{:.0}x", st_clean.median_s / st_adv.median_s))],
+        );
+        json.arm("scan_adversarial", st_adv, elems, &[("unit", "elem".to_string())]);
+        // A NaN in A forces the fallback regardless of B, so the pair
+        // scan skips B's O(k*n) sweep entirely.
+        let st_pair = benchkit::bench_budget(0.5, || scan_pair(&adv, &b));
+        benchkit::report(
+            "scan_pair[nan-in-a]",
+            st_pair,
+            &[("vs clean matrix", format!("{:.0}x", st_clean.median_s / st_pair.median_s))],
+        );
+        json.arm("scan_pair[nan-in-a]", st_pair, 2.0 * elems, &[("unit", "elem".to_string())]);
+    }
+
+    // --- disarmed fault sites: hot-path cost is one relaxed load ---------
+    {
+        let checks = 4096u32;
+        let st = benchkit::bench_budget(0.25, || {
+            let mut hits = 0u32;
+            for _ in 0..checks {
+                hits += u32::from(faultinject::fires(faultinject::site::WORKER_HANG));
+            }
+            assert_eq!(hits, 0, "faults must stay disarmed in benches");
+        });
+        benchkit::report(
+            "faultinject_disarmed",
+            st,
+            &[("ns/site-check", format!("{:.2}", st.median_s * 1e9 / checks as f64))],
+        );
+        json.arm("faultinject_disarmed", st, checks as f64, &[("unit", "check".to_string())]);
+    }
 
     // --- artifact path ---------------------------------------------------
     if let Some(rt) = RuntimeHandle::try_load(Path::new("artifacts")) {

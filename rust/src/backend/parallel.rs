@@ -43,6 +43,7 @@ use crate::ozaki::gemm::{
 use crate::ozaki::kernel::{self, KernelId};
 use crate::ozaki::tune;
 use crate::ozaki::{CrtBasis, PairSchedule, SlicedMatrix};
+use crate::util::sync as psync;
 
 /// Row-chunks per pool thread when splitting a slice-pair batch: >1 so the
 /// dynamic queue can balance uneven chunk costs.
@@ -260,13 +261,13 @@ impl ComputeBackend for ParallelBackend {
             let mut ws = workspaces.checkout(shape.elems());
             let mut local = FusedTally::default();
             loop {
-                let next = queue.lock().unwrap().pop();
+                let next = psync::lock(&queue).pop();
                 let Some((row0, band)) = next else { break };
                 local.merge(fused_band(kern, a, b, schedule, row0, shape, &mut ws, band));
             }
-            tally.lock().unwrap().merge(local);
+            psync::lock(&tally).merge(local);
         });
-        let t = tally.into_inner().unwrap();
+        let t = tally.into_inner().unwrap_or_else(|e| e.into_inner());
         workspaces.record_tiles(t.tiles);
         workspaces.record_panels(t.packs, t.reuses);
         workspaces.record_pack_growth(t.pack_growths);
@@ -310,13 +311,13 @@ impl ComputeBackend for ParallelBackend {
             let mut ws = workspaces.checkout(shape.elems());
             let mut local = FusedTally::default();
             loop {
-                let next = queue.lock().unwrap().pop();
+                let next = psync::lock(&queue).pop();
                 let Some((row0, band)) = next else { break };
                 local.merge(crt_band(kern, a, b, basis, row0, shape, &mut ws, band));
             }
-            tally.lock().unwrap().merge(local);
+            psync::lock(&tally).merge(local);
         });
-        let t = tally.into_inner().unwrap();
+        let t = tally.into_inner().unwrap_or_else(|e| e.into_inner());
         workspaces.record_tiles(t.tiles);
         workspaces.record_panels(t.packs, t.reuses);
         workspaces.record_pack_growth(t.pack_growths);
@@ -351,7 +352,7 @@ impl ComputeBackend for ParallelBackend {
             self.pool.run_n(max_helpers, || {
                 let mut bpack = vec![0.0f64; PACK_SCRATCH_LEN];
                 loop {
-                    let next = queue.lock().unwrap().pop();
+                    let next = psync::lock(&queue).pop();
                     let Some(job) = next else { break };
                     self.fp64_gemm_tile(
                         a,

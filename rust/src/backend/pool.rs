@@ -15,6 +15,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::sync as psync;
+
 /// A token-budgeted scoped-thread pool. `threads` is the total thread
 /// budget *including* the calling thread; `threads - 1` helper tokens are
 /// shared by all concurrent callers.
@@ -124,7 +126,7 @@ pub fn drain<T: Send, F: Fn(T) + Sync>(pool: &ThreadPool, items: Vec<T>, f: F) {
     let max_helpers = items.len() - 1;
     let queue = Mutex::new(items);
     pool.run_n(max_helpers, || loop {
-        let next = queue.lock().unwrap().pop();
+        let next = psync::lock(&queue).pop();
         match next {
             Some(it) => f(it),
             None => break,

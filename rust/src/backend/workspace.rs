@@ -23,6 +23,8 @@ use std::sync::Mutex;
 
 use crate::ozaki::kernel::KernelId;
 use crate::ozaki::tune::TileShape;
+use crate::util::faultinject;
+use crate::util::sync as psync;
 
 /// One reusable scratch set. Buffers are handed out **dirty** (whatever
 /// the previous user left); every consumer fully initializes the prefix
@@ -176,9 +178,12 @@ impl WorkspacePool {
     /// O(len) scan is on a handful of entries. The guard returns the
     /// workspace on drop.
     pub fn checkout(&self, elems: usize) -> WorkspaceGuard<'_> {
+        if faultinject::fires(faultinject::site::WORKSPACE_CHECKOUT) {
+            panic!("injected fault: workspace checkout");
+        }
         self.checkouts.fetch_add(1, Ordering::Relaxed);
         let pooled = {
-            let mut g = self.free.lock().unwrap();
+            let mut g = psync::lock(&self.free);
             let mut best: Option<(usize, usize)> = None; // smallest fitting (idx, cap)
             let mut largest: Option<(usize, usize)> = None; // largest overall (idx, cap)
             for (i, w) in g.iter().enumerate() {
@@ -245,12 +250,12 @@ impl WorkspacePool {
     /// tile geometry).
     pub fn record_dispatch(&self, kern: KernelId, shape: Option<TileShape>) {
         let (mc, nc) = shape.map_or((0, 0), |s| (s.mc, s.nc));
-        *self.dispatch.lock().unwrap() = (kern.label(), mc, nc);
+        *psync::lock(&self.dispatch) = (kern.label(), mc, nc);
     }
 
     /// Lifetime totals (see [`WorkspaceStats`]).
     pub fn stats(&self) -> WorkspaceStats {
-        let (kernel, tile_mc, tile_nc) = *self.dispatch.lock().unwrap();
+        let (kernel, tile_mc, tile_nc) = *psync::lock(&self.dispatch);
         WorkspaceStats {
             checkouts: self.checkouts.load(Ordering::Relaxed),
             fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
@@ -265,7 +270,7 @@ impl WorkspacePool {
 
     /// Workspaces currently resident in the free list.
     pub fn pooled(&self) -> usize {
-        self.free.lock().unwrap().len()
+        psync::lock(&self.free).len()
     }
 }
 
@@ -299,7 +304,7 @@ impl DerefMut for WorkspaceGuard<'_> {
 impl Drop for WorkspaceGuard<'_> {
     fn drop(&mut self) {
         if let Some(ws) = self.ws.take() {
-            self.pool.free.lock().unwrap().push(ws);
+            psync::lock(&self.pool.free).push(ws);
         }
     }
 }

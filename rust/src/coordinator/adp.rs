@@ -22,6 +22,7 @@ use crate::ozaki::{
     SchemeKind, SliceEncoding,
 };
 use crate::runtime::{ArtifactKind, RuntimeHandle};
+use crate::util::faultinject;
 
 /// Why ADP dispatched the way it did (Fig 8 / Fig 7-right inputs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -329,6 +330,12 @@ impl AdpEngine {
         // CRT dispatch always runs the native pipeline (AOT artifacts
         // are compiled for the slice-pair schedule only); exception
         // fallbacks above are scheme-independent and already handled.
+        // An injected dispatch panic unwinds from *inside* the engine:
+        // the service worker's catch_unwind turns it into a typed
+        // `EnginePanic` reply and the worker survives.
+        if faultinject::fires(faultinject::site::KERNEL_DISPATCH) {
+            panic!("injected fault: kernel dispatch panicked");
+        }
         let te = Instant::now();
         if let (EmulationChoice::Crt, Some(ccfg)) = (choice, crt_cfg) {
             let c = CrtScheme::new(ccfg).gemm_on(

@@ -27,6 +27,9 @@ use std::sync::Mutex;
 
 use super::heuristic::{EmulationChoice, HeuristicInput, SelectionHeuristic};
 use crate::ozaki::{AccuracyTier, ShapeBucket};
+use crate::runtime::quarantine;
+use crate::util::faultinject;
+use crate::util::sync as psync;
 
 /// Observations a cell needs before its prediction participates in
 /// decisions. Below this the heuristic defers to its fallback — which
@@ -173,7 +176,7 @@ impl CostModel {
             return;
         }
         let should_save = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = psync::lock(&self.inner);
             let cell = &mut inner.cells[bucket_index(bucket)][choice_index(choice)][tier.index()];
             *cell = Some(match *cell {
                 None => Cell { ns_per_mac, samples: 1 },
@@ -208,7 +211,7 @@ impl CostModel {
         if !self.enabled {
             return None;
         }
-        let inner = self.inner.lock().unwrap();
+        let inner = psync::lock(&self.inner);
         inner.cells[bucket_index(bucket)][choice_index(choice)][tier.index()]
             .filter(|c| c.samples >= MIN_SAMPLES)
             .map(|c| c.ns_per_mac)
@@ -217,13 +220,13 @@ impl CostModel {
     /// Raw sample count of a cell (0 when empty) — the counters the
     /// warm/cold tests pin.
     pub fn samples(&self, bucket: ShapeBucket, choice: EmulationChoice, tier: AccuracyTier) -> u64 {
-        let inner = self.inner.lock().unwrap();
+        let inner = psync::lock(&self.inner);
         inner.cells[bucket_index(bucket)][choice_index(choice)][tier.index()]
             .map_or(0, |c| c.samples)
     }
 
     fn serialize(&self) -> String {
-        let inner = self.inner.lock().unwrap();
+        let inner = psync::lock(&self.inner);
         let mut out = String::new();
         out.push_str(CATALOG_HEADER);
         out.push('\n');
@@ -251,7 +254,7 @@ impl CostModel {
     /// — same tolerance as the tile autotuner's parser: a stale or
     /// hand-edited catalog degrades to "cold", never to a crash).
     fn absorb(&self, text: &str) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = psync::lock(&self.inner);
         for line in text.lines() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -280,10 +283,30 @@ impl CostModel {
         }
     }
 
+    /// Load the persisted catalog. Individual bad *lines* degrade to
+    /// cold cells ([`CostModel::absorb`] tolerance), but a file that is
+    /// not a cost-model catalog at all — wrong or missing header, or an
+    /// unreadable existing file — is quarantined (renamed to
+    /// `<path>.corrupt`, warned once, counted) so the run continues on a
+    /// cold model and the next save starts from a clean path.
     fn load(&self) {
         let Some(path) = &self.path else { return };
-        if let Ok(text) = std::fs::read_to_string(path) {
-            self.absorb(&text);
+        if !path.exists() {
+            return; // cold start, nothing to load or quarantine
+        }
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                let corrupt_injected = faultinject::fires(faultinject::site::COSTMODEL_LOAD_CORRUPT);
+                if !text.starts_with(CATALOG_HEADER) || corrupt_injected {
+                    let why = if corrupt_injected { "injected corruption" } else { "missing catalog header" };
+                    quarantine::quarantine_file(path, "cost-model catalog", why);
+                    return;
+                }
+                self.absorb(&text);
+            }
+            Err(e) => {
+                quarantine::quarantine_file(path, "cost-model catalog", &e.to_string());
+            }
         }
     }
 
@@ -291,20 +314,36 @@ impl CostModel {
     /// the runtime tuning catalog). No-op without a configured path.
     pub fn save(&self) {
         let Some(path) = &self.path else { return };
-        let text = self.serialize();
+        let mut text = self.serialize();
+        if faultinject::fires(faultinject::site::COSTMODEL_SAVE_TORN) {
+            // Simulate a torn write slipping past tmp+rename: a header-less
+            // half of the catalog lands at the final path directly. The
+            // next load quarantines it.
+            text = text.split_off(text.len() / 2);
+            let _ = std::fs::write(path, text);
+            psync::lock(&self.inner).dirty = false;
+            return;
+        }
         let tmp = path.with_extension("tmp");
         if std::fs::write(&tmp, text).is_ok() {
             let _ = std::fs::rename(&tmp, path);
         }
-        self.inner.lock().unwrap().dirty = false;
+        psync::lock(&self.inner).dirty = false;
+    }
+
+    /// Persist only when observations arrived since the last save — the
+    /// orderly-shutdown flush ([`crate::coordinator::GemmService::shutdown`]
+    /// and `adp serve` exit). No-op without a configured path.
+    pub fn save_if_dirty(&self) {
+        if self.path.is_some() && psync::lock(&self.inner).dirty {
+            self.save();
+        }
     }
 }
 
 impl Drop for CostModel {
     fn drop(&mut self) {
-        if self.path.is_some() && self.inner.lock().unwrap().dirty {
-            self.save();
-        }
+        self.save_if_dirty();
     }
 }
 

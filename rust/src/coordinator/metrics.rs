@@ -11,6 +11,9 @@ use super::adp::{AdpOutcome, GemmDecision};
 use super::service::Priority;
 use crate::backend::WorkspaceStats;
 use crate::ozaki::AccuracyTier;
+use crate::runtime::quarantine;
+use crate::util::faultinject;
+use crate::util::sync as psync;
 
 /// Number of [`Priority`] tiers ([`Priority::ALL`]'s length).
 pub const TIER_COUNT: usize = 3;
@@ -75,6 +78,7 @@ struct TierInner {
     completed: u64,
     failed: u64,
     rejected: u64,
+    shed: u64,
     queue: LatencyHistogram,
     total: LatencyHistogram,
 }
@@ -96,6 +100,10 @@ pub struct TierSnapshot {
     /// non-blocking submission paths. Shutdown rejections are not
     /// load-shedding and are not counted here.
     pub rejected: u64,
+    /// Admitted requests shed at dequeue because their server-side
+    /// deadline had already expired (each failed with
+    /// `GemmError::DeadlineExceeded` instead of executing stale work).
+    pub shed: u64,
     /// Median submission-to-execution-start latency, seconds.
     pub queue_p50_s: f64,
     /// p99 submission-to-execution-start latency, seconds.
@@ -154,6 +162,7 @@ struct Inner {
     pairs_executed: u64,
     pairs_skipped: u64,
     tier_escalations: u64,
+    worker_respawns: u64,
 }
 
 /// Immutable snapshot of the counters.
@@ -235,6 +244,17 @@ pub struct MetricsSnapshot {
     /// because ESC left no truncation room (the tier's bound could not
     /// be met any cheaper) — never a silent accuracy loss.
     pub tier_escalations: u64,
+    /// Total deadline sheds across all priority tiers (sum of the
+    /// per-tier `shed` fields — the `shed_expired` service counter).
+    pub shed_expired: u64,
+    /// Shard workers the supervisor replaced after a death or hang.
+    pub worker_respawns: u64,
+    /// Corrupt persisted artifacts quarantined to `<path>.corrupt`
+    /// (process-wide gauge from [`crate::runtime::quarantine`]).
+    pub artifacts_quarantined: u64,
+    /// Poisoned-mutex recoveries (process-wide gauge from
+    /// [`crate::util::sync`]): each is a panic that did *not* cascade.
+    pub lock_recoveries: u64,
 }
 
 impl MetricsSnapshot {
@@ -255,7 +275,13 @@ impl MetricsSnapshot {
 
 impl Metrics {
     pub fn record(&self, out: &AdpOutcome) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
+        if faultinject::fires(faultinject::site::WORKER_LOCK_PANIC) {
+            // Deliberately unwinds while `g` is held: the chaos suite's
+            // poisoned-Metrics scenario. Every other accessor recovers
+            // via `psync::lock`, so the service keeps serving.
+            panic!("injected fault: panic while holding the metrics lock");
+        }
         g.requests += 1;
         match out.decision {
             GemmDecision::EmulatedArtifact { slices, .. }
@@ -279,14 +305,14 @@ impl Metrics {
 
     /// Fold one grouped-pipeline slicing report into the counters.
     pub fn record_group(&self, stats: &crate::ozaki::GroupStats) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         g.slice_cache_hits += stats.slice_cache_hits;
         g.slice_cache_misses += stats.slice_cache_misses;
     }
 
     /// Record one plan-cache consultation.
     pub fn record_esc_cache(&self, hit: bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         if hit {
             g.esc_cache_hits += 1;
         } else {
@@ -305,7 +331,7 @@ impl Metrics {
         pairs_skipped: u64,
         escalated: bool,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         g.tier_requests[tier.index()] += 1;
         g.pairs_executed += pairs_executed;
         g.pairs_skipped += pairs_skipped;
@@ -316,25 +342,36 @@ impl Metrics {
 
     /// Record one coalesced shape bucket of `n` requests.
     pub fn record_coalesced_batch(&self, n: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         g.coalesced_batches += 1;
         g.coalesced_requests += n;
     }
 
     /// `n` requests admitted into a shard queue at `tier`.
     pub fn record_enqueued(&self, tier: Priority, n: u64) {
-        self.inner.lock().unwrap().tiers[tier.index()].enqueued += n;
+        psync::lock(&self.inner).tiers[tier.index()].enqueued += n;
     }
 
     /// `n` requests shed by admission control at `tier` (retryable
     /// `QueueFull`/`TierFull` verdicts on the non-blocking paths).
     pub fn record_rejected(&self, tier: Priority, n: u64) {
-        self.inner.lock().unwrap().tiers[tier.index()].rejected += n;
+        psync::lock(&self.inner).tiers[tier.index()].rejected += n;
+    }
+
+    /// `n` admitted requests shed at dequeue with an expired server-side
+    /// deadline (each answered `GemmError::DeadlineExceeded`).
+    pub fn record_shed(&self, tier: Priority, n: u64) {
+        psync::lock(&self.inner).tiers[tier.index()].shed += n;
+    }
+
+    /// The supervisor replaced a dead or hung shard worker.
+    pub fn record_respawn(&self) {
+        psync::lock(&self.inner).worker_respawns += 1;
     }
 
     /// One request completed successfully with the given latency split.
     pub fn record_latency(&self, tier: Priority, queue_s: f64, total_s: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         let t = &mut g.tiers[tier.index()];
         t.completed += 1;
         t.queue.record(queue_s);
@@ -344,7 +381,7 @@ impl Metrics {
     /// One admitted request completed with a typed error (shape
     /// mismatch, engine panic).
     pub fn record_failure(&self, tier: Priority) {
-        self.inner.lock().unwrap().tiers[tier.index()].failed += 1;
+        psync::lock(&self.inner).tiers[tier.index()].failed += 1;
     }
 
     /// Refresh the workspace gauges from a pool's lifetime totals. The
@@ -352,7 +389,7 @@ impl Metrics {
     /// are the meaningful series; `max` keeps the gauges monotone even
     /// when racing workers sync out of order.
     pub fn sync_workspace(&self, stats: WorkspaceStats) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         g.workspace_checkouts = g.workspace_checkouts.max(stats.checkouts);
         g.workspace_fresh = g.workspace_fresh.max(stats.fresh_allocs);
         g.fused_tiles = g.fused_tiles.max(stats.fused_tiles);
@@ -370,7 +407,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap().clone();
+        let g = psync::lock(&self.inner).clone();
         MetricsSnapshot {
             requests: g.requests,
             emulated: g.emulated,
@@ -406,6 +443,7 @@ impl Metrics {
                         completed: t.completed,
                         failed: t.failed,
                         rejected: t.rejected,
+                        shed: t.shed,
                         queue_p50_s: t.queue.quantile(0.50),
                         queue_p99_s: t.queue.quantile(0.99),
                         total_p50_s: t.total.quantile(0.50),
@@ -418,6 +456,10 @@ impl Metrics {
             pairs_executed: g.pairs_executed,
             pairs_skipped: g.pairs_skipped,
             tier_escalations: g.tier_escalations,
+            shed_expired: g.tiers.iter().map(|t| t.shed).sum(),
+            worker_respawns: g.worker_respawns,
+            artifacts_quarantined: quarantine::total(),
+            lock_recoveries: psync::recovered_total(),
         }
     }
 
@@ -426,7 +468,7 @@ impl Metrics {
     /// lifetime totals, so the first post-reset sync restores them —
     /// treat them as gauges and difference snapshots for window math.
     pub fn reset(&self) {
-        *self.inner.lock().unwrap() = Inner::default();
+        *psync::lock(&self.inner) = Inner::default();
     }
 }
 

@@ -50,5 +50,5 @@ pub use metrics::{Metrics, MetricsSnapshot, TierSnapshot};
 pub use plan::EscPlanCache;
 pub use service::{
     GemmError, GemmResponse, GemmResult, GemmService, GemmTicket, Priority, RejectedSubmit,
-    ServiceConfig, SubmitError,
+    RetryPolicy, ServiceConfig, SubmitError,
 };

@@ -23,6 +23,7 @@ use std::sync::Mutex;
 
 use crate::esc::coarse::{coarse_esc_from, CoarseExponents};
 use crate::linalg::Matrix;
+use crate::util::sync as psync;
 
 /// Cache key: shape + coarsening block + both operands' coarse exponent
 /// tables. Exact equality only — no lossy hashing of the tables — so a
@@ -82,7 +83,7 @@ impl EscPlanCache {
             b_bmin: cb.bmin.clone(),
         };
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = psync::lock(&self.inner);
             g.tick += 1;
             let tick = g.tick;
             if let Some(entry) = g.map.get_mut(&key) {
@@ -95,7 +96,7 @@ impl EscPlanCache {
         }
         // Miss: the expensive O(m*n*nb) max-plus reduction.
         let esc = coarse_esc_from(&ca, &cb);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         if g.map.len() >= self.capacity && !g.map.contains_key(&key) {
             // Evict the least-recently-used entry (capacity is small; the
             // linear scan is noise next to the reduction just paid).
@@ -123,7 +124,7 @@ impl EscPlanCache {
 
     /// Resident plans.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        psync::lock(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {

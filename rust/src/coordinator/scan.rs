@@ -23,7 +23,12 @@ impl ScanFlags {
     }
 }
 
-/// Scan one operand.
+/// Scan one operand. Exits early once every flag is set — there is
+/// nothing left to learn from the remaining elements, and adversarial
+/// inputs (a NaN in row 0 of a huge matrix) shouldn't pay a full O(m·k)
+/// sweep for a verdict that was decided immediately. Clean elements pay
+/// nothing for the check: it sits inside the (cold) flag-setting
+/// branches. Flag-identical to the full sweep by construction.
 pub fn scan_matrix(m: &Matrix) -> ScanFlags {
     let mut f = ScanFlags::default();
     for &x in &m.data {
@@ -37,16 +42,31 @@ pub fn scan_matrix(m: &Matrix) -> ScanFlags {
             } else {
                 f.has_nan = true;
             }
+            if f.has_nan && f.has_inf && f.has_subnormal {
+                return f; // saturated
+            }
         } else if exp == 0 && mant != 0 {
             f.has_subnormal = true;
+            if f.has_nan && f.has_inf {
+                return f; // saturated (has_subnormal just set)
+            }
         }
     }
     f
 }
 
-/// Scan both operands of a GEMM.
+/// Scan both operands of a GEMM. When `a` contains a NaN the NaN
+/// fallback is already forced — every consumer checks `has_nan` before
+/// `has_inf`, and `has_subnormal` only steers dispatch on *clean*
+/// inputs — so `b`'s O(k·n) scan is skipped entirely. In that case the
+/// returned flags are decision-identical rather than the exact union
+/// (`b`'s inf/subnormal bits are not collected); in every other case
+/// the union is exact.
 pub fn scan_pair(a: &Matrix, b: &Matrix) -> ScanFlags {
     let fa = scan_matrix(a);
+    if fa.has_nan {
+        return fa;
+    }
     let fb = scan_matrix(b);
     ScanFlags {
         has_nan: fa.has_nan || fb.has_nan,
@@ -89,5 +109,65 @@ mod tests {
         assert!(f.has_subnormal);
         let n = Matrix::from_rows(1, 1, vec![f64::MIN_POSITIVE]);
         assert!(!scan_matrix(&n).has_subnormal);
+    }
+
+    /// Reference sweep with no early exit, for flag-identity pinning.
+    fn naive_scan(m: &Matrix) -> ScanFlags {
+        let mut f = ScanFlags::default();
+        for &x in &m.data {
+            let bits = x.to_bits();
+            let exp = (bits >> 52) & 0x7FF;
+            let mant = bits & ((1u64 << 52) - 1);
+            if exp == 0x7FF {
+                if mant == 0 {
+                    f.has_inf = true;
+                } else {
+                    f.has_nan = true;
+                }
+            } else if exp == 0 && mant != 0 {
+                f.has_subnormal = true;
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn early_exit_is_flag_identical_on_adversarial_inputs() {
+        let sub = f64::from_bits(1);
+        let cases: Vec<Vec<f64>> = vec![
+            vec![1.0; 64],                                         // all clean
+            vec![f64::NAN; 64],                                    // all NaN, never saturates
+            [vec![f64::NAN, f64::INFINITY, sub], vec![0.5; 61]].concat(), // saturates at 3
+            [vec![0.5; 61], vec![f64::NAN, f64::INFINITY, sub]].concat(), // saturates at end
+            [vec![f64::NAN, f64::NAN], vec![1.0; 62]].concat(),    // repeats, no saturation
+            [vec![sub; 4], vec![f64::NEG_INFINITY], vec![2.0; 59]].concat(),
+            [vec![f64::INFINITY, sub, f64::NAN], vec![f64::MAX; 61]].concat(),
+            vec![-0.0, f64::MIN_POSITIVE, f64::MAX, f64::MIN],     // clean edge values
+        ];
+        for data in cases {
+            let n = data.len();
+            let m = Matrix::from_rows(1, n, data);
+            assert_eq!(scan_matrix(&m), naive_scan(&m), "early exit changed flags: {m:?}");
+        }
+    }
+
+    #[test]
+    fn pair_skips_b_only_under_a_nan_and_stays_decision_identical() {
+        let nan = Matrix::from_rows(1, 2, vec![f64::NAN, 1.0]);
+        let inf = Matrix::from_rows(1, 2, vec![f64::INFINITY, 1.0]);
+        let sub = Matrix::from_rows(1, 2, vec![f64::from_bits(1), 1.0]);
+        let clean = Matrix::from_rows(1, 2, vec![1.0, 2.0]);
+        // A-NaN short circuit: has_nan dominates every consumer, so the
+        // decision (FallbackNan) is identical even though B is unscanned.
+        let f = scan_pair(&nan, &inf);
+        assert!(f.has_nan && !f.clean());
+        // Without a NaN in A, the union stays exact — including B's NaN,
+        // inf and subnormal contributions.
+        let f = scan_pair(&inf, &sub);
+        assert!(!f.has_nan && f.has_inf && f.has_subnormal);
+        let f = scan_pair(&clean, &nan);
+        assert!(f.has_nan);
+        let f = scan_pair(&sub, &clean);
+        assert!(f.clean() && f.has_subnormal);
     }
 }

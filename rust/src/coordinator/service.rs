@@ -74,7 +74,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -89,6 +89,9 @@ use crate::linalg::Matrix;
 use crate::ozaki::batched::SliceCache;
 use crate::ozaki::{AccuracyTier, SliceEncoding};
 use crate::runtime::RuntimeHandle;
+use crate::util::faultinject;
+use crate::util::sync as psync;
+use crate::util::Rng;
 
 /// Admission-control priority tier of a submission.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -145,6 +148,12 @@ pub struct GemmRequest {
     /// part of the coalescing bucket key so mixed-tier groups stay
     /// isolated.
     accuracy: AccuracyTier,
+    /// Per-request deadline override; `None` falls back to
+    /// [`ServiceConfig::default_deadline`]. Measured from submission and
+    /// enforced at *dequeue*: a request that expires while queued is shed
+    /// with [`GemmError::DeadlineExceeded`] instead of burning a worker
+    /// on an answer nobody is waiting for.
+    deadline: Option<Duration>,
 }
 
 /// Completed response with queueing/processing latency. The reported
@@ -175,6 +184,9 @@ pub enum GemmError {
     /// The reply slot was dropped without a response — the terminal
     /// "never silently lost" guarantee (e.g. a worker died mid-request).
     ReplyLost,
+    /// The request's deadline expired while it sat in the queue; the
+    /// worker shed it at dequeue without executing anything.
+    DeadlineExceeded,
     /// Submission-time rejection folded into [`GemmService::gemm_blocking`].
     Rejected(SubmitError),
 }
@@ -187,6 +199,9 @@ impl fmt::Display for GemmError {
             }
             GemmError::EnginePanic(msg) => write!(f, "gemm engine panicked: {msg}"),
             GemmError::ReplyLost => write!(f, "gemm reply lost (worker died)"),
+            GemmError::DeadlineExceeded => {
+                write!(f, "gemm request deadline expired while queued")
+            }
             GemmError::Rejected(e) => write!(f, "gemm submission rejected: {e}"),
         }
     }
@@ -222,6 +237,17 @@ impl ReplySlot {
     }
 
     fn send(&mut self, result: GemmResult) {
+        // Injected reply loss: return *without* consuming the completion,
+        // so the drop guard below still fires and the submitter receives
+        // `ReplyLost` — the exactly-one-reply guarantee holds even while
+        // replies are being "dropped". (Never swallow the drop guard's
+        // own `ReplyLost` send, or the reply really would vanish.)
+        if self.0.is_some()
+            && !matches!(result, Err(GemmError::ReplyLost))
+            && faultinject::fires(faultinject::site::REPLY_DROP)
+        {
+            return;
+        }
         match self.0.take() {
             Some(Completion::Channel(tx)) => {
                 let _ = tx.send(result); // receiver gone: caller lost interest
@@ -382,6 +408,25 @@ pub struct ServiceConfig {
     pub slice_cache_entries: usize,
     /// Resident plans in the service-wide [`EscPlanCache`].
     pub plan_cache_entries: usize,
+    /// Deadline applied to requests that don't carry their own (see
+    /// [`GemmService::submit_deadline`]). Enforced at dequeue: expired
+    /// requests are shed with [`GemmError::DeadlineExceeded`] and counted
+    /// in the `shed_expired` metric. `None` disables shedding.
+    pub default_deadline: Option<Duration>,
+    /// Run the shard supervisor: a watchdog thread that detects dead
+    /// workers (panicked outside the engine `catch_unwind`) and hung
+    /// workers (busy past `hang_threshold`), respawns a replacement
+    /// against the still-warm shared engine/caches, and counts the event
+    /// in `worker_respawns`.
+    pub supervise: bool,
+    /// Supervisor sweep interval.
+    pub supervisor_poll: Duration,
+    /// How long a worker may stay busy on one dequeued item before the
+    /// supervisor declares it hung and respawns a replacement. The old
+    /// worker is *superseded*, not killed: if it recovers it finishes its
+    /// current request (the reply stays valid) and exits. Size this above
+    /// the largest legitimate single-request latency.
+    pub hang_threshold: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -405,6 +450,10 @@ impl Default for ServiceConfig {
             max_batch: 16,
             slice_cache_entries: 32,
             plan_cache_entries: 64,
+            default_deadline: None,
+            supervise: true,
+            supervisor_poll: Duration::from_millis(20),
+            hang_threshold: Duration::from_secs(5),
         }
     }
 }
@@ -470,7 +519,7 @@ impl ShardQueue {
     ) -> Result<(), (SubmitError, QueueItem)> {
         let n = item.len();
         let t = tier.index();
-        let mut g = self.state.lock().unwrap();
+        let mut g = psync::lock(&self.state);
         loop {
             if g.closed {
                 return Err((SubmitError::ServiceStopped, item));
@@ -483,7 +532,7 @@ impl ShardQueue {
                     return Ok(());
                 }
                 Err(e) if !block => return Err((e, item)),
-                Err(_) => g = self.cv.wait(g).unwrap(),
+                Err(_) => g = psync::wait(&self.cv, g),
             }
         }
     }
@@ -502,7 +551,7 @@ impl ShardQueue {
     /// Blocking dequeue; `None` once the queue is closed *and* drained
     /// (shutdown serves everything that was admitted).
     fn pop(&self) -> Option<QueueItem> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = psync::lock(&self.state);
         loop {
             if let Some(item) = Self::take_next(&mut g) {
                 drop(g);
@@ -512,7 +561,7 @@ impl ShardQueue {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = psync::wait(&self.cv, g);
         }
     }
 
@@ -525,7 +574,7 @@ impl ShardQueue {
     /// early, mirroring the pre-shard dispatcher: the group asked for
     /// grouped execution *now*.
     fn drain_into(&self, batch: &mut Vec<GemmRequest>, max: usize, deadline: Instant) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = psync::lock(&self.state);
         loop {
             let mut took = false;
             let mut batch_item = false;
@@ -556,13 +605,13 @@ impl ShardQueue {
             if now >= deadline {
                 return;
             }
-            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (g2, _) = psync::wait_timeout(&self.cv, g, deadline - now);
             g = g2;
         }
     }
 
     fn close(&self) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = psync::lock(&self.state);
         g.closed = true;
         drop(g);
         self.cv.notify_all();
@@ -583,6 +632,106 @@ fn shape_shard(m: usize, k: usize, n: usize, shards: usize) -> usize {
     (h % shards as u64) as usize
 }
 
+/// Milliseconds on a process-local monotonic clock. `0` is reserved as
+/// the heartbeat's "idle" sentinel, so the clock starts at 1.
+fn monotonic_ms() -> u64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    (epoch.elapsed().as_millis() as u64).max(1)
+}
+
+/// Everything a worker thread needs — kept per slot so the supervisor can
+/// respawn a replacement against the *same* still-warm engine and shard
+/// queue (caches, cost model and workspace pool ride along inside the
+/// engine `Arc`s).
+#[derive(Clone)]
+struct WorkerCtx {
+    queue: Arc<ShardQueue>,
+    engine: Arc<AdpEngine>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
+    knobs: CoalesceKnobs,
+    default_deadline: Option<Duration>,
+}
+
+/// One supervised worker: its join handle, its heartbeat (0 = idle in
+/// `pop`, otherwise the `monotonic_ms` stamp of when it went busy — so an
+/// idle worker blocked on the condvar can never look hung), and the
+/// supersede flag a replaced worker checks to retire itself.
+struct WorkerSlot {
+    handle: std::thread::JoinHandle<()>,
+    beat: Arc<AtomicU64>,
+    superseded: Arc<AtomicBool>,
+    ctx: WorkerCtx,
+    base_name: String,
+    respawns: usize,
+}
+
+/// Worker slots plus the handles of superseded workers that may still be
+/// running (joined at shutdown).
+struct WorkerTable {
+    slots: Vec<WorkerSlot>,
+    retired: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn spawn_worker(ctx: WorkerCtx, base_name: String, respawns: usize) -> WorkerSlot {
+    let beat = Arc::new(AtomicU64::new(0));
+    let superseded = Arc::new(AtomicBool::new(false));
+    let name =
+        if respawns == 0 { base_name.clone() } else { format!("{base_name}-r{respawns}") };
+    let handle = {
+        let (ctx, beat, superseded) = (ctx.clone(), beat.clone(), superseded.clone());
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || worker_main(ctx, beat, superseded))
+            .expect("spawn worker")
+    };
+    WorkerSlot { handle, beat, superseded, ctx, base_name, respawns }
+}
+
+/// Supervisor loop: sweep the worker table every `poll`, respawn any
+/// worker that died (its in-flight replies already surfaced as
+/// [`GemmError::ReplyLost`] through the reply drop guards) or has been
+/// busy on one item longer than `hang`. Replacements attach to the same
+/// shard queue and shared engine, so warm caches survive the respawn.
+fn supervisor_main(
+    table: Arc<Mutex<WorkerTable>>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    poll: Duration,
+    hang: Duration,
+) {
+    let hang_ms = (hang.as_millis() as u64).max(1);
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut g = psync::lock(&table);
+        for i in 0..g.slots.len() {
+            let dead = g.slots[i].handle.is_finished();
+            let hung = {
+                let b = g.slots[i].beat.load(Ordering::SeqCst);
+                b != 0 && monotonic_ms().saturating_sub(b) > hang_ms
+            };
+            if !(dead || hung) {
+                continue;
+            }
+            let respawns = g.slots[i].respawns + 1;
+            let fresh =
+                spawn_worker(g.slots[i].ctx.clone(), g.slots[i].base_name.clone(), respawns);
+            let old = std::mem::replace(&mut g.slots[i], fresh);
+            // A hung worker that later recovers finishes its current
+            // request (the reply stays valid) and retires; a dead one
+            // joins immediately at shutdown.
+            old.superseded.store(true, Ordering::SeqCst);
+            g.retired.push(old.handle);
+            metrics.record_respawn();
+        }
+    }
+}
+
 /// Handle to the running service; submission and shutdown are
 /// thread-safe through `&self`, so the handle can be shared (e.g. in an
 /// `Arc`) between submitters and a controller racing them.
@@ -590,7 +739,10 @@ pub struct GemmService {
     shards: Vec<Arc<ShardQueue>>,
     pub metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    workers: Arc<Mutex<WorkerTable>>,
+    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
+    supervisor_stop: Arc<AtomicBool>,
+    cost_model: Arc<CostModel>,
     default_tier: AccuracyTier,
 }
 
@@ -649,24 +801,40 @@ impl GemmService {
             let base = workers_total / nshards;
             let shard_workers = (base + usize::from(sid < workers_total % nshards)).max(1);
             for wid in 0..shard_workers {
-                let queue = queue.clone();
-                let engine = engine.clone();
-                let metrics = metrics.clone();
-                let inflight = inflight.clone();
-                workers.push(
-                    std::thread::Builder::new()
-                        .name(format!("adp-s{sid}-w{wid}"))
-                        .spawn(move || worker_main(queue, engine, metrics, inflight, knobs))
-                        .expect("spawn worker"),
-                );
+                let ctx = WorkerCtx {
+                    queue: queue.clone(),
+                    engine: engine.clone(),
+                    metrics: metrics.clone(),
+                    inflight: inflight.clone(),
+                    knobs,
+                    default_deadline: cfg.default_deadline,
+                };
+                workers.push(spawn_worker(ctx, format!("adp-s{sid}-w{wid}"), 0));
             }
             shards.push(queue);
         }
+        let workers = Arc::new(Mutex::new(WorkerTable { slots: workers, retired: Vec::new() }));
+        let supervisor_stop = Arc::new(AtomicBool::new(false));
+        let supervisor = if cfg.supervise {
+            let (table, stop, metrics) = (workers.clone(), supervisor_stop.clone(), metrics.clone());
+            let (poll, hang) = (cfg.supervisor_poll.max(Duration::from_millis(1)), cfg.hang_threshold);
+            Some(
+                std::thread::Builder::new()
+                    .name("adp-supervisor".to_string())
+                    .spawn(move || supervisor_main(table, stop, metrics, poll, hang))
+                    .expect("spawn supervisor"),
+            )
+        } else {
+            None
+        };
         GemmService {
             shards,
             metrics,
             inflight,
-            workers: Mutex::new(workers),
+            workers,
+            supervisor: Mutex::new(supervisor),
+            supervisor_stop,
+            cost_model,
             default_tier: cfg.default_tier,
         }
     }
@@ -689,12 +857,14 @@ impl GemmService {
         b: Matrix,
         tier: Priority,
         accuracy: AccuracyTier,
+        deadline: Option<Duration>,
         reply: ReplySlot,
         block: bool,
     ) -> Result<(), (SubmitError, GemmRequest)> {
         let shard = &self.shards[shape_shard(a.rows, a.cols, b.cols, self.shards.len())];
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        let req = GemmRequest { a, b, reply, submitted: Instant::now(), tier, accuracy };
+        let req =
+            GemmRequest { a, b, reply, submitted: Instant::now(), tier, accuracy, deadline };
         match shard.push(QueueItem::One(req), tier, block) {
             Ok(()) => {
                 self.metrics.record_enqueued(tier, 1);
@@ -727,7 +897,7 @@ impl GemmService {
         accuracy: AccuracyTier,
     ) -> Result<Receiver<GemmResult>, SubmitError> {
         let (reply, rx) = ReplySlot::channel();
-        match self.enqueue_one(a, b, Priority::Normal, accuracy, reply, true) {
+        match self.enqueue_one(a, b, Priority::Normal, accuracy, None, reply, true) {
             Ok(()) => Ok(rx),
             Err((error, mut req)) => {
                 req.reply.disarm(); // the Err return is the signal
@@ -753,7 +923,7 @@ impl GemmService {
         accuracy: AccuracyTier,
     ) -> Result<Receiver<GemmResult>, RejectedSubmit> {
         let (reply, rx) = ReplySlot::channel();
-        match self.enqueue_one(a, b, Priority::Normal, accuracy, reply, false) {
+        match self.enqueue_one(a, b, Priority::Normal, accuracy, None, reply, false) {
             Ok(()) => Ok(rx),
             Err((error, mut req)) => {
                 req.reply.disarm();
@@ -786,7 +956,30 @@ impl GemmService {
         accuracy: AccuracyTier,
     ) -> Result<GemmTicket, RejectedSubmit> {
         let (reply, rx) = ReplySlot::channel();
-        match self.enqueue_one(a, b, priority, accuracy, reply, false) {
+        match self.enqueue_one(a, b, priority, accuracy, None, reply, false) {
+            Ok(()) => Ok(GemmTicket { rx }),
+            Err((error, mut req)) => {
+                req.reply.disarm();
+                let GemmRequest { a, b, .. } = req;
+                Err(RejectedSubmit { error, a, b })
+            }
+        }
+    }
+
+    /// [`GemmService::submit_async`] with a per-request deadline override
+    /// (takes precedence over [`ServiceConfig::default_deadline`]). The
+    /// deadline is measured from submission and enforced at dequeue: if
+    /// it expires while the request is queued, the reply is
+    /// [`GemmError::DeadlineExceeded`] and no compute is spent.
+    pub fn submit_deadline(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        priority: Priority,
+        deadline: Duration,
+    ) -> Result<GemmTicket, RejectedSubmit> {
+        let (reply, rx) = ReplySlot::channel();
+        match self.enqueue_one(a, b, priority, self.default_tier, Some(deadline), reply, false) {
             Ok(()) => Ok(GemmTicket { rx }),
             Err((error, mut req)) => {
                 req.reply.disarm();
@@ -823,7 +1016,7 @@ impl GemmService {
         on_done: impl FnOnce(GemmResult) + Send + 'static,
     ) -> Result<(), RejectedSubmit> {
         let reply = ReplySlot::callback(on_done);
-        match self.enqueue_one(a, b, priority, accuracy, reply, false) {
+        match self.enqueue_one(a, b, priority, accuracy, None, reply, false) {
             Ok(()) => Ok(()),
             Err((error, mut req)) => {
                 req.reply.disarm();
@@ -871,7 +1064,15 @@ impl GemmService {
         let mut rxs = Vec::with_capacity(pairs.len());
         for (a, b, accuracy) in pairs {
             let (reply, rx) = ReplySlot::channel();
-            reqs.push(GemmRequest { a, b, reply, submitted, tier: Priority::Batch, accuracy });
+            reqs.push(GemmRequest {
+                a,
+                b,
+                reply,
+                submitted,
+                tier: Priority::Batch,
+                accuracy,
+                deadline: None,
+            });
             rxs.push(rx);
         }
         self.inflight.fetch_add(n, Ordering::SeqCst);
@@ -895,6 +1096,44 @@ impl GemmService {
         }
     }
 
+    /// Non-blocking submit with bounded exponential backoff over the
+    /// *retryable* rejections ([`SubmitError::QueueFull`] /
+    /// [`SubmitError::TierFull`]). Sleeps between attempts grow
+    /// geometrically from [`RetryPolicy::base_backoff`], cap at
+    /// [`RetryPolicy::max_backoff`], and carry deterministic seeded
+    /// jitter (full-jitter in the upper half of the window) so a
+    /// thundering herd of retriers decorrelates. Permanent rejections
+    /// ([`SubmitError::ServiceStopped`]) and exhausted budgets hand the
+    /// operands back unchanged.
+    pub fn submit_with_retry(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        priority: Priority,
+        policy: &RetryPolicy,
+    ) -> Result<GemmTicket, RejectedSubmit> {
+        let mut rng = Rng::new(policy.seed);
+        let (mut a, mut b) = (a, b);
+        let mut attempt = 0usize;
+        loop {
+            match self.submit_async(a, b, priority) {
+                Ok(t) => return Ok(t),
+                Err(rej) if rej.error.is_retryable() && attempt + 1 < policy.max_attempts.max(1) => {
+                    attempt += 1;
+                    let shift = (attempt - 1).min(16) as u32;
+                    let exp = policy.base_backoff.saturating_mul(1u32 << shift);
+                    let cap = exp.min(policy.max_backoff).max(Duration::from_nanos(1));
+                    let nanos = cap.as_nanos() as u64;
+                    let jittered = nanos / 2 + rng.next_u64() % (nanos / 2 + 1);
+                    std::thread::sleep(Duration::from_nanos(jittered));
+                    a = rej.a;
+                    b = rej.b;
+                }
+                Err(rej) => return Err(rej),
+            }
+        }
+    }
+
     /// Convenience: submit and wait. Every failure mode — shutdown,
     /// shape mismatch, engine panic, worker death — comes back as a
     /// typed `Err`; this can no longer panic the submitting thread.
@@ -912,17 +1151,55 @@ impl GemmService {
     /// Stop accepting work, drain the queues and join the workers.
     /// Idempotent, and safe to race against concurrent `submit*` calls:
     /// a submission either lands before the close (and is served) or
-    /// gets [`SubmitError::ServiceStopped`].
+    /// gets [`SubmitError::ServiceStopped`]. The supervisor stops first
+    /// (so drained-and-exiting workers aren't mistaken for dead ones),
+    /// and learned state — the cost model and the tile-tuning catalog —
+    /// is flushed to its artifacts so a warm model survives an orderly
+    /// shutdown.
     pub fn shutdown(&self) {
+        self.supervisor_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = psync::lock(&self.supervisor).take() {
+            let _ = h.join();
+        }
         for s in &self.shards {
             s.close();
         }
-        let workers: Vec<_> = {
-            let mut g = self.workers.lock().unwrap();
-            g.drain(..).collect()
+        let (slots, retired) = {
+            let mut g = psync::lock(&self.workers);
+            (std::mem::take(&mut g.slots), std::mem::take(&mut g.retired))
         };
-        for w in workers {
-            let _ = w.join();
+        for s in slots {
+            let _ = s.handle.join();
+        }
+        for h in retired {
+            let _ = h.join();
+        }
+        self.cost_model.save_if_dirty();
+        crate::ozaki::tune::flush();
+    }
+}
+
+/// Backoff schedule for [`GemmService::submit_with_retry`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total submission attempts (the first try included); at least 1.
+    pub max_attempts: usize,
+    /// Sleep before the first retry; doubles each attempt after.
+    pub base_backoff: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub max_backoff: Duration,
+    /// Seed of the deterministic jitter stream ([`Rng`]), so retry
+    /// timing is reproducible under test.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 6,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(20),
+            seed: 0x5eed_ba11,
         }
     }
 }
@@ -956,35 +1233,75 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn worker_main(
-    queue: Arc<ShardQueue>,
-    engine: Arc<AdpEngine>,
-    metrics: Arc<Metrics>,
-    inflight: Arc<AtomicU64>,
-    knobs: CoalesceKnobs,
-) {
+fn worker_main(ctx: WorkerCtx, beat: Arc<AtomicU64>, superseded: Arc<AtomicBool>) {
+    let WorkerCtx { queue, engine, metrics, inflight, knobs, default_deadline } = ctx;
     loop {
+        beat.store(0, Ordering::SeqCst); // idle: blocked in pop
         let item = match queue.pop() {
             Some(item) => item,
             None => break, // closed and drained
         };
+        beat.store(monotonic_ms(), Ordering::SeqCst);
+        if faultinject::fires(faultinject::site::WORKER_PANIC) {
+            // A worker killed mid-request: decrement inflight for the
+            // items in hand (their InflightGuards never get built), then
+            // unwind — the reply drop guards turn every dropped reply
+            // into `ReplyLost`, and the supervisor respawns the slot.
+            inflight.fetch_sub(item.len() as u64, Ordering::SeqCst);
+            panic!("injected fault: worker killed mid-request");
+        }
+        faultinject::hang(faultinject::site::WORKER_HANG);
         match item {
-            QueueItem::Batch(reqs) => process_group(&engine, reqs, &metrics, &inflight),
+            QueueItem::Batch(reqs) => {
+                process_group(&engine, reqs, &metrics, &inflight, default_deadline)
+            }
             QueueItem::One(req) => {
                 if !knobs.coalesce {
-                    process_single(&engine, req, &metrics, &inflight);
-                    continue;
-                }
-                let mut batch = vec![req];
-                queue.drain_into(&mut batch, knobs.max_batch, Instant::now() + knobs.window);
-                if batch.len() == 1 {
-                    process_single(&engine, batch.pop().expect("len checked"), &metrics, &inflight);
+                    process_single(&engine, req, &metrics, &inflight, default_deadline);
                 } else {
-                    process_group(&engine, batch, &metrics, &inflight);
+                    let mut batch = vec![req];
+                    queue.drain_into(&mut batch, knobs.max_batch, Instant::now() + knobs.window);
+                    if faultinject::fires(faultinject::site::DRAIN_COALESCE) {
+                        inflight.fetch_sub(batch.len() as u64, Ordering::SeqCst);
+                        panic!("injected fault: coalescing drain panicked");
+                    }
+                    if batch.len() == 1 {
+                        let req = batch.pop().expect("len checked");
+                        process_single(&engine, req, &metrics, &inflight, default_deadline);
+                    } else {
+                        process_group(&engine, batch, &metrics, &inflight, default_deadline);
+                    }
                 }
             }
         }
+        if superseded.load(Ordering::SeqCst) {
+            // The supervisor replaced this worker while it looked hung;
+            // its current request was still answered (above), but it must
+            // not keep draining alongside its replacement.
+            break;
+        }
     }
+    beat.store(0, Ordering::SeqCst);
+}
+
+/// Whether `req` expired in the queue; sheds it (typed reply + metric)
+/// when so. Called at dequeue, before any compute is spent.
+fn shed_if_expired(
+    req: &mut GemmRequest,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+    default_deadline: Option<Duration>,
+) -> bool {
+    let Some(d) = req.deadline.or(default_deadline) else { return false };
+    if req.submitted.elapsed() <= d {
+        return false;
+    }
+    {
+        let _guard = InflightGuard(inflight);
+    }
+    metrics.record_shed(req.tier, 1);
+    req.reply.send(Err(GemmError::DeadlineExceeded));
+    true
 }
 
 fn process_single(
@@ -992,7 +1309,11 @@ fn process_single(
     mut req: GemmRequest,
     metrics: &Metrics,
     inflight: &AtomicU64,
+    default_deadline: Option<Duration>,
 ) {
+    if shed_if_expired(&mut req, metrics, inflight, default_deadline) {
+        return;
+    }
     // Pre-validate: an invalid shape is a per-request error response,
     // never a worker-killing assert.
     if req.a.cols != req.b.rows {
@@ -1040,13 +1361,25 @@ fn process_group(
     reqs: Vec<GemmRequest>,
     metrics: &Metrics,
     inflight: &AtomicU64,
+    default_deadline: Option<Duration>,
 ) {
+    // Deadline shedding first: an expired member leaves the group before
+    // bucketing, so no schedule is built around work nobody wants.
+    let mut reqs: Vec<GemmRequest> = reqs
+        .into_iter()
+        .filter_map(|mut r| {
+            (!shed_if_expired(&mut r, metrics, inflight, default_deadline)).then_some(r)
+        })
+        .collect();
+    if reqs.is_empty() {
+        return;
+    }
     // Shape-mismatched requests cannot enter a grouped schedule; they
     // get an explicit typed error response — a reply sender is never
     // dropped silently — without killing the worker or the rest of the
     // group.
     let (valid, invalid): (Vec<GemmRequest>, Vec<GemmRequest>) =
-        reqs.into_iter().partition(|r| r.a.cols == r.b.rows);
+        reqs.drain(..).partition(|r| r.a.cols == r.b.rows);
     for mut req in invalid {
         {
             let _guard = InflightGuard(inflight);
@@ -1401,9 +1734,9 @@ mod tests {
         fn emulate(&self, _: &HeuristicInput) -> bool {
             self.entered.store(true, Ordering::SeqCst);
             let (m, cv) = &*self.gate;
-            let mut open = m.lock().unwrap();
+            let mut open = psync::lock(m);
             while !*open {
-                open = cv.wait(open).unwrap();
+                open = psync::wait(cv, open);
             }
             true
         }
@@ -1428,7 +1761,7 @@ mod tests {
 
     fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
         let (m, cv) = &**gate;
-        *m.lock().unwrap() = true;
+        *psync::lock(m) = true;
         cv.notify_all();
     }
 
@@ -1533,12 +1866,12 @@ mod tests {
         let (o1, o2) = (order.clone(), order.clone());
         svc.submit_callback(Matrix::identity(6), Matrix::identity(6), Priority::Batch, move |r| {
             assert!(r.is_ok());
-            o1.lock().unwrap().push("batch");
+            psync::lock(&o1).push("batch");
         })
         .expect("admitted");
         svc.submit_callback(Matrix::identity(8), Matrix::identity(8), Priority::High, move |r| {
             assert!(r.is_ok());
-            o2.lock().unwrap().push("high");
+            psync::lock(&o2).push("high");
         })
         .expect("admitted");
         open_gate(&gate);
@@ -1547,7 +1880,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(1));
         }
         assert_eq!(
-            *order.lock().unwrap(),
+            *psync::lock(&order),
             vec!["high", "batch"],
             "High must be dequeued before Batch even when enqueued later"
         );
@@ -1926,6 +2259,186 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_a_typed_error() {
+        let cfg = ServiceConfig {
+            workers: 1,
+            use_artifacts: false,
+            default_deadline: Some(Duration::from_millis(25)),
+            ..Default::default()
+        };
+        let (svc, entered, gate) = gated_service(cfg);
+        // r1 dequeues fresh (inside its deadline) and parks in the
+        // engine: shedding is a *dequeue* decision, in-flight work is
+        // never aborted.
+        let rx1 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // r2 queues behind the parked worker and expires there.
+        let rx2 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        std::thread::sleep(Duration::from_millis(60));
+        open_gate(&gate);
+        assert!(rx1.recv().unwrap().is_ok(), "in-flight request is not shed");
+        assert_eq!(rx2.recv().unwrap().err(), Some(GemmError::DeadlineExceeded));
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.shed_expired, 1);
+        assert_eq!(snap.tiers[Priority::Normal.index()].shed, 1);
+        // Shedding isn't sticky: a fresh request completes normally.
+        assert!(svc.gemm_blocking(Matrix::identity(4), Matrix::identity(4)).is_ok());
+        assert_eq!(svc.inflight(), 0, "shed requests must not leak the inflight counter");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_the_config_default() {
+        // No service-wide deadline: only the request that carries its own
+        // is shed.
+        let cfg = ServiceConfig { workers: 1, use_artifacts: false, ..Default::default() };
+        let (svc, entered, gate) = gated_service(cfg);
+        let rx1 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t = svc
+            .submit_deadline(
+                Matrix::identity(4),
+                Matrix::identity(4),
+                Priority::High,
+                Duration::from_millis(5),
+            )
+            .expect("admitted");
+        let rx3 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        std::thread::sleep(Duration::from_millis(30));
+        open_gate(&gate);
+        assert!(rx1.recv().unwrap().is_ok());
+        assert_eq!(t.wait().err(), Some(GemmError::DeadlineExceeded));
+        assert!(rx3.recv().unwrap().is_ok(), "requests without a deadline are never shed");
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.shed_expired, 1);
+        assert_eq!(snap.tiers[Priority::High.index()].shed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_with_retry_exhausts_then_succeeds_after_drain() {
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            use_artifacts: false,
+            ..Default::default()
+        };
+        let (svc, entered, gate) = gated_service(cfg);
+        let rx1 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rx2 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        // Against a queue that stays full, a bounded budget exhausts and
+        // hands the operands back with the retryable verdict.
+        let tight = RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_micros(200),
+            seed: 7,
+        };
+        let rej = svc
+            .submit_with_retry(Matrix::identity(4), Matrix::identity(4), Priority::Normal, &tight)
+            .unwrap_err();
+        assert!(rej.error.is_retryable());
+        // Once the backlog drains, the backoff loop wins.
+        open_gate(&gate);
+        let roomy = RetryPolicy {
+            max_attempts: 500,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(2),
+            seed: 8,
+        };
+        let t = svc
+            .submit_with_retry(rej.a, rej.b, Priority::Normal, &roomy)
+            .expect("admitted after drain");
+        assert!(t.wait().is_ok());
+        assert!(rx1.recv().unwrap().is_ok());
+        assert!(rx2.recv().unwrap().is_ok());
+        svc.shutdown();
+        // Permanent rejections short-circuit the backoff loop.
+        let rej = svc
+            .submit_with_retry(
+                Matrix::identity(2),
+                Matrix::identity(2),
+                Priority::Normal,
+                &RetryPolicy::default(),
+            )
+            .unwrap_err();
+        assert_eq!(rej.error, SubmitError::ServiceStopped);
+    }
+
+    /// Heuristic that parks only its *first* caller — so a respawned
+    /// replacement worker sails through while the original stays hung.
+    struct ParkFirstHeuristic {
+        parked: Arc<AtomicBool>,
+        gate: Gate,
+    }
+
+    impl SelectionHeuristic for ParkFirstHeuristic {
+        fn emulate(&self, _: &HeuristicInput) -> bool {
+            if !self.parked.swap(true, Ordering::SeqCst) {
+                let (m, cv) = &*self.gate;
+                let mut open = psync::lock(m);
+                while !*open {
+                    open = psync::wait(cv, open);
+                }
+            }
+            true
+        }
+        fn name(&self) -> &'static str {
+            "park-first"
+        }
+    }
+
+    #[test]
+    fn supervisor_respawns_a_hung_worker_and_the_shard_keeps_serving() {
+        let cfg = ServiceConfig {
+            workers: 1,
+            use_artifacts: false,
+            default_tier: AccuracyTier::GuaranteedFp64,
+            supervisor_poll: Duration::from_millis(2),
+            hang_threshold: Duration::from_millis(40),
+            ..Default::default()
+        };
+        let parked = Arc::new(AtomicBool::new(false));
+        let gate: Gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let svc = {
+            let (parked, gate) = (parked.clone(), gate.clone());
+            GemmService::start(cfg, None, move || {
+                Box::new(ParkFirstHeuristic { parked: parked.clone(), gate: gate.clone() })
+            })
+        };
+        // r1 parks the shard's only worker inside the engine — to the
+        // supervisor this is indistinguishable from a hang.
+        let rx1 = svc.submit(Matrix::identity(4), Matrix::identity(4)).expect("open");
+        while !parked.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // r2 queues behind the hang; only a respawned replacement can
+        // serve it while the original stays parked.
+        let rx2 = svc.submit(Matrix::identity(6), Matrix::identity(6)).expect("open");
+        let r2 = rx2
+            .recv_timeout(Duration::from_secs(10))
+            .expect("replacement worker must pick up the backlog")
+            .expect("served");
+        assert_eq!(r2.c.at(5, 5), 1.0);
+        assert!(svc.metrics.snapshot().worker_respawns >= 1, "respawn must be counted");
+        // The hung worker recovers: its request still gets its one valid
+        // reply, then the superseded worker retires instead of
+        // double-draining alongside its replacement.
+        open_gate(&gate);
+        assert!(rx1.recv().unwrap().is_ok());
+        assert!(svc.gemm_blocking(Matrix::identity(3), Matrix::identity(3)).is_ok());
+        assert_eq!(svc.inflight(), 0);
         svc.shutdown();
     }
 }

@@ -18,10 +18,19 @@
 //! additionally accepts
 //! `--shards S` to split the queue into S shape-routed shards (each with
 //! its own worker-pool slice), `--coalesce true` to enable the grouped
-//! pipeline (micro-batching window + shape buckets + slice cache) and
+//! pipeline (micro-batching window + shape buckets + slice cache),
 //! `--batch B` to size the shared-A request groups it submits (default
-//! 8). For sustained mixed-shape saturation with per-tier SLO reporting
-//! see `examples/load_gen.rs` (`BENCH_service.json`).
+//! 8) and `--deadline-ms D` to shed requests whose queue wait exceeds D
+//! milliseconds (0 = never shed, the default). For sustained
+//! mixed-shape saturation with per-tier SLO reporting see
+//! `examples/load_gen.rs` (`BENCH_service.json`).
+//!
+//! Fault injection (chaos drills): `ADP_FAULTS=site=trigger[@arg],...`
+//! arms deterministic faults at named sites (`ADP_FAULTS_SEED` seeds the
+//! probabilistic triggers); see `util::faultinject` for the grammar and
+//! the site list. Disarmed (the default), every site is a single
+//! relaxed atomic load. `serve` prints the self-healing counters
+//! (shed/respawns/quarantines/lock recoveries) after each run.
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs); clap is
 //! unavailable in the offline environment.
@@ -192,6 +201,7 @@ fn cmd_serve(args: &Args) {
     let coalesce = args.str("coalesce", "false") == "true";
     let batch = args.usize("batch", 8).max(1);
     let shards = args.usize("shards", 1).max(1);
+    let deadline_ms = args.usize("deadline-ms", 0);
     let rt = runtime(args);
     let tier = accuracy_tier(args);
     let cfg = ServiceConfig {
@@ -200,6 +210,8 @@ fn cmd_serve(args: &Args) {
         backend: compute_spec(args),
         coalesce,
         default_tier: tier,
+        default_deadline: (deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(deadline_ms as u64)),
         ..Default::default()
     };
     let svc = GemmService::start(cfg, rt, || Box::new(AlwaysEmulate));
@@ -234,13 +246,22 @@ fn cmd_serve(args: &Args) {
         }
     }
     let mut lat = Vec::new();
+    let mut shed = 0u64;
     for rx in pending {
-        let resp = rx.recv().expect("service dropped reply").expect("request failed");
-        lat.push(resp.total_s);
+        match rx.recv().expect("service dropped reply") {
+            Ok(resp) => lat.push(resp.total_s),
+            Err(adp_dgemm::coordinator::service::GemmError::DeadlineExceeded) => shed += 1,
+            Err(e) => panic!("request failed: {e}"),
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let snap = svc.metrics.snapshot();
+    if lat.is_empty() {
+        println!("{requests} reqs x n={n}: every request shed at its deadline ({shed} shed)");
+        svc.shutdown();
+        return;
+    }
     println!(
         "{requests} reqs x n={n}, {workers} workers / {shards} shard(s), tier {}{}: {:.2} req/s, p50 {:.2} ms, p99 {:.2} ms",
         tier.label(),
@@ -303,6 +324,13 @@ fn cmd_serve(args: &Args) {
         snap.workspace_checkouts,
         snap.workspace_fresh
     );
+    println!(
+        "self-healing: shed_expired={} worker_respawns={} artifacts_quarantined={} lock_recoveries={}",
+        snap.shed_expired, snap.worker_respawns, snap.artifacts_quarantined, snap.lock_recoveries
+    );
+    // shutdown() flushes the learned cost model and tile-tuning catalog,
+    // so a warm model survives an orderly exit (ADP_COSTMODEL /
+    // ADP_TUNE_CATALOG).
     svc.shutdown();
 }
 

@@ -42,6 +42,7 @@ use super::slicing::{crt_slice_a, crt_slice_b, slice_a, slice_b, SlicedMatrix};
 use super::{OzakiConfig, SliceEncoding};
 use crate::backend::{ComputeBackend, SliceBatch, WorkspaceGuard, WorkspacePool};
 use crate::linalg::Matrix;
+use crate::util::sync as psync;
 
 /// Which operand role a cached decomposition was built for. A-slicing
 /// stores row-major A, B-slicing stores B transposed — the two are not
@@ -104,7 +105,7 @@ impl SliceCache {
     /// Acquire (or insert) the cell for `key`, applying the LRU policy.
     /// Returns the cell and whether it was already resident.
     fn cell_for(&self, key: SliceKey) -> (Arc<CacheCell>, bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         if let Some(c) = g.map.get(&key) {
             let c = c.clone();
             // LRU bump: move to the back of the order list.
@@ -210,7 +211,7 @@ impl SliceCache {
 
     /// Resident entries.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        psync::lock(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -219,7 +220,7 @@ impl SliceCache {
 
     /// Drop every resident entry (in-flight `Arc`s stay valid).
     pub fn clear(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = psync::lock(&self.inner);
         g.map.clear();
         g.order.clear();
     }

@@ -35,6 +35,7 @@ use super::tune::{self, TileShape};
 use crate::backend::{ComputeBackend, SerialBackend, Workspace, WorkspacePool};
 use crate::dd::Dd;
 use crate::linalg::Matrix;
+use crate::util::sync as psync;
 
 /// The modulus basis, largest first: 2^8, then the odd coprimes below it
 /// in descending order (255 = 3·5·17, 253 = 11·23, 247 = 13·19,
@@ -187,7 +188,7 @@ impl CrtBasis {
     /// tables are pure functions of the prefix length).
     pub fn get(nm: usize) -> Arc<CrtBasis> {
         let cache = BASIS_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-        let mut g = cache.lock().unwrap();
+        let mut g = psync::lock(cache);
         g.entry(nm).or_insert_with(|| Arc::new(CrtBasis::new(nm))).clone()
     }
 

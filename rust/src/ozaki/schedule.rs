@@ -17,6 +17,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::OzakiConfig;
+use crate::util::sync as psync;
 
 /// One weight level: a range into the flat pair arena plus its exponent.
 struct Level {
@@ -83,7 +84,7 @@ impl PairSchedule {
     /// today's entries.
     pub fn get_truncated(s: usize, rb: i32, depth: usize) -> Arc<PairSchedule> {
         let cache = SCHEDULE_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-        let mut g = cache.lock().unwrap();
+        let mut g = psync::lock(cache);
         g.entry((s, rb, depth))
             .or_insert_with(|| Arc::new(PairSchedule::new_truncated(s, rb, depth)))
             .clone()

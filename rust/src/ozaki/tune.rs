@@ -51,7 +51,10 @@ use super::slicing::SlicedMatrix;
 use super::SliceEncoding;
 use crate::backend::WorkspacePool;
 use crate::linalg::Matrix;
+use crate::runtime::quarantine;
 use crate::runtime::tuning::{self, TuningEntry};
+use crate::util::faultinject;
+use crate::util::sync as psync;
 
 /// Output-tile geometry of the fused engine (rows × cols of one tile).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -179,7 +182,7 @@ fn state() -> &'static Mutex<TuneState> {
 /// identical, so a concurrently-running GEMM picking either value is
 /// still correct.
 pub fn force_shape(shape: Option<TileShape>) {
-    *forced().lock().unwrap() = shape;
+    *psync::lock(forced()) = shape;
 }
 
 fn forced() -> &'static Mutex<Option<TileShape>> {
@@ -231,14 +234,30 @@ fn catalog_path() -> Option<&'static PathBuf> {
 
 /// Load the persisted catalog into `st` (once per process; unknown
 /// kernels/buckets and malformed shapes are skipped, not errors — the
-/// catalog may come from another machine or an older binary).
+/// catalog may come from another machine or an older binary). A catalog
+/// that fails to parse at all is quarantined (renamed to `<path>.corrupt`,
+/// warned once, counted) instead of silently dropped: the run continues
+/// on probe defaults and the next process starts from a clean slate.
 fn ensure_loaded(st: &mut TuneState) {
     if st.loaded {
         return;
     }
     st.loaded = true;
     let Some(path) = catalog_path() else { return };
-    let Ok(entries) = tuning::load(path) else { return };
+    if !path.exists() {
+        return; // cold start, nothing to load or quarantine
+    }
+    let entries = match tuning::load(path) {
+        Ok(entries) if !faultinject::fires(faultinject::site::TUNE_LOAD_CORRUPT) => entries,
+        Ok(_) => {
+            quarantine::quarantine_file(path, "tile-tuning catalog", "injected corruption");
+            return;
+        }
+        Err(e) => {
+            quarantine::quarantine_file(path, "tile-tuning catalog", &e);
+            return;
+        }
+    };
     for e in entries {
         let (Some(kern), Some(bucket)) = (KernelId::parse(&e.kernel), ShapeBucket::parse(&e.bucket))
         else {
@@ -318,7 +337,7 @@ fn probe_bucket(kern: &'static dyn SliceKernel, bucket: ShapeBucket) -> (TileSha
 /// `ADP_TILE` env pin → `ADP_TUNE=off` baseline → small-problem baseline
 /// → cached/persisted winner → live probe (cached + persisted).
 pub fn tile_shape_for(kern: KernelId, m: usize, n: usize) -> TileShape {
-    if let Some(shape) = *forced().lock().unwrap() {
+    if let Some(shape) = *psync::lock(forced()) {
         return shape;
     }
     if let Some(shape) = env_tile() {
@@ -334,7 +353,7 @@ pub fn tile_shape_for(kern: KernelId, m: usize, n: usize) -> TileShape {
     let Some(kernel) = kernel::kernel_by_id(kern) else {
         return TileShape::BASELINE;
     };
-    let mut st = state().lock().unwrap();
+    let mut st = psync::lock(state());
     ensure_loaded(&mut st);
     if let Some(&shape) = st.shapes.get(&(kern, bucket)) {
         return shape;
@@ -353,9 +372,21 @@ pub fn tile_shape_for(kern: KernelId, m: usize, n: usize) -> TileShape {
 /// most recent probe (or the persisted catalog). `None` until something
 /// probed this kernel — callers keep their own fallback measurement.
 pub fn measured_pair_ns(kern: KernelId) -> Option<f64> {
-    let mut st = state().lock().unwrap();
+    let mut st = psync::lock(state());
     ensure_loaded(&mut st);
     st.pair_ns.get(&kern).copied()
+}
+
+/// Persist the cached winners now (orderly-shutdown flush). Today every
+/// probe already persists eagerly, so this is cheap; it exists so
+/// `GemmService::shutdown` / `adp serve` exit can guarantee the catalog
+/// is on disk even if a future change batches the incidental saves.
+/// No-op when nothing was probed or persistence is disabled.
+pub fn flush() {
+    let st = psync::lock(state());
+    if st.loaded && !st.shapes.is_empty() {
+        persist(&st);
+    }
 }
 
 /// Force-resolve the tuning entry for `(kern, bucket)`, reporting where
@@ -367,7 +398,7 @@ pub fn tune_probe(kern: KernelId, bucket: ShapeBucket) -> (TileShape, bool) {
     let Some(kernel) = kernel::kernel_by_id(kern) else {
         return (TileShape::BASELINE, false);
     };
-    let mut st = state().lock().unwrap();
+    let mut st = psync::lock(state());
     ensure_loaded(&mut st);
     if let Some(&shape) = st.shapes.get(&(kern, bucket)) {
         return (shape, true);

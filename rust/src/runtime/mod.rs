@@ -9,6 +9,7 @@
 
 pub mod catalog;
 pub mod handle;
+pub mod quarantine;
 pub mod tuning;
 
 pub use catalog::{ArtifactKind, Catalog, CatalogEntry};

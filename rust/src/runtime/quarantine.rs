@@ -1,0 +1,83 @@
+//! Corrupt-artifact quarantine.
+//!
+//! Persisted catalogs (tile-tuning, cost-model) are *accelerants*, not
+//! correctness inputs: a run without them is merely cold. A corrupt or
+//! unreadable catalog therefore must not crash the run — but silently
+//! ignoring it (the old `let Ok(..) else return` behavior) is worse: the
+//! file stays corrupt forever, every future process re-reads the garbage,
+//! and nobody learns it happened.
+//!
+//! [`quarantine_file`] implements the middle path: rename the bad file to
+//! `<path>.corrupt` so the next run starts clean (and the evidence is
+//! preserved for inspection), warn once per path per process, and count
+//! the event so service metrics can surface it.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::sync as psync;
+
+static TOTAL: AtomicU64 = AtomicU64::new(0);
+
+fn warned() -> &'static Mutex<HashSet<PathBuf>> {
+    static WARNED: OnceLock<Mutex<HashSet<PathBuf>>> = OnceLock::new();
+    WARNED.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
+/// Process-wide count of quarantined artifacts (service metrics gauge).
+pub fn total() -> u64 {
+    TOTAL.load(Ordering::Relaxed)
+}
+
+/// Quarantine a corrupt persisted artifact: rename it to `<path>.corrupt`
+/// (best effort — an unreadable path may also be un-renamable), warn once
+/// per path, and count the event. Returns the quarantine path when the
+/// rename succeeded. `what` names the artifact kind for the warning
+/// (e.g. `"tile-tuning catalog"`); `err` is the parse/io error.
+pub fn quarantine_file(path: &Path, what: &str, err: &str) -> Option<PathBuf> {
+    TOTAL.fetch_add(1, Ordering::Relaxed);
+    let mut q = path.as_os_str().to_os_string();
+    q.push(".corrupt");
+    let q = PathBuf::from(q);
+    let renamed = std::fs::rename(path, &q).is_ok();
+    if psync::lock(warned()).insert(path.to_path_buf()) {
+        if renamed {
+            eprintln!(
+                "[adp] corrupt {what} at {}: {err}; quarantined to {} and continuing on defaults",
+                path.display(),
+                q.display()
+            );
+        } else {
+            eprintln!(
+                "[adp] corrupt {what} at {}: {err}; could not quarantine, continuing on defaults",
+                path.display()
+            );
+        }
+    }
+    renamed.then_some(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renames_and_counts() {
+        let dir = std::env::temp_dir().join(format!("adp_quarantine_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("catalog.txt");
+        std::fs::write(&path, "garbage").unwrap();
+        let before = total();
+        let q = quarantine_file(&path, "test catalog", "not a catalog").expect("renamed");
+        assert!(!path.exists(), "original must be moved aside");
+        assert_eq!(std::fs::read_to_string(&q).unwrap(), "garbage", "evidence preserved");
+        assert_eq!(total(), before + 1);
+        // A missing file still counts (the caller saw *something* wrong)
+        // but cannot be renamed.
+        assert_eq!(quarantine_file(&path, "test catalog", "io error"), None);
+        assert_eq!(total(), before + 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

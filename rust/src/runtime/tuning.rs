@@ -23,6 +23,8 @@
 
 use std::path::Path;
 
+use crate::util::faultinject;
+
 /// One persisted tuning decision.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TuningEntry {
@@ -97,7 +99,22 @@ pub fn load(path: &Path) -> Result<Vec<TuningEntry>, String> {
 /// Save a catalog atomically: write `<path>.tmp`, then rename over the
 /// destination, so readers never observe a torn file.
 pub fn save(path: &Path, entries: &[TuningEntry]) -> Result<(), String> {
-    let text = serialize(entries);
+    let mut text = serialize(entries);
+    if faultinject::fires(faultinject::site::TUNE_SAVE_TORN) {
+        // Simulate a torn write slipping past the tmp+rename protocol:
+        // half the bytes (plus a line parse() must reject) land at the
+        // final path directly, exactly what a crashed non-atomic writer
+        // leaves behind. The next load quarantines it.
+        text.truncate(text.len() / 2);
+        text.push_str("\ntorn\n");
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        return std::fs::write(path, text)
+            .map_err(|e| format!("writing {}: {e}", path.display()));
+    }
     let mut tmp = path.as_os_str().to_os_string();
     tmp.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp);

@@ -1,0 +1,399 @@
+//! Deterministic fault-injection harness.
+//!
+//! Production components fail in ways unit tests rarely exercise: a
+//! worker panics mid-request or while holding a shared lock, a persisted
+//! catalog arrives corrupt, a write is torn halfway, a thread hangs. This
+//! module gives every such failure a *named site* that the code under
+//! test consults (`fires(site)`); the chaos suite (`rust/tests/chaos.rs`)
+//! and the CI fault matrix arm sites deterministically and assert the
+//! service self-heals.
+//!
+//! Disarmed cost: `fires()` is a single relaxed atomic load plus a
+//! predictable branch — no allocation, no lock, no site lookup — so the
+//! hot path pays nothing when no fault is armed (verified by the scan /
+//! dispatch arms of `BENCH_hotpath.json` running with the harness
+//! compiled in but disarmed).
+//!
+//! Arming:
+//! - env: `ADP_FAULTS="site=trigger[@arg],site=trigger[@arg]"`, read once
+//!   on first use; `ADP_FAULTS_SEED` seeds the `prob:` trigger streams.
+//! - programmatic: [`arm`]/[`arm_seeded`]/[`disarm`] for in-process tests.
+//!
+//! Triggers: `always`, `never`, `nth:K` (fire on the K-th hit only,
+//! 1-based), `first:K` (hits 1..=K), `every:K`, `prob:P` (seeded,
+//! deterministic per site). The optional `@arg` integer is site-specific
+//! (e.g. hang duration in milliseconds, torn-write byte count).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use super::rng::Rng;
+use super::sync as psync;
+
+/// Canonical injection-site names, one per failure mode threaded through
+/// the stack. Keep in sync with the README failure-modes table.
+pub mod site {
+    /// Worker thread panics mid-request, outside the engine
+    /// `catch_unwind` (unwinds `worker_main`; supervisor must respawn).
+    pub const WORKER_PANIC: &str = "worker.exec.panic";
+    /// Worker panics while holding the shared `Metrics` lock
+    /// (poisons it; every later metrics call must recover).
+    pub const WORKER_LOCK_PANIC: &str = "worker.lock.panic";
+    /// Worker hangs (sleeps `@arg` ms, default 1000) before serving.
+    pub const WORKER_HANG: &str = "worker.hang";
+    /// Success reply is dropped before delivery; the `ReplySlot` drop
+    /// guard must still deliver a typed error (never silence).
+    pub const REPLY_DROP: &str = "reply.drop";
+    /// Panic inside `WorkspacePool::checkout` (caught by the engine
+    /// `catch_unwind`, surfaces as `GemmError::EnginePanic`).
+    pub const WORKSPACE_CHECKOUT: &str = "workspace.checkout.panic";
+    /// Panic at kernel dispatch inside the engine.
+    pub const KERNEL_DISPATCH: &str = "kernel.dispatch.panic";
+    /// Treat the persisted cost model as corrupt at load.
+    pub const COSTMODEL_LOAD_CORRUPT: &str = "costmodel.load.corrupt";
+    /// Tear the cost-model save: persist only the first `@arg` bytes.
+    pub const COSTMODEL_SAVE_TORN: &str = "costmodel.save.torn";
+    /// Treat the tile-tuning catalog as corrupt at load.
+    pub const TUNE_LOAD_CORRUPT: &str = "tune.load.corrupt";
+    /// Tear the tuning-catalog save: persist only the first `@arg` bytes.
+    pub const TUNE_SAVE_TORN: &str = "tune.save.torn";
+    /// Panic inside the coalescing drain while holding the shard lock
+    /// (poisons `ShardState`; queue ops must recover).
+    pub const DRAIN_COALESCE: &str = "drain.coalesce.panic";
+}
+
+/// All sites, for spec validation and the README/CI cross-check.
+pub const ALL_SITES: &[&str] = &[
+    site::WORKER_PANIC,
+    site::WORKER_LOCK_PANIC,
+    site::WORKER_HANG,
+    site::REPLY_DROP,
+    site::WORKSPACE_CHECKOUT,
+    site::KERNEL_DISPATCH,
+    site::COSTMODEL_LOAD_CORRUPT,
+    site::COSTMODEL_SAVE_TORN,
+    site::TUNE_LOAD_CORRUPT,
+    site::TUNE_SAVE_TORN,
+    site::DRAIN_COALESCE,
+];
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Trigger {
+    Always,
+    Never,
+    Nth(u64),
+    First(u64),
+    Every(u64),
+    Prob(f64),
+}
+
+#[derive(Debug)]
+struct SiteState {
+    trigger: Trigger,
+    arg: Option<u64>,
+    hits: u64,
+    fired: u64,
+    rng: Rng,
+}
+
+impl SiteState {
+    fn decide(&mut self) -> bool {
+        self.hits += 1;
+        let fire = match self.trigger {
+            Trigger::Always => true,
+            Trigger::Never => false,
+            Trigger::Nth(k) => self.hits == k,
+            Trigger::First(k) => self.hits <= k,
+            Trigger::Every(k) => k > 0 && self.hits % k == 0,
+            Trigger::Prob(p) => self.rng.f64() < p,
+        };
+        if fire {
+            self.fired += 1;
+        }
+        fire
+    }
+}
+
+/// 0 = env not yet consulted, 1 = disarmed, 2 = armed.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn table() -> &'static Mutex<HashMap<&'static str, SiteState>> {
+    static TABLE: OnceLock<Mutex<HashMap<&'static str, SiteState>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Leak-free interning is unnecessary: sites are `&'static str`
+/// constants; specs referencing unknown sites are rejected at parse.
+fn canonical(site: &str) -> Option<&'static str> {
+    ALL_SITES.iter().copied().find(|s| *s == site)
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger, String> {
+    if let Some(rest) = s.strip_prefix("nth:") {
+        return rest
+            .parse()
+            .map(Trigger::Nth)
+            .map_err(|e| format!("bad nth count {rest:?}: {e}"));
+    }
+    if let Some(rest) = s.strip_prefix("first:") {
+        return rest
+            .parse()
+            .map(Trigger::First)
+            .map_err(|e| format!("bad first count {rest:?}: {e}"));
+    }
+    if let Some(rest) = s.strip_prefix("every:") {
+        return rest
+            .parse()
+            .map(Trigger::Every)
+            .map_err(|e| format!("bad every count {rest:?}: {e}"));
+    }
+    if let Some(rest) = s.strip_prefix("prob:") {
+        let p: f64 = rest
+            .parse()
+            .map_err(|e| format!("bad probability {rest:?}: {e}"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("probability {p} outside [0,1]"));
+        }
+        return Ok(Trigger::Prob(p));
+    }
+    match s {
+        "always" => Ok(Trigger::Always),
+        "never" => Ok(Trigger::Never),
+        other => Err(format!("unknown trigger {other:?}")),
+    }
+}
+
+fn parse_spec(spec: &str, seed: u64) -> Result<HashMap<&'static str, SiteState>, String> {
+    let mut map = HashMap::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, rhs) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("fault entry {entry:?} missing '='"))?;
+        let name = canonical(name.trim())
+            .ok_or_else(|| format!("unknown fault site {:?}", name.trim()))?;
+        let (trig_s, arg) = match rhs.split_once('@') {
+            Some((t, a)) => {
+                let arg: u64 = a
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("bad @arg {a:?} for {name}: {e}"))?;
+                (t.trim(), Some(arg))
+            }
+            None => (rhs.trim(), None),
+        };
+        let trigger = parse_trigger(trig_s).map_err(|e| format!("{name}: {e}"))?;
+        // Per-site deterministic stream: fork the spec seed by the FNV-1a
+        // hash of the site name so sites are independent but reproducible.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        map.insert(
+            name,
+            SiteState {
+                trigger,
+                arg,
+                hits: 0,
+                fired: 0,
+                rng: Rng::new(seed ^ h),
+            },
+        );
+    }
+    Ok(map)
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let armed = match std::env::var("ADP_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let seed = std::env::var("ADP_FAULTS_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            match parse_spec(&spec, seed) {
+                Ok(map) => {
+                    let armed = !map.is_empty();
+                    *psync::lock(table()) = map;
+                    armed
+                }
+                Err(e) => {
+                    eprintln!("[adp] ADP_FAULTS ignored: {e}");
+                    false
+                }
+            }
+        }
+        _ => false,
+    };
+    MODE.store(if armed { 2 } else { 1 }, Ordering::Release);
+    armed
+}
+
+#[inline(always)]
+fn armed_now() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => init_from_env(),
+    }
+}
+
+/// Does the named site fire on this hit? Counts the hit when armed.
+/// Disarmed, this is one relaxed load + branch — the no-op fast path.
+#[inline]
+pub fn fires(site: &'static str) -> bool {
+    if !armed_now() {
+        return false;
+    }
+    fires_slow(site)
+}
+
+#[cold]
+fn fires_slow(site: &'static str) -> bool {
+    let mut t = psync::lock(table());
+    match t.get_mut(site) {
+        Some(s) => s.decide(),
+        None => false,
+    }
+}
+
+/// Site-specific `@arg` of an armed entry (e.g. hang ms, torn-byte count).
+pub fn arg(site: &'static str) -> Option<u64> {
+    if !armed_now() {
+        return None;
+    }
+    psync::lock(table()).get(site).and_then(|s| s.arg)
+}
+
+/// Hits recorded at a site since arming (0 when disarmed/unknown).
+pub fn hits(site: &'static str) -> u64 {
+    if !armed_now() {
+        return 0;
+    }
+    psync::lock(table()).get(site).map_or(0, |s| s.hits)
+}
+
+/// Fires recorded at a site since arming.
+pub fn fired(site: &'static str) -> u64 {
+    if !armed_now() {
+        return 0;
+    }
+    psync::lock(table()).get(site).map_or(0, |s| s.fired)
+}
+
+/// Arm programmatically from a spec string (same grammar as `ADP_FAULTS`),
+/// replacing any previous arming. Seeded with 0; see [`arm_seeded`].
+pub fn arm(spec: &str) -> Result<(), String> {
+    arm_seeded(spec, 0)
+}
+
+/// Arm with an explicit seed for `prob:` triggers.
+pub fn arm_seeded(spec: &str, seed: u64) -> Result<(), String> {
+    let map = parse_spec(spec, seed)?;
+    let armed = !map.is_empty();
+    *psync::lock(table()) = map;
+    MODE.store(if armed { 2 } else { 1 }, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm every site. The fast path returns to constant-false.
+pub fn disarm() {
+    psync::lock(table()).clear();
+    MODE.store(1, Ordering::Release);
+}
+
+/// True if any site is armed (env or programmatic).
+pub fn armed() -> bool {
+    armed_now()
+}
+
+/// Convenience for hang sites: when the site fires on this hit, sleep
+/// its `@arg` milliseconds (default 1000), in short slices so disarming
+/// shortens the stall. Sites that don't fire (or aren't armed) cost the
+/// usual `fires` fast path and nothing else.
+pub fn hang(site: &'static str) {
+    if !fires(site) {
+        return;
+    }
+    let total = Duration::from_millis(arg(site).unwrap_or(1000));
+    let start = std::time::Instant::now();
+    while start.elapsed() < total {
+        if !armed_now() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10).min(total));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests mutate the global arming table; the `#[serial]`-style
+    // guard below keeps them from interleaving with each other.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static G: Mutex<()> = Mutex::new(());
+        psync::lock(&G)
+    }
+
+    #[test]
+    fn disarmed_never_fires() {
+        let _g = guard();
+        disarm();
+        for _ in 0..100 {
+            assert!(!fires(site::WORKER_PANIC));
+        }
+        assert_eq!(hits(site::WORKER_PANIC), 0);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = guard();
+        arm("worker.exec.panic=nth:3").unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| fires(site::WORKER_PANIC)).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, false]);
+        assert_eq!(hits(site::WORKER_PANIC), 6);
+        assert_eq!(super::fired(site::WORKER_PANIC), 1);
+        disarm();
+    }
+
+    #[test]
+    fn first_and_every_and_arg() {
+        let _g = guard();
+        arm("worker.hang=first:2@250,drain.coalesce.panic=every:2").unwrap();
+        assert!(fires(site::WORKER_HANG));
+        assert!(fires(site::WORKER_HANG));
+        assert!(!fires(site::WORKER_HANG));
+        assert_eq!(arg(site::WORKER_HANG), Some(250));
+        assert_eq!(
+            (0..4).map(|_| fires(site::DRAIN_COALESCE)).collect::<Vec<_>>(),
+            vec![false, true, false, true]
+        );
+        disarm();
+    }
+
+    #[test]
+    fn prob_is_deterministic_per_seed() {
+        let _g = guard();
+        arm_seeded("kernel.dispatch.panic=prob:0.5", 42).unwrap();
+        let a: Vec<bool> = (0..32).map(|_| fires(site::KERNEL_DISPATCH)).collect();
+        arm_seeded("kernel.dispatch.panic=prob:0.5", 42).unwrap();
+        let b: Vec<bool> = (0..32).map(|_| fires(site::KERNEL_DISPATCH)).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f));
+        disarm();
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let _g = guard();
+        assert!(arm("nonsense.site=always").is_err());
+        assert!(arm("worker.exec.panic=maybe").is_err());
+        assert!(arm("worker.exec.panic=prob:1.5").is_err());
+        assert!(arm("worker.exec.panic").is_err());
+        // A failed arm leaves the harness disarmed.
+        disarm();
+        assert!(!fires(site::WORKER_PANIC));
+    }
+}

@@ -3,8 +3,10 @@
 
 pub mod benchkit;
 pub mod bits;
+pub mod faultinject;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 
 pub use bits::{frexp_exponent, ZERO_EXP};
 pub use rng::Rng;

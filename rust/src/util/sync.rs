@@ -1,0 +1,118 @@
+//! Poison-recovering lock helpers.
+//!
+//! Every piece of shared mutable state in this repo is either a counter
+//! bundle (`Metrics`, `CostModel` EWMA cells) or a cache (`EscPlanCache`,
+//! `SliceCache`, `WorkspacePool`, tuning catalogs). Both are safe to keep
+//! using after a panic unwound while the lock was held: counters may be
+//! off by the one in-flight update, caches may hold a half-inserted entry
+//! that is either valid or will simply be overwritten. What is *not*
+//! acceptable is the std default, where one panic poisons the mutex and
+//! every later `lock().unwrap()` propagates the panic — turning a single
+//! worker fault into whole-service death (the failure mode the chaos
+//! suite injects deliberately).
+//!
+//! `lock`/`wait`/`wait_timeout` therefore recover the guard from a
+//! `PoisonError` instead of unwrapping, and count each recovery so the
+//! event is observable rather than silent. Call sites must not leave
+//! multi-step invariants broken across a panic; the repo's shared state
+//! keeps its invariants per-field, which is why blanket recovery is sound
+//! here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Total poisoned-lock recoveries since process start (all mutexes).
+static RECOVERED: AtomicU64 = AtomicU64::new(0);
+
+#[cold]
+fn note_recovery() {
+    RECOVERED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Process-wide count of poisoned-mutex recoveries.
+pub fn recovered_total() -> u64 {
+    RECOVERED.load(Ordering::Relaxed)
+}
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// `Condvar::wait` that recovers a poisoned guard.
+#[inline]
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// `Condvar::wait_timeout` that recovers a poisoned guard.
+#[inline]
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    match cv.wait_timeout(g, dur) {
+        Ok(pair) => pair,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_after_panic_while_held() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let before = recovered_total();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // std's unwrap would propagate the panic here; we recover.
+        {
+            let mut g = lock(&m);
+            assert_eq!(*g, 7);
+            *g = 8;
+        }
+        assert_eq!(*lock(&m), 8);
+        assert!(recovered_total() > before);
+    }
+
+    #[test]
+    fn wait_timeout_recovers() {
+        let pair = Arc::new((Mutex::new(0u32), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("poison under cv");
+        })
+        .join();
+        let g = lock(&pair.0);
+        let (g, timed_out) = wait_timeout(&pair.1, g, Duration::from_millis(1));
+        assert!(timed_out.timed_out());
+        drop(g);
+    }
+}

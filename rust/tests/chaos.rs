@@ -1,0 +1,539 @@
+//! Chaos suite: deterministic fault injection against the live service.
+//!
+//! Every scenario arms one (or a seeded mix) of the named
+//! `util::faultinject` sites, drives real traffic through a supervised
+//! [`GemmService`], and asserts the four self-healing invariants:
+//!
+//! 1. **No submitter panics or hangs** — every wait is bounded by a
+//!    watchdog; a deadlock or dropped wakeup fails fast.
+//! 2. **Exactly one reply per request** — each receiver yields one
+//!    result (a response or a *typed* [`GemmError`]) and never a second.
+//! 3. **Completed results are bitwise identical to a fault-free run** —
+//!    faults may fail requests, they may not corrupt survivors.
+//! 4. **Throughput recovers once the fault clears** — after `disarm`,
+//!    fresh traffic completes normally (respawned workers, recovered
+//!    locks, quarantined artifacts notwithstanding).
+//!
+//! The fault table is process-global, so scenarios serialize on [`pin`]
+//! and disarm through a drop guard even when an assertion panics.
+//! `ADP_FAULTS_SEED` (the CI chaos matrix knob) seeds the probabilistic
+//! storm scenario; the deterministic scenarios are seed-independent.
+//! The recovery-latency drill writes `BENCH_chaos.json` for CI to
+//! archive next to the perf artifacts.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use adp_dgemm::coordinator::heuristic::AlwaysEmulate;
+use adp_dgemm::coordinator::{GemmError, GemmResult, GemmService, Priority, ServiceConfig};
+use adp_dgemm::linalg::Matrix;
+use adp_dgemm::util::benchkit::{JsonReport, Stats};
+use adp_dgemm::util::faultinject;
+use adp_dgemm::util::Rng;
+
+/// Serializes scenarios: arming is process-global state.
+fn pin() -> MutexGuard<'static, ()> {
+    static PIN: Mutex<()> = Mutex::new(());
+    // A scenario that failed its assertions must not wedge the rest of
+    // the suite: recover the guard instead of unwrapping the poison.
+    PIN.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarms on drop, so a panicking assertion can't leak an armed fault
+/// into the next scenario.
+struct Disarm;
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faultinject::disarm();
+    }
+}
+
+/// Run `f` on a helper thread and fail if it does not finish in `limit`
+/// (invariant 1: no submitter may hang).
+fn with_watchdog(limit: Duration, f: impl FnOnce() + Send + 'static) {
+    let body = std::thread::spawn(f);
+    let deadline = Instant::now() + limit;
+    while !body.is_finished() {
+        assert!(Instant::now() < deadline, "chaos scenario exceeded the {limit:?} watchdog");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    if let Err(e) = body.join() {
+        std::panic::resume_unwind(e);
+    }
+}
+
+/// Service shaped for chaos drills: fast supervisor sweeps so respawns
+/// land within test time, artifacts off (pure in-process pipeline). The
+/// accuracy tier stays at the config default so the suite exercises
+/// whatever `ADP_TIER` the CI matrix leg exports — bitwise comparisons
+/// hold because baseline and faulted runs share the environment.
+fn chaos_cfg(workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        use_artifacts: false,
+        supervisor_poll: Duration::from_millis(2),
+        hang_threshold: Duration::from_millis(60),
+        ..Default::default()
+    }
+}
+
+fn start(cfg: ServiceConfig) -> GemmService {
+    GemmService::start(cfg, None, || Box::new(AlwaysEmulate))
+}
+
+/// Deterministic mixed-shape workload (clean inputs: every request takes
+/// the emulated path, so kernel/workspace fault sites are reached).
+fn workload(seed: u64, n_reqs: usize) -> Vec<(Matrix, Matrix)> {
+    let mut rng = Rng::new(seed);
+    (0..n_reqs)
+        .map(|i| {
+            let n = 6 + (i % 4) * 2;
+            (Matrix::uniform(n, n, -1.0, 1.0, &mut rng), Matrix::uniform(n, n, -1.0, 1.0, &mut rng))
+        })
+        .collect()
+}
+
+/// Reference results from a fault-free service (invariant 3's oracle).
+/// Bitwise identity across worker counts / coalescing / sharding is
+/// pinned by the service unit tests, so one baseline serves any config.
+fn fault_free_baseline(pairs: &[(Matrix, Matrix)]) -> Vec<Matrix> {
+    faultinject::disarm();
+    let svc = start(chaos_cfg(2));
+    let out = pairs
+        .iter()
+        .map(|(a, b)| svc.gemm_blocking(a.clone(), b.clone()).expect("fault-free run serves").c)
+        .collect();
+    svc.shutdown();
+    out
+}
+
+/// Wait until the supervisor has counted `n` respawns. The supervisor
+/// sweep runs every couple of milliseconds, so the counter can lag the
+/// replies; the surrounding watchdog bounds this loop.
+fn await_respawns(svc: &GemmService, n: u64) {
+    while svc.metrics.snapshot().worker_respawns < n {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Invariant 2: exactly one reply, delivered within the watchdog.
+fn recv_one(rx: &Receiver<GemmResult>, limit: Duration) -> GemmResult {
+    let r = rx.recv_timeout(limit).expect("a reply must arrive (no silent loss, no hang)");
+    assert!(rx.try_recv().is_err(), "a request must never receive a second reply");
+    r
+}
+
+fn assert_bitwise(got: &Matrix, want: &Matrix) {
+    assert_eq!(got.rows, want.rows);
+    assert_eq!(got.cols, want.cols);
+    for (x, y) in got.data.iter().zip(&want.data) {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "completed result diverged from the fault-free run"
+        );
+    }
+}
+
+/// Invariant 4: with faults disarmed, fresh traffic completes and
+/// matches the fault-free oracle.
+fn assert_recovers(svc: &GemmService, seed: u64) {
+    faultinject::disarm();
+    let fresh = workload(seed, 4);
+    let oracle = fault_free_baseline(&fresh);
+    for ((a, b), want) in fresh.into_iter().zip(&oracle) {
+        let resp = svc.gemm_blocking(a, b).expect("service must serve after the fault clears");
+        assert_bitwise(&resp.c, want);
+    }
+    assert_eq!(svc.inflight(), 0, "recovered service must not leak inflight counts");
+}
+
+const REPLY_WAIT: Duration = Duration::from_secs(30);
+
+#[test]
+fn worker_panic_storm_respawns_and_survivors_stay_bitwise() {
+    with_watchdog(Duration::from_secs(120), || {
+        let _p = pin();
+        let _d = Disarm;
+        let pairs = workload(0xC4A05_1, 12);
+        let oracle = fault_free_baseline(&pairs);
+        // Every 4th dequeue kills its worker outside the engine
+        // catch_unwind — the hard death the supervisor exists for.
+        faultinject::arm("worker.exec.panic=every:4").unwrap();
+        let svc = start(chaos_cfg(2));
+        let rxs: Vec<_> = pairs
+            .iter()
+            .map(|(a, b)| svc.submit(a.clone(), b.clone()).expect("queues are roomy"))
+            .collect();
+        let mut lost = 0usize;
+        for (i, rx) in rxs.iter().enumerate() {
+            match recv_one(rx, REPLY_WAIT) {
+                Ok(resp) => assert_bitwise(&resp.c, &oracle[i]),
+                Err(GemmError::ReplyLost) => lost += 1,
+                Err(other) => panic!("unexpected error under worker panic: {other}"),
+            }
+        }
+        // 12 dequeues, every:4 => exactly the 4th, 8th and 12th die.
+        assert_eq!(lost, 3, "each worker death loses exactly its in-hand request");
+        await_respawns(&svc, 3); // every death is detected and respawned
+        assert_recovers(&svc, 0xC4A05_2);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn hung_worker_is_superseded_and_every_reply_still_arrives() {
+    with_watchdog(Duration::from_secs(120), || {
+        let _p = pin();
+        let _d = Disarm;
+        let pairs = workload(0xC4A05_3, 4);
+        let oracle = fault_free_baseline(&pairs);
+        // First dequeue stalls 400ms against a 60ms hang threshold: the
+        // supervisor must supersede, and the recovered worker must still
+        // deliver its (valid) reply instead of double-draining.
+        faultinject::arm("worker.hang=nth:1@400").unwrap();
+        let svc = start(chaos_cfg(1));
+        let rxs: Vec<_> = pairs
+            .iter()
+            .map(|(a, b)| svc.submit(a.clone(), b.clone()).expect("queues are roomy"))
+            .collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = recv_one(rx, REPLY_WAIT).expect("a hang delays, it must not fail");
+            assert_bitwise(&resp.c, &oracle[i]);
+        }
+        await_respawns(&svc, 1); // the hang was detected and superseded
+        assert_recovers(&svc, 0xC4A05_4);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn dropped_reply_surfaces_as_reply_lost_never_silence() {
+    with_watchdog(Duration::from_secs(60), || {
+        let _p = pin();
+        let _d = Disarm;
+        let pairs = workload(0xC4A05_5, 5);
+        let oracle = fault_free_baseline(&pairs);
+        // The 2nd delivered reply is dropped before it reaches the
+        // channel; the ReplySlot drop guard must convert the loss into a
+        // typed error — a submitter may fail, it may never wait forever.
+        faultinject::arm("reply.drop=nth:2").unwrap();
+        let svc = start(chaos_cfg(1)); // single worker: FIFO reply order
+        let rxs: Vec<_> = pairs
+            .iter()
+            .map(|(a, b)| svc.submit(a.clone(), b.clone()).expect("queues are roomy"))
+            .collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            match recv_one(rx, REPLY_WAIT) {
+                Ok(resp) => assert_bitwise(&resp.c, &oracle[i]),
+                Err(GemmError::ReplyLost) => {
+                    assert_eq!(i, 1, "exactly the 2nd reply was armed to drop")
+                }
+                Err(other) => panic!("unexpected error under reply drop: {other}"),
+            }
+        }
+        assert_recovers(&svc, 0xC4A05_6);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn engine_faults_are_typed_errors_and_never_kill_workers() {
+    with_watchdog(Duration::from_secs(60), || {
+        let _p = pin();
+        let _d = Disarm;
+        let pairs = workload(0xC4A05_7, 9);
+        let oracle = fault_free_baseline(&pairs);
+        // Kernel-dispatch panics happen inside the engine catch_unwind:
+        // the submitter gets EnginePanic, the worker never dies. A roomy
+        // hang threshold keeps the `worker_respawns == 0` assertion
+        // immune to scheduler stalls on loaded CI machines.
+        faultinject::arm("kernel.dispatch.panic=every:3").unwrap();
+        let mut cfg = chaos_cfg(2);
+        cfg.hang_threshold = Duration::from_secs(30);
+        let svc = start(cfg);
+        let rxs: Vec<_> = pairs
+            .iter()
+            .map(|(a, b)| svc.submit(a.clone(), b.clone()).expect("queues are roomy"))
+            .collect();
+        let mut panicked = 0usize;
+        for (i, rx) in rxs.iter().enumerate() {
+            match recv_one(rx, REPLY_WAIT) {
+                Ok(resp) => assert_bitwise(&resp.c, &oracle[i]),
+                Err(GemmError::EnginePanic(msg)) => {
+                    assert!(msg.contains("injected fault"), "payload preserved: {msg}");
+                    panicked += 1;
+                }
+                Err(other) => panic!("unexpected error under dispatch panic: {other}"),
+            }
+        }
+        assert_eq!(panicked, 3, "9 dispatches, every:3 => exactly 3 typed failures");
+        assert_eq!(
+            svc.metrics.snapshot().worker_respawns,
+            0,
+            "caught engine panics must not trip the supervisor"
+        );
+        // Same contract one layer down: a workspace-checkout panic is
+        // also caught by the engine and typed, not a worker death.
+        faultinject::arm("workspace.checkout.panic=nth:1").unwrap();
+        let (a, b) = (Matrix::identity(8), Matrix::identity(8));
+        assert!(matches!(
+            svc.gemm_blocking(a.clone(), b.clone()),
+            Err(GemmError::EnginePanic(_))
+        ));
+        assert!(svc.gemm_blocking(a, b).is_ok(), "the very next request is served");
+        assert_recovers(&svc, 0xC4A05_8);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn coalescing_drain_panic_loses_the_batch_not_the_service() {
+    with_watchdog(Duration::from_secs(120), || {
+        let _p = pin();
+        let _d = Disarm;
+        let mut cfg = chaos_cfg(1);
+        cfg.coalesce = true;
+        cfg.coalesce_window = Duration::from_millis(20);
+        let pairs = workload(0xC4A05_9, 3);
+        let oracle = fault_free_baseline(&pairs);
+        // The first coalescing drain panics while the worker holds the
+        // batch: its replies surface as ReplyLost through the drop
+        // guards, the shard lock un-poisons via psync, the supervisor
+        // respawns, and requests that missed the doomed batch complete.
+        faultinject::arm("drain.coalesce.panic=nth:1").unwrap();
+        let svc = start(cfg);
+        let rxs: Vec<_> = pairs
+            .iter()
+            .map(|(a, b)| svc.submit(a.clone(), b.clone()).expect("queues are roomy"))
+            .collect();
+        let mut lost = 0usize;
+        for (i, rx) in rxs.iter().enumerate() {
+            match recv_one(rx, REPLY_WAIT) {
+                Ok(resp) => assert_bitwise(&resp.c, &oracle[i]),
+                Err(GemmError::ReplyLost) => lost += 1,
+                Err(other) => panic!("unexpected error under drain panic: {other}"),
+            }
+        }
+        assert!(lost >= 1, "the drained batch dies with its worker");
+        await_respawns(&svc, 1);
+        assert_recovers(&svc, 0xC4A05_A);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn poisoned_metrics_lock_recovers_and_accounting_continues() {
+    with_watchdog(Duration::from_secs(60), || {
+        let _p = pin();
+        let _d = Disarm;
+        // The first outcome recording panics *while holding* the shared
+        // metrics mutex. std's lock().unwrap() would now kill every
+        // later metrics call — psync recovery must keep the service (and
+        // its snapshot endpoint) alive.
+        faultinject::arm("worker.lock.panic=nth:1").unwrap();
+        let svc = start(chaos_cfg(1));
+        let (a, b) = (Matrix::identity(8), Matrix::identity(8));
+        match svc.gemm_blocking(a.clone(), b.clone()) {
+            Err(GemmError::EnginePanic(msg)) => {
+                assert!(msg.contains("metrics lock"), "payload preserved: {msg}")
+            }
+            other => panic!("expected a typed engine panic, got ok={}", other.is_ok()),
+        }
+        // The poisoned mutex is observable, recovered, and counted.
+        let resp = svc.gemm_blocking(a, b).expect("served across the poisoned lock");
+        assert_eq!(resp.c.at(0, 0), 1.0);
+        let snap = svc.metrics.snapshot();
+        assert!(snap.lock_recoveries >= 1, "poison recovery must be counted: {snap:?}");
+        assert!(snap.requests >= 1, "accounting continues after the poison");
+        assert_recovers(&svc, 0xC4A05_B);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn corrupt_cost_model_is_quarantined_and_the_run_continues() {
+    with_watchdog(Duration::from_secs(60), || {
+        let _p = pin();
+        let _d = Disarm;
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("adp-chaos-costmodel-{}.tsv", std::process::id()));
+        let quarantined = path.with_extension("tsv.corrupt");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&quarantined);
+        std::fs::write(&path, "# adp-dgemm cost-model catalog v1\n").expect("seed catalog");
+        std::env::set_var("ADP_COSTMODEL", &path);
+        // Load-time corruption: the catalog must be renamed aside — not
+        // deleted (evidence), not left in place (next save collides) —
+        // and the service must come up cold and healthy.
+        faultinject::arm("costmodel.load.corrupt=always").unwrap();
+        let svc = start(chaos_cfg(1));
+        faultinject::disarm();
+        assert!(!path.exists(), "corrupt catalog must be moved out of the load path");
+        assert!(quarantined.exists(), "corrupt catalog must be preserved as .corrupt");
+        assert!(svc.gemm_blocking(Matrix::identity(8), Matrix::identity(8)).is_ok());
+        assert!(
+            svc.metrics.snapshot().artifacts_quarantined >= 1,
+            "quarantine must be visible in the service metrics"
+        );
+        // Orderly shutdown flushes the (now warm) model back to the
+        // clean path — the quarantine freed it for exactly this.
+        svc.shutdown();
+        assert!(path.exists(), "shutdown must flush the learned model to the clean path");
+        let text = std::fs::read_to_string(&path).expect("flushed catalog");
+        assert!(
+            text.starts_with("# adp-dgemm cost-model catalog v1"),
+            "flushed catalog is well-formed"
+        );
+        std::env::remove_var("ADP_COSTMODEL");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&quarantined);
+    });
+}
+
+#[test]
+fn probabilistic_fault_storm_holds_all_invariants() {
+    with_watchdog(Duration::from_secs(240), || {
+        let _p = pin();
+        let _d = Disarm;
+        // The CI chaos matrix varies ADP_FAULTS_SEED: same invariants,
+        // different deterministic fault interleavings per leg.
+        let seed = std::env::var("ADP_FAULTS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let pairs = workload(0xC4A05_C, 24);
+        let oracle = fault_free_baseline(&pairs);
+        faultinject::arm_seeded(
+            "worker.exec.panic=prob:0.05,reply.drop=prob:0.05,kernel.dispatch.panic=prob:0.1",
+            seed,
+        )
+        .unwrap();
+        let svc = start(chaos_cfg(2));
+        // Mixed scheduling tiers: most requests ride the Normal single
+        // path, every 4th travels inside one Batch-tier group (grouped
+        // dequeue, grouped replies — the storm must hold there too).
+        let mut rxs: Vec<(usize, Receiver<GemmResult>)> = Vec::new();
+        let mut group = Vec::new();
+        for (i, (a, b)) in pairs.iter().enumerate() {
+            if i % 4 == 3 {
+                group.push((i, a.clone(), b.clone()));
+            } else {
+                rxs.push((i, svc.submit(a.clone(), b.clone()).expect("queues are roomy")));
+            }
+        }
+        let batch_rxs = svc
+            .submit_batch(group.iter().map(|(_, a, b)| (a.clone(), b.clone())).collect())
+            .expect("queues are roomy");
+        rxs.extend(group.iter().map(|(i, _, _)| *i).zip(batch_rxs));
+        let mut completed = 0usize;
+        for (i, rx) in &rxs {
+            match recv_one(rx, REPLY_WAIT) {
+                Ok(resp) => {
+                    assert_bitwise(&resp.c, &oracle[*i]);
+                    completed += 1;
+                }
+                Err(GemmError::ReplyLost) | Err(GemmError::EnginePanic(_)) => {}
+                Err(other) => panic!("untyped failure escaped the storm: {other}"),
+            }
+        }
+        assert!(completed >= 1, "a 5-10% fault storm must not fail everything");
+        assert_recovers(&svc, 0xC4A05_D);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn async_stragglers_of_a_dead_worker_resolve_to_reply_lost() {
+    with_watchdog(Duration::from_secs(120), || {
+        let _p = pin();
+        let _d = Disarm;
+        // Every dequeue kills the (sole) worker: each queued request is
+        // served by a fresh respawn that dies on it in turn, so every
+        // async completion style must resolve to the typed loss — a
+        // ticket holder or callback waiter may never hang on a corpse.
+        faultinject::arm("worker.exec.panic=always").unwrap();
+        let svc = start(chaos_cfg(1));
+        let (a, b) = (Matrix::identity(8), Matrix::identity(8));
+        let t_wait =
+            svc.submit_async(a.clone(), b.clone(), Priority::High).expect("admitted");
+        let mut t_timeout =
+            svc.submit_async(a.clone(), b.clone(), Priority::Normal).expect("admitted");
+        let mut t_poll =
+            svc.submit_async(a.clone(), b.clone(), Priority::Normal).expect("admitted");
+        let (cb_tx, cb_rx) = std::sync::mpsc::channel();
+        svc.submit_callback(a.clone(), b.clone(), Priority::Batch, move |r| {
+            cb_tx.send(r).unwrap()
+        })
+        .expect("admitted");
+        assert_eq!(t_wait.wait().err(), Some(GemmError::ReplyLost));
+        loop {
+            if let Some(r) = t_timeout.wait_timeout(Duration::from_millis(5)) {
+                assert_eq!(r.err(), Some(GemmError::ReplyLost));
+                break;
+            }
+        }
+        loop {
+            if let Some(r) = t_poll.poll() {
+                assert_eq!(r.err(), Some(GemmError::ReplyLost));
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(
+            cb_rx.recv_timeout(REPLY_WAIT).expect("callback invoked exactly once").err(),
+            Some(GemmError::ReplyLost)
+        );
+        assert_eq!(svc.inflight(), 0, "dead workers must not leak inflight counts");
+        assert_recovers(&svc, 0xC4A05_E);
+        svc.shutdown();
+    });
+}
+
+#[test]
+fn bench_artifact_records_recovery_latency() {
+    with_watchdog(Duration::from_secs(120), || {
+        let _p = pin();
+        let _d = Disarm;
+        // Fault-free round trip: the baseline arm.
+        faultinject::disarm();
+        let svc = start(chaos_cfg(2));
+        let (a, b) = (Matrix::identity(8), Matrix::identity(8));
+        let mut clean = Vec::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            svc.gemm_blocking(a.clone(), b.clone()).expect("served");
+            clean.push(t0.elapsed().as_secs_f64());
+        }
+        // Respawn recovery: kill a worker, measure death-to-next-success.
+        let mut recover = Vec::new();
+        for _ in 0..3 {
+            faultinject::arm("worker.exec.panic=nth:1").unwrap();
+            let rx = svc.submit(a.clone(), b.clone()).expect("queues are roomy");
+            assert_eq!(recv_one(&rx, REPLY_WAIT).err(), Some(GemmError::ReplyLost));
+            let t0 = Instant::now();
+            faultinject::disarm();
+            svc.gemm_blocking(a.clone(), b.clone()).expect("served after respawn");
+            recover.push(t0.elapsed().as_secs_f64());
+        }
+        await_respawns(&svc, 3);
+        svc.shutdown();
+        let stats = |mut t: Vec<f64>| {
+            t.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            Stats {
+                iters: t.len(),
+                min_s: t[0],
+                median_s: t[t.len() / 2],
+                mean_s: t.iter().sum::<f64>() / t.len() as f64,
+            }
+        };
+        let mut report = JsonReport::new();
+        report.arm("fault_free_roundtrip", stats(clean), 1.0, &[]);
+        report.arm("worker_respawn_recovery", stats(recover), 1.0, &[]);
+        report
+            .write("BENCH_chaos.json", "chaos", &[("workers", "2".to_string())])
+            .expect("write BENCH_chaos.json");
+    });
+}

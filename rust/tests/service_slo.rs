@@ -258,3 +258,108 @@ fn async_tickets_and_callbacks_complete_a_mixed_stream() {
         svc.shutdown();
     });
 }
+
+#[test]
+fn stragglers_held_across_shutdown_resolve_and_never_hang() {
+    // The shutdown contract for handles that outlive the service: every
+    // admitted request is served during the drain (close-then-drain
+    // queues), so tickets, receivers, and callbacks held across
+    // `shutdown()` all resolve — Ok here, never a hang, never a `recv`
+    // panic. Post-shutdown submissions fail typed on every API.
+    with_watchdog(Duration::from_secs(60), || {
+        let cfg = ServiceConfig { workers: 1, use_artifacts: false, ..Default::default() };
+        let svc = GemmService::start(cfg, None, || Box::new(AlwaysEmulate));
+        let mut rng = Rng::new(0x57A6);
+        let mk = |n: usize, rng: &mut Rng| {
+            (Matrix::uniform(n, n, -1.0, 1.0, rng), Matrix::uniform(n, n, -1.0, 1.0, rng))
+        };
+        // Queue stragglers on one worker, one per completion style.
+        let (a, b) = mk(6, &mut rng);
+        let t_wait = svc.submit_async(a, b, Priority::Normal).expect("admitted");
+        let (a, b) = mk(8, &mut rng);
+        let mut t_timeout = svc.submit_async(a, b, Priority::Normal).expect("admitted");
+        let (a, b) = mk(10, &mut rng);
+        let mut t_poll = svc.submit_async(a, b, Priority::Normal).expect("admitted");
+        let (a, b) = mk(6, &mut rng);
+        let rx = svc.submit(a, b).expect("admitted");
+        let (cb_tx, cb_rx) = std::sync::mpsc::channel();
+        let (a, b) = mk(8, &mut rng);
+        svc.submit_callback(a, b, Priority::Batch, move |r| cb_tx.send(r).unwrap())
+            .expect("admitted");
+        // Shutdown with all five still (possibly) queued: drains and joins.
+        svc.shutdown();
+        // Every straggler style resolves without hanging.
+        t_wait.wait().expect("drained and served");
+        loop {
+            // Exercises the timeout arm (None) when the reply raced ahead
+            // of us it returns immediately; the watchdog bounds the loop.
+            if let Some(r) = t_timeout.wait_timeout(Duration::from_millis(5)) {
+                r.expect("drained and served");
+                break;
+            }
+        }
+        loop {
+            if let Some(r) = t_poll.poll() {
+                r.expect("drained and served");
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        rx.recv().expect("reply delivered").expect("drained and served");
+        cb_rx.recv().expect("callback invoked").expect("drained and served");
+        assert_eq!(svc.inflight(), 0);
+        // Post-shutdown: typed rejection on every API, callbacks dropped
+        // uninvoked (the Err return is the completion).
+        let (a, b) = mk(6, &mut rng);
+        assert!(svc.submit(a, b).is_err());
+        let (a, b) = mk(6, &mut rng);
+        assert!(svc.submit_async(a, b, Priority::High).is_err());
+        let (a, b) = mk(6, &mut rng);
+        assert!(matches!(svc.gemm_blocking(a, b), Err(GemmError::Rejected(_))));
+        let (a, b) = mk(6, &mut rng);
+        assert!(svc.submit_callback(a, b, Priority::Normal, |_| panic!("must not run")).is_err());
+    });
+}
+
+#[test]
+fn orderly_shutdown_flushes_learned_state_across_processes() {
+    // Satellite for the shutdown-flush fix: a *separate process* running
+    // `adp serve` with `ADP_COSTMODEL` set must leave a loadable catalog
+    // behind after its orderly shutdown — previously the learned table
+    // died with the process unless an unrelated save threshold happened
+    // to trip. A second run then warm-loads it and flushes again.
+    let dir = std::env::temp_dir();
+    let cost = dir.join(format!("adp-slo-costmodel-{}.tsv", std::process::id()));
+    let tune = dir.join(format!("adp-slo-tune-{}.tsv", std::process::id()));
+    let _ = std::fs::remove_file(&cost);
+    let _ = std::fs::remove_file(&tune);
+    let run = |label: &str| {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_adp"))
+            .args(["serve", "--requests", "8", "--n", "24", "--workers", "2"])
+            .env("ADP_COSTMODEL", &cost)
+            .env("ADP_TUNE_CATALOG", &tune)
+            .output()
+            .expect("spawn adp serve");
+        assert!(
+            out.status.success(),
+            "{label} serve run failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+    run("cold");
+    let text = std::fs::read_to_string(&cost).expect("shutdown must flush the cost model");
+    assert!(
+        text.starts_with("# adp-dgemm cost-model catalog v1"),
+        "flushed catalog must carry the versioned header, got: {:?}",
+        text.lines().next()
+    );
+    run("warm");
+    let text = std::fs::read_to_string(&cost).expect("warm run flushes too");
+    assert!(text.starts_with("# adp-dgemm cost-model catalog v1"));
+    assert!(
+        !cost.with_extension("tsv.corrupt").exists(),
+        "a clean catalog must never be quarantined on load"
+    );
+    let _ = std::fs::remove_file(&cost);
+    let _ = std::fs::remove_file(&tune);
+}
